@@ -1,0 +1,179 @@
+//! End-to-end driver: a real distributed KV cluster on the full stack.
+//!
+//! ```bash
+//! cargo run --release --example distributed_kv
+//! ```
+//!
+//! Spins a router + 8 TCP shard servers (real sockets, real wire
+//! protocol), loads 200k objects under a zipfian workload, serves mixed
+//! GET/PUT traffic from 4 concurrent clients, scales the cluster 8 → 12 →
+//! 8 with live rebalancing, and reports the paper's headline metrics:
+//! placement latency (constant-time), balance (relative stddev), and
+//! movement fraction vs the consistent-hashing ideal.
+//!
+//! This is the EXPERIMENTS.md E2E run (see §E2E there for recorded output).
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use binhash::cluster::Cluster;
+use binhash::proto::Request;
+use binhash::router::Router;
+use binhash::shard::{RemotePool, Shard, ShardClient};
+use binhash::stats::BalanceStats;
+use binhash::workload::ZipfKeys;
+
+const INITIAL_SHARDS: u32 = 8;
+const OBJECTS: usize = 200_000;
+const TRAFFIC_OPS: usize = 100_000;
+const CLIENTS: usize = 4;
+
+fn spawn_tcp_shard(id: u32) -> Result<ShardClient> {
+    let shard = Shard::new(id);
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    std::thread::spawn(move || {
+        let _ = binhash::shard::serve(shard, listener);
+    });
+    Ok(ShardClient::Remote(RemotePool::new(addr, 4)))
+}
+
+fn balance_report(router: &Arc<Router>) -> Result<BalanceStats> {
+    // Per-shard key counts via the router's stats path.
+    let (_, n, _) = router.topology();
+    let mut counts = Vec::new();
+    for b in 0..n {
+        // Count per shard through the cluster handle is not exposed over
+        // the wire; use COUNT per shard via SCAN-less accounting: issue a
+        // Stats and parse? Simplest: the router exposes Count for totals;
+        // here we scan shards directly through the topology snapshot.
+        counts.push(router.shard_count(b)?);
+    }
+    Ok(BalanceStats::from_counts(&counts))
+}
+
+fn main() -> Result<()> {
+    // --- Build the cluster: 8 real TCP shards behind the router.
+    let shards: Vec<ShardClient> =
+        (0..INITIAL_SHARDS).map(spawn_tcp_shard).collect::<Result<_>>()?;
+    let placement = binhash::algorithms::by_name("binomial", INITIAL_SHARDS).unwrap();
+    let cluster = Cluster::new(placement, shards);
+    let router = Router::with_options(
+        cluster,
+        Box::new(|id| spawn_tcp_shard(id).expect("spawn shard")),
+        None,
+    );
+    println!("cluster up: {INITIAL_SHARDS} TCP shards, binomial placement");
+
+    // --- Load phase: 200k zipfian objects.
+    let t0 = Instant::now();
+    let mut zipf = ZipfKeys::new(1, OBJECTS, 0.99);
+    let mut loaded = 0usize;
+    for _ in 0..OBJECTS {
+        let (key, _) = zipf.next_key();
+        router.handle(Request::Put { key, value: vec![0xAB; 64] });
+        loaded += 1;
+    }
+    let load_s = t0.elapsed().as_secs_f64();
+    println!(
+        "load: {loaded} PUTs in {load_s:.1}s ({:.0} op/s)",
+        loaded as f64 / load_s
+    );
+
+    // --- Mixed traffic phase: 4 concurrent clients, 90% GET / 10% PUT.
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..CLIENTS {
+        let router = router.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut zipf = ZipfKeys::new(100 + c as u64, OBJECTS, 0.99);
+            let mut hits = 0usize;
+            for i in 0..TRAFFIC_OPS / CLIENTS {
+                let (key, _) = zipf.next_key();
+                if i % 10 == 0 {
+                    router.handle(Request::Put { key, value: vec![1; 64] });
+                } else if !matches!(
+                    router.handle(Request::Get { key }),
+                    binhash::proto::Response::Nil
+                ) {
+                    hits += 1;
+                }
+            }
+            hits
+        }));
+    }
+    let hits: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let traffic_s = t0.elapsed().as_secs_f64();
+    println!(
+        "traffic: {TRAFFIC_OPS} mixed ops from {CLIENTS} clients in {traffic_s:.1}s \
+         ({:.0} op/s), {hits} GET hits",
+        TRAFFIC_OPS as f64 / traffic_s
+    );
+    println!(
+        "latency: e2e p50={}ns p99={}ns | placement p50={}ns p99={}ns (constant-time)",
+        router.metrics.latency.quantile_ns(0.5),
+        router.metrics.latency.quantile_ns(0.99),
+        router.metrics.placement_latency.quantile_ns(0.5),
+        router.metrics.placement_latency.quantile_ns(0.99),
+    );
+
+    // --- Balance before scaling.
+    let s = balance_report(&router)?;
+    println!(
+        "balance @ n=8: mean={:.0} keys/shard, rel stddev={:.2}% (paper: <4%)",
+        s.mean,
+        100.0 * s.rel_stddev()
+    );
+
+    // --- Scale up 8 -> 12, one shard at a time, measuring movement.
+    let stored = match router.handle(Request::Count) {
+        binhash::proto::Response::Num(x) => x as f64,
+        other => panic!("{other:?}"),
+    };
+    println!("unique objects stored: {stored} (zipf draws collide on hot keys)");
+    for target in 9..=12u32 {
+        let before = router.handle(Request::Count);
+        let t0 = Instant::now();
+        router.handle(Request::ScaleUp);
+        let dt = t0.elapsed().as_secs_f64();
+        let after = router.handle(Request::Count);
+        assert_eq!(before, after, "keys lost during scale-up");
+        let moved = router.metrics.migrated_keys.swap(0, std::sync::atomic::Ordering::Relaxed);
+        println!(
+            "scale-up -> {target}: moved {moved} keys ({:.2}%, ideal 1/n = {:.2}%) in {dt:.2}s",
+            100.0 * moved as f64 / stored,
+            100.0 / target as f64
+        );
+    }
+    let s = balance_report(&router)?;
+    println!("balance @ n=12: rel stddev={:.2}%", 100.0 * s.rel_stddev());
+
+    // --- Scale back down 12 -> 8.
+    for target in (8..=11u32).rev() {
+        router.handle(Request::ScaleDown);
+        let moved = router.metrics.migrated_keys.swap(0, std::sync::atomic::Ordering::Relaxed);
+        println!(
+            "scale-down -> {target}: moved {moved} keys ({:.2}%, ideal {:.2}%)",
+            100.0 * moved as f64 / stored,
+            100.0 / (target + 1) as f64
+        );
+    }
+
+    // --- Final integrity check: every loaded object still readable.
+    let mut zipf = ZipfKeys::new(1, OBJECTS, 0.99);
+    let mut missing = 0;
+    for _ in 0..5_000 {
+        let (key, _) = zipf.next_key();
+        if matches!(router.handle(Request::Get { key }), binhash::proto::Response::Nil) {
+            missing += 1;
+        }
+    }
+    assert_eq!(missing, 0, "objects lost across the scale cycle");
+    println!("integrity: 5000/5000 sampled objects present after 8->12->8 cycle");
+    println!("\n{}", router.metrics.summary());
+    println!("distributed_kv OK");
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Arbitrary node failures with the Memento-wrapped engine (paper §7).
+//!
+//! ```bash
+//! cargo run --release --example failover_memento
+//! ```
+//!
+//! The core BinomialHash supports LIFO scaling only; the paper points to
+//! MementoHash for random failures.  This example fails random nodes out
+//! of a 20-node cluster, verifies minimal disruption and uniform
+//! redistribution at every step, then restores them and verifies the
+//! mapping returns exactly to its pre-failure state.
+
+use binhash::algorithms::memento::MementoHash;
+use binhash::algorithms::{ConsistentHasher, FaultTolerant};
+use binhash::stats::BalanceStats;
+use binhash::workload::UniformDigests;
+
+const NODES: u32 = 20;
+const KEYS: usize = 200_000;
+
+fn main() {
+    let mut m = MementoHash::new(NODES);
+    let digests = UniformDigests::new(0xFA_11).take_vec(KEYS);
+    let healthy: Vec<u32> = digests.iter().map(|&d| m.bucket(d)).collect();
+    println!("cluster: {NODES} nodes, {KEYS} keys placed");
+
+    // --- Fail 5 random-ish nodes one at a time.
+    let failures = [13u32, 2, 19, 7, 11];
+    let mut prev = healthy.clone();
+    for (step, &f) in failures.iter().enumerate() {
+        m.remove_arbitrary(f);
+        let now: Vec<u32> = digests.iter().map(|&d| m.bucket(d)).collect();
+        let mut relocated = 0usize;
+        for (i, (&was, &is)) in prev.iter().zip(&now).enumerate() {
+            assert!(m.is_working(is), "key {i} routed to failed node {is}");
+            if was != is {
+                assert_eq!(was, f, "minimal disruption violated: key moved off healthy node {was}");
+                relocated += 1;
+            }
+        }
+        let working = m.len();
+        println!(
+            "step {}: failed node {f} -> {relocated} keys relocated \
+             ({:.2}%, ideal 1/{} = {:.2}%), {working} nodes working",
+            step + 1,
+            100.0 * relocated as f64 / KEYS as f64,
+            NODES - step as u32,
+            100.0 / (NODES - step as u32) as f64,
+        );
+        prev = now;
+    }
+
+    // --- Balance across survivors.
+    let mut counts = vec![0u64; NODES as usize];
+    for &d in &digests {
+        counts[m.bucket(d) as usize] += 1;
+    }
+    let surviving: Vec<u64> =
+        (0..NODES).filter(|&b| m.is_working(b)).map(|b| counts[b as usize]).collect();
+    let s = BalanceStats::from_counts(&surviving);
+    println!(
+        "balance across {} survivors: mean={:.0}, rel stddev={:.2}%",
+        surviving.len(),
+        s.mean,
+        100.0 * s.rel_stddev()
+    );
+    for &f in &failures {
+        assert_eq!(counts[f as usize], 0, "failed node still receives keys");
+    }
+
+    // --- Restore everything; mapping must be exactly the healthy one.
+    for &f in failures.iter().rev() {
+        m.restore(f);
+    }
+    let restored: Vec<u32> = digests.iter().map(|&d| m.bucket(d)).collect();
+    assert_eq!(restored, healthy, "restore did not return the original mapping");
+    println!("all nodes restored: mapping identical to pre-failure state");
+
+    // --- And LIFO scaling still works once failures are cleared.
+    m.add_bucket();
+    assert_eq!(m.len(), NODES + 1);
+    println!("LIFO scale-up to {} nodes after recovery", m.len());
+    println!("\nfailover_memento OK");
+}

@@ -1,0 +1,74 @@
+//! Quickstart: the BinomialHash public API in two minutes.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks through: constant-time lookups, the paper's three consistency
+//! properties under scaling, and the closed-form balance guarantees.
+
+use binhash::algorithms::binomial::BinomialHash;
+use binhash::algorithms::ConsistentHasher;
+use binhash::stats::{theory, BalanceStats};
+use binhash::workload::UniformDigests;
+
+fn main() {
+    // --- 1. Create a hasher for an 11-node cluster (the paper's example).
+    let mut ch = BinomialHash::new(11);
+    println!("BinomialHash n=11: enclosing tree E={}, minor tree M={}",
+             ch.enclosing_capacity(), ch.minor_capacity());
+
+    // --- 2. Constant-time lookups: any key digest -> bucket in [0, 11).
+    let bucket = ch.bucket_for_key(b"users/4217/profile.json");
+    println!("users/4217/profile.json -> bucket {bucket}");
+    assert!(bucket < 11);
+
+    // --- 3. Monotonicity: scaling 11 -> 12 moves keys ONLY to bucket 11.
+    let keys = UniformDigests::new(42).take_vec(100_000);
+    let before: Vec<u32> = keys.iter().map(|&d| ch.bucket(d)).collect();
+    ch.add_bucket();
+    let mut moved = 0;
+    for (&d, &b) in keys.iter().zip(&before) {
+        let now = ch.bucket(d);
+        assert!(now == b || now == 11, "monotonicity violated");
+        if now != b {
+            moved += 1;
+        }
+    }
+    println!(
+        "scale-up 11->12: {moved}/100000 keys moved ({:.2}%, ideal {:.2}%), all to bucket 11",
+        moved as f64 / 1000.0,
+        100.0 / 12.0
+    );
+
+    // --- 4. Minimal disruption: scaling 12 -> 11 moves only bucket 11's keys.
+    let at12: Vec<u32> = keys.iter().map(|&d| ch.bucket(d)).collect();
+    ch.remove_bucket();
+    for (&d, &b) in keys.iter().zip(&at12) {
+        let now = ch.bucket(d);
+        if b != 11 {
+            assert_eq!(now, b, "minimal disruption violated");
+        }
+    }
+    println!("scale-down 12->11: only bucket 11's keys relocated");
+
+    // --- 5. Balance: relative stddev under the paper's Eq. 5/6 bounds.
+    let mut counts = vec![0u64; 11];
+    for &d in &keys {
+        counts[ch.bucket(d) as usize] += 1;
+    }
+    let s = BalanceStats::from_counts(&counts);
+    println!(
+        "balance over 100k keys: mean={:.0} stddev={:.1} ({:.2}% relative; \
+         Eq.5 predicts {:.1})",
+        s.mean,
+        s.stddev,
+        100.0 * s.rel_stddev(),
+        theory::stddev(11, ch.omega(), 100_000)
+    );
+
+    // --- 6. The whole state is 8 bytes: n + omega. Snapshot = copy.
+    let snapshot = ch; // Copy
+    println!("state size: {} bytes (Copy)", std::mem::size_of_val(&snapshot));
+    println!("\nquickstart OK");
+}

@@ -1,0 +1,97 @@
+//! Bulk placement via the AOT XLA artifacts (the three-layer story).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example rebalance_xla
+//! ```
+//!
+//! Loads the JAX/Pallas-lowered HLO artifacts through PJRT, computes the
+//! migration plan for 1M keys across a 64 → 65 scale-up entirely on the
+//! compiled graph, verifies bit-parity with the pure-Rust implementation,
+//! and compares throughput of the two bulk paths.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use binhash::algorithms::binomial;
+use binhash::runtime::PlacementRuntime;
+use binhash::workload::UniformDigests;
+
+const KEYS: usize = 1 << 20; // 1M
+const N_OLD: u32 = 64;
+const N_NEW: u32 = 65;
+
+fn main() -> Result<()> {
+    let runtime = PlacementRuntime::load("artifacts")
+        .context("artifacts missing — run `make artifacts` first")?;
+    println!("PJRT runtime up (omega={})", runtime.omega);
+    let omega = runtime.omega;
+    let digests = UniformDigests::new(0xA0_7).take_vec(KEYS);
+
+    // --- Bulk lookup on the XLA path (best of 3: steady-state, first call
+    // includes PJRT warm-up).
+    let mut xla_dt = std::time::Duration::MAX;
+    let mut xla_buckets = Vec::new();
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        xla_buckets = runtime.lookup_batch(&digests, N_OLD)?;
+        xla_dt = xla_dt.min(t0.elapsed());
+    }
+
+    // --- Same computation in pure Rust (best of 3).
+    let mut rust_dt = std::time::Duration::MAX;
+    let mut rust_buckets = Vec::new();
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        rust_buckets = digests.iter().map(|&d| binomial::lookup(d, N_OLD, omega)).collect();
+        rust_dt = rust_dt.min(t0.elapsed());
+    }
+
+    // --- Bit parity: the Pallas kernel IS the Rust algorithm.
+    assert_eq!(xla_buckets, rust_buckets, "XLA artifact diverges from Rust");
+    println!(
+        "lookup_batch({KEYS} keys, n={N_OLD}): XLA {:.0}ms ({:.1}M keys/s) | \
+         Rust {:.0}ms ({:.1}M keys/s) — results bit-identical",
+        xla_dt.as_secs_f64() * 1e3,
+        KEYS as f64 / xla_dt.as_secs_f64() / 1e6,
+        rust_dt.as_secs_f64() * 1e3,
+        KEYS as f64 / rust_dt.as_secs_f64() / 1e6,
+    );
+
+    // --- Migration plan on the XLA path (old + new placement fused).
+    let t0 = Instant::now();
+    let plan = runtime.migration_plan(&digests, N_OLD, N_NEW)?;
+    let plan_dt = t0.elapsed();
+    let moved_frac = plan.moved_count as f64 / KEYS as f64;
+    println!(
+        "migration_plan {N_OLD}->{N_NEW}: {} keys move ({:.3}%, ideal 1/{N_NEW} = {:.3}%) \
+         in {:.0}ms",
+        plan.moved_count,
+        100.0 * moved_frac,
+        100.0 / N_NEW as f64,
+        plan_dt.as_secs_f64() * 1e3,
+    );
+    // Monotonicity on the bulk path: every move lands on the new bucket.
+    for i in 0..KEYS {
+        if plan.moved[i] != 0 {
+            assert_eq!(plan.new[i], N_OLD, "bulk move not onto the new bucket");
+        } else {
+            assert_eq!(plan.new[i], plan.old[i]);
+        }
+    }
+    println!("monotonicity verified on the bulk path (all moves -> bucket {N_OLD})");
+
+    // --- Balance histogram offload.
+    let counts = runtime.histogram(&digests, N_OLD)?;
+    let total: u64 = counts.iter().sum();
+    assert_eq!(total, KEYS as u64);
+    let stats = binhash::stats::BalanceStats::from_counts(&counts);
+    println!(
+        "histogram offload: {} buckets, rel stddev {:.2}%",
+        counts.len(),
+        100.0 * stats.rel_stddev()
+    );
+
+    println!("\nrebalance_xla OK");
+    Ok(())
+}

@@ -1,0 +1,1 @@
+"""Build-time compile path: L2 model graphs + L1 Pallas kernels + AOT."""

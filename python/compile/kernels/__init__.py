@@ -1,0 +1,1 @@
+"""L1 kernels: Pallas BinomialHash lookup + pure references."""

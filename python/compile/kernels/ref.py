@@ -1,0 +1,107 @@
+"""Pure-jnp vectorized oracle for the BinomialHash lookup.
+
+Branch-free reformulation of ``scalar_ref.lookup``: the ω-round loop is
+unrolled and per-lane control flow becomes ``jnp.where`` selects.  This is
+the correctness oracle the Pallas kernel (``binomial.py``) is tested
+against, and it is itself tested bit-for-bit against the literal scalar
+transcription in ``scalar_ref.py``.
+
+Requires ``jax_enable_x64`` (u64 lattice arithmetic); ``model.py`` and the
+test suite enable it before importing jax.numpy.
+"""
+
+import jax.numpy as jnp
+
+# Python-int constants: materialized with jnp.uint64(...) inside each
+# function so Pallas kernels don't capture them as closure constants.
+PHI64 = 0x9E3779B97F4A7C15
+_MIX1 = 0xBF58476D1CE4E5B9
+_MIX2 = 0x94D049BB133111EB
+
+DEFAULT_OMEGA = 6
+
+
+def splitmix64_fin(z):
+    """splitmix64 finalizer, elementwise over u64 lanes (wrapping)."""
+    z = z.astype(jnp.uint64)
+    z = z ^ (z >> jnp.uint64(30))
+    z = z * jnp.uint64(_MIX1)
+    z = z ^ (z >> jnp.uint64(27))
+    z = z * jnp.uint64(_MIX2)
+    z = z ^ (z >> jnp.uint64(31))
+    return z
+
+
+def next_hash(h):
+    """Rehash stream: h_{i+1} = fin(h_i + PHI64)."""
+    return splitmix64_fin(h + jnp.uint64(PHI64))
+
+
+def hash2(h, f):
+    """Seeded hash of Alg. 2 line 7 (f is the level mask, u64 lanes)."""
+    return splitmix64_fin(h ^ (f * jnp.uint64(PHI64)))
+
+
+def smear(x):
+    """Propagate the highest set bit downward: smear(b) = 2^(d+1) - 1."""
+    x = x.astype(jnp.uint64)
+    for s in (1, 2, 4, 8, 16, 32):
+        x = x | (x >> jnp.uint64(s))
+    return x
+
+
+def relocate_within_level(b, h):
+    """Vectorized Algorithm 2.
+
+    ``f = smear(b) >> 1`` equals ``2^d - 1`` for b >= 2 (and 0 for b in
+    {0, 1}), so the b < 2 early-return folds into a single select.
+    """
+    b = b.astype(jnp.uint64)
+    f = smear(b) >> jnp.uint64(1)  # 2^d - 1  (0 when b < 2)
+    i = hash2(h, f) & f
+    relocated = (f + jnp.uint64(1)) + i
+    return jnp.where(b < jnp.uint64(2), b, relocated)
+
+
+def next_pow2(n):
+    """Smallest power of two >= n, n >= 1 (u64)."""
+    n = n.astype(jnp.uint64)
+    return smear(n - jnp.uint64(1)) + jnp.uint64(1)
+
+
+def lookup_ref(digests, n, omega=DEFAULT_OMEGA):
+    """Vectorized Algorithm 1 over a batch of u64 digests.
+
+    Args:
+      digests: u64[B] array of key digests (``hash(key)``).
+      n: scalar cluster size (python int or u64 scalar array), n >= 1.
+      omega: unroll depth ω (compile-time constant).
+
+    Returns:
+      u32[B] buckets, each in ``[0, n)``.
+    """
+    h0 = digests.astype(jnp.uint64)
+    n = jnp.asarray(n, dtype=jnp.uint64)
+    e = next_pow2(jnp.maximum(n, jnp.uint64(2)))
+    m = e >> jnp.uint64(1)
+
+    # Block A / C result: congruent remap of the ORIGINAL digest against
+    # the minor tree, then relocate within its level (Alg. 1 lines 7-8/15-16).
+    d = h0 & (m - jnp.uint64(1))
+    minor = relocate_within_level(d, h0)
+
+    done = jnp.zeros(h0.shape, dtype=bool)
+    res = jnp.zeros(h0.shape, dtype=jnp.uint64)
+    hi = h0
+    for _ in range(omega):
+        b = hi & (e - jnp.uint64(1))  # line 4
+        c = relocate_within_level(b, hi)  # line 5
+        in_a = c < m  # block A
+        in_b = jnp.logical_and(c >= m, c < n)  # block B
+        hit = jnp.logical_and(jnp.logical_not(done), jnp.logical_or(in_a, in_b))
+        res = jnp.where(hit, jnp.where(in_a, minor, c), res)
+        done = jnp.logical_or(done, hit)
+        hi = next_hash(hi)  # line 13
+    res = jnp.where(done, res, minor)  # block C
+    res = jnp.where(n <= jnp.uint64(1), jnp.uint64(0), res)
+    return res.astype(jnp.uint32)

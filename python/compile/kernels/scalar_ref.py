@@ -1,0 +1,101 @@
+"""Literal, line-by-line scalar transcription of the paper's Algorithms 1 & 2.
+
+This is the *specification* implementation: every other implementation in
+this repository (the vectorized jnp reference in ``ref.py``, the Pallas
+kernel in ``binomial.py``, and the Rust ``algorithms::binomial`` module)
+must agree with it bit-for-bit.  Golden vectors for the cross-language
+parity tests are generated from this file (see ``gen_golden.py``).
+
+Hash-function contract (DESIGN.md §2):
+
+* ``PHI64``           — the 64-bit golden ratio, splitmix64's increment.
+* ``splitmix64_fin``  — splitmix64's finalizer, used as the universal mixer.
+* rehash stream       — ``h_{i+1} = splitmix64_fin(h_i + PHI64)`` realises
+  the paper's family of independent hash functions ``hash^{i+1}(key)``.
+* ``hash2(h, f)``     — the seeded hash of Alg. 2 line 7:
+  ``splitmix64_fin(h ^ (f * PHI64))``.
+
+All arithmetic is modulo 2**64 (wrapping), mirroring u64 in Rust.
+"""
+
+MASK64 = (1 << 64) - 1
+PHI64 = 0x9E3779B97F4A7C15
+_MIX1 = 0xBF58476D1CE4E5B9
+_MIX2 = 0x94D049BB133111EB
+
+
+def splitmix64_fin(z: int) -> int:
+    """splitmix64 finalizer (Steele et al.); bijective mixer on u64."""
+    z &= MASK64
+    z ^= z >> 30
+    z = (z * _MIX1) & MASK64
+    z ^= z >> 27
+    z = (z * _MIX2) & MASK64
+    z ^= z >> 31
+    return z
+
+
+def next_hash(h: int) -> int:
+    """The paper's ``hash^{i+1}(key)`` rehash stream (Alg. 1 line 13)."""
+    return splitmix64_fin((h + PHI64) & MASK64)
+
+
+def hash2(h: int, f: int) -> int:
+    """Seeded hash of Alg. 2 line 7: ``r <- hash(h, f)``."""
+    return splitmix64_fin(h ^ ((f * PHI64) & MASK64))
+
+
+def highest_one_bit_index(b: int) -> int:
+    """Index of the highest set bit (Alg. 2 line 5); b must be >= 1."""
+    assert b >= 1
+    return b.bit_length() - 1
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (capacity E of the enclosing tree)."""
+    assert n >= 1
+    return 1 << (n - 1).bit_length() if n > 1 else 1
+
+
+def relocate_within_level(b: int, h: int) -> int:
+    """Algorithm 2: uniformly relocate bucket ``b`` within its tree level.
+
+    Level 0 (bucket 0) and level 1 (bucket 1) hold a single node each and
+    are returned unmodified.  Otherwise ``d`` is the depth of ``b``,
+    ``f = 2^d - 1`` masks a uniform offset within the level, and the
+    relocated bucket is ``2^d + i``.
+    """
+    if b < 2:
+        return b
+    d = highest_one_bit_index(b)
+    f = (1 << d) - 1
+    r = hash2(h, f)
+    i = r & f
+    return (1 << d) + i
+
+
+def lookup(h0: int, n: int, omega: int = 6) -> int:
+    """Algorithm 1: map digest ``h0`` to a bucket in ``[0, n)``.
+
+    ``h0`` plays the role of ``hash(key)`` (the caller hashes the key; the
+    benchmark path feeds uniform u64 digests directly, as in the paper).
+    """
+    assert n >= 1
+    if n == 1:
+        return 0
+    h0 &= MASK64
+    e = next_pow2(n)  # capacity E of the enclosing tree
+    m = e >> 1  # capacity M of the minor tree
+    h = h0
+    hi = h0
+    for _ in range(omega):
+        b = hi & (e - 1)  # line 4
+        c = relocate_within_level(b, hi)  # line 5
+        if c < m:  # block A
+            d = h & (m - 1)
+            return relocate_within_level(d, h)
+        if c < n:  # block B
+            return c
+        hi = next_hash(hi)  # line 13
+    d = h & (m - 1)  # block C
+    return relocate_within_level(d, h)

@@ -1,0 +1,59 @@
+"""Layer 2 — JAX compute graphs for the BinomialHash placement engine.
+
+These functions are the graphs the Rust coordinator executes through PJRT
+after ``aot.py`` lowers them to HLO text.  They compose the Layer-1 Pallas
+kernel (``kernels.binomial``) into the bulk operations the rebalancer
+needs:
+
+* ``lookup_batch``     — place a batch of digests on an n-node cluster.
+* ``migration_plan``   — old/new placement + moved mask for a topology
+                         change (the rebalance planner's inner product).
+* ``balance_histogram``— per-bucket key counts for balance telemetry.
+
+All graphs take the cluster size(s) as *runtime* scalar inputs so a single
+AOT artifact serves every topology; only the batch size and ω are baked in
+at lowering time.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # u64 digest arithmetic
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels import binomial, ref  # noqa: E402
+
+DEFAULT_OMEGA = ref.DEFAULT_OMEGA
+# Maximum cluster size the histogram artifact supports (fixed output shape).
+HIST_NMAX = 1024
+
+
+def lookup_batch(digests, n, omega=DEFAULT_OMEGA, block=binomial.DEFAULT_BLOCK):
+    """u64[B] digests, scalar u64 n  ->  u32[B] buckets (Pallas kernel)."""
+    return binomial.lookup_pallas(digests, n, omega=omega, block=block)
+
+
+def migration_plan(digests, n_old, n_new, omega=DEFAULT_OMEGA,
+                   block=binomial.DEFAULT_BLOCK):
+    """Placement under two topologies plus the moved mask.
+
+    Returns ``(old u32[B], new u32[B], moved u8[B], moved_count u64)``.
+    XLA fuses the two kernel invocations' surrounding element-wise work;
+    the moved count is reduced on-device so the coordinator reads back a
+    scalar when it only needs the movement fraction.
+    """
+    old = binomial.lookup_pallas(digests, n_old, omega=omega, block=block)
+    new = binomial.lookup_pallas(digests, n_new, omega=omega, block=block)
+    moved = (old != new).astype(jnp.uint8)
+    moved_count = moved.astype(jnp.uint64).sum()
+    return old, new, moved, moved_count
+
+
+def balance_histogram(digests, n, omega=DEFAULT_OMEGA,
+                      block=binomial.DEFAULT_BLOCK, nmax=HIST_NMAX):
+    """Per-bucket key counts: u64[nmax] (entries >= n are zero)."""
+    buckets = binomial.lookup_pallas(digests, n, omega=omega, block=block)
+    counts = jnp.zeros((nmax,), dtype=jnp.uint64).at[buckets].add(
+        jnp.uint64(1), mode="drop"
+    )
+    return counts

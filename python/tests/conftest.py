@@ -1,0 +1,32 @@
+"""Shared fixtures: enable x64 before any jax.numpy import."""
+
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+# Make `compile.*` importable when pytest is run from python/ or repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import json  # noqa: E402
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+GOLDEN_PATH = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "..", "tests", "golden",
+    "binomial_golden.json",
+)
+
+
+@pytest.fixture(scope="session")
+def golden():
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)

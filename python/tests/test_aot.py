@@ -1,0 +1,72 @@
+"""AOT pipeline tests: HLO text artifacts are well-formed and the lowered
+graphs execute with the same numerics as the eager path."""
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import aot, model
+from compile.kernels import ref
+
+ART_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "..", "..", "artifacts")
+
+
+def _have_artifacts():
+    return os.path.exists(os.path.join(ART_DIR, "manifest.json"))
+
+
+def test_to_hlo_text_roundtrip(rng):
+    """Lower a small lookup graph and sanity-check the emitted HLO text."""
+    spec_d = jax.ShapeDtypeStruct((256,), jnp.uint64)
+    spec_n = jax.ShapeDtypeStruct((), jnp.uint64)
+    lowered = jax.jit(lambda d, n: model.lookup_batch(d, n)).lower(spec_d, spec_n)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "u64[256]" in text
+    # Parse it back through the XLA client to prove it is valid HLO text.
+    comp = xc._xla.hlo_module_from_text(text)
+    assert comp is not None
+
+
+def test_manifest_complete():
+    if not _have_artifacts():
+        import pytest
+        pytest.skip("run `make artifacts` first")
+    with open(os.path.join(ART_DIR, "manifest.json")) as f:
+        manifest = json.load(f)
+    names = {a["name"] for a in manifest["artifacts"]}
+    for b in aot.BATCH_SIZES:
+        assert f"lookup_b{b}" in names
+        assert f"migrate_b{b}" in names
+    assert f"hist_b{aot.HIST_BATCH}" in names
+    for a in manifest["artifacts"]:
+        path = os.path.join(ART_DIR, a["file"])
+        assert os.path.exists(path), path
+        with open(path) as f:
+            head = f.read(4096)
+        assert "HloModule" in head
+
+
+def test_lowered_graph_matches_eager(rng):
+    """jit-compiled lookup (the exact graph that gets lowered) == eager ref."""
+    d = jnp.asarray(rng.integers(0, 2 ** 64, size=4096, dtype=np.uint64))
+    n = jnp.uint64(23)
+    jitted = jax.jit(lambda dd, nn: model.lookup_batch(dd, nn))
+    np.testing.assert_array_equal(
+        np.asarray(jitted(d, n)), np.asarray(ref.lookup_ref(d, 23)))
+
+
+def test_artifact_hlo_stable_under_relower(rng):
+    """Re-lowering the same spec yields identical HLO text (deterministic
+    build; guards the Makefile's content-based no-op)."""
+    spec_d = jax.ShapeDtypeStruct((4096,), jnp.uint64)
+    spec_n = jax.ShapeDtypeStruct((), jnp.uint64)
+    f = lambda d, n: model.lookup_batch(d, n)  # noqa: E731
+    t1 = aot.to_hlo_text(jax.jit(f).lower(spec_d, spec_n))
+    t2 = aot.to_hlo_text(jax.jit(f).lower(spec_d, spec_n))
+    assert t1 == t2

@@ -1,0 +1,129 @@
+"""Pallas kernel vs references — the CORE correctness signal.
+
+Three-way parity: scalar transcription (spec) == jnp reference == Pallas
+kernel, bit-for-bit, across hypothesis-driven shape/n/ω sweeps, golden
+vectors, block-size variations, and adversarial digests.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import binomial, ref, scalar_ref as sr
+
+
+def _digests(rng, size):
+    return rng.integers(0, 2 ** 64, size=size, dtype=np.uint64)
+
+
+# ---------------------------------------------------------------- jnp ref
+
+@given(n=st.integers(min_value=1, max_value=300000),
+       omega=st.integers(min_value=1, max_value=8),
+       seed=st.integers(min_value=0, max_value=2 ** 31))
+@settings(max_examples=60, deadline=None)
+def test_ref_matches_scalar(n, omega, seed):
+    rng = np.random.default_rng(seed)
+    d = _digests(rng, 64)
+    want = np.array([sr.lookup(int(h), n, omega) for h in d], dtype=np.uint32)
+    got = np.asarray(ref.lookup_ref(jnp.asarray(d), n, omega=omega))
+    np.testing.assert_array_equal(want, got)
+
+
+def test_ref_edge_digests():
+    edges = np.array([0, 1, 2, 2 ** 63, 2 ** 64 - 1, sr.PHI64], dtype=np.uint64)
+    for n in (1, 2, 3, 8, 9, 1024, 1025):
+        want = np.array([sr.lookup(int(h), n) for h in edges], dtype=np.uint32)
+        got = np.asarray(ref.lookup_ref(jnp.asarray(edges), n))
+        np.testing.assert_array_equal(want, got)
+
+
+# ------------------------------------------------------------- pallas
+
+@given(n=st.integers(min_value=1, max_value=300000),
+       omega=st.integers(min_value=1, max_value=8),
+       batch_pow=st.integers(min_value=4, max_value=10),
+       seed=st.integers(min_value=0, max_value=2 ** 31))
+@settings(max_examples=40, deadline=None)
+def test_pallas_matches_ref_shapes(n, omega, batch_pow, seed):
+    """Hypothesis sweep over batch sizes (16..1024) and cluster sizes."""
+    rng = np.random.default_rng(seed)
+    d = jnp.asarray(_digests(rng, 2 ** batch_pow))
+    want = np.asarray(ref.lookup_ref(d, n, omega=omega))
+    got = np.asarray(binomial.lookup_pallas(d, n, omega=omega, block=2 ** 4))
+    np.testing.assert_array_equal(want, got)
+
+
+def test_pallas_block_size_invariance(rng):
+    """Result must not depend on the BlockSpec tiling."""
+    d = jnp.asarray(_digests(rng, 1024))
+    base = np.asarray(binomial.lookup_pallas(d, 37, block=1024))
+    for block in (16, 64, 128, 256, 512):
+        got = np.asarray(binomial.lookup_pallas(d, 37, block=block))
+        np.testing.assert_array_equal(base, got)
+
+
+def test_pallas_ragged_batch_fallback(rng):
+    """Batch not divisible by block: single-block fallback still correct."""
+    d = jnp.asarray(_digests(rng, 1000))  # not divisible by 8192
+    want = np.asarray(ref.lookup_ref(d, 99))
+    got = np.asarray(binomial.lookup_pallas(d, 99))
+    np.testing.assert_array_equal(want, got)
+
+
+def test_pallas_golden(golden):
+    """Pallas kernel reproduces the checked-in cross-language vectors."""
+    for case in golden["lookup"]:
+        d = jnp.asarray(np.array([int(s) for s in case["digests"]],
+                                 dtype=np.uint64))
+        got = np.asarray(
+            binomial.lookup_pallas(d, case["n"], omega=case["omega"]))
+        np.testing.assert_array_equal(
+            np.array(case["buckets"], dtype=np.uint32), got,
+            err_msg=f"n={case['n']} omega={case['omega']}")
+
+
+def test_pallas_n_one_all_zero(rng):
+    d = jnp.asarray(_digests(rng, 256))
+    got = np.asarray(binomial.lookup_pallas(d, 1, block=256))
+    assert (got == 0).all()
+
+
+def test_pallas_range_large_n(rng):
+    d = jnp.asarray(_digests(rng, 4096))
+    for n in (10, 1000, 100000, 2 ** 20 + 3):
+        got = np.asarray(binomial.lookup_pallas(d, n, block=4096))
+        assert got.max() < n
+
+
+# ------------------------------------------------- primitive parity
+
+@given(seed=st.integers(min_value=0, max_value=2 ** 31))
+@settings(max_examples=30, deadline=None)
+def test_splitmix_parity(seed):
+    rng = np.random.default_rng(seed)
+    z = _digests(rng, 32)
+    want = np.array([sr.splitmix64_fin(int(x)) for x in z], dtype=np.uint64)
+    got = np.asarray(ref.splitmix64_fin(jnp.asarray(z)))
+    np.testing.assert_array_equal(want, got)
+
+
+@given(seed=st.integers(min_value=0, max_value=2 ** 31))
+@settings(max_examples=30, deadline=None)
+def test_relocate_parity(seed):
+    rng = np.random.default_rng(seed)
+    b = rng.integers(0, 2 ** 32, size=32, dtype=np.uint64)
+    h = _digests(rng, 32)
+    want = np.array([sr.relocate_within_level(int(bb), int(hh))
+                     for bb, hh in zip(b, h)], dtype=np.uint64)
+    got = np.asarray(ref.relocate_within_level(jnp.asarray(b), jnp.asarray(h)))
+    np.testing.assert_array_equal(want, got)
+
+
+def test_next_pow2_parity():
+    ns = np.array([1, 2, 3, 4, 5, 7, 8, 9, 1023, 1024, 1025, 2 ** 31],
+                  dtype=np.uint64)
+    want = np.array([sr.next_pow2(int(x)) for x in ns], dtype=np.uint64)
+    got = np.asarray(ref.next_pow2(jnp.asarray(ns)))
+    np.testing.assert_array_equal(want, got)

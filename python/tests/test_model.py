@@ -1,0 +1,101 @@
+"""Layer-2 graph tests: migration_plan, balance_histogram, model shapes."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref, scalar_ref as sr
+
+
+def _digests(rng, size):
+    return jnp.asarray(rng.integers(0, 2 ** 64, size=size, dtype=np.uint64))
+
+
+def test_migration_plan_consistency(rng):
+    d = _digests(rng, 2048)
+    old, new, moved, count = model.migration_plan(d, 16, 17, block=2048)
+    old, new, moved = map(np.asarray, (old, new, moved))
+    assert int(count) == int(moved.sum())
+    np.testing.assert_array_equal(moved, (old != new).astype(np.uint8))
+    # Monotonicity at the batch level: every moved key lands on bucket 16.
+    assert (new[moved == 1] == 16).all()
+    assert (new[moved == 0] == old[moved == 0]).all()
+
+
+def test_migration_plan_matches_ref(rng):
+    d = _digests(rng, 1024)
+    old, new, _, _ = model.migration_plan(d, 9, 12, block=1024)
+    np.testing.assert_array_equal(np.asarray(old),
+                                  np.asarray(ref.lookup_ref(d, 9)))
+    np.testing.assert_array_equal(np.asarray(new),
+                                  np.asarray(ref.lookup_ref(d, 12)))
+
+
+def test_migration_plan_expected_fraction(rng):
+    """n -> n+1 should move ~1/(n+1) of the keys (consistent hashing)."""
+    d = _digests(rng, 65536)
+    _, _, _, count = model.migration_plan(d, 50, 51, block=65536)
+    frac = int(count) / 65536
+    assert abs(frac - 1 / 51) < 0.01, frac
+
+
+def test_migration_plan_scale_down_disruption(rng):
+    """n+1 -> n: only keys on the removed bucket move."""
+    d = _digests(rng, 8192)
+    old, new, moved, _ = model.migration_plan(d, 33, 32, block=8192)
+    old, new, moved = map(np.asarray, (old, new, moved))
+    assert (old[moved == 1] == 32).all()
+
+
+def test_balance_histogram_counts(rng):
+    d = _digests(rng, 65536)
+    n = 100
+    counts = np.asarray(model.balance_histogram(d, n, block=65536))
+    assert counts.shape == (model.HIST_NMAX,)
+    assert counts.sum() == 65536
+    assert (counts[n:] == 0).all()
+    buckets = np.asarray(ref.lookup_ref(d, n))
+    want = np.bincount(buckets, minlength=model.HIST_NMAX).astype(np.uint64)
+    np.testing.assert_array_equal(counts, want)
+
+
+def test_balance_histogram_stddev_bound(rng):
+    """Empirical relative stddev stays under ~4% at mean=1000 (Fig. 7)."""
+    n = 64
+    k = n * 1000
+    d = _digests(rng, k)
+    counts = np.asarray(model.balance_histogram(d, n, block=k))[:n]
+    rel_std = counts.std() / counts.mean()
+    assert rel_std < 0.06, rel_std
+
+
+def test_eq6_sigma_max_bound(rng):
+    """Eq. 6: at ω=5, σ_max ≈ 0.045·q; measured σ must stay below
+    the bound (+ sampling slack) at the maximizing n."""
+    omega = 5
+    q = 1000
+    m = 32
+    n = int((2 + omega) / (1 + omega) * m)  # maximizer of Eq. 5
+    k = q * n
+    rng2 = np.random.default_rng(77)
+    d = jnp.asarray(rng2.integers(0, 2 ** 64, size=k, dtype=np.uint64))
+    buckets = np.asarray(ref.lookup_ref(d, n, omega=omega))
+    counts = np.bincount(buckets, minlength=n)
+    sigma_pred = (k / n) * np.sqrt((n - m) / m * ((2 * m - n) / (2 * m)) ** omega)
+    sigma_max = q * np.sqrt(1 / (1 + omega) * (omega / (2 * (1 + omega))) ** omega)
+    # sampling noise adds ~sqrt(q) per bucket on top of the structural term
+    assert counts.std() < sigma_max + 3 * np.sqrt(q), (counts.std(), sigma_max)
+    assert sigma_pred <= sigma_max * 1.001
+
+
+def test_scalar_eq3_closed_form():
+    """Eq. 3 algebra: closed form equals the direct probability calc."""
+    for n, omega in [(11, 6), (24, 4), (33, 2), (9, 1)]:
+        e = sr.next_pow2(n)
+        m = e >> 1
+        p_level = (n - m) / n * (1 - ((e - n) / e) ** omega)
+        k_level = p_level / (n - m)  # per-bucket mass, lowest level
+        k_minor = (1 - p_level) / m  # per-bucket mass, minor tree
+        gap = (k_minor - k_level) * n
+        closed = (1 / 2 ** omega) * (1 + (n - m) / m) * (1 - (n - m) / m) ** omega
+        assert abs(gap - closed) < 1e-12, (n, omega, gap, closed)

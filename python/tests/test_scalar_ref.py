@@ -1,0 +1,175 @@
+"""Property tests for the literal scalar transcription of Alg. 1/2.
+
+These are the *semantic* tests of the paper's claims (§3 consistency
+properties, §5 analysis), checked on the specification implementation:
+
+* range          — lookup(h, n) ∈ [0, n)
+* determinism    — pure function of (h, n, ω)
+* monotonicity   — n → n+1 moves keys only onto the new bucket (§5.2)
+* minimal disruption — n+1 → n moves only keys of the removed bucket (§5.3)
+* balance        — empirical imbalance within the Eq. 3 bound (§5.4)
+"""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import scalar_ref as sr
+
+U64 = st.integers(min_value=0, max_value=2 ** 64 - 1)
+
+
+@given(h=U64, n=st.integers(min_value=1, max_value=200000),
+       omega=st.integers(min_value=1, max_value=10))
+@settings(max_examples=300, deadline=None)
+def test_lookup_in_range(h, n, omega):
+    b = sr.lookup(h, n, omega)
+    assert 0 <= b < n
+
+
+@given(h=U64, n=st.integers(min_value=1, max_value=5000))
+@settings(max_examples=100, deadline=None)
+def test_lookup_deterministic(h, n):
+    assert sr.lookup(h, n) == sr.lookup(h, n)
+
+
+@given(h=U64, n=st.integers(min_value=1, max_value=3000))
+@settings(max_examples=400, deadline=None)
+def test_monotonicity_single_step(h, n):
+    """Adding bucket n: a key stays put or moves to the new bucket n."""
+    before = sr.lookup(h, n)
+    after = sr.lookup(h, n + 1)
+    assert after == before or after == n
+
+
+@given(h=U64, n=st.integers(min_value=2, max_value=3000))
+@settings(max_examples=400, deadline=None)
+def test_minimal_disruption_single_step(h, n):
+    """Removing bucket n-1: only its keys relocate."""
+    before = sr.lookup(h, n)
+    after = sr.lookup(h, n - 1)
+    if before != n - 1:
+        assert after == before
+
+
+def test_monotonicity_full_sweep():
+    """Paths of a fixed key set are monotone across n = 1..129 (crosses
+    several power-of-two level changes, the tricky case in §5.3)."""
+    rng = np.random.default_rng(7)
+    digests = rng.integers(0, 2 ** 64, size=500, dtype=np.uint64)
+    prev = [sr.lookup(int(h), 1) for h in digests]
+    for n in range(2, 130):
+        cur = [sr.lookup(int(h), n) for h in digests]
+        for b0, b1 in zip(prev, cur):
+            assert b1 == b0 or b1 == n - 1, (n, b0, b1)
+        prev = cur
+
+
+def test_power_of_two_boundary_disruption():
+    """n = M+1 -> M removes the whole lowest level (Fig. 4 scenario):
+    keys on buckets [0, M) must not move."""
+    rng = np.random.default_rng(11)
+    digests = rng.integers(0, 2 ** 64, size=2000, dtype=np.uint64)
+    for m in (2, 4, 8, 16, 64, 256):
+        for h in digests[:500]:
+            before = sr.lookup(int(h), m + 1)
+            after = sr.lookup(int(h), m)
+            if before != m:
+                assert after == before, (m, before, after)
+
+
+def test_balance_eq3_bound():
+    """Empirical relative gap between minor-tree and lowest-level buckets
+    stays within ~the Eq. 3 closed form (sampling tolerance 3 sigma)."""
+    rng = np.random.default_rng(3)
+    k = 200000
+    digests = rng.integers(0, 2 ** 64, size=k, dtype=np.uint64)
+    for n, omega in [(11, 6), (24, 6), (11, 3), (48, 4)]:
+        e = sr.next_pow2(n)
+        m = e >> 1
+        counts = np.zeros(n, dtype=np.int64)
+        for h in digests:
+            counts[sr.lookup(int(h), n, omega)] += 1
+        k_minor = counts[:m].mean()
+        k_level = counts[m:].mean()
+        gap = (k_minor - k_level) / (k / n)
+        bound = (1 / 2 ** omega) * (1 + (n - m) / m) * ((1 - (n - m) / m) ** omega)
+        # gap must be positive-ish (imbalance towards the minor tree) and
+        # within the bound plus sampling noise.
+        sigma_noise = 3 * np.sqrt(n / k)
+        assert gap <= bound + sigma_noise, (n, omega, gap, bound)
+
+
+def test_balance_uniformity_chi2():
+    """Gross balance: no bucket deviates wildly from k/n."""
+    rng = np.random.default_rng(5)
+    k = 100000
+    digests = rng.integers(0, 2 ** 64, size=k, dtype=np.uint64)
+    for n in (10, 31, 64, 100):
+        counts = np.zeros(n, dtype=np.int64)
+        for h in digests:
+            counts[sr.lookup(int(h), n)] += 1
+        rel = counts / (k / n)
+        assert rel.min() > 0.80 and rel.max() < 1.25, (n, rel.min(), rel.max())
+
+
+def test_golden_self_consistency(golden):
+    """The checked-in golden file matches the current scalar reference."""
+    for case in golden["lookup"]:
+        n, omega = case["n"], case["omega"]
+        for h_str, want in zip(case["digests"], case["buckets"]):
+            assert sr.lookup(int(h_str), n, omega) == want
+
+
+def test_golden_primitives(golden):
+    p = golden["primitives"]
+    for rec in p["splitmix64_fin"]:
+        assert sr.splitmix64_fin(int(rec["in"])) == int(rec["out"])
+    for rec in p["next_hash"]:
+        assert sr.next_hash(int(rec["in"])) == int(rec["out"])
+    for rec in p["hash2"]:
+        assert sr.hash2(int(rec["h"]), rec["f"]) == int(rec["out"])
+    for rec in p["relocate"]:
+        assert sr.relocate_within_level(rec["b"], int(rec["h"])) == rec["out"]
+
+
+def test_relocate_stays_in_level():
+    """Alg. 2 invariant: the relocated bucket has the same depth as b."""
+    rng = np.random.default_rng(9)
+    for _ in range(2000):
+        b = int(rng.integers(2, 2 ** 32, dtype=np.uint64))
+        h = int(rng.integers(0, 2 ** 64, dtype=np.uint64))
+        c = sr.relocate_within_level(b, h)
+        assert sr.highest_one_bit_index(c) == sr.highest_one_bit_index(b)
+
+
+def test_relocate_uniform_within_level():
+    """Keys relocated from one bucket spread uniformly across its level."""
+    d = 6  # level with 64 nodes: [64, 127]
+    b = 77
+    counts = np.zeros(64, dtype=np.int64)
+    rng = np.random.default_rng(13)
+    trials = 64000
+    for _ in range(trials):
+        h = int(rng.integers(0, 2 ** 64, dtype=np.uint64))
+        c = sr.relocate_within_level(b, h)
+        assert 64 <= c < 128
+        counts[c - 64] += 1
+    rel = counts / (trials / 64)
+    assert rel.min() > 0.75 and rel.max() < 1.3
+
+
+def test_intrinsic_imbalance_decreases_with_omega():
+    """§4.4: unbalanced key fraction < 1/2^ω — larger ω, smaller gap."""
+    rng = np.random.default_rng(17)
+    k = 120000
+    digests = rng.integers(0, 2 ** 64, size=k, dtype=np.uint64)
+    n = 11
+    m = 8
+    gaps = []
+    for omega in (1, 3, 6):
+        counts = np.zeros(n, dtype=np.int64)
+        for h in digests:
+            counts[sr.lookup(int(h), n, omega)] += 1
+        gaps.append((counts[:m].mean() - counts[m:].mean()) / (k / n))
+    assert gaps[0] > gaps[1] > gaps[2] - 0.02  # decreasing (noise slack)

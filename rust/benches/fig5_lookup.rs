@@ -1,0 +1,64 @@
+//! Fig. 5 bench: per-lookup latency for each algorithm × cluster size.
+//!
+//! Custom harness (`harness = false`; the build is offline, no criterion):
+//! median-of-5 timing batches over 1M pre-generated uniform digests, with
+//! warm-up and `black_box` sinks.  Run via `cargo bench --bench
+//! fig5_lookup`; the fuller sweep with CSV output lives in
+//! `bench_figs fig5`.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use binhash::algorithms::{self, ConsistentHasher};
+use binhash::workload::UniformDigests;
+
+const SIZES: &[u32] = &[10, 1_000, 100_000];
+const ALGOS: &[&str] = &["binomial", "jumpback", "powerch", "fliphash", "jump"];
+const BATCH: usize = 1_000_000;
+const REPS: usize = 5;
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+fn bench_one(engine: &dyn ConsistentHasher, digests: &[u64]) -> f64 {
+    let mut sink = 0u64;
+    // Warm-up.
+    for &d in &digests[..BATCH / 10] {
+        sink = sink.wrapping_add(engine.bucket(d) as u64);
+    }
+    let mut samples = Vec::with_capacity(REPS);
+    for _ in 0..REPS {
+        let t0 = Instant::now();
+        for &d in digests {
+            sink = sink.wrapping_add(engine.bucket(d) as u64);
+        }
+        samples.push(t0.elapsed().as_nanos() as f64 / digests.len() as f64);
+    }
+    black_box(sink);
+    median(samples)
+}
+
+fn main() {
+    let digests = UniformDigests::new(0xBE_7C_4).take_vec(BATCH);
+    println!("fig5_lookup: median ns/lookup over {BATCH} digests x {REPS} reps");
+    print!("{:<12}", "algorithm");
+    for n in SIZES {
+        print!("{:>14}", format!("n={n}"));
+    }
+    println!();
+    for name in ALGOS {
+        print!("{name:<12}");
+        for &n in SIZES {
+            let engine = algorithms::by_name(name, n).unwrap();
+            let ns = bench_one(engine.as_ref(), &digests);
+            print!("{ns:>14.2}");
+        }
+        println!();
+    }
+    println!(
+        "\nexpected shape (paper Fig. 5): binomial ≈ jumpback < powerch ≈ fliphash,\n\
+         all flat in n; jump grows O(log n)."
+    );
+}

@@ -1,0 +1,191 @@
+//! §Perf harness: isolates the L3 hot-path costs and candidate
+//! optimizations, one variable at a time (EXPERIMENTS.md §Perf records the
+//! before/after of each accepted/rejected change).
+//!
+//! Variants measured:
+//!  * `free fn`        — `binomial::lookup` direct call (the router's path)
+//!  * `dyn dispatch`   — through `Box<dyn ConsistentHasher>` (registry path)
+//!  * `batch x4`       — 4-way interleaved bulk loop (rebalancer path)
+//!  * `xxh+lookup`     — string key end-to-end placement (hash + lookup)
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use binhash::algorithms::{self, binomial};
+use binhash::hashing::xxhash64;
+use binhash::workload::UniformDigests;
+
+const BATCH: usize = 2_000_000;
+const REPS: usize = 7;
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+fn time_ns<F: FnMut() -> u64>(mut f: F, per: usize) -> f64 {
+    let mut samples = Vec::with_capacity(REPS);
+    let mut sink = 0u64;
+    for _ in 0..REPS {
+        let t0 = Instant::now();
+        sink = sink.wrapping_add(f());
+        samples.push(t0.elapsed().as_nanos() as f64 / per as f64);
+    }
+    black_box(sink);
+    median(samples)
+}
+
+/// 4-way interleaved bulk lookup: breaks the serial dependence between
+/// consecutive keys so the core's multiple ALU ports stay busy.
+fn lookup_batch4(digests: &[u64], n: u32, omega: u32, out: &mut Vec<u32>) {
+    out.clear();
+    let mut chunks = digests.chunks_exact(4);
+    for c in &mut chunks {
+        let (a, b, cc, d) = (
+            binomial::lookup(c[0], n, omega),
+            binomial::lookup(c[1], n, omega),
+            binomial::lookup(c[2], n, omega),
+            binomial::lookup(c[3], n, omega),
+        );
+        out.extend_from_slice(&[a, b, cc, d]);
+    }
+    for &x in chunks.remainder() {
+        out.push(binomial::lookup(x, n, omega));
+    }
+}
+
+/// Candidate: lookup with E/M hoisted out (placement-engine form).
+#[inline]
+fn lookup_pre(h0: u64, n: u32, e: u64, m: u64, omega: u32) -> u32 {
+    if n <= 1 {
+        return 0;
+    }
+    let mut hi = h0;
+    for _ in 0..omega {
+        let b = hi & (e - 1);
+        let c = binomial::relocate_within_level(b, hi);
+        if c < m {
+            let d = h0 & (m - 1);
+            return binomial::relocate_within_level(d, h0) as u32;
+        }
+        if c < n as u64 {
+            return c as u32;
+        }
+        hi = binhash::hashing::next_hash(hi);
+    }
+    let d = h0 & (m - 1);
+    binomial::relocate_within_level(d, h0) as u32
+}
+
+/// Candidate: branchless relocate (always compute, select at the end).
+#[inline(always)]
+fn relocate_branchless(b: u64, h: u64) -> u64 {
+    let d = 63 - (b | 2).leading_zeros();
+    let f = (1u64 << d) - 1;
+    let i = binhash::hashing::hash2(h, f) & f;
+    let r = (1u64 << d) + i;
+    if b < 2 {
+        b
+    } else {
+        r
+    }
+}
+
+#[inline]
+fn lookup_branchless(h0: u64, n: u32, omega: u32) -> u32 {
+    if n <= 1 {
+        return 0;
+    }
+    let e = binhash::hashing::next_pow2(n as u64);
+    let m = e >> 1;
+    let mut hi = h0;
+    for _ in 0..omega {
+        let b = hi & (e - 1);
+        let c = relocate_branchless(b, hi);
+        if c < m {
+            let d = h0 & (m - 1);
+            return relocate_branchless(d, h0) as u32;
+        }
+        if c < n as u64 {
+            return c as u32;
+        }
+        hi = binhash::hashing::next_hash(hi);
+    }
+    let d = h0 & (m - 1);
+    relocate_branchless(d, h0) as u32
+}
+
+fn main() {
+    let digests = UniformDigests::new(0x9E_4F).take_vec(BATCH);
+    let keys: Vec<String> = (0..100_000).map(|i| format!("tenant-3/obj-{i:08x}")).collect();
+
+    println!("perf_variants: median of {REPS} reps over {BATCH} digests\n");
+    for n in [11u32, 1_000, 100_000] {
+        let free = time_ns(
+            || {
+                let mut acc = 0u64;
+                for &d in &digests {
+                    acc = acc.wrapping_add(binomial::lookup(d, n, 6) as u64);
+                }
+                acc
+            },
+            BATCH,
+        );
+        let engine = algorithms::by_name("binomial", n).unwrap();
+        let dynd = time_ns(
+            || {
+                let mut acc = 0u64;
+                for &d in &digests {
+                    acc = acc.wrapping_add(engine.bucket(d) as u64);
+                }
+                acc
+            },
+            BATCH,
+        );
+        let mut out = Vec::with_capacity(BATCH);
+        let batch4 = time_ns(
+            || {
+                lookup_batch4(&digests, n, 6, &mut out);
+                out.iter().map(|&x| x as u64).sum()
+            },
+            BATCH,
+        );
+        let keyed = time_ns(
+            || {
+                let mut acc = 0u64;
+                for k in &keys {
+                    let d = xxhash64(k.as_bytes(), 0);
+                    acc = acc.wrapping_add(binomial::lookup(d, n, 6) as u64);
+                }
+                acc
+            },
+            keys.len(),
+        );
+        let e = binhash::hashing::next_pow2(n as u64);
+        let m = e >> 1;
+        let pre = time_ns(
+            || {
+                let mut acc = 0u64;
+                for &d in &digests {
+                    acc = acc.wrapping_add(lookup_pre(d, n, e, m, 6) as u64);
+                }
+                acc
+            },
+            BATCH,
+        );
+        let branchless = time_ns(
+            || {
+                let mut acc = 0u64;
+                for &d in &digests {
+                    acc = acc.wrapping_add(lookup_branchless(d, n, 6) as u64);
+                }
+                acc
+            },
+            BATCH,
+        );
+        println!(
+            "n={n:<7} free={free:>6.2}ns  dyn={dynd:>6.2}ns  batch4={batch4:>6.2}ns  \
+             pre-EM={pre:>6.2}ns  branchless={branchless:>6.2}ns  key+hash={keyed:>6.2}ns"
+        );
+    }
+}

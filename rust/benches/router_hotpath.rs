@@ -1,0 +1,54 @@
+//! Router hot-path bench: end-to-end in-process request latency
+//! (placement + shard dispatch) and raw placement cost, measuring what the
+//! paper's constant-time claim buys the *system* (L3 target: placement is
+//! never the router bottleneck).
+//!
+//! Custom harness (`harness = false`): ops/s + ns/op over seeded key sets.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use binhash::proto::Request;
+use binhash::router::{local_cluster, Router};
+use binhash::workload::StringKeys;
+
+const OPS: usize = 200_000;
+
+fn main() {
+    for n in [4u32, 16, 64] {
+        let router = Router::new(local_cluster("binomial", n).unwrap());
+        let mut gen = StringKeys::new(7, 8, 32);
+        let keys: Vec<String> = (0..OPS).map(|_| gen.next_key()).collect();
+
+        // PUT phase.
+        let t0 = Instant::now();
+        for (i, k) in keys.iter().enumerate() {
+            let r = router.handle(Request::Put { key: k.clone(), value: vec![(i & 0xFF) as u8] });
+            black_box(r);
+        }
+        let put = t0.elapsed();
+
+        // GET phase.
+        let t0 = Instant::now();
+        for k in &keys {
+            let r = router.handle(Request::Get { key: k.clone() });
+            black_box(r);
+        }
+        let get = t0.elapsed();
+
+        let put_ns = put.as_nanos() as f64 / OPS as f64;
+        let get_ns = get.as_nanos() as f64 / OPS as f64;
+        println!(
+            "n={n:<4} put: {put_ns:>8.0} ns/op ({:>9.0} op/s)   get: {get_ns:>8.0} ns/op ({:>9.0} op/s)",
+            1e9 / put_ns,
+            1e9 / get_ns
+        );
+        println!(
+            "      placement p50={}ns p99={}ns mean={:.0}ns  (of end-to-end mean {:.0}ns)",
+            router.metrics.placement_latency.quantile_ns(0.5),
+            router.metrics.placement_latency.quantile_ns(0.99),
+            router.metrics.placement_latency.mean_ns(),
+            router.metrics.latency.mean_ns(),
+        );
+    }
+}

@@ -1,0 +1,217 @@
+//! **AnchorHash** (Mendelson et al., ToN 2020) — per the published
+//! pseudocode (Algorithm 2 of the paper, the array-based implementation).
+//!
+//! AnchorHash pre-allocates an *anchor set* of `a` buckets and keeps a
+//! *working set* of `w ≤ a`; lookups hash into the anchor and follow the
+//! removal metadata (`A`, `K`, `W`, `L` arrays) to the working bucket a
+//! removed anchor position delegates to.  O(1) amortized lookups (expected
+//! ≤ 1/(1−w/a) hash evaluations), supports arbitrary removals natively,
+//! state is O(a).
+//!
+//! The anchor capacity bounds the maximum cluster size; choose it with
+//! headroom (the registry uses `2 · next_pow2(n)`).
+
+use crate::hashing::hash2;
+
+use super::{ConsistentHasher, FaultTolerant};
+
+/// AnchorHash state (arrays `A`, `K`, `W`, `L` + removal stack `R`).
+#[derive(Debug, Clone)]
+pub struct AnchorHash {
+    /// `A[b]` = size of the working set at the moment `b` was removed
+    /// (0 while `b` is working).
+    a: Vec<u32>,
+    /// `K[b]` = successor bucket `b` delegates to.
+    k: Vec<u32>,
+    /// `W[l]` = the working bucket currently at logical position `l`.
+    w: Vec<u32>,
+    /// `L[b]` = logical position of working bucket `b`.
+    l: Vec<u32>,
+    /// Stack of removed buckets (LIFO restore order).
+    r: Vec<u32>,
+    /// Current working-set size.
+    n: u32,
+}
+
+impl AnchorHash {
+    /// Create with `w` working buckets in an anchor of `capacity` buckets.
+    ///
+    /// # Panics
+    /// Panics if `w == 0` or `w > capacity`.
+    pub fn with_capacity(w: u32, capacity: u32) -> Self {
+        assert!(w >= 1 && w <= capacity);
+        let cap = capacity as usize;
+        let mut this = Self {
+            a: vec![0; cap],
+            k: (0..capacity).collect(),
+            w: (0..capacity).collect(),
+            l: (0..capacity).collect(),
+            r: Vec::with_capacity(cap),
+            n: capacity,
+        };
+        // Remove buckets capacity-1 .. w to shrink the working set to w.
+        for b in (w..capacity).rev() {
+            this.remove_arbitrary(b);
+        }
+        this
+    }
+
+    /// Anchor capacity `a`.
+    pub fn capacity(&self) -> u32 {
+        self.a.len() as u32
+    }
+}
+
+impl ConsistentHasher for AnchorHash {
+    fn name(&self) -> &'static str {
+        "anchor"
+    }
+
+    fn len(&self) -> u32 {
+        self.n
+    }
+
+    #[inline]
+    fn bucket(&self, digest: u64) -> u32 {
+        let cap = self.a.len() as u64;
+        // Initial anchor position.
+        let mut b = (hash2(digest, 0xA_C0FFEE) % cap) as u32;
+        while self.a[b as usize] > 0 {
+            // b was removed when the working set had size A[b]; re-hash
+            // into [0, A[b]) and walk the K chain past buckets removed
+            // at-or-after b's removal.
+            let mut h = (hash2(digest, b as u64) % self.a[b as usize] as u64) as u32;
+            while self.a[h as usize] >= self.a[b as usize] && self.a[h as usize] > 0 {
+                h = self.k[h as usize];
+            }
+            b = h;
+        }
+        b
+    }
+
+    fn add_bucket(&mut self) -> u32 {
+        let b = self.r.pop().expect("anchor capacity exhausted");
+        self.restore_internal(b);
+        b
+    }
+
+    fn remove_bucket(&mut self) -> u32 {
+        assert!(self.n > 1);
+        // LIFO interface: remove the working bucket at the top logical
+        // position, which for LIFO usage is the last added.
+        let b = self.w[(self.n - 1) as usize];
+        self.remove_arbitrary(b);
+        b
+    }
+}
+
+impl AnchorHash {
+    fn restore_internal(&mut self, b: u32) {
+        let n = self.n as usize;
+        self.a[b as usize] = 0;
+        self.l[self.w[n] as usize] = n as u32;
+        self.w[self.l[b as usize] as usize] = b;
+        self.k[b as usize] = b;
+        self.n += 1;
+    }
+}
+
+impl FaultTolerant for AnchorHash {
+    fn remove_arbitrary(&mut self, b: u32) {
+        assert!(self.is_working(b), "bucket {b} is not working");
+        assert!(self.n > 1);
+        self.r.push(b);
+        self.n -= 1;
+        let n = self.n as usize;
+        self.a[b as usize] = self.n; // working size after removal
+        self.w[self.l[b as usize] as usize] = self.w[n];
+        self.l[self.w[n] as usize] = self.l[b as usize];
+        self.k[b as usize] = self.w[n];
+    }
+
+    fn restore(&mut self, b: u32) {
+        let top = self.r.pop().expect("nothing to restore");
+        assert_eq!(top, b, "AnchorHash restores in reverse removal order");
+        self.restore_internal(b);
+    }
+
+    fn is_working(&self, b: u32) -> bool {
+        (b as usize) < self.a.len() && self.a[b as usize] == 0 && !self.r.contains(&b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::SplitMix64Rng;
+
+    fn working_set(h: &AnchorHash) -> Vec<u32> {
+        (0..h.capacity()).filter(|&b| h.a[b as usize] == 0).collect()
+    }
+
+    #[test]
+    fn lookup_hits_working_buckets_only() {
+        let h = AnchorHash::with_capacity(7, 32);
+        let ws = working_set(&h);
+        let mut rng = SplitMix64Rng::new(1);
+        for _ in 0..3_000 {
+            let b = h.bucket(rng.next_u64());
+            assert!(ws.contains(&b), "b={b} ws={ws:?}");
+        }
+    }
+
+    #[test]
+    fn arbitrary_removal_minimal_disruption() {
+        let mut h = AnchorHash::with_capacity(10, 32);
+        let mut rng = SplitMix64Rng::new(2);
+        let digests: Vec<u64> = (0..5_000).map(|_| rng.next_u64()).collect();
+        let before: Vec<u32> = digests.iter().map(|&d| h.bucket(d)).collect();
+        h.remove_arbitrary(4);
+        for (&d, &b) in digests.iter().zip(&before) {
+            let after = h.bucket(d);
+            if b != 4 {
+                assert_eq!(after, b, "key moved off a surviving bucket");
+            } else {
+                assert_ne!(after, 4);
+            }
+        }
+    }
+
+    #[test]
+    fn restore_returns_exact_prior_mapping() {
+        let mut h = AnchorHash::with_capacity(10, 32);
+        let mut rng = SplitMix64Rng::new(3);
+        let digests: Vec<u64> = (0..3_000).map(|_| rng.next_u64()).collect();
+        let before: Vec<u32> = digests.iter().map(|&d| h.bucket(d)).collect();
+        h.remove_arbitrary(7);
+        h.restore(7);
+        let after: Vec<u32> = digests.iter().map(|&d| h.bucket(d)).collect();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn balanced_rough() {
+        let h = AnchorHash::with_capacity(11, 64);
+        let k = 110_000u32;
+        let mut counts = vec![0u32; 64];
+        let mut rng = SplitMix64Rng::new(4);
+        for _ in 0..k {
+            counts[h.bucket(rng.next_u64()) as usize] += 1;
+        }
+        let mean = k as f64 / 11.0;
+        for b in working_set(&h) {
+            let c = counts[b as usize] as f64;
+            assert!((c - mean).abs() < 0.1 * mean, "b={b} c={c} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn lifo_add_remove_roundtrip() {
+        let mut h = AnchorHash::with_capacity(5, 16);
+        let added = h.add_bucket();
+        assert_eq!(h.len(), 6);
+        let removed = h.remove_bucket();
+        assert_eq!(removed, added);
+        assert_eq!(h.len(), 5);
+    }
+}

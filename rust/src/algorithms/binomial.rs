@@ -1,0 +1,221 @@
+//! **BinomialHash** — the paper's contribution (Algorithms 1 and 2).
+//!
+//! Exact implementation of the constant-time, minimal-memory consistent
+//! hash: map the digest against the *enclosing* perfect hanging tree
+//! (capacity `E = next_pow2(n)`), relocate uniformly within the landing
+//! level, and resolve invalid buckets (`[n, E)`) by rehashing up to ω
+//! times before falling back to a congruent remap over the *minor* tree
+//! (capacity `M = E/2`).
+//!
+//! State is two `u32`s (`n`, ω): minimal memory.  The loop is bounded by
+//! ω and every primitive is O(1) integer/bitwise work: constant time.
+//!
+//! Bit-for-bit identical to `python/compile/kernels/scalar_ref.py` and to
+//! the Pallas kernel artifact (pinned by `tests/golden/`).
+
+use crate::hashing::{hash2, next_hash, next_pow2};
+
+use super::ConsistentHasher;
+
+/// Default maximum rehash iterations ω (§4.4: imbalance `< 1/2^ω` ≈ 1.6%).
+pub const DEFAULT_OMEGA: u32 = 6;
+
+/// The BinomialHash consistent-hashing function.
+///
+/// `Copy`-cheap and stateless between lookups; cloning or snapshotting a
+/// placement epoch costs 8 bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BinomialHash {
+    n: u32,
+    omega: u32,
+    /// Cached `next_pow2(n)` (kept in sync by add/remove; §Perf).
+    e: u64,
+}
+
+/// Algorithm 2 — `relocateWithinLevel(b, h)`.
+///
+/// Uniformly redistributes bucket `b` within its tree level: level 0
+/// (bucket 0) and level 1 (bucket 1) are singletons and pass through;
+/// otherwise with `d = highestOneBitIndex(b)` and mask `f = 2^d − 1` the
+/// relocated bucket is `2^d + (hash(h, f) & f)`.
+#[inline(always)]
+pub fn relocate_within_level(b: u64, h: u64) -> u64 {
+    // Branchless form (§Perf: −2…4 ns/lookup vs the early-return version):
+    // `b | 2` keeps the leading-zero count well-defined for b < 2, and the
+    // final select preserves the Alg. 2 pass-through for levels 0/1
+    // (for b >= 2, b | 2 == b, so `d` is exact).
+    let d = 63 - (b | 2).leading_zeros();
+    let f = (1u64 << d) - 1;
+    let i = hash2(h, f) & f;
+    let relocated = (1u64 << d) + i;
+    if b < 2 {
+        b
+    } else {
+        relocated
+    }
+}
+
+/// Algorithm 1 — `lookup(h0, n, ω)`: map digest `h0` to a bucket `[0, n)`.
+///
+/// Free function form used by the hot paths (router, benches) so the call
+/// is trivially inlinable without `dyn` dispatch.
+#[inline]
+pub fn lookup(h0: u64, n: u32, omega: u32) -> u32 {
+    lookup_with_tree(h0, n, next_pow2(n as u64), omega)
+}
+
+/// Algorithm 1 with the enclosing-tree capacity `E` precomputed.
+///
+/// The placement-engine form ([`BinomialHash`] caches `E` across lookups;
+/// §Perf: −2 ns/lookup on the router hot path).  `e` MUST equal
+/// `next_pow2(n)`.
+#[inline]
+pub fn lookup_with_tree(h0: u64, n: u32, e: u64, omega: u32) -> u32 {
+    if n <= 1 {
+        return 0;
+    }
+    debug_assert_eq!(e, next_pow2(n as u64));
+    let m = e >> 1; // capacity of the minor tree
+    let mut hi = h0;
+    for _ in 0..omega {
+        let b = hi & (e - 1); // line 4
+        let c = relocate_within_level(b, hi); // line 5
+        if c < m {
+            // block A: rehash the ORIGINAL digest against the minor tree
+            let d = h0 & (m - 1);
+            return relocate_within_level(d, h0) as u32;
+        }
+        if c < n as u64 {
+            return c as u32; // block B
+        }
+        hi = next_hash(hi); // line 13
+    }
+    // block C: congruent remap over the minor tree
+    let d = h0 & (m - 1);
+    relocate_within_level(d, h0) as u32
+}
+
+impl BinomialHash {
+    /// Create with `n` buckets and the default ω.
+    pub fn new(n: u32) -> Self {
+        Self::with_omega(n, DEFAULT_OMEGA)
+    }
+
+    /// Create with an explicit ω (max rehash iterations).
+    pub fn with_omega(n: u32, omega: u32) -> Self {
+        assert!(n >= 1, "cluster must have at least one bucket");
+        assert!(omega >= 1, "omega must be at least 1");
+        Self { n, omega, e: next_pow2(n as u64) }
+    }
+
+    /// The configured ω.
+    pub fn omega(&self) -> u32 {
+        self.omega
+    }
+
+    /// Capacity `E` of the enclosing tree for the current `n`.
+    pub fn enclosing_capacity(&self) -> u64 {
+        self.e
+    }
+
+    /// Capacity `M` of the minor tree for the current `n`.
+    pub fn minor_capacity(&self) -> u64 {
+        self.enclosing_capacity() >> 1
+    }
+}
+
+impl ConsistentHasher for BinomialHash {
+    fn name(&self) -> &'static str {
+        "binomial"
+    }
+
+    fn len(&self) -> u32 {
+        self.n
+    }
+
+    #[inline]
+    fn bucket(&self, digest: u64) -> u32 {
+        lookup_with_tree(digest, self.n, self.e, self.omega)
+    }
+
+    fn add_bucket(&mut self) -> u32 {
+        self.n += 1;
+        self.e = next_pow2(self.n as u64);
+        self.n - 1
+    }
+
+    fn remove_bucket(&mut self) -> u32 {
+        assert!(self.n > 1, "cannot remove the last bucket");
+        self.n -= 1;
+        self.e = next_pow2(self.n as u64);
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::SplitMix64Rng;
+
+    #[test]
+    fn in_range_exhaustive_small() {
+        for n in 1..=70u32 {
+            let h = BinomialHash::new(n);
+            let mut rng = SplitMix64Rng::new(n as u64);
+            for _ in 0..500 {
+                let b = h.bucket(rng.next_u64());
+                assert!(b < n, "n={n} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn n_one_maps_everything_to_zero() {
+        let h = BinomialHash::new(1);
+        let mut rng = SplitMix64Rng::new(9);
+        for _ in 0..100 {
+            assert_eq!(h.bucket(rng.next_u64()), 0);
+        }
+    }
+
+    #[test]
+    fn relocate_preserves_level() {
+        let mut rng = SplitMix64Rng::new(5);
+        for _ in 0..5_000 {
+            let b = 2 + rng.next_below((1 << 32) - 2);
+            let h = rng.next_u64();
+            let c = relocate_within_level(b, h);
+            assert_eq!(63 - c.leading_zeros(), 63 - b.leading_zeros());
+        }
+    }
+
+    #[test]
+    fn omega_one_still_valid() {
+        let h = BinomialHash::with_omega(11, 1);
+        let mut rng = SplitMix64Rng::new(1);
+        for _ in 0..2_000 {
+            assert!(h.bucket(rng.next_u64()) < 11);
+        }
+    }
+
+    #[test]
+    fn tree_capacities() {
+        let h = BinomialHash::new(11);
+        assert_eq!(h.enclosing_capacity(), 16);
+        assert_eq!(h.minor_capacity(), 8);
+        let h = BinomialHash::new(16);
+        assert_eq!(h.enclosing_capacity(), 16);
+        assert_eq!(h.minor_capacity(), 8);
+        let h = BinomialHash::new(17);
+        assert_eq!(h.enclosing_capacity(), 32);
+    }
+
+    #[test]
+    fn add_remove_lifo() {
+        let mut h = BinomialHash::new(3);
+        assert_eq!(h.add_bucket(), 3);
+        assert_eq!(h.len(), 4);
+        assert_eq!(h.remove_bucket(), 3);
+        assert_eq!(h.len(), 3);
+    }
+}

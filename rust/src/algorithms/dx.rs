@@ -1,0 +1,206 @@
+//! **DxHash** (Dong & Wang, 2021) — per the published design: an *NSArray*
+//! (node-state bitmap) of capacity `2^t ≥ n` plus a per-key pseudo-random
+//! probe sequence; the lookup walks the key's sequence until it hits a
+//! working slot.  Expected O(capacity/n) = O(1) probes while the array is
+//! at most ~2× over-provisioned.
+//!
+//! The capacity is fixed at construction (the paper's NSArray resize is a
+//! stop-the-world rebuild that remaps ~half the keys — the same documented
+//! trade-off as AnchorHash's anchor set, so this implementation exposes it
+//! the same way: pre-provision capacity, panic past it).  Supports
+//! arbitrary removals natively (flip the slot's bit); state is
+//! O(capacity) bits.
+
+use crate::hashing::{hash2, next_pow2};
+
+use super::{ConsistentHasher, FaultTolerant};
+
+/// Default capacity headroom multiplier over `next_pow2(n)`.
+const HEADROOM: u64 = 2;
+
+/// Minimum capacity (gives small clusters room to grow in tests/examples).
+const MIN_CAPACITY: u64 = 64;
+
+/// DxHash state: node-state bitmap + working count.
+#[derive(Debug, Clone)]
+pub struct DxHash {
+    /// `true` = slot is a working bucket.
+    active: Vec<bool>,
+    /// Number of working buckets.
+    n: u32,
+    /// Highest bucket id ever assigned (LIFO add frontier).
+    frontier: u32,
+}
+
+impl DxHash {
+    /// Create with buckets `0..n` working and default capacity headroom.
+    pub fn new(n: u32) -> Self {
+        Self::with_capacity(n, (next_pow2(n as u64) * HEADROOM).max(MIN_CAPACITY) as u32)
+    }
+
+    /// Create with an explicit power-of-two capacity `>= n`.
+    pub fn with_capacity(n: u32, capacity: u32) -> Self {
+        assert!(n >= 1);
+        assert!(capacity >= n && (capacity as u64).is_power_of_two());
+        let mut active = vec![false; capacity as usize];
+        active[..n as usize].fill(true);
+        Self { active, n, frontier: n }
+    }
+
+    /// NSArray capacity.
+    pub fn capacity(&self) -> u32 {
+        self.active.len() as u32
+    }
+}
+
+impl ConsistentHasher for DxHash {
+    fn name(&self) -> &'static str {
+        "dx"
+    }
+
+    fn len(&self) -> u32 {
+        self.n
+    }
+
+    #[inline]
+    fn bucket(&self, digest: u64) -> u32 {
+        let mask = self.active.len() as u64 - 1;
+        // Pseudo-random probe sequence R_i(key); expected O(cap/n) probes.
+        let mut h = digest;
+        loop {
+            let c = (h & mask) as usize;
+            if self.active[c] {
+                return c as u32;
+            }
+            h = hash2(h, 0xD0_0D);
+        }
+    }
+
+    fn add_bucket(&mut self) -> u32 {
+        assert!(
+            (self.frontier as usize) < self.active.len(),
+            "NSArray capacity exhausted (construct with more headroom; a \
+             resize is a stop-the-world rebuild in the published design)"
+        );
+        let b = self.frontier;
+        self.active[b as usize] = true;
+        self.frontier += 1;
+        self.n += 1;
+        b
+    }
+
+    fn remove_bucket(&mut self) -> u32 {
+        assert!(self.n > 1);
+        self.frontier -= 1;
+        let b = self.frontier;
+        assert!(self.active[b as usize], "LIFO remove expects last-added working");
+        self.active[b as usize] = false;
+        self.n -= 1;
+        b
+    }
+}
+
+impl FaultTolerant for DxHash {
+    fn remove_arbitrary(&mut self, b: u32) {
+        assert!(self.is_working(b));
+        assert!(self.n > 1);
+        self.active[b as usize] = false;
+        self.n -= 1;
+    }
+
+    fn restore(&mut self, b: u32) {
+        assert!((b as usize) < self.active.len() && !self.active[b as usize]);
+        self.active[b as usize] = true;
+        self.n += 1;
+    }
+
+    fn is_working(&self, b: u32) -> bool {
+        (b as usize) < self.active.len() && self.active[b as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::SplitMix64Rng;
+
+    #[test]
+    fn in_range_and_active() {
+        let mut h = DxHash::new(11);
+        h.remove_arbitrary(3);
+        let mut rng = SplitMix64Rng::new(5);
+        for _ in 0..3_000 {
+            let b = h.bucket(rng.next_u64());
+            assert!(h.is_working(b));
+        }
+    }
+
+    #[test]
+    fn arbitrary_removal_minimal_disruption() {
+        let mut h = DxHash::new(12);
+        let mut rng = SplitMix64Rng::new(6);
+        let digests: Vec<u64> = (0..5_000).map(|_| rng.next_u64()).collect();
+        let before: Vec<u32> = digests.iter().map(|&d| h.bucket(d)).collect();
+        h.remove_arbitrary(5);
+        for (&d, &b) in digests.iter().zip(&before) {
+            let after = h.bucket(d);
+            if b != 5 {
+                assert_eq!(after, b);
+            }
+        }
+        h.restore(5);
+        let restored: Vec<u32> = digests.iter().map(|&d| h.bucket(d)).collect();
+        assert_eq!(before, restored);
+    }
+
+    #[test]
+    fn add_monotone_within_capacity() {
+        let mut h = DxHash::new(8);
+        let mut rng = SplitMix64Rng::new(7);
+        let digests: Vec<u64> = (0..4_000).map(|_| rng.next_u64()).collect();
+        let before: Vec<u32> = digests.iter().map(|&d| h.bucket(d)).collect();
+        let added = h.add_bucket();
+        for (&d, &b) in digests.iter().zip(&before) {
+            let after = h.bucket(d);
+            assert!(after == b || after == added, "{b} -> {after}");
+        }
+    }
+
+    #[test]
+    fn grow_and_shrink_roundtrip() {
+        let mut h = DxHash::new(2);
+        let ids: Vec<u32> = (0..30).map(|_| h.add_bucket()).collect();
+        assert_eq!(h.len(), 32);
+        assert_eq!(ids, (2..32).collect::<Vec<_>>());
+        for _ in 0..30 {
+            h.remove_bucket();
+        }
+        assert_eq!(h.len(), 2);
+        let mut rng = SplitMix64Rng::new(7);
+        for _ in 0..500 {
+            assert!(h.bucket(rng.next_u64()) < 2);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity exhausted")]
+    fn capacity_exhaustion_panics() {
+        let mut h = DxHash::with_capacity(4, 4);
+        h.add_bucket();
+    }
+
+    #[test]
+    fn balanced_rough() {
+        let h = DxHash::new(11);
+        let k = 110_000u32;
+        let mut counts = vec![0u32; 11];
+        let mut rng = SplitMix64Rng::new(8);
+        for _ in 0..k {
+            counts[h.bucket(rng.next_u64()) as usize] += 1;
+        }
+        let mean = k as f64 / 11.0;
+        for c in counts {
+            assert!((c as f64 - mean).abs() < 0.08 * mean);
+        }
+    }
+}

@@ -1,0 +1,108 @@
+//! **JumpHash** (Lamping & Veach, 2014) — the classic O(log n) minimal-
+//! memory consistent hash, implemented exactly per the published
+//! pseudocode (including its 64-bit LCG and floating-point jump step).
+//!
+//! Included as the non-constant-time reference point the constant-time
+//! family (BinomialHash, JumpBackHash, PowerCH, FlipHash) is measured
+//! against.
+
+use super::ConsistentHasher;
+
+const LCG_MUL: u64 = 2862933555777941757;
+
+/// Lamping–Veach jump consistent hash: digest × n → bucket.
+#[inline]
+pub fn jump_hash(mut key: u64, n: u32) -> u32 {
+    debug_assert!(n >= 1);
+    let mut b: i64 = -1;
+    let mut j: i64 = 0;
+    while j < n as i64 {
+        b = j;
+        key = key.wrapping_mul(LCG_MUL).wrapping_add(1);
+        j = (((b + 1) as f64) * ((1u64 << 31) as f64 / ((key >> 33) as f64 + 1.0))) as i64;
+    }
+    b as u32
+}
+
+/// JumpHash wrapped in the [`ConsistentHasher`] interface.
+#[derive(Debug, Clone, Copy)]
+pub struct JumpHash {
+    n: u32,
+}
+
+impl JumpHash {
+    /// Create with `n` buckets.
+    pub fn new(n: u32) -> Self {
+        assert!(n >= 1);
+        Self { n }
+    }
+}
+
+impl ConsistentHasher for JumpHash {
+    fn name(&self) -> &'static str {
+        "jump"
+    }
+
+    fn len(&self) -> u32 {
+        self.n
+    }
+
+    #[inline]
+    fn bucket(&self, digest: u64) -> u32 {
+        jump_hash(digest, self.n)
+    }
+
+    fn add_bucket(&mut self) -> u32 {
+        self.n += 1;
+        self.n - 1
+    }
+
+    fn remove_bucket(&mut self) -> u32 {
+        assert!(self.n > 1);
+        self.n -= 1;
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::SplitMix64Rng;
+
+    #[test]
+    fn in_range() {
+        let mut rng = SplitMix64Rng::new(3);
+        for n in [1u32, 2, 3, 17, 100, 4096] {
+            for _ in 0..300 {
+                assert!(jump_hash(rng.next_u64(), n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn monotone_single_step() {
+        let mut rng = SplitMix64Rng::new(8);
+        for _ in 0..3_000 {
+            let h = rng.next_u64();
+            let n = 1 + (rng.next_below(500) as u32);
+            let before = jump_hash(h, n);
+            let after = jump_hash(h, n + 1);
+            assert!(after == before || after == n, "h={h} n={n}");
+        }
+    }
+
+    #[test]
+    fn balanced_rough() {
+        let n = 10u32;
+        let k = 100_000;
+        let mut counts = vec![0u32; n as usize];
+        let mut rng = SplitMix64Rng::new(77);
+        for _ in 0..k {
+            counts[jump_hash(rng.next_u64(), n) as usize] += 1;
+        }
+        let mean = k as f64 / n as f64;
+        for c in counts {
+            assert!((c as f64 - mean).abs() < 0.1 * mean, "c={c} mean={mean}");
+        }
+    }
+}

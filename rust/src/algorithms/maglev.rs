@@ -1,0 +1,174 @@
+//! **Maglev hashing** (Eisenbud et al., NSDI 2016): Google's load-balancer
+//! table.  Each bucket fills a fixed-size prime lookup table via a
+//! per-bucket permutation (offset/skip); lookups are a single table index
+//! — O(1) with O(table) memory and O(n·table) rebuild on change.
+//! Near-perfect balance, but only *approximate* minimal disruption (a
+//! rebuild may move a small fraction of unrelated keys) — the documented
+//! trade-off this table-based family makes vs. the stateless family.
+
+use crate::hashing::hash2;
+
+use super::ConsistentHasher;
+
+/// Default table size (prime, ~100× max buckets as the paper recommends).
+pub const DEFAULT_TABLE: u32 = 65537;
+
+/// Maglev lookup table.
+#[derive(Debug, Clone)]
+pub struct Maglev {
+    table: Vec<u32>,
+    n: u32,
+    table_size: u32,
+}
+
+/// Smallest prime `>= x` (trial division; construction-time only).
+fn next_prime(mut x: u32) -> u32 {
+    if x <= 2 {
+        return 2;
+    }
+    if x % 2 == 0 {
+        x += 1;
+    }
+    loop {
+        let mut is_prime = true;
+        let mut d = 3u32;
+        while (d as u64) * (d as u64) <= x as u64 {
+            if x % d == 0 {
+                is_prime = false;
+                break;
+            }
+            d += 2;
+        }
+        if is_prime {
+            return x;
+        }
+        x += 2;
+    }
+}
+
+impl Maglev {
+    /// Create with `n` buckets over the default prime table (auto-grown to
+    /// a prime `>= 8n` when `n` is large, per the paper's ~100× guidance
+    /// scaled to memory budget).
+    pub fn new(n: u32) -> Self {
+        let table = if DEFAULT_TABLE >= n.saturating_mul(8) {
+            DEFAULT_TABLE
+        } else {
+            next_prime(n.saturating_mul(8) | 1)
+        };
+        Self::with_table_size(n, table)
+    }
+
+    /// Create with an explicit (prime) table size.
+    pub fn with_table_size(n: u32, table_size: u32) -> Self {
+        assert!(n >= 1 && table_size >= n);
+        let mut this = Self { table: Vec::new(), n, table_size };
+        this.rebuild();
+        this
+    }
+
+    /// Populate the table with the published permutation-fill algorithm.
+    fn rebuild(&mut self) {
+        let m = self.table_size as u64;
+        let n = self.n as usize;
+        let mut offset = vec![0u64; n];
+        let mut skip = vec![0u64; n];
+        for b in 0..n {
+            offset[b] = hash2(b as u64, 0x0FF_5E7) % m;
+            skip[b] = hash2(b as u64, 0x5C1B) % (m - 1) + 1;
+        }
+        let mut next = vec![0u64; n];
+        let mut table = vec![u32::MAX; m as usize];
+        let mut filled = 0u64;
+        'outer: loop {
+            for b in 0..n {
+                // Walk b's permutation to its next unclaimed slot.
+                loop {
+                    let c = ((offset[b] + next[b] * skip[b]) % m) as usize;
+                    next[b] += 1;
+                    if table[c] == u32::MAX {
+                        table[c] = b as u32;
+                        filled += 1;
+                        if filled == m {
+                            break 'outer;
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+        self.table = table;
+    }
+}
+
+impl ConsistentHasher for Maglev {
+    fn name(&self) -> &'static str {
+        "maglev"
+    }
+
+    fn len(&self) -> u32 {
+        self.n
+    }
+
+    #[inline]
+    fn bucket(&self, digest: u64) -> u32 {
+        self.table[(digest % self.table_size as u64) as usize]
+    }
+
+    fn add_bucket(&mut self) -> u32 {
+        self.n += 1;
+        self.rebuild();
+        self.n - 1
+    }
+
+    fn remove_bucket(&mut self) -> u32 {
+        assert!(self.n > 1);
+        self.n -= 1;
+        self.rebuild();
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::SplitMix64Rng;
+
+    #[test]
+    fn table_fully_assigned() {
+        let m = Maglev::with_table_size(7, 251);
+        assert!(m.table.iter().all(|&b| b < 7));
+    }
+
+    #[test]
+    fn near_perfect_balance() {
+        let m = Maglev::with_table_size(10, 65537);
+        let mut counts = vec![0u32; 10];
+        for &b in &m.table {
+            counts[b as usize] += 1;
+        }
+        let mean = m.table.len() as f64 / 10.0;
+        for c in counts {
+            assert!((c as f64 - mean).abs() < 0.02 * mean, "c={c} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn mostly_minimal_disruption() {
+        // Maglev guarantees only *approximate* disruption: adding a bucket
+        // should move ~1/(n+1) of keys, with a small extra fraction.
+        let mut m = Maglev::with_table_size(8, 65537);
+        let mut rng = SplitMix64Rng::new(3);
+        let digests: Vec<u64> = (0..20_000).map(|_| rng.next_u64()).collect();
+        let before: Vec<u32> = digests.iter().map(|&d| m.bucket(d)).collect();
+        m.add_bucket();
+        let moved = digests
+            .iter()
+            .zip(&before)
+            .filter(|&(&d, &b)| m.bucket(d) != b)
+            .count() as f64
+            / digests.len() as f64;
+        assert!(moved < 0.25, "moved fraction {moved}");
+        assert!(moved > 0.05, "suspiciously little movement {moved}");
+    }
+}

@@ -1,0 +1,196 @@
+//! **MementoHash**-style arbitrary-removal extension (Coluzzi et al., ToN
+//! 2024) — the mechanism the BinomialHash paper's §7 points to for
+//! handling random node failures on top of a LIFO constant-time algorithm.
+//!
+//! Design (documented reconstruction of the published semantics): a LIFO
+//! base algorithm (BinomialHash here) maps the digest over the *total*
+//! bucket range `[0, size)`; a compact *memento* — the set of removed
+//! buckets — redirects keys that land on a failed bucket along a per-key
+//! deterministic replacement chain (`b → hash(digest, b) mod size → …`)
+//! until a working bucket is found.  Because the chain is a fixed per-key
+//! sequence, removing a bucket relocates exactly the keys resting on it,
+//! and restoring it brings exactly those keys back: minimal disruption and
+//! monotonicity under arbitrary failures.  Expected lookup cost is
+//! `size/working` chain steps — O(1) while failures are a bounded
+//! fraction, the published regime.
+//!
+//! LIFO scaling (add/remove of the *last* bucket) is delegated to the base
+//! algorithm and is only permitted while no arbitrary removals are
+//! outstanding (same restriction as the published evaluation, which
+//! benchmarks the failure and scaling regimes separately).
+
+use std::collections::HashSet;
+
+use crate::hashing::hash2;
+
+use super::{binomial::BinomialHash, ConsistentHasher, FaultTolerant};
+
+/// BinomialHash wrapped with a Memento-style failure table.
+#[derive(Debug, Clone)]
+pub struct MementoHash {
+    base: BinomialHash,
+    /// Removed (failed) buckets — the "memento".
+    removed: HashSet<u32>,
+}
+
+impl MementoHash {
+    /// Create with `n` working buckets and no failures.
+    pub fn new(n: u32) -> Self {
+        Self { base: BinomialHash::new(n), removed: HashSet::new() }
+    }
+
+    /// Number of failed buckets currently tracked.
+    pub fn failed(&self) -> usize {
+        self.removed.len()
+    }
+
+    /// Total bucket range (working + failed).
+    pub fn size(&self) -> u32 {
+        self.base.len()
+    }
+}
+
+impl ConsistentHasher for MementoHash {
+    fn name(&self) -> &'static str {
+        "memento"
+    }
+
+    fn len(&self) -> u32 {
+        self.base.len() - self.removed.len() as u32
+    }
+
+    #[inline]
+    fn bucket(&self, digest: u64) -> u32 {
+        let mut b = self.base.bucket(digest);
+        if self.removed.is_empty() {
+            return b;
+        }
+        // Replacement chain: deterministic per-key walk over [0, size).
+        let size = self.base.len() as u64;
+        let mut h = digest;
+        while self.removed.contains(&b) {
+            h = hash2(h, b as u64);
+            b = ((h as u128 * size as u128) >> 64) as u32;
+        }
+        b
+    }
+
+    fn add_bucket(&mut self) -> u32 {
+        assert!(
+            self.removed.is_empty(),
+            "LIFO scaling requires all failed buckets to be restored first"
+        );
+        self.base.add_bucket()
+    }
+
+    fn remove_bucket(&mut self) -> u32 {
+        assert!(
+            self.removed.is_empty(),
+            "LIFO scaling requires all failed buckets to be restored first"
+        );
+        self.base.remove_bucket()
+    }
+}
+
+impl FaultTolerant for MementoHash {
+    fn remove_arbitrary(&mut self, b: u32) {
+        assert!(b < self.base.len(), "bucket {b} out of range");
+        assert!(self.len() > 1, "cannot fail the last working bucket");
+        assert!(self.removed.insert(b), "bucket {b} already failed");
+    }
+
+    fn restore(&mut self, b: u32) {
+        assert!(self.removed.remove(&b), "bucket {b} was not failed");
+    }
+
+    fn is_working(&self, b: u32) -> bool {
+        b < self.base.len() && !self.removed.contains(&b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::SplitMix64Rng;
+
+    #[test]
+    fn no_failures_equals_base() {
+        let m = MementoHash::new(13);
+        let base = BinomialHash::new(13);
+        let mut rng = SplitMix64Rng::new(1);
+        for _ in 0..2_000 {
+            let d = rng.next_u64();
+            assert_eq!(m.bucket(d), base.bucket(d));
+        }
+    }
+
+    #[test]
+    fn failure_minimal_disruption() {
+        let mut m = MementoHash::new(16);
+        let mut rng = SplitMix64Rng::new(2);
+        let digests: Vec<u64> = (0..5_000).map(|_| rng.next_u64()).collect();
+        let before: Vec<u32> = digests.iter().map(|&d| m.bucket(d)).collect();
+        m.remove_arbitrary(6);
+        for (&d, &b) in digests.iter().zip(&before) {
+            let after = m.bucket(d);
+            if b != 6 {
+                assert_eq!(after, b);
+            } else {
+                assert_ne!(after, 6);
+            }
+        }
+    }
+
+    #[test]
+    fn restore_is_exact_inverse() {
+        let mut m = MementoHash::new(16);
+        let mut rng = SplitMix64Rng::new(3);
+        let digests: Vec<u64> = (0..3_000).map(|_| rng.next_u64()).collect();
+        let before: Vec<u32> = digests.iter().map(|&d| m.bucket(d)).collect();
+        m.remove_arbitrary(2);
+        m.remove_arbitrary(11);
+        m.restore(2);
+        m.restore(11);
+        let after: Vec<u32> = digests.iter().map(|&d| m.bucket(d)).collect();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn cascading_failures_stay_working() {
+        let mut m = MementoHash::new(20);
+        for b in [3u32, 7, 12, 13, 19, 0, 5] {
+            m.remove_arbitrary(b);
+        }
+        assert_eq!(m.len(), 13);
+        let mut rng = SplitMix64Rng::new(4);
+        for _ in 0..3_000 {
+            let b = m.bucket(rng.next_u64());
+            assert!(m.is_working(b), "landed on failed bucket {b}");
+        }
+    }
+
+    #[test]
+    fn failed_keys_redistribute_uniformly() {
+        let mut m = MementoHash::new(8);
+        m.remove_arbitrary(7);
+        let k = 80_000u32;
+        let mut counts = vec![0u32; 8];
+        let mut rng = SplitMix64Rng::new(5);
+        for _ in 0..k {
+            counts[m.bucket(rng.next_u64()) as usize] += 1;
+        }
+        assert_eq!(counts[7], 0);
+        let mean = k as f64 / 7.0;
+        for &c in &counts[..7] {
+            assert!((c as f64 - mean).abs() < 0.08 * mean, "c={c} mean={mean}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "LIFO scaling")]
+    fn scaling_with_outstanding_failures_panics() {
+        let mut m = MementoHash::new(8);
+        m.remove_arbitrary(3);
+        m.add_bucket();
+    }
+}

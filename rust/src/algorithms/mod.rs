@@ -1,0 +1,154 @@
+//! Consistent-hashing algorithms: the paper's contribution plus every
+//! baseline it is evaluated against (§6) and the broader suite from the
+//! authors' survey \[3\].
+//!
+//! All algorithms implement [`ConsistentHasher`]: a mapping from a u64 key
+//! digest to a bucket in `[0, n)` that satisfies, under LIFO cluster
+//! changes, the three consistency properties of §3:
+//!
+//! * **balance** — ~k/n keys per bucket;
+//! * **minimal disruption** — removing a bucket relocates only its keys;
+//! * **monotonicity** — adding a bucket only moves keys onto it.
+//!
+//! Fidelity levels (see DESIGN.md §3): `binomial` is an exact
+//! implementation of the paper (golden-pinned against the Python spec);
+//! `jump`, `anchor`, `ring`, `rendezvous`, `maglev`, `multiprobe`, `dx`
+//! follow their published pseudocode; `powerch`, `fliphash`, `jumpback`
+//! are documented reconstructions matching the published structure,
+//! arithmetic class (float vs integer) and complexity — their exact
+//! constants were not recoverable, which affects absolute (not relative)
+//! timings.
+
+pub mod anchor;
+pub mod binomial;
+pub mod dx;
+pub mod fliphash;
+pub mod jump;
+pub mod jumpback;
+pub mod maglev;
+pub mod memento;
+pub mod modulo;
+pub mod multiprobe;
+pub mod powerch;
+pub mod rendezvous;
+pub mod ring;
+
+use crate::hashing::xxhash64;
+
+/// A consistent mapping from key digests to buckets `[0, n)` under LIFO
+/// (last-in-first-out) cluster resizing.
+pub trait ConsistentHasher: Send + Sync {
+    /// Algorithm name (stable identifier used by configs and benches).
+    fn name(&self) -> &'static str;
+
+    /// Current number of working buckets `n`.
+    fn len(&self) -> u32;
+
+    /// `true` when no bucket is available.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Map a key digest to a bucket in `[0, n)`.
+    fn bucket(&self, digest: u64) -> u32;
+
+    /// Add the next bucket (id `n`), returning its id. LIFO order.
+    fn add_bucket(&mut self) -> u32;
+
+    /// Remove the last-added bucket (id `n-1`), returning its id.
+    ///
+    /// # Panics
+    /// Panics if the cluster would become empty.
+    fn remove_bucket(&mut self) -> u32;
+
+    /// Convenience: hash a byte-string key and map it.
+    fn bucket_for_key(&self, key: &[u8]) -> u32 {
+        self.bucket(xxhash64(key, 0))
+    }
+}
+
+/// Algorithms that natively support removing an *arbitrary* bucket (not
+/// just the last-added one) with minimal disruption.
+pub trait FaultTolerant: ConsistentHasher {
+    /// Remove bucket `b` (which must be working).
+    fn remove_arbitrary(&mut self, b: u32);
+
+    /// Restore a previously removed bucket `b`.
+    fn restore(&mut self, b: u32);
+
+    /// Is bucket `b` currently working?
+    fn is_working(&self, b: u32) -> bool;
+}
+
+/// Names of every registered algorithm, in benchmark display order.
+pub const ALL_ALGORITHMS: &[&str] = &[
+    "binomial",
+    "jumpback",
+    "powerch",
+    "fliphash",
+    "jump",
+    "anchor",
+    "dx",
+    "memento",
+    "maglev",
+    "multiprobe",
+    "ring",
+    "rendezvous",
+];
+
+/// The four constant-time algorithms compared in the paper's §6.
+pub const PAPER_ALGORITHMS: &[&str] = &["binomial", "jumpback", "powerch", "fliphash"];
+
+/// Non-consistent anti-baseline (not in [`ALL_ALGORITHMS`]: it
+/// deliberately violates monotonicity/minimal disruption; the disruption
+/// bench includes it to quantify what consistency buys).
+pub const ANTI_BASELINE: &str = "modulo";
+
+/// Construct an algorithm by name with `n` initial buckets.
+///
+/// Returns `None` for unknown names; see [`ALL_ALGORITHMS`].
+pub fn by_name(name: &str, n: u32) -> Option<Box<dyn ConsistentHasher>> {
+    Some(match name {
+        "binomial" => Box::new(binomial::BinomialHash::new(n)),
+        "jump" => Box::new(jump::JumpHash::new(n)),
+        "jumpback" => Box::new(jumpback::JumpBackHash::new(n)),
+        "powerch" => Box::new(powerch::PowerCh::new(n)),
+        "fliphash" => Box::new(fliphash::FlipHash::new(n)),
+        "anchor" => {
+            // Generous default headroom: the anchor set bounds the maximum
+            // cluster size, and growth past it is a rebuild.
+            let capacity = (n.next_power_of_two() * 2).max(64);
+            Box::new(anchor::AnchorHash::with_capacity(n, capacity))
+        }
+        "dx" => Box::new(dx::DxHash::new(n)),
+        "memento" => Box::new(memento::MementoHash::new(n)),
+        "modulo" => Box::new(modulo::ModuloHash::new(n)),
+        "ring" => Box::new(ring::HashRing::new(n, ring::DEFAULT_VNODES)),
+        "rendezvous" => Box::new(rendezvous::Rendezvous::new(n)),
+        "maglev" => Box::new(maglev::Maglev::new(n)),
+        "multiprobe" => Box::new(multiprobe::MultiProbe::new(n, multiprobe::DEFAULT_PROBES)),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_all() {
+        for name in ALL_ALGORITHMS {
+            let h = by_name(name, 7).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(h.len(), 7, "{name}");
+            assert_eq!(h.name(), *name);
+        }
+        assert!(by_name("nope", 3).is_none());
+    }
+
+    #[test]
+    fn bucket_for_key_matches_digest_path() {
+        let h = by_name("binomial", 12).unwrap();
+        let key = b"object/alpha";
+        assert_eq!(h.bucket_for_key(key), h.bucket(xxhash64(key, 0)));
+    }
+}

@@ -1,0 +1,87 @@
+//! **Naive modulo hashing** — the anti-baseline (paper §3).
+//!
+//! `bucket = digest mod n` is perfectly balanced and O(1) but *not
+//! consistent*: changing `n` remaps ~`1 − 1/max(n, n′)`… in practice about
+//! half of all keys, versus `1/(n+1)` for every consistent algorithm in
+//! this suite.  Included so the disruption benches quantify exactly what
+//! consistent hashing buys (the paper's §3 motivation).
+
+use super::ConsistentHasher;
+
+/// `digest mod n` (Lemire multiply-shift; no modulo on the hot path).
+#[derive(Debug, Clone, Copy)]
+pub struct ModuloHash {
+    n: u32,
+}
+
+impl ModuloHash {
+    /// Create with `n` buckets.
+    pub fn new(n: u32) -> Self {
+        assert!(n >= 1);
+        Self { n }
+    }
+}
+
+impl ConsistentHasher for ModuloHash {
+    fn name(&self) -> &'static str {
+        "modulo"
+    }
+
+    fn len(&self) -> u32 {
+        self.n
+    }
+
+    #[inline]
+    fn bucket(&self, digest: u64) -> u32 {
+        ((digest as u128 * self.n as u128) >> 64) as u32
+    }
+
+    fn add_bucket(&mut self) -> u32 {
+        self.n += 1;
+        self.n - 1
+    }
+
+    fn remove_bucket(&mut self) -> u32 {
+        assert!(self.n > 1);
+        self.n -= 1;
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::SplitMix64Rng;
+
+    #[test]
+    fn in_range_and_balanced() {
+        let h = ModuloHash::new(10);
+        let mut counts = vec![0u32; 10];
+        let mut rng = SplitMix64Rng::new(1);
+        for _ in 0..100_000 {
+            counts[h.bucket(rng.next_u64()) as usize] += 1;
+        }
+        let mean = 10_000.0;
+        for c in counts {
+            assert!((c as f64 - mean).abs() < 0.05 * mean);
+        }
+    }
+
+    #[test]
+    fn demonstrates_non_consistency() {
+        // The whole point: n -> n+1 moves ~n/(n+1) of keys, not 1/(n+1).
+        let a = ModuloHash::new(10);
+        let b = ModuloHash::new(11);
+        let mut rng = SplitMix64Rng::new(2);
+        let moved = (0..50_000)
+            .filter(|_| {
+                let d = rng.next_u64();
+                a.bucket(d) != b.bucket(d)
+            })
+            .count();
+        let frac = moved as f64 / 50_000.0;
+        // Range-partition reduction moves exactly 1/2 asymptotically
+        // (true `% n` moves 1 - 1/n — even worse).
+        assert!(frac > 0.4, "naive modulo moved only {frac}");
+    }
+}

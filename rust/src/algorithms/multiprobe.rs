@@ -1,0 +1,146 @@
+//! **Multi-probe consistent hashing** (Appleton & O'Reilly, 2015): one
+//! ring point per bucket (O(n) memory, no virtual-node blowup); a lookup
+//! probes the ring `k` times with different key hashes and keeps the probe
+//! whose clockwise distance to the next point is smallest, trading lookup
+//! cost (k · O(log n)) for balance.
+
+use crate::hashing::hash2;
+
+use super::ConsistentHasher;
+
+/// Default probe count (the published sweet spot for ~peak-to-mean 1.1).
+pub const DEFAULT_PROBES: u32 = 21;
+
+/// Multi-probe ring: sorted points, one per bucket.
+#[derive(Debug, Clone)]
+pub struct MultiProbe {
+    /// Sorted (point, bucket) pairs.
+    points: Vec<(u64, u32)>,
+    n: u32,
+    probes: u32,
+}
+
+impl MultiProbe {
+    /// Create with `n` buckets and `probes` probes per lookup.
+    pub fn new(n: u32, probes: u32) -> Self {
+        assert!(n >= 1 && probes >= 1);
+        let mut points: Vec<(u64, u32)> =
+            (0..n).map(|b| (Self::point(b), b)).collect();
+        points.sort_unstable();
+        Self { points, n, probes }
+    }
+
+    fn point(bucket: u32) -> u64 {
+        hash2(bucket as u64, 0x9_0BE5)
+    }
+
+    /// Clockwise distance from `x` to the next ring point, and its bucket.
+    #[inline]
+    fn successor(&self, x: u64) -> (u64, u32) {
+        let i = self.points.partition_point(|&(p, _)| p < x);
+        let (p, b) = if i == self.points.len() { self.points[0] } else { self.points[i] };
+        (p.wrapping_sub(x), b)
+    }
+}
+
+impl ConsistentHasher for MultiProbe {
+    fn name(&self) -> &'static str {
+        "multiprobe"
+    }
+
+    fn len(&self) -> u32 {
+        self.n
+    }
+
+    #[inline]
+    fn bucket(&self, digest: u64) -> u32 {
+        let mut best_d = u64::MAX;
+        let mut best_b = 0u32;
+        for i in 0..self.probes {
+            let x = hash2(digest, i as u64 ^ 0xF00D);
+            let (d, b) = self.successor(x);
+            if d < best_d {
+                best_d = d;
+                best_b = b;
+            }
+        }
+        best_b
+    }
+
+    fn add_bucket(&mut self) -> u32 {
+        let b = self.n;
+        let p = Self::point(b);
+        let i = self.points.partition_point(|&(q, _)| q < p);
+        self.points.insert(i, (p, b));
+        self.n += 1;
+        b
+    }
+
+    fn remove_bucket(&mut self) -> u32 {
+        assert!(self.n > 1);
+        self.n -= 1;
+        let b = self.n;
+        let p = Self::point(b);
+        let i = self.points.partition_point(|&(q, _)| q < p);
+        debug_assert_eq!(self.points[i], (p, b));
+        self.points.remove(i);
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::SplitMix64Rng;
+
+    #[test]
+    fn in_range() {
+        let h = MultiProbe::new(13, DEFAULT_PROBES);
+        let mut rng = SplitMix64Rng::new(1);
+        for _ in 0..2_000 {
+            assert!(h.bucket(rng.next_u64()) < 13);
+        }
+    }
+
+    #[test]
+    fn add_remove_roundtrip_exact() {
+        let mut h = MultiProbe::new(9, DEFAULT_PROBES);
+        let mut rng = SplitMix64Rng::new(2);
+        let digests: Vec<u64> = (0..3_000).map(|_| rng.next_u64()).collect();
+        let before: Vec<u32> = digests.iter().map(|&d| h.bucket(d)).collect();
+        h.add_bucket();
+        h.remove_bucket();
+        let after: Vec<u32> = digests.iter().map(|&d| h.bucket(d)).collect();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn monotone_single_step() {
+        let mut rng = SplitMix64Rng::new(3);
+        for _ in 0..800 {
+            let d = rng.next_u64();
+            let n = 1 + rng.next_below(50) as u32;
+            let before = MultiProbe::new(n, DEFAULT_PROBES).bucket(d);
+            let after = MultiProbe::new(n + 1, DEFAULT_PROBES).bucket(d);
+            assert!(after == before || after == n);
+        }
+    }
+
+    #[test]
+    fn balance_better_than_single_probe() {
+        let k = 50_000u32;
+        let spread = |probes: u32| -> f64 {
+            let h = MultiProbe::new(12, probes);
+            let mut counts = vec![0u32; 12];
+            let mut rng = SplitMix64Rng::new(4);
+            for _ in 0..k {
+                counts[h.bucket(rng.next_u64()) as usize] += 1;
+            }
+            let mean = k as f64 / 12.0;
+            let var =
+                counts.iter().map(|&c| (c as f64 - mean).powi(2)).sum::<f64>() / 12.0;
+            var.sqrt() / mean
+        };
+        assert!(spread(DEFAULT_PROBES) < spread(1));
+    }
+}

@@ -1,0 +1,208 @@
+//! **PowerCH** (Leu, 2023: *Fast consistent hashing in constant time*) —
+//! documented reconstruction.
+//!
+//! Published profile: constant-time lookup, minimal constant memory,
+//! **floating-point arithmetic** in the resolution step — the trait the
+//! BinomialHash paper singles out to explain why PowerCH and FlipHash
+//! trail the integer-only algorithms in Fig. 5.
+//!
+//! Reconstruction strategy (DESIGN.md §3): the provably-consistent core
+//! (enclosing power-of-two range, congruent masks, retry, boundary-size
+//! fallback) is shared — it is the only part of these algorithms whose
+//! structure the consistency proofs pin down, and the congruent bit-mask
+//! chain cannot be replaced by float scaling without breaking the §5.3
+//! era-boundary collapse.  PowerCH's floating-point character therefore
+//! lives where the proof permits any pure uniform function:
+//!
+//! * the within-level relocation offset is computed as `⌊u · 2^d⌋` from a
+//!   53-bit unit float (an FP multiply + floor per relocation), and
+//! * candidate acceptance runs through f64 conversions and FP compares.
+//!
+//! That is 3-6 FP ops per lookup versus zero in BinomialHash/JumpBackHash
+//! — reproducing the paper's measured ordering for its stated reason.
+
+use crate::hashing::{hash2, next_pow2, splitmix64};
+
+use super::ConsistentHasher;
+
+/// Attempt cap before the boundary fallback.
+pub const ATTEMPTS: u32 = 16;
+
+/// Rehash stream increment (distinct from the other algorithms' streams).
+const STREAM: u64 = 0xA24B_AED4_963E_E407;
+
+const INV_2_53: f64 = 1.0 / 9007199254740992.0; // 2^-53
+
+#[inline(always)]
+fn next_draw(h: u64) -> u64 {
+    splitmix64(h.wrapping_add(STREAM))
+}
+
+/// Float-flavoured within-level relocation: same level-preserving
+/// contract as Alg. 2, offset computed in f64.
+#[inline(always)]
+fn relocate_float(b: u64, h: u64) -> u64 {
+    if b < 2 {
+        return b;
+    }
+    let d = 63 - b.leading_zeros();
+    let f = (1u64 << d) - 1;
+    let u = (hash2(h, f) >> 11) as f64 * INV_2_53; // unit float
+    let i = (u * (1u64 << d) as f64) as u64; // FP multiply + floor
+    (1u64 << d) + i.min(f)
+}
+
+/// PowerCH lookup: digest × n → bucket (free function, hot path).
+#[inline]
+pub fn powerch(digest: u64, n: u32, attempts: u32) -> u32 {
+    if n <= 1 {
+        return 0;
+    }
+    let e = next_pow2(n as u64);
+    let m = e >> 1;
+    let m_f = m as f64;
+    let n_f = n as f64;
+    let mut hi = digest;
+    for _ in 0..attempts {
+        let b = hi & (e - 1);
+        let c = relocate_float(b, hi);
+        let c_f = c as f64; // FP acceptance tests (values < 2^53: exact)
+        if c_f < m_f {
+            let d = digest & (m - 1);
+            return relocate_float(d, digest) as u32;
+        }
+        if c_f < n_f {
+            return c as u32;
+        }
+        hi = next_draw(hi);
+    }
+    let d = digest & (m - 1);
+    relocate_float(d, digest) as u32
+}
+
+/// PowerCH wrapped in the [`ConsistentHasher`] interface.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerCh {
+    n: u32,
+    attempts: u32,
+}
+
+impl PowerCh {
+    /// Create with `n` buckets and the default attempt cap.
+    pub fn new(n: u32) -> Self {
+        assert!(n >= 1);
+        Self { n, attempts: ATTEMPTS }
+    }
+}
+
+impl ConsistentHasher for PowerCh {
+    fn name(&self) -> &'static str {
+        "powerch"
+    }
+
+    fn len(&self) -> u32 {
+        self.n
+    }
+
+    #[inline]
+    fn bucket(&self, digest: u64) -> u32 {
+        powerch(digest, self.n, self.attempts)
+    }
+
+    fn add_bucket(&mut self) -> u32 {
+        self.n += 1;
+        self.n - 1
+    }
+
+    fn remove_bucket(&mut self) -> u32 {
+        assert!(self.n > 1);
+        self.n -= 1;
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::SplitMix64Rng;
+
+    #[test]
+    fn in_range() {
+        let mut rng = SplitMix64Rng::new(44);
+        for n in [1u32, 2, 3, 9, 16, 17, 1000, 65_537] {
+            for _ in 0..500 {
+                assert!(powerch(rng.next_u64(), n, ATTEMPTS) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn relocate_float_preserves_level() {
+        let mut rng = SplitMix64Rng::new(45);
+        for _ in 0..5_000 {
+            let b = 2 + rng.next_below((1 << 30) - 2);
+            let h = rng.next_u64();
+            let c = relocate_float(b, h);
+            assert_eq!(63 - c.leading_zeros(), 63 - b.leading_zeros(), "b={b} c={c}");
+        }
+    }
+
+    #[test]
+    fn monotone_single_step() {
+        let mut rng = SplitMix64Rng::new(13);
+        for _ in 0..5_000 {
+            let h = rng.next_u64();
+            let n = 1 + rng.next_below(300) as u32;
+            let before = powerch(h, n, ATTEMPTS);
+            let after = powerch(h, n + 1, ATTEMPTS);
+            assert!(after == before || after == n, "h={h} n={n} {before}->{after}");
+        }
+    }
+
+    #[test]
+    fn minimal_disruption_single_step() {
+        let mut rng = SplitMix64Rng::new(16);
+        for _ in 0..5_000 {
+            let h = rng.next_u64();
+            let n = 2 + rng.next_below(300) as u32;
+            let before = powerch(h, n, ATTEMPTS);
+            let after = powerch(h, n - 1, ATTEMPTS);
+            if before != n - 1 {
+                assert_eq!(after, before, "h={h} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_rough() {
+        for n in [11u32, 24] {
+            let k = 10_000 * n;
+            let mut counts = vec![0u32; n as usize];
+            let mut rng = SplitMix64Rng::new(10);
+            for _ in 0..k {
+                counts[powerch(rng.next_u64(), n, ATTEMPTS) as usize] += 1;
+            }
+            let mean = k as f64 / n as f64;
+            for c in counts {
+                assert!((c as f64 - mean).abs() < 0.06 * mean, "n={n} c={c} mean={mean}");
+            }
+        }
+    }
+
+    #[test]
+    fn lower_half_stable_under_growth() {
+        // Keys whose enclosing-range candidate stays in the minor tree get
+        // the same placement for every n in the era (9..=16).
+        let mut rng = SplitMix64Rng::new(12);
+        for _ in 0..2_000 {
+            let h = rng.next_u64();
+            let b9 = powerch(h, 9, ATTEMPTS);
+            let mut prev = b9;
+            for n in 10u32..=16 {
+                let b = powerch(h, n, ATTEMPTS);
+                assert!(b == prev || b == n - 1, "h={h} n={n} {prev}->{b}");
+                prev = b;
+            }
+        }
+    }
+}

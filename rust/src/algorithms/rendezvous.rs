@@ -1,0 +1,90 @@
+//! **Rendezvous / HRW hashing** (Thaler & Ravishankar, 1996): a key maps
+//! to the bucket maximizing `hash(key, bucket)`.  O(n) per lookup, zero
+//! state beyond `n`, perfect minimal disruption and monotonicity — the
+//! simplicity baseline in the survey comparison.
+
+use crate::hashing::hash2;
+
+use super::ConsistentHasher;
+
+/// Highest-random-weight hashing.
+#[derive(Debug, Clone, Copy)]
+pub struct Rendezvous {
+    n: u32,
+}
+
+impl Rendezvous {
+    /// Create with `n` buckets.
+    pub fn new(n: u32) -> Self {
+        assert!(n >= 1);
+        Self { n }
+    }
+}
+
+impl ConsistentHasher for Rendezvous {
+    fn name(&self) -> &'static str {
+        "rendezvous"
+    }
+
+    fn len(&self) -> u32 {
+        self.n
+    }
+
+    #[inline]
+    fn bucket(&self, digest: u64) -> u32 {
+        let mut best = 0u32;
+        let mut best_w = hash2(digest, 0);
+        for b in 1..self.n {
+            let w = hash2(digest, b as u64);
+            if w > best_w {
+                best_w = w;
+                best = b;
+            }
+        }
+        best
+    }
+
+    fn add_bucket(&mut self) -> u32 {
+        self.n += 1;
+        self.n - 1
+    }
+
+    fn remove_bucket(&mut self) -> u32 {
+        assert!(self.n > 1);
+        self.n -= 1;
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::SplitMix64Rng;
+
+    #[test]
+    fn monotone_exact() {
+        let mut rng = SplitMix64Rng::new(1);
+        for _ in 0..3_000 {
+            let d = rng.next_u64();
+            let n = 1 + rng.next_below(100) as u32;
+            let before = Rendezvous::new(n).bucket(d);
+            let after = Rendezvous::new(n + 1).bucket(d);
+            assert!(after == before || after == n);
+        }
+    }
+
+    #[test]
+    fn balanced_rough() {
+        let h = Rendezvous::new(10);
+        let k = 100_000u32;
+        let mut counts = vec![0u32; 10];
+        let mut rng = SplitMix64Rng::new(2);
+        for _ in 0..k {
+            counts[h.bucket(rng.next_u64()) as usize] += 1;
+        }
+        let mean = k as f64 / 10.0;
+        for c in counts {
+            assert!((c as f64 - mean).abs() < 0.06 * mean);
+        }
+    }
+}

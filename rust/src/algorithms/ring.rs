@@ -1,0 +1,137 @@
+//! **Hash ring** (Karger et al., 1997) — classic consistent hashing with
+//! virtual nodes.  Each bucket owns `vnodes` points on a 64-bit ring; a
+//! key maps to the bucket owning the first point clockwise of its digest.
+//! O(log(n·vnodes)) lookups via `BTreeMap`, O(n·vnodes) memory — the
+//! state-heavy baseline the constant-time family eliminates.
+
+use std::collections::BTreeMap;
+
+use crate::hashing::hash2;
+
+use super::ConsistentHasher;
+
+/// Default virtual nodes per bucket (typical production setting; also the
+/// setting used by the authors' survey \[3\]).
+pub const DEFAULT_VNODES: u32 = 100;
+
+/// Karger-style hash ring with virtual nodes.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    ring: BTreeMap<u64, u32>,
+    n: u32,
+    vnodes: u32,
+}
+
+impl HashRing {
+    /// Create with `n` buckets × `vnodes` points each.
+    pub fn new(n: u32, vnodes: u32) -> Self {
+        assert!(n >= 1 && vnodes >= 1);
+        let mut this = Self { ring: BTreeMap::new(), n: 0, vnodes };
+        for _ in 0..n {
+            this.add_bucket();
+        }
+        this
+    }
+
+    fn point(bucket: u32, replica: u32) -> u64 {
+        hash2(((bucket as u64) << 32) | replica as u64, 0x51D0_0D)
+    }
+}
+
+impl ConsistentHasher for HashRing {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn len(&self) -> u32 {
+        self.n
+    }
+
+    #[inline]
+    fn bucket(&self, digest: u64) -> u32 {
+        debug_assert!(!self.ring.is_empty());
+        // First point clockwise of the digest, wrapping at the top.
+        match self.ring.range(digest..).next() {
+            Some((_, &b)) => b,
+            None => *self.ring.values().next().unwrap(),
+        }
+    }
+
+    fn add_bucket(&mut self) -> u32 {
+        let b = self.n;
+        for r in 0..self.vnodes {
+            self.ring.insert(Self::point(b, r), b);
+        }
+        self.n += 1;
+        b
+    }
+
+    fn remove_bucket(&mut self) -> u32 {
+        assert!(self.n > 1);
+        self.n -= 1;
+        let b = self.n;
+        for r in 0..self.vnodes {
+            self.ring.remove(&Self::point(b, r));
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::SplitMix64Rng;
+
+    #[test]
+    fn in_range() {
+        let h = HashRing::new(9, 50);
+        let mut rng = SplitMix64Rng::new(1);
+        for _ in 0..2_000 {
+            assert!(h.bucket(rng.next_u64()) < 9);
+        }
+    }
+
+    #[test]
+    fn monotone_and_disruptive_minimal() {
+        let mut h = HashRing::new(8, DEFAULT_VNODES);
+        let mut rng = SplitMix64Rng::new(2);
+        let digests: Vec<u64> = (0..4_000).map(|_| rng.next_u64()).collect();
+        let before: Vec<u32> = digests.iter().map(|&d| h.bucket(d)).collect();
+        let added = h.add_bucket();
+        for (&d, &b) in digests.iter().zip(&before) {
+            let after = h.bucket(d);
+            assert!(after == b || after == added);
+        }
+        h.remove_bucket();
+        let restored: Vec<u32> = digests.iter().map(|&d| h.bucket(d)).collect();
+        assert_eq!(before, restored);
+    }
+
+    #[test]
+    fn wraparound_covered() {
+        // Digests above the highest ring point must wrap to the first point.
+        let h = HashRing::new(3, 10);
+        let top = *h.ring.keys().next_back().unwrap();
+        if top < u64::MAX {
+            let b = h.bucket(top + 1);
+            assert_eq!(b, *h.ring.values().next().unwrap());
+        }
+    }
+
+    #[test]
+    fn balance_improves_with_vnodes() {
+        let k = 60_000u32;
+        let spread = |vnodes: u32| -> f64 {
+            let h = HashRing::new(12, vnodes);
+            let mut counts = vec![0u32; 12];
+            let mut rng = SplitMix64Rng::new(3);
+            for _ in 0..k {
+                counts[h.bucket(rng.next_u64()) as usize] += 1;
+            }
+            let mean = k as f64 / 12.0;
+            let var = counts.iter().map(|&c| (c as f64 - mean).powi(2)).sum::<f64>() / 12.0;
+            var.sqrt() / mean
+        };
+        assert!(spread(200) < spread(2));
+    }
+}

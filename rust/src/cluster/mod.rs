@@ -1,0 +1,173 @@
+//! Cluster membership: the epoch-stamped mapping from buckets to shards.
+//!
+//! The cluster owns the placement engine (any [`ConsistentHasher`]) and
+//! the shard handles, and records every topology change as an event.
+//! Shards join and leave in LIFO order (the paper's §1 operating model);
+//! arbitrary failures are handled by the Memento-wrapped engine (see
+//! `examples/failover_memento.rs`).
+
+use std::time::SystemTime;
+
+use crate::algorithms::ConsistentHasher;
+use crate::shard::ShardClient;
+
+/// A topology change.
+#[derive(Debug, Clone)]
+pub struct TopologyEvent {
+    /// Epoch after the change.
+    pub epoch: u64,
+    /// What happened.
+    pub kind: EventKind,
+    /// Wall-clock timestamp.
+    pub at: SystemTime,
+}
+
+/// Event kind.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EventKind {
+    /// Bucket joined (always id = n−1 at that epoch).
+    Joined(u32),
+    /// Bucket left (always the last-added).
+    Left(u32),
+}
+
+/// Cluster state: placement engine + shard handles + event log.
+pub struct Cluster {
+    /// Monotonic topology epoch.
+    pub epoch: u64,
+    placement: Box<dyn ConsistentHasher>,
+    shards: Vec<ShardClient>,
+    /// Topology history.
+    pub events: Vec<TopologyEvent>,
+}
+
+impl Cluster {
+    /// Build from a placement engine and one shard handle per bucket.
+    ///
+    /// # Panics
+    /// Panics if the engine's bucket count differs from the shard count.
+    pub fn new(placement: Box<dyn ConsistentHasher>, shards: Vec<ShardClient>) -> Self {
+        assert_eq!(
+            placement.len() as usize,
+            shards.len(),
+            "placement engine and shard list disagree"
+        );
+        Self { epoch: 0, placement, shards, events: Vec::new() }
+    }
+
+    /// Number of working buckets.
+    pub fn len(&self) -> u32 {
+        self.placement.len()
+    }
+
+    /// `true` when the cluster has no shards.
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// Placement algorithm name.
+    pub fn algorithm(&self) -> &'static str {
+        self.placement.name()
+    }
+
+    /// Map a digest to its bucket.
+    #[inline]
+    pub fn bucket(&self, digest: u64) -> u32 {
+        self.placement.bucket(digest)
+    }
+
+    /// Map a digest to its shard handle.
+    #[inline]
+    pub fn route(&self, digest: u64) -> (u32, &ShardClient) {
+        let b = self.placement.bucket(digest);
+        (b, &self.shards[b as usize])
+    }
+
+    /// Shard handle for a bucket.
+    pub fn shard(&self, bucket: u32) -> &ShardClient {
+        &self.shards[bucket as usize]
+    }
+
+    /// All shard handles (bucket id = index).
+    pub fn shards(&self) -> &[ShardClient] {
+        &self.shards
+    }
+
+    /// Join a new shard; returns its bucket id.
+    pub fn join(&mut self, shard: ShardClient) -> u32 {
+        let b = self.placement.add_bucket();
+        debug_assert_eq!(b as usize, self.shards.len());
+        self.shards.push(shard);
+        self.epoch += 1;
+        self.events.push(TopologyEvent {
+            epoch: self.epoch,
+            kind: EventKind::Joined(b),
+            at: SystemTime::now(),
+        });
+        b
+    }
+
+    /// Remove the last-joined shard; returns `(bucket, handle)`.
+    ///
+    /// # Panics
+    /// Panics if only one shard remains.
+    pub fn leave(&mut self) -> (u32, ShardClient) {
+        let b = self.placement.remove_bucket();
+        let shard = self.shards.pop().expect("shard list in sync");
+        debug_assert_eq!(b as usize, self.shards.len());
+        self.epoch += 1;
+        self.events.push(TopologyEvent {
+            epoch: self.epoch,
+            kind: EventKind::Left(b),
+            at: SystemTime::now(),
+        });
+        (b, shard)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::binomial::BinomialHash;
+    use crate::shard::Shard;
+
+    fn local_cluster(n: u32) -> Cluster {
+        let shards = (0..n).map(|i| ShardClient::Local(Shard::new(i))).collect();
+        Cluster::new(Box::new(BinomialHash::new(n)), shards)
+    }
+
+    #[test]
+    fn join_leave_epochs_and_events() {
+        let mut c = local_cluster(3);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.epoch, 0);
+        let b = c.join(ShardClient::Local(Shard::new(3)));
+        assert_eq!(b, 3);
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.epoch, 1);
+        let (left, _) = c.leave();
+        assert_eq!(left, 3);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.epoch, 2);
+        assert_eq!(c.events.len(), 2);
+        assert_eq!(c.events[0].kind, EventKind::Joined(3));
+        assert_eq!(c.events[1].kind, EventKind::Left(3));
+    }
+
+    #[test]
+    fn route_in_range() {
+        let c = local_cluster(5);
+        let mut rng = crate::hashing::SplitMix64Rng::new(1);
+        for _ in 0..1_000 {
+            let (b, _) = c.route(rng.next_u64());
+            assert!(b < 5);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "disagree")]
+    fn mismatched_sizes_panic() {
+        let shards = vec![ShardClient::Local(Shard::new(0))];
+        Cluster::new(Box::new(BinomialHash::new(2)), shards);
+    }
+}

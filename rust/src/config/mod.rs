@@ -1,0 +1,321 @@
+//! Configuration: a TOML-subset file format + programmatic defaults for
+//! the `binhashd` launcher.
+//!
+//! The parser covers the subset the config actually uses — `[section]`
+//! headers, `key = value` with string / integer / boolean / string-array
+//! values, and `#` comments — implemented in-tree because the build is
+//! fully offline (no serde/toml crates; see DESIGN.md §3).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// Top-level configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Config {
+    /// Cluster/placement settings.
+    pub cluster: ClusterConfig,
+    /// Router front-end settings.
+    pub router: RouterConfig,
+    /// AOT artifact settings.
+    pub artifacts: ArtifactsConfig,
+}
+
+/// Placement engine settings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Placement algorithm (see `algorithms::ALL_ALGORITHMS`).
+    pub algorithm: String,
+    /// BinomialHash ω (max rehash iterations).
+    pub omega: u32,
+    /// Initial shard count.
+    pub initial_shards: u32,
+}
+
+/// Router settings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RouterConfig {
+    /// Listen address.
+    pub listen: String,
+    /// Connections pooled per remote shard.
+    pub pool: usize,
+    /// Remote shard addresses (empty = spawn in-process shards).
+    pub shard_addrs: Vec<String>,
+}
+
+/// Artifact settings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactsConfig {
+    /// Directory holding `manifest.txt` + `*.hlo.txt`.
+    pub dir: String,
+    /// Load the PJRT bulk runtime at router start.
+    pub enable_bulk: bool,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self { algorithm: "binomial".into(), omega: 6, initial_shards: 8 }
+    }
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self { listen: "127.0.0.1:7600".into(), pool: 4, shard_addrs: Vec::new() }
+    }
+}
+
+impl Default for ArtifactsConfig {
+    fn default() -> Self {
+        Self { dir: "artifacts".into(), enable_bulk: false }
+    }
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cluster: ClusterConfig::default(),
+            router: RouterConfig::default(),
+            artifacts: ArtifactsConfig::default(),
+        }
+    }
+}
+
+/// A parsed scalar/array value.
+#[derive(Debug, Clone, PartialEq)]
+enum Value {
+    Str(String),
+    Int(i64),
+    Bool(bool),
+    StrArray(Vec<String>),
+}
+
+fn parse_value(raw: &str) -> Result<Value> {
+    let raw = raw.trim();
+    if raw == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if raw == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = raw.strip_prefix('"').and_then(|r| r.strip_suffix('"')) {
+        ensure!(!inner.contains('"'), "escaped quotes unsupported: {raw}");
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = raw.strip_prefix('[').and_then(|r| r.strip_suffix(']')) {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::StrArray(Vec::new()));
+        }
+        let items = inner
+            .split(',')
+            .map(|s| match parse_value(s)? {
+                Value::Str(x) => Ok(x),
+                other => bail!("array items must be strings, got {other:?}"),
+            })
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(Value::StrArray(items));
+    }
+    if let Ok(i) = raw.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    bail!("unparseable value: {raw}")
+}
+
+/// Parse the TOML-subset text into `section.key -> value`.
+fn parse_toml_subset(text: &str) -> Result<HashMap<String, Value>> {
+    let mut out = HashMap::new();
+    let mut section = String::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            section = name.trim().to_string();
+            continue;
+        }
+        let (key, raw) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let value = parse_value(raw)
+            .with_context(|| format!("line {}: bad value", lineno + 1))?;
+        let full = if section.is_empty() {
+            key.trim().to_string()
+        } else {
+            format!("{section}.{}", key.trim())
+        };
+        out.insert(full, value);
+    }
+    Ok(out)
+}
+
+macro_rules! take {
+    ($map:expr, $key:expr, $variant:ident, $target:expr) => {
+        if let Some(v) = $map.remove($key) {
+            match v {
+                Value::$variant(x) => $target = x.try_into().ok().unwrap_or($target),
+                other => bail!("{}: wrong type {:?}", $key, other),
+            }
+        }
+    };
+}
+
+impl Config {
+    /// Parse configuration text (TOML subset), filling defaults.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut map = parse_toml_subset(text)?;
+        let mut cfg = Config::default();
+        take!(map, "cluster.algorithm", Str, cfg.cluster.algorithm);
+        if let Some(v) = map.remove("cluster.omega") {
+            match v {
+                Value::Int(x) => cfg.cluster.omega = u32::try_from(x)?,
+                other => bail!("cluster.omega: wrong type {other:?}"),
+            }
+        }
+        if let Some(v) = map.remove("cluster.initial_shards") {
+            match v {
+                Value::Int(x) => cfg.cluster.initial_shards = u32::try_from(x)?,
+                other => bail!("cluster.initial_shards: wrong type {other:?}"),
+            }
+        }
+        take!(map, "router.listen", Str, cfg.router.listen);
+        if let Some(v) = map.remove("router.pool") {
+            match v {
+                Value::Int(x) => cfg.router.pool = usize::try_from(x)?,
+                other => bail!("router.pool: wrong type {other:?}"),
+            }
+        }
+        take!(map, "router.shard_addrs", StrArray, cfg.router.shard_addrs);
+        take!(map, "artifacts.dir", Str, cfg.artifacts.dir);
+        take!(map, "artifacts.enable_bulk", Bool, cfg.artifacts.enable_bulk);
+        if let Some(k) = map.keys().next() {
+            bail!("unknown config key {k:?}");
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading config {path:?}"))?;
+        Self::parse(&text).with_context(|| format!("parsing config {path:?}"))
+    }
+
+    /// Serialize to the TOML subset (used by `binhashd init-config`).
+    pub fn to_toml(&self) -> String {
+        let addrs = self
+            .router
+            .shard_addrs
+            .iter()
+            .map(|a| format!("\"{a}\""))
+            .collect::<Vec<_>>()
+            .join(", ");
+        format!(
+            "[cluster]\nalgorithm = \"{}\"\nomega = {}\ninitial_shards = {}\n\n\
+             [router]\nlisten = \"{}\"\npool = {}\nshard_addrs = [{}]\n\n\
+             [artifacts]\ndir = \"{}\"\nenable_bulk = {}\n",
+            self.cluster.algorithm,
+            self.cluster.omega,
+            self.cluster.initial_shards,
+            self.router.listen,
+            self.router.pool,
+            addrs,
+            self.artifacts.dir,
+            self.artifacts.enable_bulk,
+        )
+    }
+
+    /// Validate cross-field invariants.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            crate::algorithms::by_name(&self.cluster.algorithm, 1).is_some(),
+            "unknown algorithm {:?} (known: {:?})",
+            self.cluster.algorithm,
+            crate::algorithms::ALL_ALGORITHMS
+        );
+        ensure!(self.cluster.omega >= 1, "omega must be >= 1");
+        ensure!(self.cluster.initial_shards >= 1, "need at least one shard");
+        if !self.router.shard_addrs.is_empty() {
+            ensure!(
+                self.router.shard_addrs.len() == self.cluster.initial_shards as usize,
+                "shard_addrs length must equal initial_shards"
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let mut c = Config::default();
+        c.router.shard_addrs = vec!["127.0.0.1:1".into(), "127.0.0.1:2".into()];
+        c.cluster.initial_shards = 2;
+        let text = c.to_toml();
+        let back = Config::parse(&text).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn partial_config_fills_defaults() {
+        let c = Config::parse(
+            "# comment\n[cluster]\nalgorithm = \"jumpback\"  # inline comment\ninitial_shards = 3\n",
+        )
+        .unwrap();
+        assert_eq!(c.cluster.algorithm, "jumpback");
+        assert_eq!(c.cluster.initial_shards, 3);
+        assert_eq!(c.cluster.omega, 6); // default
+        assert_eq!(c.router.pool, 4); // default
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(Config::parse("[cluster]\nbogus = 1\n").is_err());
+    }
+
+    #[test]
+    fn wrong_type_rejected() {
+        assert!(Config::parse("[cluster]\nomega = \"six\"\n").is_err());
+    }
+
+    #[test]
+    fn bad_algorithm_rejected() {
+        let mut c = Config::default();
+        c.cluster.algorithm = "bogus".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn mismatched_shard_addrs_rejected() {
+        let mut c = Config::default();
+        c.router.shard_addrs = vec!["127.0.0.1:1".into()];
+        c.cluster.initial_shards = 2;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn array_parsing() {
+        let c = Config::parse(
+            "[cluster]\ninitial_shards = 2\n[router]\nshard_addrs = [\"a:1\", \"b:2\"]\n",
+        )
+        .unwrap();
+        assert_eq!(c.router.shard_addrs, vec!["a:1", "b:2"]);
+    }
+
+    #[test]
+    fn empty_array() {
+        let c = Config::parse("[router]\nshard_addrs = []\n").unwrap();
+        assert!(c.router.shard_addrs.is_empty());
+    }
+}

@@ -1,0 +1,171 @@
+//! Hashing substrate shared by every consistent-hashing algorithm.
+//!
+//! Two primitives carry the whole repository:
+//!
+//! * [`splitmix64`] / [`next_hash`] / [`hash2`] — the mixer family that the
+//!   BinomialHash implementation (and the JAX/Pallas artifacts) use.  These
+//!   are **bitwise-identical** to `python/compile/kernels/scalar_ref.py`;
+//!   the contract is pinned by `tests/golden/binomial_golden.json`.
+//! * [`xxhash64`] — the key→digest hash for byte-string keys (requests,
+//!   object names).  Uniform, fast, and with published test vectors.
+//!
+//! Plus a tiny deterministic PRNG ([`SplitMix64Rng`]) used by workload
+//! generators and randomized tests, so no external `rand` crate leaks into
+//! the request path.
+
+pub mod xxh;
+
+pub use xxh::xxhash64;
+
+/// 64-bit golden ratio — splitmix64's increment constant.
+pub const PHI64: u64 = 0x9E37_79B9_7F4A_7C15;
+
+const MIX1: u64 = 0xBF58_476D_1CE4_E5B9;
+const MIX2: u64 = 0x94D0_49BB_1331_11EB;
+
+/// splitmix64 finalizer (Steele et al.): a bijective avalanche mixer on u64.
+///
+/// This is the universal mixer of the repo: the rehash stream and the
+/// level-relocation hash are both built from it (DESIGN.md §2).
+#[inline(always)]
+pub const fn splitmix64(mut z: u64) -> u64 {
+    z ^= z >> 30;
+    z = z.wrapping_mul(MIX1);
+    z ^= z >> 27;
+    z = z.wrapping_mul(MIX2);
+    z ^= z >> 31;
+    z
+}
+
+/// The paper's rehash stream `hash^{i+1}(key)` (Alg. 1 line 13):
+/// `h_{i+1} = splitmix64(h_i + PHI64)`.
+#[inline(always)]
+pub const fn next_hash(h: u64) -> u64 {
+    splitmix64(h.wrapping_add(PHI64))
+}
+
+/// The seeded hash of Alg. 2 line 7: `r ← hash(h, f)`.
+#[inline(always)]
+pub const fn hash2(h: u64, f: u64) -> u64 {
+    splitmix64(h ^ f.wrapping_mul(PHI64))
+}
+
+/// Smallest power of two `>= n` (capacity `E` of the enclosing tree).
+///
+/// `n` must be `>= 1`; `n = 1` maps to `1`.
+#[inline(always)]
+pub const fn next_pow2(n: u64) -> u64 {
+    if n <= 1 {
+        1
+    } else {
+        1u64 << (64 - (n - 1).leading_zeros())
+    }
+}
+
+/// A tiny deterministic PRNG (splitmix64 stream) for workloads and tests.
+///
+/// Not cryptographic; chosen for reproducibility across the Rust and Python
+/// sides and to keep the hot path free of external dependencies.
+#[derive(Debug, Clone)]
+pub struct SplitMix64Rng {
+    state: u64,
+}
+
+impl SplitMix64Rng {
+    /// Create a generator from a seed.
+    pub const fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next uniform u64.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(PHI64);
+        splitmix64(self.state)
+    }
+
+    /// Uniform value in `[0, bound)` via Lemire's multiply-shift reduction.
+    #[inline]
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix64_known_values() {
+        // Reference values computed from the Python scalar spec
+        // (python/compile/kernels/scalar_ref.py) — the parity contract.
+        assert_eq!(splitmix64(0), 0);
+        assert_eq!(splitmix64(1), 0x5692_161d_100b_05e5);
+        assert_eq!(splitmix64(PHI64), 0xe220_a839_7b1d_cdaf);
+        assert_eq!(next_hash(0xDEAD_BEEF), 0x4adf_b90f_68c9_eb9b);
+        assert_eq!(hash2(0xDEAD_BEEF, 0xFF), 0xce45_1072_3418_6931);
+    }
+
+    #[test]
+    fn next_hash_stream_progresses() {
+        let h0 = 0xDEADBEEFu64;
+        let h1 = next_hash(h0);
+        let h2 = next_hash(h1);
+        assert_ne!(h0, h1);
+        assert_ne!(h1, h2);
+        // Deterministic.
+        assert_eq!(h1, next_hash(0xDEADBEEFu64));
+    }
+
+    #[test]
+    fn next_pow2_exact() {
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(2), 2);
+        assert_eq!(next_pow2(3), 4);
+        assert_eq!(next_pow2(4), 4);
+        assert_eq!(next_pow2(5), 8);
+        assert_eq!(next_pow2(1023), 1024);
+        assert_eq!(next_pow2(1024), 1024);
+        assert_eq!(next_pow2(1025), 2048);
+        assert_eq!(next_pow2(1 << 62), 1 << 62);
+    }
+
+    #[test]
+    fn rng_below_bound() {
+        let mut rng = SplitMix64Rng::new(42);
+        for bound in [1u64, 2, 3, 10, 1000, u32::MAX as u64] {
+            for _ in 0..200 {
+                assert!(rng.next_below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn rng_f64_unit_interval() {
+        let mut rng = SplitMix64Rng::new(7);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn rng_reproducible() {
+        let mut a = SplitMix64Rng::new(123);
+        let mut b = SplitMix64Rng::new(123);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+}

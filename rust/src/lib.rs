@@ -1,0 +1,46 @@
+//! # binhash — BinomialHash consistent hashing & distributed-KV framework
+//!
+//! Production-grade reproduction of *BinomialHash: A Constant Time,
+//! Minimal Memory Consistent Hashing Algorithm* (Coluzzi, Brocco,
+//! Antonucci & Leidi, 2024), built as the system the paper motivates: a
+//! distributed key-value store / request-routing framework whose
+//! placement engine is consistent hashing.
+//!
+//! ## Layers
+//!
+//! * [`algorithms`] — BinomialHash (exact, golden-pinned against the
+//!   paper's pseudocode) plus every baseline from the paper's §6 and the
+//!   authors' survey.
+//! * [`hashing`] — the hash substrate (xxhash64, splitmix64 family),
+//!   bitwise-identical to the Python/Pallas build path.
+//! * [`cluster`] / [`router`] / [`shard`] / [`rebalance`] — the
+//!   coordinator: membership, tokio request routing, in-memory storage
+//!   nodes, and migration planning.
+//! * [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas bulk
+//!   placement artifacts (`artifacts/*.hlo.txt`).
+//! * [`stats`] / [`workload`] / [`metrics`] — balance statistics (§5
+//!   closed forms), workload generators, telemetry.
+//!
+//! ## Quickstart
+//!
+//! ```rust
+//! use binhash::algorithms::{binomial::BinomialHash, ConsistentHasher};
+//!
+//! let mut ch = BinomialHash::new(11);
+//! let bucket = ch.bucket_for_key(b"object/42");
+//! assert!(bucket < 11);
+//! ch.add_bucket(); // scale up: only ~1/12 of keys move, all onto bucket 11
+//! ```
+
+pub mod algorithms;
+pub mod cluster;
+pub mod config;
+pub mod hashing;
+pub mod metrics;
+pub mod proto;
+pub mod rebalance;
+pub mod router;
+pub mod runtime;
+pub mod shard;
+pub mod stats;
+pub mod workload;

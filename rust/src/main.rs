@@ -1,0 +1,125 @@
+//! `binhashd` — the cluster launcher and operator CLI.
+//!
+//! ```text
+//! binhashd router [--config <file>]        run the request router
+//! binhashd shard --id <n> [--listen <addr>] run a standalone shard
+//! binhashd lookup --key <k> --n <n> [--algorithm <name>]
+//! binhashd init-config                      print a default config
+//! ```
+//!
+//! Argument parsing is in-tree (`--flag value` pairs) — the build is fully
+//! offline, so no clap.
+
+use std::collections::HashMap;
+use std::net::TcpListener;
+
+use anyhow::{anyhow, bail, Result};
+
+use binhash::algorithms;
+use binhash::config::Config;
+use binhash::router::{local_cluster, Router};
+use binhash::runtime::PlacementRuntime;
+use binhash::shard::{RemotePool, Shard, ShardClient};
+
+const USAGE: &str = "usage:
+  binhashd router [--config <file>]
+  binhashd shard --id <n> [--listen <addr>]
+  binhashd lookup --key <key> --n <n> [--algorithm <name>]
+  binhashd init-config";
+
+/// Parse `--flag value` pairs into a map.
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut flags = HashMap::new();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        let name = a
+            .strip_prefix("--")
+            .ok_or_else(|| anyhow!("expected --flag, got {a:?}\n{USAGE}"))?;
+        let value = it.next().ok_or_else(|| anyhow!("--{name} missing value"))?;
+        flags.insert(name.to_string(), value.clone());
+    }
+    Ok(flags)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        bail!("{USAGE}");
+    };
+    let flags = parse_flags(&args[1..])?;
+    match cmd.as_str() {
+        "router" => {
+            let cfg = match flags.get("config") {
+                Some(path) => Config::load(path)?,
+                None => Config::default(),
+            };
+            cfg.validate()?;
+            run_router(cfg)
+        }
+        "shard" => {
+            let id: u32 = flags
+                .get("id")
+                .ok_or_else(|| anyhow!("--id required"))?
+                .parse()?;
+            let listen = flags
+                .get("listen")
+                .cloned()
+                .unwrap_or_else(|| "127.0.0.1:7700".to_string());
+            let shard = Shard::new(id);
+            let listener = TcpListener::bind(&listen)?;
+            eprintln!("shard {id} listening on {listen}");
+            binhash::shard::serve(shard, listener)
+        }
+        "lookup" => {
+            let key = flags.get("key").ok_or_else(|| anyhow!("--key required"))?;
+            let n: u32 = flags.get("n").ok_or_else(|| anyhow!("--n required"))?.parse()?;
+            let algorithm = flags.get("algorithm").map(String::as_str).unwrap_or("binomial");
+            let engine = algorithms::by_name(algorithm, n)
+                .ok_or_else(|| anyhow!("unknown algorithm {algorithm:?}"))?;
+            println!("{}", engine.bucket_for_key(key.as_bytes()));
+            Ok(())
+        }
+        "init-config" => {
+            print!("{}", Config::default().to_toml());
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn run_router(cfg: Config) -> Result<()> {
+    let n = cfg.cluster.initial_shards;
+    let cluster = if cfg.router.shard_addrs.is_empty() {
+        local_cluster(&cfg.cluster.algorithm, n)?
+    } else {
+        let placement = algorithms::by_name(&cfg.cluster.algorithm, n)
+            .ok_or_else(|| anyhow!("unknown algorithm"))?;
+        let shards = cfg
+            .router
+            .shard_addrs
+            .iter()
+            .map(|a| Ok(ShardClient::Remote(RemotePool::new(a.parse()?, cfg.router.pool))))
+            .collect::<Result<Vec<_>>>()?;
+        binhash::cluster::Cluster::new(placement, shards)
+    };
+
+    let bulk = if cfg.artifacts.enable_bulk {
+        let runtime = PlacementRuntime::load(&cfg.artifacts.dir)?;
+        eprintln!("bulk runtime loaded from {} (omega={})", cfg.artifacts.dir, runtime.omega);
+        Some(runtime)
+    } else {
+        None
+    };
+
+    let router = Router::with_options(
+        cluster,
+        Box::new(|id| ShardClient::Local(Shard::new(id))),
+        bulk,
+    );
+    let listener = TcpListener::bind(&cfg.router.listen)?;
+    eprintln!(
+        "router listening on {} (algo={}, n={})",
+        cfg.router.listen, cfg.cluster.algorithm, n
+    );
+    router.serve(listener)
+}

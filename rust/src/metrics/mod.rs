@@ -1,0 +1,152 @@
+//! Telemetry: lock-free counters and fixed-bucket latency histograms.
+//!
+//! Hand-rolled (no external metrics crate) so the router's hot path costs
+//! exactly one relaxed atomic increment per event.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Log-spaced latency histogram: 64 buckets, ~2× resolution from 1µs.
+///
+/// Bucket `i` covers `[2^i, 2^{i+1})` nanoseconds.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; 64],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// New empty histogram.
+    pub const fn new() -> Self {
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Self { buckets: [ZERO; 64], count: ZERO, sum_ns: ZERO }
+    }
+
+    /// Record one latency observation.
+    #[inline]
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        let idx = (63 - ns.max(1).leading_zeros()) as usize;
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in nanoseconds.
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Approximate quantile (upper bucket bound), `q ∈ [0, 1]`.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return 1u64 << (i + 1).min(63);
+            }
+        }
+        u64::MAX
+    }
+}
+
+/// Router-level counters.
+#[derive(Debug, Default)]
+pub struct RouterMetrics {
+    /// GET requests served.
+    pub gets: AtomicU64,
+    /// PUT requests served.
+    pub puts: AtomicU64,
+    /// DEL requests served.
+    pub dels: AtomicU64,
+    /// Requests that failed (shard error / bad request).
+    pub errors: AtomicU64,
+    /// Keys migrated by rebalances.
+    pub migrated_keys: AtomicU64,
+    /// Topology epochs applied.
+    pub epochs: AtomicU64,
+    /// End-to-end request latency.
+    pub latency: LatencyHistogram,
+    /// Placement (hash lookup) latency.
+    pub placement_latency: LatencyHistogram,
+}
+
+impl RouterMetrics {
+    /// New zeroed metrics.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One-line summary for logs and examples.
+    pub fn summary(&self) -> String {
+        format!(
+            "gets={} puts={} dels={} errors={} migrated={} epochs={} \
+             p50={}ns p99={}ns mean={:.0}ns",
+            self.gets.load(Ordering::Relaxed),
+            self.puts.load(Ordering::Relaxed),
+            self.dels.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+            self.migrated_keys.load(Ordering::Relaxed),
+            self.epochs.load(Ordering::Relaxed),
+            self.latency.quantile_ns(0.5),
+            self.latency.quantile_ns(0.99),
+            self.latency.mean_ns(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_records_and_quantiles() {
+        let h = LatencyHistogram::new();
+        for us in [1u64, 2, 4, 8, 100, 1000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 6);
+        assert!(h.mean_ns() > 0.0);
+        assert!(h.quantile_ns(0.5) >= 1_000);
+        assert!(h.quantile_ns(1.0) >= 1_000_000);
+        assert!(h.quantile_ns(0.0) <= h.quantile_ns(1.0));
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile_ns(0.99), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn metrics_summary_formats() {
+        let m = RouterMetrics::new();
+        m.gets.fetch_add(3, Ordering::Relaxed);
+        m.latency.record(Duration::from_micros(5));
+        let s = m.summary();
+        assert!(s.contains("gets=3"));
+    }
+}

@@ -1,0 +1,278 @@
+//! Wire protocol shared by the router front-end and the shard servers.
+//!
+//! Text-framed commands with binary value payloads (memcached-style):
+//!
+//! ```text
+//! GET <key>\n                 -> VAL <len>\n<bytes>  |  NIL\n
+//! PUT <key> <len>\n<bytes>    -> OK\n
+//! DEL <key>\n                 -> OK\n | NIL\n
+//! SCAN\n                      -> KEYS <count>\n(<key>\n)*
+//! COUNT\n                     -> NUM <count>\n
+//! STATS\n                     -> INFO <line>\n
+//! SCALEUP\n                   -> NUM <new-n>\n        (router only)
+//! SCALEDOWN\n                 -> NUM <new-n>\n        (router only)
+//! ```
+//!
+//! Keys are ASCII tokens without whitespace (the router rejects others);
+//! values are arbitrary bytes.  Errors: `ERR <msg>\n`.
+//!
+//! Blocking I/O over `std::io` — the servers are thread-per-connection
+//! (see DESIGN.md: the build is fully offline, so the stack is std-only).
+
+use std::io::{BufRead, BufReader, Read, Write};
+
+use anyhow::{anyhow, bail, Result};
+
+/// A parsed request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    /// Fetch a value.
+    Get { key: String },
+    /// Store a value.
+    Put { key: String, value: Vec<u8> },
+    /// Delete a key.
+    Del { key: String },
+    /// List all keys (shard-internal; used by the rebalancer).
+    Scan,
+    /// Number of keys stored.
+    Count,
+    /// One-line stats.
+    Stats,
+    /// Add a shard (router admin).
+    ScaleUp,
+    /// Remove the last shard (router admin).
+    ScaleDown,
+}
+
+/// A response.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Response {
+    /// Success without payload.
+    Ok,
+    /// A value payload.
+    Val(Vec<u8>),
+    /// Key absent.
+    Nil,
+    /// Key listing.
+    Keys(Vec<String>),
+    /// Numeric result.
+    Num(u64),
+    /// Informational line.
+    Info(String),
+    /// Error with message.
+    Err(String),
+}
+
+/// `true` when `key` is a legal wire token.
+pub fn valid_key(key: &str) -> bool {
+    !key.is_empty() && key.len() <= 512 && key.bytes().all(|b| b.is_ascii_graphic())
+}
+
+/// Read one request from a buffered stream. Returns `None` on clean EOF.
+pub fn read_request<R: Read>(r: &mut BufReader<R>) -> Result<Option<Request>> {
+    let mut line = String::new();
+    if r.read_line(&mut line)? == 0 {
+        return Ok(None);
+    }
+    let line = line.trim_end();
+    let mut parts = line.split(' ');
+    let cmd = parts.next().unwrap_or("");
+    let req = match cmd {
+        "GET" => Request::Get { key: expect_key(parts.next())? },
+        "DEL" => Request::Del { key: expect_key(parts.next())? },
+        "PUT" => {
+            let key = expect_key(parts.next())?;
+            let len: usize =
+                parts.next().ok_or_else(|| anyhow!("PUT missing length"))?.parse()?;
+            if len > 64 << 20 {
+                bail!("value too large: {len}");
+            }
+            let mut value = vec![0u8; len];
+            r.read_exact(&mut value)?;
+            Request::Put { key, value }
+        }
+        "SCAN" => Request::Scan,
+        "COUNT" => Request::Count,
+        "STATS" => Request::Stats,
+        "SCALEUP" => Request::ScaleUp,
+        "SCALEDOWN" => Request::ScaleDown,
+        other => bail!("unknown command {other:?}"),
+    };
+    Ok(Some(req))
+}
+
+fn expect_key(tok: Option<&str>) -> Result<String> {
+    let key = tok.ok_or_else(|| anyhow!("missing key"))?;
+    if !valid_key(key) {
+        bail!("invalid key {key:?}");
+    }
+    Ok(key.to_string())
+}
+
+/// Write one request.
+pub fn write_request<W: Write>(w: &mut W, req: &Request) -> Result<()> {
+    match req {
+        Request::Get { key } => write!(w, "GET {key}\n")?,
+        Request::Del { key } => write!(w, "DEL {key}\n")?,
+        Request::Put { key, value } => {
+            write!(w, "PUT {key} {}\n", value.len())?;
+            w.write_all(value)?;
+        }
+        Request::Scan => w.write_all(b"SCAN\n")?,
+        Request::Count => w.write_all(b"COUNT\n")?,
+        Request::Stats => w.write_all(b"STATS\n")?,
+        Request::ScaleUp => w.write_all(b"SCALEUP\n")?,
+        Request::ScaleDown => w.write_all(b"SCALEDOWN\n")?,
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one response.
+pub fn read_response<R: Read>(r: &mut BufReader<R>) -> Result<Response> {
+    let mut line = String::new();
+    if r.read_line(&mut line)? == 0 {
+        bail!("connection closed mid-response");
+    }
+    let line_t = line.trim_end();
+    let (tag, rest) = line_t.split_once(' ').unwrap_or((line_t, ""));
+    Ok(match tag {
+        "OK" => Response::Ok,
+        "NIL" => Response::Nil,
+        "VAL" => {
+            let len: usize = rest.parse()?;
+            let mut value = vec![0u8; len];
+            r.read_exact(&mut value)?;
+            Response::Val(value)
+        }
+        "KEYS" => {
+            let count: usize = rest.parse()?;
+            let mut keys = Vec::with_capacity(count.min(1 << 20));
+            for _ in 0..count {
+                let mut k = String::new();
+                if r.read_line(&mut k)? == 0 {
+                    bail!("truncated key list");
+                }
+                keys.push(k.trim_end().to_string());
+            }
+            Response::Keys(keys)
+        }
+        "NUM" => Response::Num(rest.parse()?),
+        "INFO" => Response::Info(rest.to_string()),
+        "ERR" => Response::Err(rest.to_string()),
+        other => bail!("bad response tag {other:?}"),
+    })
+}
+
+/// Write one response.
+pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> Result<()> {
+    match resp {
+        Response::Ok => w.write_all(b"OK\n")?,
+        Response::Nil => w.write_all(b"NIL\n")?,
+        Response::Val(value) => {
+            write!(w, "VAL {}\n", value.len())?;
+            w.write_all(value)?;
+        }
+        Response::Keys(keys) => {
+            write!(w, "KEYS {}\n", keys.len())?;
+            for k in keys {
+                w.write_all(k.as_bytes())?;
+                w.write_all(b"\n")?;
+            }
+        }
+        Response::Num(x) => write!(w, "NUM {x}\n")?,
+        Response::Info(s) => write!(w, "INFO {s}\n")?,
+        Response::Err(m) => write!(w, "ERR {m}\n")?,
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(req: Request) -> Request {
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req).unwrap();
+        let mut r = BufReader::new(&buf[..]);
+        read_request(&mut r).unwrap().unwrap()
+    }
+
+    fn roundtrip_resp(resp: Response) -> Response {
+        let mut buf = Vec::new();
+        write_response(&mut buf, &resp).unwrap();
+        let mut r = BufReader::new(&buf[..]);
+        read_response(&mut r).unwrap()
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        for req in [
+            Request::Get { key: "k1".into() },
+            Request::Put { key: "k2".into(), value: b"hello\nworld\x00\xff".to_vec() },
+            Request::Del { key: "k3".into() },
+            Request::Scan,
+            Request::Count,
+            Request::Stats,
+            Request::ScaleUp,
+            Request::ScaleDown,
+        ] {
+            assert_eq!(roundtrip_req(req.clone()), req);
+        }
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        for resp in [
+            Response::Ok,
+            Response::Nil,
+            Response::Val(vec![0u8, 1, 2, 255, b'\n']),
+            Response::Keys(vec!["a".into(), "b/c".into()]),
+            Response::Keys(Vec::new()),
+            Response::Num(42),
+            Response::Info("epoch=3 n=8".into()),
+            Response::Err("nope".into()),
+        ] {
+            assert_eq!(roundtrip_resp(resp.clone()), resp);
+        }
+    }
+
+    #[test]
+    fn eof_returns_none() {
+        let mut r = BufReader::new(&b""[..]);
+        assert!(read_request(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn bad_command_errors() {
+        let mut r = BufReader::new(&b"BOGUS x\n"[..]);
+        assert!(read_request(&mut r).is_err());
+    }
+
+    #[test]
+    fn oversized_put_rejected() {
+        let mut r = BufReader::new(&b"PUT k 999999999999\n"[..]);
+        assert!(read_request(&mut r).is_err());
+    }
+
+    #[test]
+    fn pipelined_requests() {
+        let mut buf = Vec::new();
+        write_request(&mut buf, &Request::Get { key: "a".into() }).unwrap();
+        write_request(&mut buf, &Request::Count).unwrap();
+        let mut r = BufReader::new(&buf[..]);
+        assert_eq!(read_request(&mut r).unwrap().unwrap(), Request::Get { key: "a".into() });
+        assert_eq!(read_request(&mut r).unwrap().unwrap(), Request::Count);
+        assert!(read_request(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn key_validation() {
+        assert!(valid_key("tenant-1/bucket-2/obj"));
+        assert!(!valid_key(""));
+        assert!(!valid_key("has space"));
+        assert!(!valid_key("has\nnewline"));
+        assert!(!valid_key(&"x".repeat(600)));
+    }
+}

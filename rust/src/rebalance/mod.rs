@@ -1,0 +1,210 @@
+//! Rebalancer: computes and applies the minimal key-movement set for a
+//! topology change.
+//!
+//! Consistent hashing makes the plan *local*: under monotonicity only keys
+//! whose new bucket is the joining one move (scale-up), and under minimal
+//! disruption only keys on the leaving bucket move (scale-down).  The
+//! planner still verifies this from first principles by computing old/new
+//! placement for every key — that check is the bulk workload the
+//! [`PlacementRuntime`] XLA artifacts accelerate, and it catches a
+//! non-consistent engine (e.g. `maglev`) by reporting its excess moves.
+
+use anyhow::Result;
+
+use crate::runtime::PlacementRuntime;
+use crate::shard::ShardClient;
+
+/// One key relocation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Move {
+    /// Object key.
+    pub key: String,
+    /// Source bucket.
+    pub from: u32,
+    /// Destination bucket.
+    pub to: u32,
+}
+
+/// A computed migration plan.
+#[derive(Debug, Clone, Default)]
+pub struct MigrationPlan {
+    /// Keys to relocate.
+    pub moves: Vec<Move>,
+    /// Keys examined.
+    pub scanned: usize,
+}
+
+impl MigrationPlan {
+    /// Fraction of scanned keys that move.
+    pub fn moved_fraction(&self) -> f64 {
+        if self.scanned == 0 {
+            0.0
+        } else {
+            self.moves.len() as f64 / self.scanned as f64
+        }
+    }
+}
+
+/// How placement is recomputed during planning.
+pub enum PlanPath<'a> {
+    /// Pure-Rust loop over arbitrary `(old, new)` placement functions.
+    Rust(&'a dyn Fn(u64) -> u32, &'a dyn Fn(u64) -> u32),
+    /// AOT XLA artifact (BinomialHash engine only): bulk old/new placement
+    /// on the PJRT runtime.
+    Xla {
+        /// Compiled artifact runtime.
+        runtime: &'a PlacementRuntime,
+        /// Cluster size before the change.
+        n_old: u32,
+        /// Cluster size after the change.
+        n_new: u32,
+    },
+}
+
+/// Collect every key (with digest) currently stored on the given shards.
+pub fn scan_cluster(shards: &[ShardClient]) -> Result<Vec<(String, u64)>> {
+    let mut all = Vec::new();
+    for shard in shards {
+        for key in shard.scan()? {
+            let digest = crate::hashing::xxhash64(key.as_bytes(), 0);
+            all.push((key, digest));
+        }
+    }
+    Ok(all)
+}
+
+/// Compute the migration plan for the scanned keys.
+pub fn plan(keys: &[(String, u64)], path: PlanPath<'_>) -> Result<MigrationPlan> {
+    let mut plan = MigrationPlan { moves: Vec::new(), scanned: keys.len() };
+    match path {
+        PlanPath::Rust(old_fn, new_fn) => {
+            for (key, digest) in keys {
+                let from = old_fn(*digest);
+                let to = new_fn(*digest);
+                if from != to {
+                    plan.moves.push(Move { key: key.clone(), from, to });
+                }
+            }
+        }
+        PlanPath::Xla { runtime, n_old, n_new } => {
+            let digests: Vec<u64> = keys.iter().map(|(_, d)| *d).collect();
+            let outcome = runtime.migration_plan(&digests, n_old, n_new)?;
+            for (i, (key, _)) in keys.iter().enumerate() {
+                if outcome.moved[i] != 0 {
+                    plan.moves.push(Move {
+                        key: key.clone(),
+                        from: outcome.old[i],
+                        to: outcome.new[i],
+                    });
+                }
+            }
+        }
+    }
+    Ok(plan)
+}
+
+/// Apply a plan: copy each key to its destination shard, then delete the
+/// source copy.  Returns the number of keys migrated.
+pub fn apply(plan: &MigrationPlan, shards: &[ShardClient]) -> Result<u64> {
+    let mut moved = 0u64;
+    for m in &plan.moves {
+        let src = &shards[m.from as usize];
+        let dst = &shards[m.to as usize];
+        if let Some(value) = src.get(&m.key)? {
+            dst.put(&m.key, value)?;
+            src.del(&m.key)?;
+            moved += 1;
+        }
+    }
+    Ok(moved)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::binomial;
+    use crate::hashing::SplitMix64Rng;
+    use crate::shard::Shard;
+
+    fn keyset(k: usize) -> Vec<(String, u64)> {
+        let mut rng = SplitMix64Rng::new(12);
+        (0..k)
+            .map(|i| {
+                let key = format!("obj-{i}-{}", rng.next_u64());
+                let digest = crate::hashing::xxhash64(key.as_bytes(), 0);
+                (key, digest)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn scale_up_moves_only_to_new_bucket() {
+        let keys = keyset(20_000);
+        let plan = plan(
+            &keys,
+            PlanPath::Rust(&|d| binomial::lookup(d, 8, 6), &|d| binomial::lookup(d, 9, 6)),
+        )
+        .unwrap();
+        for m in &plan.moves {
+            assert_eq!(m.to, 8, "monotonicity: moves only onto the new bucket");
+        }
+        let f = plan.moved_fraction();
+        assert!((f - 1.0 / 9.0).abs() < 0.02, "moved fraction {f}");
+    }
+
+    #[test]
+    fn scale_down_moves_only_from_removed_bucket() {
+        let keys = keyset(20_000);
+        let plan = plan(
+            &keys,
+            PlanPath::Rust(&|d| binomial::lookup(d, 9, 6), &|d| binomial::lookup(d, 8, 6)),
+        )
+        .unwrap();
+        for m in &plan.moves {
+            assert_eq!(m.from, 8, "minimal disruption: only the removed bucket's keys move");
+        }
+    }
+
+    #[test]
+    fn apply_moves_data() {
+        let shards: Vec<ShardClient> =
+            (0..3).map(|i| ShardClient::Local(Shard::new(i))).collect();
+        // Place keys per n=2 (bucket 2 unused), then migrate to n=3.
+        let keys = keyset(2_000);
+        for (key, digest) in &keys {
+            let b = binomial::lookup(*digest, 2, 6);
+            if let ShardClient::Local(s) = &shards[b as usize] {
+                s.put(key.clone(), b"x".to_vec());
+            }
+        }
+        let scanned = scan_cluster(&shards).unwrap();
+        assert_eq!(scanned.len(), 2_000);
+        let plan = plan(
+            &scanned,
+            PlanPath::Rust(&|d| binomial::lookup(d, 2, 6), &|d| binomial::lookup(d, 3, 6)),
+        )
+        .unwrap();
+        let moved = apply(&plan, &shards).unwrap();
+        assert_eq!(moved as usize, plan.moves.len());
+        assert!(moved > 0);
+        // Every key now lives on its n=3 bucket; totals preserved.
+        for (key, digest) in &keys {
+            let b = binomial::lookup(*digest, 3, 6);
+            assert!(shards[b as usize].get(key).unwrap().is_some(), "key {key} not on {b}");
+        }
+        let total: u64 = shards.iter().map(|s| s.count().unwrap()).sum();
+        assert_eq!(total, 2_000);
+    }
+
+    #[test]
+    fn empty_plan_on_no_change() {
+        let keys = keyset(1_000);
+        let plan = plan(
+            &keys,
+            PlanPath::Rust(&|d| binomial::lookup(d, 5, 6), &|d| binomial::lookup(d, 5, 6)),
+        )
+        .unwrap();
+        assert!(plan.moves.is_empty());
+        assert_eq!(plan.moved_fraction(), 0.0);
+    }
+}

@@ -1,0 +1,388 @@
+//! Request router — the coordinator's front-end.
+//!
+//! Accepts client connections speaking the wire protocol, places each key
+//! with the cluster's consistent-hashing engine (constant-time BinomialHash
+//! by default), and forwards to the owning shard.  Admin commands scale the
+//! cluster up/down with an integrated stop-the-world rebalance (scan →
+//! plan → apply; the plan step optionally offloads to the PJRT bulk
+//! artifacts).
+//!
+//! Concurrency model: thread-per-connection servers; the cluster sits
+//! behind an `RwLock` — data requests take read locks (placement is a few
+//! ns of integer arithmetic), topology changes take the write lock for the
+//! duration of the migration.  A deliberate simplification documented in
+//! DESIGN.md (production systems overlap migration behind an
+//! epoch-forwarding proxy layer).
+
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, RwLock};
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::cluster::Cluster;
+use crate::metrics::RouterMetrics;
+use crate::proto::{self, Request, Response};
+use crate::rebalance::{self, PlanPath};
+use crate::runtime::PlacementRuntime;
+use crate::shard::{Shard, ShardClient};
+
+/// Shard factory used on scale-up.
+pub type ShardSpawner = Box<dyn Fn(u32) -> ShardClient + Send + Sync>;
+
+/// The router: shared cluster + metrics + optional XLA bulk runtime.
+pub struct Router {
+    cluster: RwLock<Cluster>,
+    /// Request/latency counters.
+    pub metrics: RouterMetrics,
+    /// Bulk placement runtime for rebalance planning (None = Rust path).
+    /// Serialized behind a mutex — see the Send safety note in `runtime`.
+    bulk: Option<std::sync::Mutex<PlacementRuntime>>,
+    spawn_shard: ShardSpawner,
+}
+
+impl Router {
+    /// Router over an existing cluster, spawning in-process shards on
+    /// scale-up.
+    pub fn new(cluster: Cluster) -> Arc<Self> {
+        Self::with_options(cluster, Box::new(|id| ShardClient::Local(Shard::new(id))), None)
+    }
+
+    /// Router with a custom shard factory and/or bulk runtime.
+    pub fn with_options(
+        cluster: Cluster,
+        spawn_shard: ShardSpawner,
+        bulk: Option<PlacementRuntime>,
+    ) -> Arc<Self> {
+        Arc::new(Self {
+            cluster: RwLock::new(cluster),
+            metrics: RouterMetrics::new(),
+            bulk: bulk.map(std::sync::Mutex::new),
+            spawn_shard,
+        })
+    }
+
+    /// Current `(epoch, n, algorithm)`.
+    pub fn topology(&self) -> (u64, u32, &'static str) {
+        let c = self.cluster.read().unwrap();
+        (c.epoch, c.len(), c.algorithm())
+    }
+
+    /// Key count on one shard (telemetry; used by examples/benches).
+    pub fn shard_count(&self, bucket: u32) -> Result<u64> {
+        let c = self.cluster.read().unwrap();
+        ensure!(bucket < c.len(), "bucket {bucket} out of range");
+        c.shard(bucket).count()
+    }
+
+    /// Handle one data/admin request end-to-end.
+    pub fn handle(self: &Arc<Self>, req: Request) -> Response {
+        let start = Instant::now();
+        let resp = match req {
+            Request::Get { ref key } => self.forward(key, req.clone(), &self.metrics.gets),
+            Request::Put { ref key, .. } => self.forward(key, req.clone(), &self.metrics.puts),
+            Request::Del { ref key } => self.forward(key, req.clone(), &self.metrics.dels),
+            Request::Count => {
+                let c = self.cluster.read().unwrap();
+                let mut total = 0u64;
+                let mut err = None;
+                for s in c.shards() {
+                    match s.count() {
+                        Ok(x) => total += x,
+                        Err(e) => {
+                            err = Some(e);
+                            break;
+                        }
+                    }
+                }
+                match err {
+                    None => Response::Num(total),
+                    Some(e) => Response::Err(e.to_string()),
+                }
+            }
+            Request::Stats => {
+                let c = self.cluster.read().unwrap();
+                Response::Info(format!(
+                    "epoch={} n={} algo={} {}",
+                    c.epoch,
+                    c.len(),
+                    c.algorithm(),
+                    self.metrics.summary()
+                ))
+            }
+            Request::Scan => Response::Err("SCAN is shard-internal".into()),
+            Request::ScaleUp => match self.scale_up() {
+                Ok(n) => Response::Num(n as u64),
+                Err(e) => Response::Err(e.to_string()),
+            },
+            Request::ScaleDown => match self.scale_down() {
+                Ok(n) => Response::Num(n as u64),
+                Err(e) => Response::Err(e.to_string()),
+            },
+        };
+        if matches!(resp, Response::Err(_)) {
+            self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        self.metrics.latency.record(start.elapsed());
+        resp
+    }
+
+    fn forward(&self, key: &str, req: Request, counter: &std::sync::atomic::AtomicU64) -> Response {
+        if !proto::valid_key(key) {
+            return Response::Err(format!("invalid key {key:?}"));
+        }
+        counter.fetch_add(1, Ordering::Relaxed);
+        let digest = crate::hashing::xxhash64(key.as_bytes(), 0);
+        let t0 = Instant::now();
+        let c = self.cluster.read().unwrap();
+        let (_, shard) = c.route(digest);
+        self.metrics.placement_latency.record(t0.elapsed());
+        match shard.call(req) {
+            Ok(resp) => resp,
+            Err(e) => Response::Err(e.to_string()),
+        }
+    }
+
+    /// Add a shard and migrate exactly the keys that now belong to it.
+    /// Returns the new cluster size.
+    pub fn scale_up(self: &Arc<Self>) -> Result<u32> {
+        let mut c = self.cluster.write().unwrap();
+        let n_old = c.len();
+        let keys = rebalance::scan_cluster(c.shards())?;
+        let new_id = c.join((self.spawn_shard)(n_old));
+        let n_new = c.len();
+        let plan = self.plan_migration(&c, &keys, n_old, n_new)?;
+        let moved = rebalance::apply(&plan, c.shards())?;
+        self.metrics.migrated_keys.fetch_add(moved, Ordering::Relaxed);
+        self.metrics.epochs.fetch_add(1, Ordering::Relaxed);
+        debug_assert_eq!(new_id, n_old);
+        Ok(n_new)
+    }
+
+    /// Remove the last shard after migrating its keys away.
+    /// Returns the new cluster size.
+    pub fn scale_down(self: &Arc<Self>) -> Result<u32> {
+        let mut c = self.cluster.write().unwrap();
+        let n_old = c.len();
+        ensure!(n_old > 1, "cannot scale below one shard");
+        let keys = rebalance::scan_cluster(c.shards())?;
+        let n_new = n_old - 1;
+        let plan = self.plan_migration(&c, &keys, n_old, n_new)?;
+        // Migrate before dropping the shard handle.
+        let moved = rebalance::apply(&plan, c.shards())?;
+        let (removed, _handle) = c.leave();
+        debug_assert_eq!(removed, n_new);
+        self.metrics.migrated_keys.fetch_add(moved, Ordering::Relaxed);
+        self.metrics.epochs.fetch_add(1, Ordering::Relaxed);
+        Ok(n_new)
+    }
+
+    fn plan_migration(
+        &self,
+        c: &Cluster,
+        keys: &[(String, u64)],
+        n_old: u32,
+        n_new: u32,
+    ) -> Result<rebalance::MigrationPlan> {
+        // The XLA bulk path computes BinomialHash placement; use it only
+        // when that is the active engine.
+        if let (Some(runtime), "binomial") = (&self.bulk, c.algorithm()) {
+            let runtime = runtime.lock().unwrap();
+            return rebalance::plan(keys, PlanPath::Xla { runtime: &runtime, n_old, n_new });
+        }
+        let omega = crate::algorithms::binomial::DEFAULT_OMEGA;
+        match c.algorithm() {
+            "binomial" => rebalance::plan(
+                keys,
+                PlanPath::Rust(
+                    &|d| crate::algorithms::binomial::lookup(d, n_old, omega),
+                    &|d| crate::algorithms::binomial::lookup(d, n_new, omega),
+                ),
+            ),
+            "jump" => rebalance::plan(
+                keys,
+                PlanPath::Rust(
+                    &|d| crate::algorithms::jump::jump_hash(d, n_old),
+                    &|d| crate::algorithms::jump::jump_hash(d, n_new),
+                ),
+            ),
+            "jumpback" => rebalance::plan(
+                keys,
+                PlanPath::Rust(
+                    &|d| crate::algorithms::jumpback::jumpback(d, n_old),
+                    &|d| crate::algorithms::jumpback::jumpback(d, n_new),
+                ),
+            ),
+            "fliphash" => rebalance::plan(
+                keys,
+                PlanPath::Rust(
+                    &|d| crate::algorithms::fliphash::fliphash(d, n_old, crate::algorithms::fliphash::DEFAULT_ATTEMPTS),
+                    &|d| crate::algorithms::fliphash::fliphash(d, n_new, crate::algorithms::fliphash::DEFAULT_ATTEMPTS),
+                ),
+            ),
+            "powerch" => rebalance::plan(
+                keys,
+                PlanPath::Rust(
+                    &|d| crate::algorithms::powerch::powerch(d, n_old, crate::algorithms::powerch::ATTEMPTS),
+                    &|d| crate::algorithms::powerch::powerch(d, n_new, crate::algorithms::powerch::ATTEMPTS),
+                ),
+            ),
+            other => bail!(
+                "scaling with engine {other:?} is not wired into plan_migration; \
+                 use binomial/jump/jumpback/fliphash/powerch"
+            ),
+        }
+    }
+
+    /// Serve the router protocol on a TCP listener (thread per connection).
+    pub fn serve(self: Arc<Self>, listener: TcpListener) -> Result<()> {
+        loop {
+            let (sock, _) = listener.accept()?;
+            let router = self.clone();
+            std::thread::spawn(move || {
+                let _ = router.serve_conn(sock);
+            });
+        }
+    }
+
+    fn serve_conn(self: Arc<Self>, sock: TcpStream) -> Result<()> {
+        sock.set_nodelay(true)?;
+        let mut rd = BufReader::new(sock.try_clone()?);
+        let mut wr = sock;
+        while let Some(req) = proto::read_request(&mut rd)? {
+            let resp = self.handle(req);
+            proto::write_response(&mut wr, &resp)?;
+        }
+        Ok(())
+    }
+}
+
+/// Build an in-process cluster: `n` local shards + the chosen engine.
+pub fn local_cluster(algorithm: &str, n: u32) -> Result<Cluster> {
+    let placement = crate::algorithms::by_name(algorithm, n)
+        .ok_or_else(|| anyhow::anyhow!("unknown algorithm {algorithm:?}"))?;
+    let shards = (0..n).map(|i| ShardClient::Local(Shard::new(i))).collect();
+    Ok(Cluster::new(placement, shards))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_del_roundtrip() {
+        let router = Router::new(local_cluster("binomial", 4).unwrap());
+        assert_eq!(
+            router.handle(Request::Put { key: "a".into(), value: b"1".to_vec() }),
+            Response::Ok
+        );
+        assert_eq!(
+            router.handle(Request::Get { key: "a".into() }),
+            Response::Val(b"1".to_vec())
+        );
+        assert_eq!(router.handle(Request::Del { key: "a".into() }), Response::Ok);
+        assert_eq!(router.handle(Request::Get { key: "a".into() }), Response::Nil);
+    }
+
+    #[test]
+    fn scale_up_preserves_all_keys() {
+        let router = Router::new(local_cluster("binomial", 3).unwrap());
+        for i in 0..500 {
+            assert_eq!(
+                router.handle(Request::Put { key: format!("k{i}"), value: vec![i as u8] }),
+                Response::Ok
+            );
+        }
+        assert_eq!(router.handle(Request::ScaleUp), Response::Num(4));
+        for i in 0..500 {
+            assert_eq!(
+                router.handle(Request::Get { key: format!("k{i}") }),
+                Response::Val(vec![i as u8]),
+                "key k{i} lost after scale-up"
+            );
+        }
+    }
+
+    #[test]
+    fn scale_down_preserves_all_keys() {
+        let router = Router::new(local_cluster("binomial", 5).unwrap());
+        for i in 0..500 {
+            router.handle(Request::Put { key: format!("k{i}"), value: vec![i as u8] });
+        }
+        assert_eq!(router.handle(Request::ScaleDown), Response::Num(4));
+        for i in 0..500 {
+            assert_eq!(
+                router.handle(Request::Get { key: format!("k{i}") }),
+                Response::Val(vec![i as u8]),
+                "key k{i} lost after scale-down"
+            );
+        }
+    }
+
+    #[test]
+    fn scale_cycle_with_jumpback_engine() {
+        let router = Router::new(local_cluster("jumpback", 4).unwrap());
+        for i in 0..300 {
+            router.handle(Request::Put { key: format!("j{i}"), value: vec![1] });
+        }
+        assert_eq!(router.handle(Request::ScaleUp), Response::Num(5));
+        assert_eq!(router.handle(Request::ScaleDown), Response::Num(4));
+        for i in 0..300 {
+            assert_eq!(
+                router.handle(Request::Get { key: format!("j{i}") }),
+                Response::Val(vec![1])
+            );
+        }
+    }
+
+    #[test]
+    fn stats_reports_topology() {
+        let router = Router::new(local_cluster("binomial", 2).unwrap());
+        match router.handle(Request::Stats) {
+            Response::Info(s) => {
+                assert!(s.contains("n=2"));
+                assert!(s.contains("algo=binomial"));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn invalid_key_rejected() {
+        let router = Router::new(local_cluster("binomial", 2).unwrap());
+        assert!(matches!(
+            router.handle(Request::Get { key: "bad key".into() }),
+            Response::Err(_)
+        ));
+    }
+
+    #[test]
+    fn count_sums_shards() {
+        let router = Router::new(local_cluster("binomial", 3).unwrap());
+        for i in 0..64 {
+            router.handle(Request::Put { key: format!("c{i}"), value: vec![0] });
+        }
+        assert_eq!(router.handle(Request::Count), Response::Num(64));
+    }
+
+    #[test]
+    fn tcp_end_to_end() {
+        let router = Router::new(local_cluster("binomial", 3).unwrap());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let _ = router.serve(listener);
+        });
+
+        let sock = TcpStream::connect(addr).unwrap();
+        let mut rd = BufReader::new(sock.try_clone().unwrap());
+        let mut wr = sock;
+        proto::write_request(&mut wr, &Request::Put { key: "x".into(), value: b"yz".to_vec() })
+            .unwrap();
+        assert_eq!(proto::read_response(&mut rd).unwrap(), Response::Ok);
+        proto::write_request(&mut wr, &Request::Get { key: "x".into() }).unwrap();
+        assert_eq!(proto::read_response(&mut rd).unwrap(), Response::Val(b"yz".to_vec()));
+    }
+}

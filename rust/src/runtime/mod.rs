@@ -1,0 +1,335 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas placement
+//! artifacts from the Rust coordinator.
+//!
+//! Python never runs here — `make artifacts` lowered the Layer-2 graphs to
+//! HLO *text* (`artifacts/*.hlo.txt` + `manifest.txt`); this module parses
+//! the text through the PJRT CPU client (`HloModuleProto::from_text_file`
+//! → `compile` → `execute`) and exposes typed bulk operations:
+//!
+//! * [`PlacementRuntime::lookup_batch`] — place digests on an n-cluster;
+//! * [`PlacementRuntime::migration_plan`] — old/new placement + moved set
+//!   for a topology change (the rebalancer's bulk path);
+//! * [`PlacementRuntime::histogram`] — per-bucket load counts.
+//!
+//! Artifacts are compiled once at load; executions are synchronous CPU
+//! calls.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Output of a bulk migration-plan execution.
+#[derive(Debug, Clone)]
+pub struct MigrationOutcome {
+    /// Placement under the old topology.
+    pub old: Vec<u32>,
+    /// Placement under the new topology.
+    pub new: Vec<u32>,
+    /// 1 where the key moves.
+    pub moved: Vec<u8>,
+    /// Total number of moved keys.
+    pub moved_count: u64,
+}
+
+struct SizedExe {
+    batch: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Compiled placement artifacts on a PJRT CPU client.
+pub struct PlacementRuntime {
+    _client: xla::PjRtClient,
+    lookups: Vec<SizedExe>,
+    migrates: Vec<SizedExe>,
+    hist: Option<SizedExe>,
+    /// ω baked into the artifacts.
+    pub omega: u32,
+}
+
+/// Parsed `manifest.txt`: `omega <w>` line + `artifact <name> <file>` lines.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    /// ω the artifacts were lowered with.
+    pub omega: u32,
+    /// `(name, file)` artifact records.
+    pub artifacts: Vec<(String, String)>,
+}
+
+impl Manifest {
+    /// Parse the flat manifest format emitted by `python/compile/aot.py`.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut omega = None;
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            match it.next() {
+                Some("omega") => {
+                    omega = Some(
+                        it.next()
+                            .ok_or_else(|| anyhow!("line {}: omega missing value", lineno + 1))?
+                            .parse()?,
+                    );
+                }
+                Some("artifact") => {
+                    let name = it.next().ok_or_else(|| anyhow!("line {}: name", lineno + 1))?;
+                    let file = it.next().ok_or_else(|| anyhow!("line {}: file", lineno + 1))?;
+                    artifacts.push((name.to_string(), file.to_string()));
+                }
+                Some(other) => bail!("line {}: unknown record {other:?}", lineno + 1),
+                None => {}
+            }
+        }
+        Ok(Self {
+            omega: omega.ok_or_else(|| anyhow!("manifest missing omega"))?,
+            artifacts,
+        })
+    }
+}
+
+// SAFETY: the `xla` crate's handles hold `Rc`s and raw PJRT pointers, so
+// the compiler cannot derive Send.  Every `Rc` involved (client + the
+// client handles inside each executable) is created inside `load` and
+// confined to this struct; the coordinator serializes all access behind a
+// `Mutex` (see `router::Router::bulk`), so reference counts are never
+// touched from two threads at once, and the underlying PJRT C++ objects
+// are themselves thread-safe.
+unsafe impl Send for PlacementRuntime {}
+
+fn parse_batch(name: &str, prefix: &str) -> Option<usize> {
+    name.strip_prefix(prefix)?.parse().ok()
+}
+
+impl PlacementRuntime {
+    /// Load and compile every artifact listed in `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let manifest_path = dir.join("manifest.txt");
+        let manifest = Manifest::parse(
+            &std::fs::read_to_string(&manifest_path)
+                .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?,
+        )?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
+
+        let mut lookups: BTreeMap<usize, xla::PjRtLoadedExecutable> = BTreeMap::new();
+        let mut migrates: BTreeMap<usize, xla::PjRtLoadedExecutable> = BTreeMap::new();
+        let mut hist = None;
+        for (name, file) in &manifest.artifacts {
+            let path = dir.join(file);
+            let compile = || -> Result<xla::PjRtLoadedExecutable> {
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                )
+                .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e}"))
+            };
+            if let Some(b) = parse_batch(name, "lookup_b") {
+                lookups.insert(b, compile()?);
+            } else if let Some(b) = parse_batch(name, "migrate_b") {
+                migrates.insert(b, compile()?);
+            } else if let Some(b) = parse_batch(name, "hist_b") {
+                hist = Some(SizedExe { batch: b, exe: compile()? });
+            }
+        }
+        if lookups.is_empty() {
+            bail!("no lookup artifacts in {manifest_path:?}");
+        }
+        Ok(Self {
+            _client: client,
+            lookups: lookups.into_iter().map(|(batch, exe)| SizedExe { batch, exe }).collect(),
+            migrates: migrates.into_iter().map(|(batch, exe)| SizedExe { batch, exe }).collect(),
+            hist,
+            omega: manifest.omega,
+        })
+    }
+
+    /// Pick the smallest executable whose batch covers `len`, defaulting to
+    /// the largest available (caller chunks by that size).
+    fn pick(exes: &[SizedExe], len: usize) -> &SizedExe {
+        exes.iter().find(|e| e.batch >= len).unwrap_or_else(|| exes.last().unwrap())
+    }
+
+    /// Bulk BinomialHash placement of `digests` over `n` buckets.
+    ///
+    /// Chunks by artifact batch size, zero-padding the tail; results are
+    /// bit-identical to `algorithms::binomial::lookup` (golden-tested).
+    pub fn lookup_batch(&self, digests: &[u64], n: u32) -> Result<Vec<u32>> {
+        let mut out = Vec::with_capacity(digests.len());
+        let mut rest = digests;
+        while !rest.is_empty() {
+            let sized = Self::pick(&self.lookups, rest.len());
+            let take = rest.len().min(sized.batch);
+            let (chunk, tail) = rest.split_at(take);
+            out.extend_from_slice(&self.run_lookup(sized, chunk, n)?);
+            rest = tail;
+        }
+        Ok(out)
+    }
+
+    fn run_lookup(&self, sized: &SizedExe, chunk: &[u64], n: u32) -> Result<Vec<u32>> {
+        let padded;
+        let input: &[u64] = if chunk.len() == sized.batch {
+            chunk
+        } else {
+            let mut p = chunk.to_vec();
+            p.resize(sized.batch, 0);
+            padded = p;
+            &padded
+        };
+        let d = xla::Literal::vec1(input);
+        let n_lit = xla::Literal::scalar(n as u64);
+        let result = sized
+            .exe
+            .execute::<xla::Literal>(&[d, n_lit])
+            .map_err(|e| anyhow!("execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync: {e}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+        let mut v: Vec<u32> = out.to_vec().map_err(|e| anyhow!("to_vec: {e}"))?;
+        v.truncate(chunk.len());
+        Ok(v)
+    }
+
+    /// Bulk migration plan: placement under `n_old` and `n_new` plus the
+    /// moved mask and count.
+    pub fn migration_plan(
+        &self,
+        digests: &[u64],
+        n_old: u32,
+        n_new: u32,
+    ) -> Result<MigrationOutcome> {
+        if self.migrates.is_empty() {
+            bail!("no migrate artifacts loaded");
+        }
+        let mut outcome = MigrationOutcome {
+            old: Vec::with_capacity(digests.len()),
+            new: Vec::with_capacity(digests.len()),
+            moved: Vec::with_capacity(digests.len()),
+            moved_count: 0,
+        };
+        let mut rest = digests;
+        while !rest.is_empty() {
+            let sized = Self::pick(&self.migrates, rest.len());
+            let take = rest.len().min(sized.batch);
+            let (chunk, tail) = rest.split_at(take);
+
+            let padded;
+            let input: &[u64] = if chunk.len() == sized.batch {
+                chunk
+            } else {
+                let mut p = chunk.to_vec();
+                p.resize(sized.batch, 0);
+                padded = p;
+                &padded
+            };
+            let d = xla::Literal::vec1(input);
+            let result = sized
+                .exe
+                .execute::<xla::Literal>(&[
+                    d,
+                    xla::Literal::scalar(n_old as u64),
+                    xla::Literal::scalar(n_new as u64),
+                ])
+                .map_err(|e| anyhow!("execute: {e}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("sync: {e}"))?;
+            let (old_l, new_l, moved_l, _count_l) =
+                result.to_tuple4().map_err(|e| anyhow!("untuple4: {e}"))?;
+            let mut old: Vec<u32> = old_l.to_vec().map_err(|e| anyhow!("old: {e}"))?;
+            let mut new: Vec<u32> = new_l.to_vec().map_err(|e| anyhow!("new: {e}"))?;
+            let mut moved: Vec<u8> = moved_l.to_vec().map_err(|e| anyhow!("moved: {e}"))?;
+            old.truncate(chunk.len());
+            new.truncate(chunk.len());
+            moved.truncate(chunk.len());
+            // The on-device count includes zero-pad lanes; recompute over
+            // the real lanes (cheap vector sum).
+            outcome.moved_count += moved.iter().map(|&m| m as u64).sum::<u64>();
+            outcome.old.extend_from_slice(&old);
+            outcome.new.extend_from_slice(&new);
+            outcome.moved.extend_from_slice(&moved);
+            rest = tail;
+        }
+        Ok(outcome)
+    }
+
+    /// Per-bucket key counts over `n ≤ 1024` buckets (telemetry offload).
+    pub fn histogram(&self, digests: &[u64], n: u32) -> Result<Vec<u64>> {
+        let sized = self.hist.as_ref().ok_or_else(|| anyhow!("no hist artifact loaded"))?;
+        let mut counts = vec![0u64; 1024];
+        for chunk in digests.chunks(sized.batch) {
+            let padded;
+            let input: &[u64] = if chunk.len() == sized.batch {
+                chunk
+            } else {
+                let mut p = chunk.to_vec();
+                p.resize(sized.batch, 0);
+                padded = p;
+                &padded
+            };
+            let result = sized
+                .exe
+                .execute::<xla::Literal>(&[
+                    xla::Literal::vec1(input),
+                    xla::Literal::scalar(n as u64),
+                ])
+                .map_err(|e| anyhow!("execute: {e}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("sync: {e}"))?;
+            let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+            let v: Vec<u64> = out.to_vec().map_err(|e| anyhow!("to_vec: {e}"))?;
+            for (c, x) in counts.iter_mut().zip(&v) {
+                *c += x;
+            }
+            if chunk.len() != sized.batch {
+                // Remove the zero-pad lanes' contribution exactly: digest 0
+                // is deterministic, so its bucket is known.
+                let pad = (sized.batch - chunk.len()) as u64;
+                let pad_bucket = crate::algorithms::binomial::lookup(0, n, self.omega);
+                counts[pad_bucket as usize] -= pad;
+            }
+        }
+        counts.truncate(n.max(1) as usize);
+        Ok(counts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime integration tests live in rust/tests/ (they need built
+    // artifacts). Here: manifest parsing only.
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(
+            "# comment\nomega 6\nartifact lookup_b4096 lookup_b4096.hlo.txt\n\n\
+             artifact migrate_b4096 migrate_b4096.hlo.txt\n",
+        )
+        .unwrap();
+        assert_eq!(m.omega, 6);
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(parse_batch(&m.artifacts[0].0, "lookup_b"), Some(4096));
+    }
+
+    #[test]
+    fn manifest_requires_omega() {
+        assert!(Manifest::parse("artifact a b\n").is_err());
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(Manifest::parse("omega 6\nwat is this\n").is_err());
+    }
+
+    #[test]
+    fn parse_batch_rejects_other_prefixes() {
+        assert_eq!(parse_batch("migrate_b65536", "lookup_b"), None);
+        assert_eq!(parse_batch("lookup_b65536", "lookup_b"), Some(65536));
+        assert_eq!(parse_batch("lookup_bXYZ", "lookup_b"), None);
+    }
+}

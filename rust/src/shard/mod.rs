@@ -1,0 +1,312 @@
+//! Storage shard: the in-memory KV node the router places data on.
+//!
+//! A [`Shard`] is a striped-lock hash map with the operations the wire
+//! protocol exposes.  It can be served over TCP ([`serve`], thread-per-
+//! connection) for multi-process clusters, or driven in-process through
+//! [`ShardClient`] — the router uses the same client type for both, so
+//! the examples run a full cluster in one process while production
+//! deploys one shard per host (`binhashd shard`).
+
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::proto::{self, Request, Response};
+
+/// Number of lock stripes (power of two).
+const STRIPES: usize = 16;
+
+/// An in-memory KV shard with striped locking.
+#[derive(Debug)]
+pub struct Shard {
+    /// Shard id (equals its bucket index in the cluster).
+    pub id: u32,
+    stripes: Vec<Mutex<HashMap<String, Vec<u8>>>>,
+    ops: AtomicU64,
+}
+
+impl Shard {
+    /// New empty shard.
+    pub fn new(id: u32) -> Arc<Self> {
+        Arc::new(Self {
+            id,
+            stripes: (0..STRIPES).map(|_| Mutex::new(HashMap::new())).collect(),
+            ops: AtomicU64::new(0),
+        })
+    }
+
+    fn stripe(&self, key: &str) -> &Mutex<HashMap<String, Vec<u8>>> {
+        let h = crate::hashing::xxhash64(key.as_bytes(), 0x517) as usize;
+        &self.stripes[h & (STRIPES - 1)]
+    }
+
+    /// Fetch a value.
+    pub fn get(&self, key: &str) -> Option<Vec<u8>> {
+        self.ops.fetch_add(1, Ordering::Relaxed);
+        self.stripe(key).lock().unwrap().get(key).cloned()
+    }
+
+    /// Store a value.
+    pub fn put(&self, key: String, value: Vec<u8>) {
+        self.ops.fetch_add(1, Ordering::Relaxed);
+        self.stripe(&key).lock().unwrap().insert(key, value);
+    }
+
+    /// Delete a key; `true` if it existed.
+    pub fn del(&self, key: &str) -> bool {
+        self.ops.fetch_add(1, Ordering::Relaxed);
+        self.stripe(key).lock().unwrap().remove(key).is_some()
+    }
+
+    /// All keys currently stored (rebalancer input).
+    pub fn scan(&self) -> Vec<String> {
+        let mut keys = Vec::new();
+        for s in &self.stripes {
+            keys.extend(s.lock().unwrap().keys().cloned());
+        }
+        keys
+    }
+
+    /// Number of keys stored.
+    pub fn count(&self) -> u64 {
+        self.stripes.iter().map(|s| s.lock().unwrap().len() as u64).sum()
+    }
+
+    /// One-line stats.
+    pub fn stats(&self) -> String {
+        format!("shard={} keys={} ops={}", self.id, self.count(), self.ops.load(Ordering::Relaxed))
+    }
+
+    /// Handle one parsed request (shared by TCP and in-process paths).
+    pub fn handle(&self, req: Request) -> Response {
+        match req {
+            Request::Get { key } => match self.get(&key) {
+                Some(v) => Response::Val(v),
+                None => Response::Nil,
+            },
+            Request::Put { key, value } => {
+                self.put(key, value);
+                Response::Ok
+            }
+            Request::Del { key } => {
+                if self.del(&key) {
+                    Response::Ok
+                } else {
+                    Response::Nil
+                }
+            }
+            Request::Scan => Response::Keys(self.scan()),
+            Request::Count => Response::Num(self.count()),
+            Request::Stats => Response::Info(self.stats()),
+            Request::ScaleUp | Request::ScaleDown => Response::Err("not a coordinator".into()),
+        }
+    }
+}
+
+/// Serve a shard over TCP (thread per connection) until the listener errors.
+pub fn serve(shard: Arc<Shard>, listener: TcpListener) -> Result<()> {
+    loop {
+        let (sock, _) = listener.accept()?;
+        let shard = shard.clone();
+        std::thread::spawn(move || {
+            let _ = serve_conn(shard, sock);
+        });
+    }
+}
+
+fn serve_conn(shard: Arc<Shard>, sock: TcpStream) -> Result<()> {
+    sock.set_nodelay(true)?;
+    let mut rd = BufReader::new(sock.try_clone()?);
+    let mut wr = sock;
+    while let Some(req) = proto::read_request(&mut rd)? {
+        let resp = shard.handle(req);
+        proto::write_response(&mut wr, &resp)?;
+    }
+    Ok(())
+}
+
+/// Client handle to a shard: in-process or remote TCP (pooled connections).
+#[derive(Clone)]
+pub enum ShardClient {
+    /// Same-process shard (zero-copy dispatch).
+    Local(Arc<Shard>),
+    /// Remote shard over TCP.
+    Remote(Arc<RemotePool>),
+}
+
+/// Fixed-size connection pool to a remote shard.
+pub struct RemotePool {
+    addr: SocketAddr,
+    conns: Vec<Mutex<Option<ShardConn>>>,
+    next: AtomicUsize,
+}
+
+struct ShardConn {
+    rd: BufReader<TcpStream>,
+    wr: TcpStream,
+}
+
+impl RemotePool {
+    /// Pool with `size` lazily-established connections.
+    pub fn new(addr: SocketAddr, size: usize) -> Arc<Self> {
+        Arc::new(Self {
+            addr,
+            conns: (0..size.max(1)).map(|_| Mutex::new(None)).collect(),
+            next: AtomicUsize::new(0),
+        })
+    }
+
+    fn call(&self, req: &Request) -> Result<Response> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.conns.len();
+        let mut slot = self.conns[i].lock().unwrap();
+        if slot.is_none() {
+            let sock = TcpStream::connect(self.addr)?;
+            sock.set_nodelay(true)?;
+            let rd = BufReader::new(sock.try_clone()?);
+            *slot = Some(ShardConn { rd, wr: sock });
+        }
+        let conn = slot.as_mut().unwrap();
+        let result = (|| {
+            proto::write_request(&mut conn.wr, req)?;
+            proto::read_response(&mut conn.rd)
+        })();
+        if result.is_err() {
+            *slot = None; // drop broken connection; next call reconnects
+        }
+        result
+    }
+}
+
+impl ShardClient {
+    /// Issue a request and await the response.
+    pub fn call(&self, req: Request) -> Result<Response> {
+        match self {
+            ShardClient::Local(shard) => Ok(shard.handle(req)),
+            ShardClient::Remote(pool) => pool.call(&req),
+        }
+    }
+
+    /// Typed GET.
+    pub fn get(&self, key: &str) -> Result<Option<Vec<u8>>> {
+        match self.call(Request::Get { key: key.into() })? {
+            Response::Val(v) => Ok(Some(v)),
+            Response::Nil => Ok(None),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Typed PUT.
+    pub fn put(&self, key: &str, value: Vec<u8>) -> Result<()> {
+        match self.call(Request::Put { key: key.into(), value })? {
+            Response::Ok => Ok(()),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Typed DEL; `true` if the key existed.
+    pub fn del(&self, key: &str) -> Result<bool> {
+        match self.call(Request::Del { key: key.into() })? {
+            Response::Ok => Ok(true),
+            Response::Nil => Ok(false),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Typed SCAN.
+    pub fn scan(&self) -> Result<Vec<String>> {
+        match self.call(Request::Scan)? {
+            Response::Keys(k) => Ok(k),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Typed COUNT.
+    pub fn count(&self) -> Result<u64> {
+        match self.call(Request::Count)? {
+            Response::Num(x) => Ok(x),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_basic_ops() {
+        let s = Shard::new(0);
+        assert_eq!(s.get("a"), None);
+        s.put("a".into(), b"1".to_vec());
+        s.put("b".into(), b"2".to_vec());
+        assert_eq!(s.get("a"), Some(b"1".to_vec()));
+        assert_eq!(s.count(), 2);
+        assert!(s.del("a"));
+        assert!(!s.del("a"));
+        assert_eq!(s.count(), 1);
+        assert_eq!(s.scan(), vec!["b".to_string()]);
+    }
+
+    #[test]
+    fn local_client_roundtrip() {
+        let c = ShardClient::Local(Shard::new(1));
+        c.put("k", b"v".to_vec()).unwrap();
+        assert_eq!(c.get("k").unwrap(), Some(b"v".to_vec()));
+        assert_eq!(c.count().unwrap(), 1);
+        assert!(c.del("k").unwrap());
+        assert_eq!(c.get("k").unwrap(), None);
+    }
+
+    #[test]
+    fn tcp_client_roundtrip() {
+        let s = Shard::new(2);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let srv = s.clone();
+        std::thread::spawn(move || {
+            let _ = serve(srv, listener);
+        });
+
+        let c = ShardClient::Remote(RemotePool::new(addr, 2));
+        c.put("x", vec![9u8; 1000]).unwrap();
+        assert_eq!(c.get("x").unwrap(), Some(vec![9u8; 1000]));
+        assert_eq!(c.count().unwrap(), 1);
+        assert_eq!(c.scan().unwrap(), vec!["x".to_string()]);
+    }
+
+    #[test]
+    fn concurrent_tcp_clients() {
+        let s = Shard::new(3);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let srv = s.clone();
+        std::thread::spawn(move || {
+            let _ = serve(srv, listener);
+        });
+
+        let pool = RemotePool::new(addr, 4);
+        let mut handles = Vec::new();
+        for t in 0..8u8 {
+            let c = ShardClient::Remote(pool.clone());
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    c.put(&format!("k-{t}-{i}"), vec![t]).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.count(), 400);
+    }
+
+    #[test]
+    fn shard_rejects_admin_commands() {
+        let s = Shard::new(4);
+        assert!(matches!(s.handle(Request::ScaleUp), Response::Err(_)));
+    }
+}

@@ -1,0 +1,120 @@
+//! Balance statistics and the paper's §5.4 closed forms.
+//!
+//! Used by the Fig. 6/7/8 reproduction benches, the theory-validation
+//! harness (Eq. 3 / Eq. 5 / Eq. 6), and the router's load telemetry.
+
+pub mod theory;
+
+/// Summary statistics of a per-bucket key-count histogram.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BalanceStats {
+    /// Number of buckets.
+    pub n: usize,
+    /// Total keys counted.
+    pub total: u64,
+    /// Mean keys per bucket (k/n).
+    pub mean: f64,
+    /// Population standard deviation of keys per bucket.
+    pub stddev: f64,
+    /// Minimum bucket load.
+    pub min: u64,
+    /// Maximum bucket load.
+    pub max: u64,
+}
+
+impl BalanceStats {
+    /// Compute stats from a histogram of per-bucket counts.
+    ///
+    /// # Panics
+    /// Panics on an empty histogram.
+    pub fn from_counts(counts: &[u64]) -> Self {
+        assert!(!counts.is_empty());
+        let n = counts.len();
+        let total: u64 = counts.iter().sum();
+        let mean = total as f64 / n as f64;
+        let var = counts
+            .iter()
+            .map(|&c| {
+                let d = c as f64 - mean;
+                d * d
+            })
+            .sum::<f64>()
+            / n as f64;
+        Self {
+            n,
+            total,
+            mean,
+            stddev: var.sqrt(),
+            min: *counts.iter().min().unwrap(),
+            max: *counts.iter().max().unwrap(),
+        }
+    }
+
+    /// Relative standard deviation σ / mean (the paper's Fig. 7/8 metric).
+    pub fn rel_stddev(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.stddev / self.mean
+        }
+    }
+
+    /// Fig. 6 metric: relative difference of least/most loaded bucket
+    /// vs. the mean, returned as `(min_rel, max_rel)` where
+    /// `min_rel = (mean − min)/mean` and `max_rel = (max − mean)/mean`.
+    pub fn min_max_relative(&self) -> (f64, f64) {
+        if self.mean == 0.0 {
+            return (0.0, 0.0);
+        }
+        (
+            (self.mean - self.min as f64) / self.mean,
+            (self.max as f64 - self.mean) / self.mean,
+        )
+    }
+}
+
+/// Build a per-bucket histogram by running `lookup` over `k` digests drawn
+/// from the given deterministic stream.
+pub fn histogram<F: Fn(u64) -> u32>(
+    lookup: F,
+    n: u32,
+    keys: impl Iterator<Item = u64>,
+) -> Vec<u64> {
+    let mut counts = vec![0u64; n as usize];
+    for d in keys {
+        let b = lookup(d);
+        debug_assert!(b < n, "bucket {b} out of range [0, {n})");
+        counts[b as usize] += 1;
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_flat_histogram() {
+        let s = BalanceStats::from_counts(&[100, 100, 100, 100]);
+        assert_eq!(s.mean, 100.0);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.min_max_relative(), (0.0, 0.0));
+        assert_eq!(s.rel_stddev(), 0.0);
+    }
+
+    #[test]
+    fn stats_skewed_histogram() {
+        let s = BalanceStats::from_counts(&[50, 150]);
+        assert_eq!(s.mean, 100.0);
+        assert_eq!(s.stddev, 50.0);
+        assert_eq!(s.min_max_relative(), (0.5, 0.5));
+        assert_eq!(s.total, 200);
+    }
+
+    #[test]
+    fn histogram_counts_everything() {
+        let counts = histogram(|d| (d % 7) as u32, 7, 0..70_000u64);
+        assert_eq!(counts.iter().sum::<u64>(), 70_000);
+        assert!(counts.iter().all(|&c| c == 10_000));
+    }
+}

@@ -1,0 +1,193 @@
+//! Closed-form expressions from the paper's §5.4 (Eqs. 1–6), used to
+//! validate measurements against theory in the `bench_figs eq3` / `eq6`
+//! harnesses and in property tests.
+
+use crate::hashing::next_pow2;
+
+/// `P(M ≤ b < n)` — Eq. (1): probability a key lands on the lowest level.
+pub fn p_lowest_level(n: u32, omega: u32) -> f64 {
+    assert!(n > 1);
+    let e = next_pow2(n as u64) as f64;
+    let m = e / 2.0;
+    let n = n as f64;
+    (n - m) / n * (1.0 - ((e - n) / e).powi(omega as i32))
+}
+
+/// Expected keys per lowest-level bucket — Eq. (2), for `k` total keys.
+pub fn expected_lowest_level_load(n: u32, omega: u32, k: u64) -> f64 {
+    let e = next_pow2(n as u64) as f64;
+    let m = e / 2.0;
+    p_lowest_level(n, omega) / (n as f64 - m) * k as f64
+}
+
+/// Expected keys per minor-tree bucket (the `K` of §5.4).
+pub fn expected_minor_tree_load(n: u32, omega: u32, k: u64) -> f64 {
+    let e = next_pow2(n as u64) as f64;
+    let m = e / 2.0;
+    (1.0 - p_lowest_level(n, omega)) / m * k as f64
+}
+
+/// Relative imbalance `(K − K′)/(k/n)` — Eq. (3).  Independent of `k`.
+pub fn relative_imbalance(n: u32, omega: u32) -> f64 {
+    assert!(n > 1);
+    let e = next_pow2(n as u64) as f64;
+    let m = e / 2.0;
+    let nm = (n as f64 - m) / m;
+    (1.0 / 2f64.powi(omega as i32)) * (1.0 + nm) * (1.0 - nm).powi(omega as i32)
+}
+
+/// Upper bound of Eq. (3) over `n ∈ [M, 2M)`: `2^{-ω}`, attained at n = M.
+pub fn relative_imbalance_bound(omega: u32) -> f64 {
+    1.0 / 2f64.powi(omega as i32)
+}
+
+/// Standard deviation of per-bucket load — Eq. (5), for `k` total keys.
+pub fn stddev(n: u32, omega: u32, k: u64) -> f64 {
+    assert!(n > 1);
+    let e = next_pow2(n as u64) as f64;
+    let m = e / 2.0;
+    let nf = n as f64;
+    let kf = k as f64;
+    kf / nf * ((nf - m) / m * ((2.0 * m - nf) / (2.0 * m)).powi(omega as i32)).sqrt()
+}
+
+/// Structural per-bucket stddev *re-derived* from Eqs. (1)/(2)/(4).
+///
+/// The paper's printed Eq. (5) places the `^ω` factor inside the square
+/// root; deriving σ directly from K/K′ and the Eq. (4) variance gives the
+/// factor *outside*:
+/// `σ = (k/n) · sqrt((n−M)/M) · ((2M−n)/(2M))^ω` — strictly below the
+/// printed form on (M, 2M), so Eq. (6) remains a valid upper bound.  The
+/// empirical harness (`bench_figs eq6`) confirms measurements track this
+/// form (plus multinomial sampling noise) rather than the printed one.
+pub fn stddev_structural(n: u32, omega: u32, k: u64) -> f64 {
+    assert!(n > 1);
+    let e = next_pow2(n as u64) as f64;
+    let m = e / 2.0;
+    let nf = n as f64;
+    let kf = k as f64;
+    kf / nf * ((nf - m) / m).sqrt() * ((2.0 * m - nf) / (2.0 * m)).powi(omega as i32)
+}
+
+/// Expected *measured* stddev at load `q = k/n`: structural imbalance plus
+/// multinomial sampling noise (`Var ≈ q(1−1/n)` per bucket).
+pub fn stddev_expected_measured(n: u32, omega: u32, q: f64) -> f64 {
+    let s = stddev_structural(n, omega, (q * n as f64) as u64);
+    (s * s + q * (1.0 - 1.0 / n as f64)).sqrt()
+}
+
+/// Maximum of Eq. (5) over `n` at fixed load `q = k/n` — Eq. (6).
+pub fn stddev_max(omega: u32, q: f64) -> f64 {
+    let w = omega as f64;
+    q * (1.0 / (1.0 + w) * (w / (2.0 * (1.0 + w))).powf(w)).sqrt()
+}
+
+/// The `n` (as a fraction of `M`) that attains Eq. (6): `(2+ω)/(1+ω)·M`.
+pub fn stddev_argmax(omega: u32, m: u32) -> u32 {
+    (((2 + omega) as f64 / (1 + omega) as f64) * m as f64).round() as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq3_matches_direct_probability_algebra() {
+        // Cross-check Eq. (3) against K and K' computed from Eq. (1)/(2).
+        for &(n, omega) in &[(11u32, 6u32), (24, 4), (33, 2), (9, 1), (48, 8)] {
+            let k = 1_000_000u64;
+            let k_level = expected_lowest_level_load(n, omega, k);
+            let k_minor = expected_minor_tree_load(n, omega, k);
+            let gap = (k_minor - k_level) / (k as f64 / n as f64);
+            let closed = relative_imbalance(n, omega);
+            assert!((gap - closed).abs() < 1e-9, "n={n} ω={omega}: {gap} vs {closed}");
+        }
+    }
+
+    #[test]
+    fn eq3_bound_attained_just_above_m() {
+        // The bound 2^-ω is the supremum as n → M⁺.
+        for omega in 1..=8u32 {
+            let m = 64u32;
+            let at_m1 = relative_imbalance(m + 1, omega);
+            let bound = relative_imbalance_bound(omega);
+            assert!(at_m1 <= bound + 1e-12);
+            assert!(at_m1 > bound * 0.8, "ω={omega}: {at_m1} vs bound {bound}");
+            // Monotonically decreasing in n on (M, 2M).
+            assert!(relative_imbalance(m + 20, omega) < at_m1);
+        }
+    }
+
+    #[test]
+    fn eq6_value_from_paper() {
+        // §5.4: σ_max ≈ 0.045·q for ω = 5.
+        let q = 1000.0;
+        let s = stddev_max(5, q);
+        assert!((s / q - 0.045).abs() < 0.002, "σ_max/q = {}", s / q);
+    }
+
+    #[test]
+    fn eq6_decreasing_in_omega() {
+        let q = 1000.0;
+        let mut prev = f64::MAX;
+        for omega in 1..=10 {
+            let s = stddev_max(omega, q);
+            assert!(s < prev);
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn eq5_peaks_at_argmax() {
+        let omega = 5u32;
+        let m = 512u32;
+        let q = 1000u64;
+        let peak_n = stddev_argmax(omega, m);
+        let at_peak = stddev(peak_n, omega, q * peak_n as u64);
+        // Eq. 5 evaluated at neighbours must not exceed the peak.
+        for dn in [-40i64, -10, 10, 40] {
+            let n = (peak_n as i64 + dn) as u32;
+            if n > m && (n as u64) < 2 * m as u64 {
+                let s = stddev(n, omega, q * n as u64);
+                assert!(s <= at_peak * 1.001, "n={n}: {s} > {at_peak}");
+            }
+        }
+        // And the peak is below the Eq. 6 bound.
+        assert!(at_peak <= stddev_max(omega, q as f64) * 1.01);
+    }
+
+    #[test]
+    fn structural_stddev_matches_direct_eq4_computation() {
+        // Build σ directly from K, K' (Eqs. 1/2) and Eq. 4, and compare to
+        // the re-derived closed form.
+        for &(n, omega) in &[(40u32, 5u32), (33, 6), (48, 3), (63, 2)] {
+            let k = 1_000u64 * n as u64;
+            let e = next_pow2(n as u64) as f64;
+            let m = e / 2.0;
+            let k_level = expected_lowest_level_load(n, omega, k);
+            let k_minor = expected_minor_tree_load(n, omega, k);
+            let mean = k as f64 / n as f64;
+            let var = (m * (mean - k_minor).powi(2)
+                + (n as f64 - m) * (k_level - mean).powi(2))
+                / n as f64;
+            let direct = var.sqrt();
+            let closed = stddev_structural(n, omega, k);
+            assert!(
+                (direct - closed).abs() < 1e-9 * (1.0 + direct),
+                "n={n} ω={omega}: direct {direct} vs closed {closed}"
+            );
+            // And the paper's printed Eq. 5 upper-bounds it on (M, 2M).
+            assert!(closed <= stddev(n, omega, k) * (1.0 + 1e-12));
+        }
+    }
+
+    #[test]
+    fn p_lowest_level_sane() {
+        // For n = E (power of two) the lowest level is the whole top half.
+        let p = p_lowest_level(16, 6);
+        assert!(p > 0.49 && p <= 0.5, "{p}");
+        // Just above a power of two, the level holds a single bucket.
+        let p = p_lowest_level(9, 6);
+        assert!(p < 0.12, "{p}");
+    }
+}

@@ -1,0 +1,152 @@
+//! Workload generators for benchmarks, tests, and the end-to-end examples.
+//!
+//! All generators are deterministic (seeded [`SplitMix64Rng`]) so every
+//! figure in EXPERIMENTS.md regenerates bit-identically.
+
+use crate::hashing::{xxhash64, SplitMix64Rng};
+
+/// Stream of uniform u64 digests (the paper's §6 benchmark workload:
+/// "keys were sampled from a uniform distribution").
+#[derive(Debug, Clone)]
+pub struct UniformDigests {
+    rng: SplitMix64Rng,
+}
+
+impl UniformDigests {
+    /// Seeded uniform digest stream.
+    pub fn new(seed: u64) -> Self {
+        Self { rng: SplitMix64Rng::new(seed) }
+    }
+
+    /// Fill a buffer with the next digests.
+    pub fn fill(&mut self, out: &mut [u64]) {
+        for d in out.iter_mut() {
+            *d = self.rng.next_u64();
+        }
+    }
+
+    /// Collect `k` digests.
+    pub fn take_vec(&mut self, k: usize) -> Vec<u64> {
+        let mut v = vec![0u64; k];
+        self.fill(&mut v);
+        v
+    }
+}
+
+impl Iterator for UniformDigests {
+    type Item = u64;
+
+    fn next(&mut self) -> Option<u64> {
+        Some(self.rng.next_u64())
+    }
+}
+
+/// Zipfian-distributed *object ids*, hashed to digests — the skewed
+/// workload for the end-to-end examples (hot keys stress the router's
+/// per-shard queues, not the hash function itself, which sees the
+/// digest of the id).
+#[derive(Debug, Clone)]
+pub struct ZipfKeys {
+    rng: SplitMix64Rng,
+    /// Precomputed CDF over the id universe.
+    cdf: Vec<f64>,
+}
+
+impl ZipfKeys {
+    /// `universe` distinct ids with Zipf exponent `theta` (e.g. 0.99).
+    pub fn new(seed: u64, universe: usize, theta: f64) -> Self {
+        assert!(universe >= 1);
+        let mut weights: Vec<f64> =
+            (1..=universe).map(|r| 1.0 / (r as f64).powf(theta)).collect();
+        let total: f64 = weights.iter().sum();
+        let mut acc = 0.0;
+        for w in weights.iter_mut() {
+            acc += *w / total;
+            *w = acc;
+        }
+        Self { rng: SplitMix64Rng::new(seed), cdf: weights }
+    }
+
+    /// Next object id (0-based rank; rank 0 is the hottest).
+    pub fn next_id(&mut self) -> usize {
+        let u = self.rng.next_f64();
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+
+    /// Next key as a byte string (`"obj-<id>"`) plus its digest.
+    pub fn next_key(&mut self) -> (String, u64) {
+        let id = self.next_id();
+        let key = format!("obj-{id}");
+        let digest = xxhash64(key.as_bytes(), 0);
+        (key, digest)
+    }
+}
+
+/// String-key generator: synthetic object names with realistic shape
+/// (`"tenant-{t}/bucket-{b}/object-{o}"`), uniform over the id space.
+#[derive(Debug, Clone)]
+pub struct StringKeys {
+    rng: SplitMix64Rng,
+    tenants: u64,
+    buckets: u64,
+}
+
+impl StringKeys {
+    /// Seeded generator over `tenants × buckets` namespaces.
+    pub fn new(seed: u64, tenants: u64, buckets: u64) -> Self {
+        Self { rng: SplitMix64Rng::new(seed), tenants: tenants.max(1), buckets: buckets.max(1) }
+    }
+
+    /// Next synthetic object key.
+    pub fn next_key(&mut self) -> String {
+        let t = self.rng.next_below(self.tenants);
+        let b = self.rng.next_below(self.buckets);
+        let o = self.rng.next_u64() & 0xFFFF_FFFF;
+        format!("tenant-{t}/bucket-{b}/object-{o:08x}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_deterministic() {
+        let a = UniformDigests::new(42).take_vec(100);
+        let b = UniformDigests::new(42).take_vec(100);
+        assert_eq!(a, b);
+        let c = UniformDigests::new(43).take_vec(100);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn zipf_is_skewed() {
+        let mut z = ZipfKeys::new(7, 10_000, 0.99);
+        let mut head = 0usize;
+        let total = 50_000;
+        for _ in 0..total {
+            if z.next_id() < 100 {
+                head += 1;
+            }
+        }
+        // With theta=0.99 the top-1% ids get far more than 1% of traffic.
+        let frac = head as f64 / total as f64;
+        assert!(frac > 0.3, "head fraction {frac}");
+    }
+
+    #[test]
+    fn zipf_ids_in_range() {
+        let mut z = ZipfKeys::new(9, 100, 1.2);
+        for _ in 0..5_000 {
+            assert!(z.next_id() < 100);
+        }
+    }
+
+    #[test]
+    fn string_keys_unique_enough() {
+        let mut g = StringKeys::new(1, 4, 16);
+        let keys: std::collections::HashSet<String> =
+            (0..10_000).map(|_| g.next_key()).collect();
+        assert!(keys.len() > 9_900);
+    }
+}

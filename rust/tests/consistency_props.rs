@@ -1,0 +1,248 @@
+//! Property tests over the whole algorithm suite: the §3 consistency
+//! properties checked with seeded random sweeps (in-tree property harness;
+//! the build is offline, so no proptest crate — the sweep style matches
+//! what proptest would generate, with fixed seeds for reproducibility).
+//!
+//! Two families:
+//! * *stateless* algorithms are pure functions of `(digest, n)` — two
+//!   instances at `n` and `n±1` are directly comparable;
+//! * *stateful* algorithms (anchor, dx) carry construction state, so the
+//!   properties are checked by mutating a single instance.
+
+use binhash::algorithms::{self, ConsistentHasher, ALL_ALGORITHMS};
+use binhash::hashing::SplitMix64Rng;
+use binhash::stats::BalanceStats;
+
+/// Pure functions of (digest, n): instances are comparable across n.
+/// (maglev is only approximately minimal and is reported, not asserted,
+/// by `bench_figs disruption`.)
+const STATELESS: &[&str] = &[
+    "binomial",
+    "jumpback",
+    "powerch",
+    "fliphash",
+    "jump",
+    "memento",
+    "multiprobe",
+    "ring",
+    "rendezvous",
+];
+
+/// Construction-stateful: properties hold along one instance's lifecycle.
+const STATEFUL: &[&str] = &["anchor", "dx"];
+
+#[test]
+fn lookup_always_in_range() {
+    let mut rng = SplitMix64Rng::new(0x7e57);
+    for name in ALL_ALGORITHMS {
+        for n in [1u32, 2, 3, 5, 8, 9, 16, 17, 64, 100, 1000] {
+            let h = algorithms::by_name(name, n).unwrap();
+            for _ in 0..300 {
+                let b = h.bucket(rng.next_u64());
+                assert!(b < n, "{name}: bucket {b} out of range for n={n}");
+            }
+        }
+    }
+}
+
+#[test]
+fn lookup_deterministic() {
+    let mut rng = SplitMix64Rng::new(0x7e58);
+    for name in ALL_ALGORITHMS {
+        let h = algorithms::by_name(name, 13).unwrap();
+        for _ in 0..100 {
+            let d = rng.next_u64();
+            assert_eq!(h.bucket(d), h.bucket(d), "{name}");
+        }
+    }
+}
+
+#[test]
+fn monotonicity_on_scale_up() {
+    let mut rng = SplitMix64Rng::new(0x7e59);
+    let digests: Vec<u64> = (0..3_000).map(|_| rng.next_u64()).collect();
+    for name in STATELESS {
+        for n in [2u32, 7, 8, 15, 16, 31, 50] {
+            let a = algorithms::by_name(name, n).unwrap();
+            let b = algorithms::by_name(name, n + 1).unwrap();
+            for &d in &digests {
+                let x = a.bucket(d);
+                let y = b.bucket(d);
+                assert!(
+                    y == x || y == n,
+                    "{name}: n={n} digest={d}: {x} -> {y} (not the new bucket)"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn minimal_disruption_on_scale_down() {
+    let mut rng = SplitMix64Rng::new(0x7e5a);
+    let digests: Vec<u64> = (0..3_000).map(|_| rng.next_u64()).collect();
+    for name in STATELESS {
+        for n in [3u32, 8, 9, 16, 17, 33, 64] {
+            let a = algorithms::by_name(name, n).unwrap();
+            let b = algorithms::by_name(name, n - 1).unwrap();
+            for &d in &digests {
+                let x = a.bucket(d);
+                let y = b.bucket(d);
+                if x != n - 1 {
+                    assert_eq!(y, x, "{name}: n={n} digest={d}: settled key moved");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn stateful_monotonicity_and_disruption_via_mutation() {
+    let mut rng = SplitMix64Rng::new(0x7e5f);
+    let digests: Vec<u64> = (0..3_000).map(|_| rng.next_u64()).collect();
+    for name in STATEFUL {
+        let mut h = algorithms::by_name(name, 8).unwrap();
+        let before: Vec<u32> = digests.iter().map(|&d| h.bucket(d)).collect();
+        // Scale up: keys move only onto the new bucket.
+        let added = h.add_bucket();
+        let up: Vec<u32> = digests.iter().map(|&d| h.bucket(d)).collect();
+        for (i, (&x, &y)) in before.iter().zip(&up).enumerate() {
+            assert!(y == x || y == added, "{name}: key {i} {x}->{y} != {added}");
+        }
+        // Scale back down: exact inverse.
+        h.remove_bucket();
+        let down: Vec<u32> = digests.iter().map(|&d| h.bucket(d)).collect();
+        assert_eq!(before, down, "{name}: add+remove not identity");
+    }
+}
+
+#[test]
+fn add_remove_roundtrip_is_identity() {
+    let mut rng = SplitMix64Rng::new(0x7e5b);
+    let digests: Vec<u64> = (0..2_000).map(|_| rng.next_u64()).collect();
+    for name in ALL_ALGORITHMS {
+        if *name == "maglev" {
+            continue; // approximate by design
+        }
+        let mut h = algorithms::by_name(name, 9).unwrap();
+        let before: Vec<u32> = digests.iter().map(|&d| h.bucket(d)).collect();
+        h.add_bucket();
+        h.remove_bucket();
+        let after: Vec<u32> = digests.iter().map(|&d| h.bucket(d)).collect();
+        assert_eq!(before, after, "{name}: add+remove is not identity");
+    }
+}
+
+#[test]
+fn monotonicity_along_growth_path() {
+    // Walk n = 1..=65 (crossing five power-of-two boundaries) and verify
+    // every key's path only ever moves onto the newest bucket.
+    let mut rng = SplitMix64Rng::new(0x7e5c);
+    let digests: Vec<u64> = (0..500).map(|_| rng.next_u64()).collect();
+    for name in STATELESS {
+        let mut prev: Vec<u32> =
+            digests.iter().map(|&d| algorithms::by_name(name, 1).unwrap().bucket(d)).collect();
+        for n in 2u32..=65 {
+            let h = algorithms::by_name(name, n).unwrap();
+            for (i, &d) in digests.iter().enumerate() {
+                let cur = h.bucket(d);
+                assert!(
+                    cur == prev[i] || cur == n - 1,
+                    "{name}: key {i} jumped {} -> {cur} at n={n}",
+                    prev[i]
+                );
+                prev[i] = cur;
+            }
+        }
+    }
+    // Stateful: same walk along one instance's lifecycle.
+    for name in STATEFUL {
+        let mut h = algorithms::by_name(name, 1).unwrap();
+        let mut prev: Vec<u32> = digests.iter().map(|&d| h.bucket(d)).collect();
+        for n in 2u32..=33 {
+            let added = h.add_bucket();
+            assert_eq!(added, n - 1, "{name}");
+            for (i, &d) in digests.iter().enumerate() {
+                let cur = h.bucket(d);
+                assert!(
+                    cur == prev[i] || cur == n - 1,
+                    "{name}: key {i} jumped {} -> {cur} at n={n}",
+                    prev[i]
+                );
+                prev[i] = cur;
+            }
+        }
+    }
+}
+
+#[test]
+fn balance_within_tolerance() {
+    let k = 60_000usize;
+    for name in ALL_ALGORITHMS {
+        // ring with default vnodes is noticeably less balanced; allow more.
+        let tolerance = match *name {
+            "ring" => 0.35,
+            "multiprobe" => 0.15,
+            _ => 0.08,
+        };
+        let h = algorithms::by_name(name, 12).unwrap();
+        let mut counts = vec![0u64; 12];
+        let mut rng = SplitMix64Rng::new(0x7e5d);
+        for _ in 0..k {
+            counts[h.bucket(rng.next_u64()) as usize] += 1;
+        }
+        let s = BalanceStats::from_counts(&counts);
+        assert!(
+            s.rel_stddev() < tolerance,
+            "{name}: rel stddev {:.3} over tolerance {tolerance}",
+            s.rel_stddev()
+        );
+    }
+}
+
+#[test]
+fn movement_fraction_near_ideal() {
+    // Scale n -> n+1: the moved fraction must be ~1/(n+1), not ~1/2 like
+    // naive modulo hashing.
+    let mut rng = SplitMix64Rng::new(0x7e5e);
+    let digests: Vec<u64> = (0..50_000).map(|_| rng.next_u64()).collect();
+    for name in STATELESS {
+        for n in [10u32, 32, 99] {
+            let a = algorithms::by_name(name, n).unwrap();
+            let b = algorithms::by_name(name, n + 1).unwrap();
+            let moved = digests.iter().filter(|&&d| a.bucket(d) != b.bucket(d)).count();
+            let frac = moved as f64 / digests.len() as f64;
+            let ideal = 1.0 / (n + 1) as f64;
+            assert!(
+                frac < ideal * 1.6 + 0.01,
+                "{name}: n={n} moved {frac:.4} vs ideal {ideal:.4}"
+            );
+        }
+    }
+    for name in STATEFUL {
+        for n in [10u32, 32] {
+            let mut h = algorithms::by_name(name, n).unwrap();
+            let before: Vec<u32> = digests.iter().map(|&d| h.bucket(d)).collect();
+            h.add_bucket();
+            let moved =
+                digests.iter().zip(&before).filter(|&(&d, &x)| h.bucket(d) != x).count();
+            let frac = moved as f64 / digests.len() as f64;
+            let ideal = 1.0 / (n + 1) as f64;
+            assert!(
+                frac < ideal * 1.6 + 0.01,
+                "{name}: n={n} moved {frac:.4} vs ideal {ideal:.4}"
+            );
+        }
+    }
+}
+
+#[test]
+fn string_key_api_consistent_with_digest_api() {
+    for name in ALL_ALGORITHMS {
+        let h = algorithms::by_name(name, 17).unwrap();
+        for key in [b"a".as_slice(), b"tenant-1/bucket-2/obj-3", b"\xff\x00binary"] {
+            let d = binhash::hashing::xxhash64(key, 0);
+            assert_eq!(h.bucket_for_key(key), h.bucket(d), "{name}");
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! PJRT runtime integration: the AOT-compiled JAX/Pallas artifacts must be
+//! loadable, executable, and bit-identical to the Rust implementation.
+//!
+//! Requires `make artifacts` (skips with a notice otherwise — e.g. in a
+//! checkout without the Python toolchain).
+
+use binhash::algorithms::binomial;
+use binhash::runtime::PlacementRuntime;
+use binhash::workload::UniformDigests;
+
+fn runtime() -> Option<PlacementRuntime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(PlacementRuntime::load(dir).expect("artifacts load"))
+}
+
+#[test]
+fn lookup_batch_bit_parity() {
+    let Some(rt) = runtime() else { return };
+    let digests = UniformDigests::new(0x17_1).take_vec(10_000); // ragged batch
+    for n in [1u32, 2, 9, 11, 64, 1000, 100_000] {
+        let xla = rt.lookup_batch(&digests, n).unwrap();
+        for (i, &d) in digests.iter().enumerate() {
+            assert_eq!(
+                xla[i],
+                binomial::lookup(d, n, rt.omega),
+                "n={n} digest={d}"
+            );
+        }
+    }
+}
+
+#[test]
+fn lookup_batch_chunking_sizes() {
+    let Some(rt) = runtime() else { return };
+    // Exercise: exact artifact size, smaller, larger (multi-chunk).
+    for len in [1usize, 100, 4096, 4097, 9000] {
+        let digests = UniformDigests::new(len as u64).take_vec(len);
+        let xla = rt.lookup_batch(&digests, 23).unwrap();
+        assert_eq!(xla.len(), len);
+        for (i, &d) in digests.iter().enumerate() {
+            assert_eq!(xla[i], binomial::lookup(d, 23, rt.omega));
+        }
+    }
+}
+
+#[test]
+fn migration_plan_parity_and_monotonicity() {
+    let Some(rt) = runtime() else { return };
+    let digests = UniformDigests::new(0x17_2).take_vec(8_192);
+    let out = rt.migration_plan(&digests, 16, 17).unwrap();
+    let mut count = 0u64;
+    for (i, &d) in digests.iter().enumerate() {
+        let old = binomial::lookup(d, 16, rt.omega);
+        let new = binomial::lookup(d, 17, rt.omega);
+        assert_eq!(out.old[i], old);
+        assert_eq!(out.new[i], new);
+        assert_eq!(out.moved[i] != 0, old != new);
+        if old != new {
+            assert_eq!(new, 16, "monotonicity on the bulk path");
+            count += 1;
+        }
+    }
+    assert_eq!(out.moved_count, count);
+}
+
+#[test]
+fn histogram_matches_direct_counts() {
+    let Some(rt) = runtime() else { return };
+    let digests = UniformDigests::new(0x17_3).take_vec(30_000); // ragged
+    let n = 100u32;
+    let counts = rt.histogram(&digests, n).unwrap();
+    assert_eq!(counts.len(), n as usize);
+    let mut want = vec![0u64; n as usize];
+    for &d in &digests {
+        want[binomial::lookup(d, n, rt.omega) as usize] += 1;
+    }
+    assert_eq!(counts, want);
+    assert_eq!(counts.iter().sum::<u64>(), 30_000);
+}
