@@ -3,9 +3,17 @@
 //! paper's constant-time claim buys the *system* (L3 target: placement is
 //! never the router bottleneck).
 //!
+//! Three phases per cluster size: PUT, GET, and GET-under-churn — the
+//! latter hammers reads while a background admin thread cycles
+//! scale-up/scale-down, so it prices the epoch-snapshot design (readers
+//! never block on a migration; mid-migration keys cost one extra hop via
+//! dual-read).
+//!
 //! Custom harness (`harness = false`): ops/s + ns/op over seeded key sets.
 
 use std::hint::black_box;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use binhash::proto::Request;
@@ -28,7 +36,7 @@ fn main() {
         }
         let put = t0.elapsed();
 
-        // GET phase.
+        // GET phase (steady topology).
         let t0 = Instant::now();
         for k in &keys {
             let r = router.handle(Request::Get { key: k.clone() });
@@ -36,12 +44,45 @@ fn main() {
         }
         let get = t0.elapsed();
 
+        // GET phase under topology churn: a background thread cycles
+        // scale-up/scale-down while this thread keeps reading.
+        let stop = Arc::new(AtomicBool::new(false));
+        let admin = {
+            let router = router.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut cycles = 0u32;
+                while !stop.load(Ordering::Relaxed) {
+                    router.scale_up().expect("scale_up");
+                    router.scale_down().expect("scale_down");
+                    cycles += 1;
+                }
+                cycles
+            })
+        };
+        let t0 = Instant::now();
+        for k in &keys {
+            let r = router.handle(Request::Get { key: k.clone() });
+            black_box(r);
+        }
+        let churn = t0.elapsed();
+        stop.store(true, Ordering::Relaxed);
+        let cycles = admin.join().expect("admin thread");
+
         let put_ns = put.as_nanos() as f64 / OPS as f64;
         let get_ns = get.as_nanos() as f64 / OPS as f64;
+        let churn_ns = churn.as_nanos() as f64 / OPS as f64;
         println!(
             "n={n:<4} put: {put_ns:>8.0} ns/op ({:>9.0} op/s)   get: {get_ns:>8.0} ns/op ({:>9.0} op/s)",
             1e9 / put_ns,
             1e9 / get_ns
+        );
+        println!(
+            "      get under churn: {churn_ns:>8.0} ns/op ({:>9.0} op/s) across {cycles} scale cycles, \
+             {} dual-reads, {} migration batches",
+            1e9 / churn_ns,
+            router.metrics.dual_reads.load(Ordering::Relaxed),
+            router.metrics.migration_batches.load(Ordering::Relaxed),
         );
         println!(
             "      placement p50={}ns p99={}ns mean={:.0}ns  (of end-to-end mean {:.0}ns)",

@@ -1,10 +1,19 @@
 //! Cluster membership: the epoch-stamped mapping from buckets to shards.
 //!
-//! The cluster owns the placement engine (any [`ConsistentHasher`]) and
-//! the shard handles, and records every topology change as an event.
-//! Shards join and leave in LIFO order (the paper's §1 operating model);
-//! arbitrary failures are handled by the Memento-wrapped engine (see
-//! `examples/failover_memento.rs`).
+//! Two shapes live here:
+//!
+//! * [`Cluster`] — the *mutable* construction-time description (placement
+//!   engine + shard handles + event log). Shards join and leave in LIFO
+//!   order (the paper's §1 operating model); arbitrary failures are
+//!   handled by the Memento-wrapped engine (see
+//!   `examples/failover_memento.rs`).
+//! * [`PlacementSnapshot`] — the *immutable*, epoch-stamped view the
+//!   router's data path routes with. The router consumes a `Cluster` into
+//!   its first snapshot and publishes a fresh `Arc<PlacementSnapshot>` on
+//!   every topology change, so GET/PUT/DEL never contend with a
+//!   migration. While keys are still in flight the snapshot carries a
+//!   [`MigrationOrigin`] — the previous epoch's placement — enabling
+//!   dual-read (new owner, then old owner) routing.
 
 use std::time::SystemTime;
 
@@ -29,6 +38,67 @@ pub enum EventKind {
     Joined(u32),
     /// Bucket left (always the last-added).
     Left(u32),
+}
+
+/// The previous topology's placement, kept inside a migrating
+/// [`PlacementSnapshot`] so the data path can fall back to a key's old
+/// owner until the migration sweep has copied it.
+pub struct MigrationOrigin {
+    /// Placement engine of the epoch being migrated away from.
+    pub engine: Box<dyn ConsistentHasher>,
+    /// Bucket range the migration scans for movable keys: every old shard
+    /// on scale-up (monotonicity moves keys from anywhere onto the new
+    /// bucket), but only the retiring shard on scale-down (minimal
+    /// disruption guarantees nothing else moves).
+    pub sources: std::ops::Range<u32>,
+}
+
+/// An immutable, epoch-stamped placement view: frozen engine + shard
+/// handles + optional in-flight migration origin.
+///
+/// Published by the router behind an `Arc` swap; never mutated after
+/// publication, so the data path reads it lock-free (one `Arc` clone).
+/// During a migration the shard list covers the *union* of the old and
+/// new topologies (scale-down keeps the retiring shard reachable for
+/// dual reads until the final snapshot drops it).
+pub struct PlacementSnapshot {
+    /// Epoch this snapshot was published at (monotonically non-decreasing
+    /// across publications).
+    pub epoch: u64,
+    /// Frozen placement engine for this snapshot's topology.
+    pub engine: Box<dyn ConsistentHasher>,
+    /// Shard handles; bucket id = index.
+    pub shards: Vec<ShardClient>,
+    /// `Some` while keys are still being migrated into this topology.
+    pub origin: Option<MigrationOrigin>,
+}
+
+impl PlacementSnapshot {
+    /// Map a digest to its bucket and shard handle.
+    #[inline]
+    pub fn route(&self, digest: u64) -> (u32, &ShardClient) {
+        let b = self.engine.bucket(digest);
+        (b, &self.shards[b as usize])
+    }
+
+    /// `true` while a migration into this topology is in flight.
+    pub fn is_migrating(&self) -> bool {
+        self.origin.is_some()
+    }
+
+    /// The *previous* topology's owner of `digest`, when a migration is in
+    /// flight and that owner differs from `new_bucket` — i.e. exactly the
+    /// keys that may not have reached their new owner yet.
+    #[inline]
+    pub fn fallback_route(&self, digest: u64, new_bucket: u32) -> Option<(u32, &ShardClient)> {
+        let origin = self.origin.as_ref()?;
+        let b = origin.engine.bucket(digest);
+        if b == new_bucket {
+            None
+        } else {
+            Some((b, &self.shards[b as usize]))
+        }
+    }
 }
 
 /// Cluster state: placement engine + shard handles + event log.
@@ -107,6 +177,20 @@ impl Cluster {
         b
     }
 
+    /// Consume the cluster into the router's initial placement snapshot
+    /// plus the event log recorded so far.
+    pub fn into_snapshot(self) -> (PlacementSnapshot, Vec<TopologyEvent>) {
+        (
+            PlacementSnapshot {
+                epoch: self.epoch,
+                engine: self.placement,
+                shards: self.shards,
+                origin: None,
+            },
+            self.events,
+        )
+    }
+
     /// Remove the last-joined shard; returns `(bucket, handle)`.
     ///
     /// # Panics
@@ -169,5 +253,52 @@ mod tests {
     fn mismatched_sizes_panic() {
         let shards = vec![ShardClient::Local(Shard::new(0))];
         Cluster::new(Box::new(BinomialHash::new(2)), shards);
+    }
+
+    #[test]
+    fn into_snapshot_freezes_state() {
+        let mut c = local_cluster(3);
+        c.join(ShardClient::Local(Shard::new(3)));
+        let (snap, events) = c.into_snapshot();
+        assert_eq!(snap.epoch, 1);
+        assert_eq!(snap.engine.len(), 4);
+        assert_eq!(snap.shards.len(), 4);
+        assert!(!snap.is_migrating());
+        assert_eq!(events.len(), 1);
+        let (b, _) = snap.route(12345);
+        assert!(b < 4);
+        assert!(snap.fallback_route(12345, b).is_none());
+    }
+
+    #[test]
+    fn migrating_snapshot_dual_routes() {
+        // A snapshot mid scale-up 3 -> 4: keys whose owner changed must
+        // report their old owner, and (monotonicity) only keys landing on
+        // the new bucket have one.
+        let shards: Vec<ShardClient> =
+            (0..4).map(|i| ShardClient::Local(Shard::new(i))).collect();
+        let snap = PlacementSnapshot {
+            epoch: 1,
+            engine: Box::new(BinomialHash::new(4)),
+            shards,
+            origin: Some(MigrationOrigin {
+                engine: Box::new(BinomialHash::new(3)),
+                sources: 0..3,
+            }),
+        };
+        assert!(snap.is_migrating());
+        let mut rng = crate::hashing::SplitMix64Rng::new(3);
+        let mut fallbacks = 0;
+        for _ in 0..2_000 {
+            let d = rng.next_u64();
+            let (b, _) = snap.route(d);
+            if let Some((ob, _)) = snap.fallback_route(d, b) {
+                assert_ne!(ob, b);
+                assert_eq!(b, 3, "only keys moving onto the new bucket dual-route");
+                assert!(ob < 3);
+                fallbacks += 1;
+            }
+        }
+        assert!(fallbacks > 0);
     }
 }

@@ -14,10 +14,14 @@
 //! * [`hashing`] — the hash substrate (xxhash64, splitmix64 family),
 //!   bitwise-identical to the Python/Pallas build path.
 //! * [`cluster`] / [`router`] / [`shard`] / [`rebalance`] — the
-//!   coordinator: membership, tokio request routing, in-memory storage
-//!   nodes, and migration planning.
+//!   coordinator: membership, epoch-snapshot request routing over std
+//!   thread-per-connection servers (the build is fully offline — no tokio
+//!   or async runtime), in-memory storage nodes, and incremental
+//!   migration. Topology changes publish immutable placement snapshots;
+//!   the data path never blocks on a rebalance.
 //! * [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas bulk
-//!   placement artifacts (`artifacts/*.hlo.txt`).
+//!   placement artifacts (`artifacts/*.hlo.txt`); compiled in only with
+//!   the `pjrt` cargo feature (a same-API stub otherwise).
 //! * [`stats`] / [`workload`] / [`metrics`] — balance statistics (§5
 //!   closed forms), workload generators, telemetry.
 //!

@@ -85,6 +85,11 @@ pub struct RouterMetrics {
     pub errors: AtomicU64,
     /// Keys migrated by rebalances.
     pub migrated_keys: AtomicU64,
+    /// Bounded batches applied by incremental migrations.
+    pub migration_batches: AtomicU64,
+    /// GETs answered by the previous epoch's owner mid-migration
+    /// (new-owner-then-old-owner dual reads).
+    pub dual_reads: AtomicU64,
     /// Topology epochs applied.
     pub epochs: AtomicU64,
     /// End-to-end request latency.
@@ -102,13 +107,15 @@ impl RouterMetrics {
     /// One-line summary for logs and examples.
     pub fn summary(&self) -> String {
         format!(
-            "gets={} puts={} dels={} errors={} migrated={} epochs={} \
-             p50={}ns p99={}ns mean={:.0}ns",
+            "gets={} puts={} dels={} errors={} migrated={} batches={} \
+             dual_reads={} epochs={} p50={}ns p99={}ns mean={:.0}ns",
             self.gets.load(Ordering::Relaxed),
             self.puts.load(Ordering::Relaxed),
             self.dels.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
             self.migrated_keys.load(Ordering::Relaxed),
+            self.migration_batches.load(Ordering::Relaxed),
+            self.dual_reads.load(Ordering::Relaxed),
             self.epochs.load(Ordering::Relaxed),
             self.latency.quantile_ns(0.5),
             self.latency.quantile_ns(0.99),

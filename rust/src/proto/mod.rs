@@ -5,8 +5,10 @@
 //! ```text
 //! GET <key>\n                 -> VAL <len>\n<bytes>  |  NIL\n
 //! PUT <key> <len>\n<bytes>    -> OK\n
+//! PUTNX <key> <len>\n<bytes>  -> OK\n | NIL\n        (shard only)
 //! DEL <key>\n                 -> OK\n | NIL\n
 //! SCAN\n                      -> KEYS <count>\n(<key>\n)*
+//! SCANSTRIPE <i>\n            -> KEYS <count>\n(<key>\n)*  (shard only)
 //! COUNT\n                     -> NUM <count>\n
 //! STATS\n                     -> INFO <line>\n
 //! SCALEUP\n                   -> NUM <new-n>\n        (router only)
@@ -15,6 +17,14 @@
 //!
 //! Keys are ASCII tokens without whitespace (the router rejects others);
 //! values are arbitrary bytes.  Errors: `ERR <msg>\n`.
+//!
+//! `PUTNX` stores only if the key is absent (`NIL` = already present) and
+//! `SCANSTRIPE` lists one lock stripe; both exist for the incremental
+//! rebalancer, which streams stripes and copies without clobbering newer
+//! client writes.  The router's `STATS` line reports the placement epoch
+//! and a `state=migrating|steady` field; `SCALEUP`/`SCALEDOWN` issued
+//! while a migration is already in flight answer
+//! `ERR MIGRATING: <detail>`.
 //!
 //! Blocking I/O over `std::io` — the servers are thread-per-connection
 //! (see DESIGN.md: the build is fully offline, so the stack is std-only).
@@ -30,10 +40,20 @@ pub enum Request {
     Get { key: String },
     /// Store a value.
     Put { key: String, value: Vec<u8> },
+    /// Store a value only if the key is absent (shard-internal; the
+    /// rebalancer's copy step, so a migration never overwrites a newer
+    /// client write that already reached the destination shard).
+    PutNx { key: String, value: Vec<u8> },
     /// Delete a key.
     Del { key: String },
     /// List all keys (shard-internal; used by the rebalancer).
     Scan,
+    /// List the keys of one lock stripe (shard-internal; the incremental
+    /// rebalancer streams stripes instead of materializing a full scan).
+    ScanStripe {
+        /// Stripe index in `[0, shard::STRIPES)`.
+        stripe: u32,
+    },
     /// Number of keys stored.
     Count,
     /// One-line stats.
@@ -80,18 +100,27 @@ pub fn read_request<R: Read>(r: &mut BufReader<R>) -> Result<Option<Request>> {
     let req = match cmd {
         "GET" => Request::Get { key: expect_key(parts.next())? },
         "DEL" => Request::Del { key: expect_key(parts.next())? },
-        "PUT" => {
+        "PUT" | "PUTNX" => {
             let key = expect_key(parts.next())?;
             let len: usize =
-                parts.next().ok_or_else(|| anyhow!("PUT missing length"))?.parse()?;
+                parts.next().ok_or_else(|| anyhow!("{cmd} missing length"))?.parse()?;
             if len > 64 << 20 {
                 bail!("value too large: {len}");
             }
             let mut value = vec![0u8; len];
             r.read_exact(&mut value)?;
-            Request::Put { key, value }
+            if cmd == "PUT" {
+                Request::Put { key, value }
+            } else {
+                Request::PutNx { key, value }
+            }
         }
         "SCAN" => Request::Scan,
+        "SCANSTRIPE" => {
+            let stripe: u32 =
+                parts.next().ok_or_else(|| anyhow!("SCANSTRIPE missing index"))?.parse()?;
+            Request::ScanStripe { stripe }
+        }
         "COUNT" => Request::Count,
         "STATS" => Request::Stats,
         "SCALEUP" => Request::ScaleUp,
@@ -118,7 +147,12 @@ pub fn write_request<W: Write>(w: &mut W, req: &Request) -> Result<()> {
             write!(w, "PUT {key} {}\n", value.len())?;
             w.write_all(value)?;
         }
+        Request::PutNx { key, value } => {
+            write!(w, "PUTNX {key} {}\n", value.len())?;
+            w.write_all(value)?;
+        }
         Request::Scan => w.write_all(b"SCAN\n")?,
+        Request::ScanStripe { stripe } => write!(w, "SCANSTRIPE {stripe}\n")?,
         Request::Count => w.write_all(b"COUNT\n")?,
         Request::Stats => w.write_all(b"STATS\n")?,
         Request::ScaleUp => w.write_all(b"SCALEUP\n")?,
@@ -211,8 +245,10 @@ mod tests {
         for req in [
             Request::Get { key: "k1".into() },
             Request::Put { key: "k2".into(), value: b"hello\nworld\x00\xff".to_vec() },
+            Request::PutNx { key: "k4".into(), value: b"\x01\x02".to_vec() },
             Request::Del { key: "k3".into() },
             Request::Scan,
+            Request::ScanStripe { stripe: 7 },
             Request::Count,
             Request::Stats,
             Request::ScaleUp,

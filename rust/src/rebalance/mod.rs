@@ -1,5 +1,5 @@
 //! Rebalancer: computes and applies the minimal key-movement set for a
-//! topology change.
+//! topology change, incrementally.
 //!
 //! Consistent hashing makes the plan *local*: under monotonicity only keys
 //! whose new bucket is the joining one move (scale-up), and under minimal
@@ -8,6 +8,14 @@
 //! placement for every key — that check is the bulk workload the
 //! [`PlacementRuntime`] XLA artifacts accelerate, and it catches a
 //! non-consistent engine (e.g. `maglev`) by reporting its excess moves.
+//!
+//! The production entry point is [`migrate_streaming`]: it walks every
+//! source shard one lock stripe at a time (`Shard::scan_stripe`), plans
+//! each bounded batch, and applies it immediately — peak memory is one
+//! stripe of keys plus one batch of moves, never the full keyset, and the
+//! data path keeps serving (dual-read) while batches land.  The copy step
+//! is `PUTNX` so a migration batch can never clobber a newer value a
+//! client already wrote to the destination shard.
 
 use anyhow::Result;
 
@@ -61,16 +69,55 @@ pub enum PlanPath<'a> {
     },
 }
 
-/// Collect every key (with digest) currently stored on the given shards.
-pub fn scan_cluster(shards: &[ShardClient]) -> Result<Vec<(String, u64)>> {
-    let mut all = Vec::new();
-    for shard in shards {
-        for key in shard.scan()? {
-            let digest = crate::hashing::xxhash64(key.as_bytes(), 0);
-            all.push((key, digest));
+/// Aggregate result of an incremental migration.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct MigrationStats {
+    /// Keys examined across all stripes.
+    pub scanned: u64,
+    /// Keys copied to a new owner (and removed from the old one).
+    pub moved: u64,
+    /// Bounded batches planned and applied.
+    pub batches: u64,
+}
+
+/// Incremental migration driver: stream the `sources` shards
+/// stripe-by-stripe, plan each chunk of at most `batch_size` keys with
+/// `plan_batch`, and apply it immediately.
+///
+/// `shards` must cover the union of the old and new topologies (every
+/// `Move::to` destination must be indexable); only the `sources` range is
+/// scanned — all old shards on scale-up, just the retiring shard on
+/// scale-down (minimal disruption).  Unlike the stop-the-world path this
+/// never materializes the cluster's keyset — memory is bounded by the
+/// largest stripe — and every batch is visible to concurrent readers the
+/// moment it lands.
+pub fn migrate_streaming(
+    shards: &[ShardClient],
+    sources: std::ops::Range<u32>,
+    batch_size: usize,
+    mut plan_batch: impl FnMut(&[(String, u64)]) -> Result<MigrationPlan>,
+) -> Result<MigrationStats> {
+    let batch_size = batch_size.max(1);
+    let mut stats = MigrationStats::default();
+    for shard in shards[sources.start as usize..sources.end as usize].iter() {
+        for stripe in 0..crate::shard::STRIPES as u32 {
+            let digested: Vec<(String, u64)> = shard
+                .scan_stripe(stripe)?
+                .into_iter()
+                .map(|key| {
+                    let digest = crate::hashing::xxhash64(key.as_bytes(), 0);
+                    (key, digest)
+                })
+                .collect();
+            for chunk in digested.chunks(batch_size) {
+                let plan = plan_batch(chunk)?;
+                stats.scanned += plan.scanned as u64;
+                stats.moved += apply(&plan, shards)?;
+                stats.batches += 1;
+            }
         }
     }
-    Ok(all)
+    Ok(stats)
 }
 
 /// Compute the migration plan for the scanned keys.
@@ -103,15 +150,17 @@ pub fn plan(keys: &[(String, u64)], path: PlanPath<'_>) -> Result<MigrationPlan>
     Ok(plan)
 }
 
-/// Apply a plan: copy each key to its destination shard, then delete the
-/// source copy.  Returns the number of keys migrated.
+/// Apply a plan: copy each key to its destination shard (`PUTNX` — a
+/// value a client already wrote to the destination mid-migration is newer
+/// than the copy we hold and must win), then delete the source copy.
+/// Returns the number of keys migrated.
 pub fn apply(plan: &MigrationPlan, shards: &[ShardClient]) -> Result<u64> {
     let mut moved = 0u64;
     for m in &plan.moves {
         let src = &shards[m.from as usize];
         let dst = &shards[m.to as usize];
         if let Some(value) = src.get(&m.key)? {
-            dst.put(&m.key, value)?;
+            dst.put_nx(&m.key, value)?;
             src.del(&m.key)?;
             moved += 1;
         }
@@ -166,7 +215,7 @@ mod tests {
     }
 
     #[test]
-    fn apply_moves_data() {
+    fn streaming_migration_moves_data_in_bounded_batches() {
         let shards: Vec<ShardClient> =
             (0..3).map(|i| ShardClient::Local(Shard::new(i))).collect();
         // Place keys per n=2 (bucket 2 unused), then migrate to n=3.
@@ -177,16 +226,19 @@ mod tests {
                 s.put(key.clone(), b"x".to_vec());
             }
         }
-        let scanned = scan_cluster(&shards).unwrap();
-        assert_eq!(scanned.len(), 2_000);
-        let plan = plan(
-            &scanned,
-            PlanPath::Rust(&|d| binomial::lookup(d, 2, 6), &|d| binomial::lookup(d, 3, 6)),
-        )
+        const BATCH: usize = 64;
+        let stats = migrate_streaming(&shards, 0..2, BATCH, |chunk| {
+            assert!(chunk.len() <= BATCH, "batch bound violated: {}", chunk.len());
+            plan(
+                chunk,
+                PlanPath::Rust(&|d| binomial::lookup(d, 2, 6), &|d| binomial::lookup(d, 3, 6)),
+            )
+        })
         .unwrap();
-        let moved = apply(&plan, &shards).unwrap();
-        assert_eq!(moved as usize, plan.moves.len());
-        assert!(moved > 0);
+        assert_eq!(stats.scanned, 2_000);
+        assert!(stats.moved > 0);
+        // 2000 keys over 2 shards x 16 stripes at batch 64: many batches.
+        assert!(stats.batches >= 32, "batches={}", stats.batches);
         // Every key now lives on its n=3 bucket; totals preserved.
         for (key, digest) in &keys {
             let b = binomial::lookup(*digest, 3, 6);
@@ -194,6 +246,38 @@ mod tests {
         }
         let total: u64 = shards.iter().map(|s| s.count().unwrap()).sum();
         assert_eq!(total, 2_000);
+    }
+
+    #[test]
+    fn streaming_migration_respects_newer_destination_writes() {
+        // A key already present on its destination (a "client write that
+        // raced ahead") must survive the migration copy untouched.
+        let shards: Vec<ShardClient> =
+            (0..3).map(|i| ShardClient::Local(Shard::new(i))).collect();
+        let keys = keyset(500);
+        let mut raced = None;
+        for (key, digest) in &keys {
+            let from = binomial::lookup(*digest, 2, 6);
+            let to = binomial::lookup(*digest, 3, 6);
+            shards[from as usize].put(key, b"stale".to_vec()).unwrap();
+            if raced.is_none() && from != to {
+                shards[to as usize].put(key, b"fresh".to_vec()).unwrap();
+                raced = Some((key.clone(), to));
+            }
+        }
+        let (raced_key, raced_to) = raced.expect("keyset contains a moving key");
+        migrate_streaming(&shards, 0..2, 128, |chunk| {
+            plan(
+                chunk,
+                PlanPath::Rust(&|d| binomial::lookup(d, 2, 6), &|d| binomial::lookup(d, 3, 6)),
+            )
+        })
+        .unwrap();
+        assert_eq!(
+            shards[raced_to as usize].get(&raced_key).unwrap(),
+            Some(b"fresh".to_vec()),
+            "migration clobbered a newer destination write"
+        );
     }
 
     #[test]

@@ -2,44 +2,75 @@
 //!
 //! Accepts client connections speaking the wire protocol, places each key
 //! with the cluster's consistent-hashing engine (constant-time BinomialHash
-//! by default), and forwards to the owning shard.  Admin commands scale the
-//! cluster up/down with an integrated stop-the-world rebalance (scan →
-//! plan → apply; the plan step optionally offloads to the PJRT bulk
-//! artifacts).
+//! by default), and forwards to the owning shard.
 //!
-//! Concurrency model: thread-per-connection servers; the cluster sits
-//! behind an `RwLock` — data requests take read locks (placement is a few
-//! ns of integer arithmetic), topology changes take the write lock for the
-//! duration of the migration.  A deliberate simplification documented in
-//! DESIGN.md (production systems overlap migration behind an
-//! epoch-forwarding proxy layer).
+//! ## Concurrency model: epoch snapshots + incremental migration
+//!
+//! The data path routes with an immutable [`PlacementSnapshot`] behind an
+//! `Arc` swap (hand-rolled with `std::sync`: the `RwLock` is held only for
+//! the `Arc` clone/store — a few ns — never across shard I/O or migration
+//! work).  Topology changes are serialized by an admin mutex and proceed
+//! in three phases, none of which blocks GET/PUT/DEL:
+//!
+//! 1. **Publish** a new epoch whose snapshot routes with the *new* engine
+//!    and carries a [`MigrationOrigin`] (the old engine), enabling
+//!    dual-read: a GET that misses on a key's new owner retries the old
+//!    owner.  PUTs land on the new owner and retire the old copy; DELs
+//!    remove both.
+//! 2. **Quiesce** the superseded snapshot (wait for its in-flight readers
+//!    — `Arc::strong_count` — to drain; readers hold a snapshot only for
+//!    one request, so this settles in microseconds), then run the
+//!    incremental migration: stream every source shard stripe-by-stripe
+//!    and move keys in bounded batches ([`rebalance::migrate_streaming`]),
+//!    optionally planning batches on the PJRT bulk artifacts.
+//! 3. **Settle**: publish the same epoch without the origin (and, on
+//!    scale-down, without the retiring shard handle).
+//!
+//! Known anomaly (documented, not defended): a DEL racing the migration
+//! copy of the same key can resurrect it (the copy step has no tombstone).
+//! Fixing this needs per-key versions; see ROADMAP.
 
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::Ordering;
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{anyhow, ensure, Result};
 
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, EventKind, MigrationOrigin, PlacementSnapshot, TopologyEvent};
 use crate::metrics::RouterMetrics;
 use crate::proto::{self, Request, Response};
-use crate::rebalance::{self, PlanPath};
+use crate::rebalance::{self, MigrationStats, PlanPath};
 use crate::runtime::PlacementRuntime;
 use crate::shard::{Shard, ShardClient};
 
 /// Shard factory used on scale-up.
 pub type ShardSpawner = Box<dyn Fn(u32) -> ShardClient + Send + Sync>;
 
-/// The router: shared cluster + metrics + optional XLA bulk runtime.
+/// Keys per migration batch: small enough that a batch is visible to
+/// readers almost immediately, large enough to amortize planning.
+const MIGRATION_BATCH: usize = 512;
+
+/// Engines the scaling path supports: pure functions of `(digest, n)`
+/// that can be re-instantiated at any size from their name alone, and
+/// whose monotonicity/minimal-disruption keep migrations minimal.
+const SCALABLE_ENGINES: &[&str] = &["binomial", "jump", "jumpback", "fliphash", "powerch"];
+
+/// The router: published placement snapshot + metrics + optional XLA bulk
+/// runtime.
 pub struct Router {
-    cluster: RwLock<Cluster>,
+    /// Current snapshot; swapped atomically on each migration phase.
+    current: RwLock<Arc<PlacementSnapshot>>,
+    /// Serializes topology changes and owns the event log. The data path
+    /// never touches this; `SCALEUP`/`SCALEDOWN` take it with `try_lock`
+    /// and answer `ERR MIGRATING` when a change is already in flight.
+    admin: Mutex<Vec<TopologyEvent>>,
     /// Request/latency counters.
     pub metrics: RouterMetrics,
     /// Bulk placement runtime for rebalance planning (None = Rust path).
     /// Serialized behind a mutex — see the Send safety note in `runtime`.
-    bulk: Option<std::sync::Mutex<PlacementRuntime>>,
+    bulk: Option<Mutex<PlacementRuntime>>,
     spawn_shard: ShardSpawner,
 }
 
@@ -56,39 +87,74 @@ impl Router {
         spawn_shard: ShardSpawner,
         bulk: Option<PlacementRuntime>,
     ) -> Arc<Self> {
+        let (snapshot, events) = cluster.into_snapshot();
         Arc::new(Self {
-            cluster: RwLock::new(cluster),
+            current: RwLock::new(Arc::new(snapshot)),
+            admin: Mutex::new(events),
             metrics: RouterMetrics::new(),
-            bulk: bulk.map(std::sync::Mutex::new),
+            bulk: bulk.map(Mutex::new),
             spawn_shard,
         })
     }
 
+    /// The current placement snapshot (one `Arc` clone; never blocks on a
+    /// migration).
+    ///
+    /// Hold-time contract: drop the handle promptly (one request's worth
+    /// of work). Scale operations wait for superseded snapshots' readers
+    /// to drain before deleting migrated source copies, so a handle held
+    /// across blocking work stalls — not corrupts — topology changes.
+    pub fn snapshot(&self) -> Arc<PlacementSnapshot> {
+        self.current.read().unwrap().clone()
+    }
+
+    fn publish(&self, snapshot: PlacementSnapshot) {
+        *self.current.write().unwrap() = Arc::new(snapshot);
+    }
+
+    /// Wait until no in-flight request still routes with `snap` (all
+    /// reader clones dropped). After a publish no new reader can acquire
+    /// it, and readers hold a snapshot only for the duration of one shard
+    /// call, so this settles in microseconds.
+    fn quiesce(snap: &Arc<PlacementSnapshot>) {
+        while Arc::strong_count(snap) > 1 {
+            std::thread::yield_now();
+        }
+    }
+
     /// Current `(epoch, n, algorithm)`.
     pub fn topology(&self) -> (u64, u32, &'static str) {
-        let c = self.cluster.read().unwrap();
-        (c.epoch, c.len(), c.algorithm())
+        let snap = self.snapshot();
+        (snap.epoch, snap.engine.len(), snap.engine.name())
+    }
+
+    /// Topology events recorded so far.
+    pub fn events(&self) -> Vec<TopologyEvent> {
+        self.admin.lock().unwrap().clone()
     }
 
     /// Key count on one shard (telemetry; used by examples/benches).
     pub fn shard_count(&self, bucket: u32) -> Result<u64> {
-        let c = self.cluster.read().unwrap();
-        ensure!(bucket < c.len(), "bucket {bucket} out of range");
-        c.shard(bucket).count()
+        let snap = self.snapshot();
+        ensure!((bucket as usize) < snap.shards.len(), "bucket {bucket} out of range");
+        snap.shards[bucket as usize].count()
     }
 
     /// Handle one data/admin request end-to-end.
-    pub fn handle(self: &Arc<Self>, req: Request) -> Response {
+    pub fn handle(&self, req: Request) -> Response {
         let start = Instant::now();
         let resp = match req {
-            Request::Get { ref key } => self.forward(key, req.clone(), &self.metrics.gets),
-            Request::Put { ref key, .. } => self.forward(key, req.clone(), &self.metrics.puts),
-            Request::Del { ref key } => self.forward(key, req.clone(), &self.metrics.dels),
+            Request::Get { key } => self.data_get(key),
+            Request::Put { key, value } => self.data_put(key, value),
+            Request::Del { key } => self.data_del(key),
+            // COUNT sums every shard in the snapshot. Mid-migration a key
+            // sits on both owners between the copy and the source delete,
+            // so the total can transiently over-report by up to one batch.
             Request::Count => {
-                let c = self.cluster.read().unwrap();
+                let snap = self.snapshot();
                 let mut total = 0u64;
                 let mut err = None;
-                for s in c.shards() {
+                for s in &snap.shards {
                     match s.count() {
                         Ok(x) => total += x,
                         Err(e) => {
@@ -103,16 +169,19 @@ impl Router {
                 }
             }
             Request::Stats => {
-                let c = self.cluster.read().unwrap();
+                let snap = self.snapshot();
                 Response::Info(format!(
-                    "epoch={} n={} algo={} {}",
-                    c.epoch,
-                    c.len(),
-                    c.algorithm(),
+                    "epoch={} n={} algo={} state={} {}",
+                    snap.epoch,
+                    snap.engine.len(),
+                    snap.engine.name(),
+                    if snap.is_migrating() { "migrating" } else { "steady" },
                     self.metrics.summary()
                 ))
             }
-            Request::Scan => Response::Err("SCAN is shard-internal".into()),
+            Request::Scan | Request::ScanStripe { .. } | Request::PutNx { .. } => {
+                Response::Err("shard-internal command".into())
+            }
             Request::ScaleUp => match self.scale_up() {
                 Ok(n) => Response::Num(n as u64),
                 Err(e) => Response::Err(e.to_string()),
@@ -129,111 +198,300 @@ impl Router {
         resp
     }
 
-    fn forward(&self, key: &str, req: Request, counter: &std::sync::atomic::AtomicU64) -> Response {
+    /// Validate a key, count the op, and return its digest.
+    fn admit(&self, key: &str, counter: &std::sync::atomic::AtomicU64) -> Result<u64, Response> {
         if !proto::valid_key(key) {
-            return Response::Err(format!("invalid key {key:?}"));
+            return Err(Response::Err(format!("invalid key {key:?}")));
         }
         counter.fetch_add(1, Ordering::Relaxed);
-        let digest = crate::hashing::xxhash64(key.as_bytes(), 0);
+        Ok(crate::hashing::xxhash64(key.as_bytes(), 0))
+    }
+
+    fn data_get(&self, key: String) -> Response {
+        let digest = match self.admit(&key, &self.metrics.gets) {
+            Ok(d) => d,
+            Err(resp) => return resp,
+        };
         let t0 = Instant::now();
-        let c = self.cluster.read().unwrap();
-        let (_, shard) = c.route(digest);
+        let snap = self.snapshot();
+        let (bucket, shard) = snap.route(digest);
         self.metrics.placement_latency.record(t0.elapsed());
-        match shard.call(req) {
-            Ok(resp) => resp,
-            Err(e) => Response::Err(e.to_string()),
+        match snap.fallback_route(digest, bucket) {
+            // Mid-migration, the key may not have reached its new owner
+            // yet: dual-read, new owner then old owner — and if both miss,
+            // re-probe the new owner once.  Copies always land new-first
+            // (PUTNX/PUT before the source DEL), so a key that vanished
+            // from the old owner between our two probes is already
+            // readable on the new one; the third probe closes that window.
+            Some((_, old_shard)) => match shard.call(Request::Get { key: key.clone() }) {
+                Ok(Response::Nil) => {
+                    self.metrics.dual_reads.fetch_add(1, Ordering::Relaxed);
+                    match old_shard.call(Request::Get { key: key.clone() }) {
+                        Ok(Response::Nil) => match shard.call(Request::Get { key }) {
+                            Ok(resp) => resp,
+                            Err(e) => Response::Err(e.to_string()),
+                        },
+                        Ok(resp) => resp,
+                        Err(e) => Response::Err(e.to_string()),
+                    }
+                }
+                Ok(resp) => resp,
+                Err(e) => Response::Err(e.to_string()),
+            },
+            None => match shard.call(Request::Get { key }) {
+                Ok(resp) => resp,
+                Err(e) => Response::Err(e.to_string()),
+            },
         }
     }
 
-    /// Add a shard and migrate exactly the keys that now belong to it.
-    /// Returns the new cluster size.
-    pub fn scale_up(self: &Arc<Self>) -> Result<u32> {
-        let mut c = self.cluster.write().unwrap();
-        let n_old = c.len();
-        let keys = rebalance::scan_cluster(c.shards())?;
-        let new_id = c.join((self.spawn_shard)(n_old));
-        let n_new = c.len();
-        let plan = self.plan_migration(&c, &keys, n_old, n_new)?;
-        let moved = rebalance::apply(&plan, c.shards())?;
-        self.metrics.migrated_keys.fetch_add(moved, Ordering::Relaxed);
+    fn data_put(&self, key: String, value: Vec<u8>) -> Response {
+        let digest = match self.admit(&key, &self.metrics.puts) {
+            Ok(d) => d,
+            Err(resp) => return resp,
+        };
+        let t0 = Instant::now();
+        let snap = self.snapshot();
+        let (bucket, shard) = snap.route(digest);
+        self.metrics.placement_latency.record(t0.elapsed());
+        match snap.fallback_route(digest, bucket) {
+            // Mid-migration: write the new owner, then retire the old copy
+            // so neither the migration sweep nor a dual-read can resurface
+            // a stale value.  The old-copy delete is best-effort: once the
+            // new owner holds the value, reads route there first and the
+            // migration sweep (PUTNX) cannot clobber it, so a cleanup
+            // failure must not turn a durable write into a client error.
+            Some((_, old_shard)) => {
+                let resp = match shard.call(Request::Put { key: key.clone(), value }) {
+                    Ok(resp) => resp,
+                    Err(e) => return Response::Err(e.to_string()),
+                };
+                let _ = old_shard.call(Request::Del { key });
+                resp
+            }
+            None => match shard.call(Request::Put { key, value }) {
+                Ok(resp) => resp,
+                Err(e) => Response::Err(e.to_string()),
+            },
+        }
+    }
+
+    fn data_del(&self, key: String) -> Response {
+        let digest = match self.admit(&key, &self.metrics.dels) {
+            Ok(d) => d,
+            Err(resp) => return resp,
+        };
+        let t0 = Instant::now();
+        let snap = self.snapshot();
+        let (bucket, shard) = snap.route(digest);
+        self.metrics.placement_latency.record(t0.elapsed());
+        match snap.fallback_route(digest, bucket) {
+            // Mid-migration: the key may live on either owner — delete
+            // both; it existed if either copy did.
+            Some((_, old_shard)) => {
+                let new_r = shard.call(Request::Del { key: key.clone() });
+                let old_r = old_shard.call(Request::Del { key });
+                match (new_r, old_r) {
+                    (Ok(Response::Ok), Ok(_)) | (Ok(_), Ok(Response::Ok)) => Response::Ok,
+                    (Ok(resp), Ok(_)) => resp,
+                    (Err(e), _) | (_, Err(e)) => Response::Err(e.to_string()),
+                }
+            }
+            None => match shard.call(Request::Del { key }) {
+                Ok(resp) => resp,
+                Err(e) => Response::Err(e.to_string()),
+            },
+        }
+    }
+
+    /// Re-instantiate a scalable engine at size `n`.
+    fn rebuild_engine(name: &str, n: u32) -> Result<Box<dyn crate::algorithms::ConsistentHasher>> {
+        ensure!(
+            SCALABLE_ENGINES.contains(&name),
+            "scaling with engine {name:?} is not supported; use one of {SCALABLE_ENGINES:?}"
+        );
+        crate::algorithms::by_name(name, n)
+            .ok_or_else(|| anyhow!("engine {name:?} vanished from the registry"))
+    }
+
+    /// Add a shard and incrementally migrate exactly the keys that now
+    /// belong to it, serving reads and writes throughout.  Returns the new
+    /// cluster size.
+    pub fn scale_up(&self) -> Result<u32> {
+        let mut events = self
+            .admin
+            .try_lock()
+            .map_err(|_| anyhow!("MIGRATING: a topology change is already in flight"))?;
+        let base = self.resume_interrupted(self.snapshot())?;
+        let name = base.engine.name();
+        let n_old = base.engine.len();
+        let n_new = n_old + 1;
+        // Fail fast — nothing is mutated or published for an unsupported
+        // engine (the old stop-the-world path joined the shard first and
+        // left the cluster half-changed on error).
+        let new_engine = Self::rebuild_engine(name, n_new)?;
+        let old_engine = Self::rebuild_engine(name, n_old)?;
+
+        let mut shards = base.shards.clone();
+        shards.push((self.spawn_shard)(n_old));
+        let epoch = base.epoch + 1;
+        self.publish(PlacementSnapshot {
+            epoch,
+            engine: new_engine,
+            shards: shards.clone(),
+            // Monotonicity: any old shard may hold keys that now belong to
+            // the joining bucket, so all of them are migration sources.
+            origin: Some(MigrationOrigin { engine: old_engine, sources: 0..n_old }),
+        });
+        events.push(TopologyEvent {
+            epoch,
+            kind: EventKind::Joined(n_old),
+            at: std::time::SystemTime::now(),
+        });
+        // No reader may still route with the pre-migration snapshot once
+        // batches start deleting source copies (such a reader would have
+        // no dual-read fallback); readers drain in microseconds.
+        Self::quiesce(&base);
+        drop(base);
+        let migrating = self.snapshot();
+        self.run_migration(&migrating)?;
+        self.publish(PlacementSnapshot {
+            epoch,
+            engine: Self::rebuild_engine(name, n_new)?,
+            shards,
+            origin: None,
+        });
+        // Drain dual-read holders of the migrating snapshot before
+        // returning, so every future topology change only ever has one
+        // live predecessor to quiesce.
+        Self::quiesce(&migrating);
         self.metrics.epochs.fetch_add(1, Ordering::Relaxed);
-        debug_assert_eq!(new_id, n_old);
         Ok(n_new)
     }
 
-    /// Remove the last shard after migrating its keys away.
-    /// Returns the new cluster size.
-    pub fn scale_down(self: &Arc<Self>) -> Result<u32> {
-        let mut c = self.cluster.write().unwrap();
-        let n_old = c.len();
+    /// Remove the last shard after incrementally migrating its keys away,
+    /// serving reads and writes throughout.  Returns the new cluster size.
+    pub fn scale_down(&self) -> Result<u32> {
+        let mut events = self
+            .admin
+            .try_lock()
+            .map_err(|_| anyhow!("MIGRATING: a topology change is already in flight"))?;
+        let base = self.resume_interrupted(self.snapshot())?;
+        let n_old = base.engine.len();
         ensure!(n_old > 1, "cannot scale below one shard");
-        let keys = rebalance::scan_cluster(c.shards())?;
         let n_new = n_old - 1;
-        let plan = self.plan_migration(&c, &keys, n_old, n_new)?;
-        // Migrate before dropping the shard handle.
-        let moved = rebalance::apply(&plan, c.shards())?;
-        let (removed, _handle) = c.leave();
-        debug_assert_eq!(removed, n_new);
-        self.metrics.migrated_keys.fetch_add(moved, Ordering::Relaxed);
+        let name = base.engine.name();
+        let new_engine = Self::rebuild_engine(name, n_new)?;
+        let old_engine = Self::rebuild_engine(name, n_old)?;
+
+        let epoch = base.epoch + 1;
+        // The migrating snapshot routes with the new engine (never onto
+        // the retiring shard) but keeps the full shard list so dual reads
+        // still reach the retiring shard's keys.
+        self.publish(PlacementSnapshot {
+            epoch,
+            engine: new_engine,
+            shards: base.shards.clone(),
+            // Minimal disruption: only the retiring shard's keys move, so
+            // it is the sole migration source — a scale-down costs
+            // O(retiring shard), not O(cluster keyset).
+            origin: Some(MigrationOrigin { engine: old_engine, sources: n_new..n_old }),
+        });
+        events.push(TopologyEvent {
+            epoch,
+            kind: EventKind::Left(n_new),
+            at: std::time::SystemTime::now(),
+        });
+        let mut shards = base.shards.clone();
+        // Same hazard as scale-up: a reader still routing with the old
+        // snapshot would miss keys whose source copy a batch just deleted.
+        Self::quiesce(&base);
+        drop(base);
+        let migrating = self.snapshot();
+        self.run_migration(&migrating)?;
+        // Settle: drop the retiring shard handle.
+        shards.truncate(n_new as usize);
+        self.publish(PlacementSnapshot {
+            epoch,
+            engine: Self::rebuild_engine(name, n_new)?,
+            shards,
+            origin: None,
+        });
+        // As in scale_up: drain dual-read holders before returning.
+        Self::quiesce(&migrating);
         self.metrics.epochs.fetch_add(1, Ordering::Relaxed);
         Ok(n_new)
     }
 
-    fn plan_migration(
+    /// Complete an interrupted migration: if a previous scale op failed
+    /// mid-sweep (e.g. a remote shard hiccup) the migrating snapshot is
+    /// still published — dual-read keeps every key serveable — but the
+    /// topology never settled.  Re-running the sweep is idempotent (PUTNX
+    /// copies, source deletes of already-moved keys are no-ops), after
+    /// which the snapshot settles normally.  Without this, a retried scale
+    /// op would build a fresh origin from the stuck topology and strand
+    /// never-migrated keys outside both routes.
+    fn resume_interrupted(
         &self,
-        c: &Cluster,
-        keys: &[(String, u64)],
-        n_old: u32,
-        n_new: u32,
-    ) -> Result<rebalance::MigrationPlan> {
+        base: Arc<PlacementSnapshot>,
+    ) -> Result<Arc<PlacementSnapshot>> {
+        if !base.is_migrating() {
+            return Ok(base);
+        }
+        self.run_migration(&base)?;
+        let n = base.engine.len();
+        let mut shards = base.shards.clone();
+        shards.truncate(n as usize); // no-op for an interrupted scale-up
+        self.publish(PlacementSnapshot {
+            epoch: base.epoch,
+            engine: Self::rebuild_engine(base.engine.name(), n)?,
+            shards,
+            origin: None,
+        });
+        Self::quiesce(&base);
+        drop(base);
+        Ok(self.snapshot())
+    }
+
+    /// Stream-migrate everything the snapshot's origin still owns, in
+    /// bounded batches, updating migration metrics.
+    fn run_migration(&self, snap: &PlacementSnapshot) -> Result<MigrationStats> {
+        let origin = snap.origin.as_ref().expect("run_migration needs a migrating snapshot");
+        let stats = self.migrate_batches(snap, origin)?;
+        self.metrics.migrated_keys.fetch_add(stats.moved, Ordering::Relaxed);
+        self.metrics.migration_batches.fetch_add(stats.batches, Ordering::Relaxed);
+        Ok(stats)
+    }
+
+    fn migrate_batches(
+        &self,
+        snap: &PlacementSnapshot,
+        origin: &MigrationOrigin,
+    ) -> Result<MigrationStats> {
         // The XLA bulk path computes BinomialHash placement; use it only
         // when that is the active engine.
-        if let (Some(runtime), "binomial") = (&self.bulk, c.algorithm()) {
-            let runtime = runtime.lock().unwrap();
-            return rebalance::plan(keys, PlanPath::Xla { runtime: &runtime, n_old, n_new });
+        if let (Some(bulk), "binomial") = (&self.bulk, snap.engine.name()) {
+            let n_old = origin.engine.len();
+            let n_new = snap.engine.len();
+            let runtime = bulk.lock().unwrap();
+            return rebalance::migrate_streaming(
+                &snap.shards,
+                origin.sources.clone(),
+                MIGRATION_BATCH,
+                |chunk| rebalance::plan(chunk, PlanPath::Xla { runtime: &runtime, n_old, n_new }),
+            );
         }
-        let omega = crate::algorithms::binomial::DEFAULT_OMEGA;
-        match c.algorithm() {
-            "binomial" => rebalance::plan(
-                keys,
-                PlanPath::Rust(
-                    &|d| crate::algorithms::binomial::lookup(d, n_old, omega),
-                    &|d| crate::algorithms::binomial::lookup(d, n_new, omega),
-                ),
-            ),
-            "jump" => rebalance::plan(
-                keys,
-                PlanPath::Rust(
-                    &|d| crate::algorithms::jump::jump_hash(d, n_old),
-                    &|d| crate::algorithms::jump::jump_hash(d, n_new),
-                ),
-            ),
-            "jumpback" => rebalance::plan(
-                keys,
-                PlanPath::Rust(
-                    &|d| crate::algorithms::jumpback::jumpback(d, n_old),
-                    &|d| crate::algorithms::jumpback::jumpback(d, n_new),
-                ),
-            ),
-            "fliphash" => rebalance::plan(
-                keys,
-                PlanPath::Rust(
-                    &|d| crate::algorithms::fliphash::fliphash(d, n_old, crate::algorithms::fliphash::DEFAULT_ATTEMPTS),
-                    &|d| crate::algorithms::fliphash::fliphash(d, n_new, crate::algorithms::fliphash::DEFAULT_ATTEMPTS),
-                ),
-            ),
-            "powerch" => rebalance::plan(
-                keys,
-                PlanPath::Rust(
-                    &|d| crate::algorithms::powerch::powerch(d, n_old, crate::algorithms::powerch::ATTEMPTS),
-                    &|d| crate::algorithms::powerch::powerch(d, n_new, crate::algorithms::powerch::ATTEMPTS),
-                ),
-            ),
-            other => bail!(
-                "scaling with engine {other:?} is not wired into plan_migration; \
-                 use binomial/jump/jumpback/fliphash/powerch"
-            ),
-        }
+        rebalance::migrate_streaming(
+            &snap.shards,
+            origin.sources.clone(),
+            MIGRATION_BATCH,
+            |chunk| {
+                rebalance::plan(
+                    chunk,
+                    PlanPath::Rust(&|d| origin.engine.bucket(d), &|d| snap.engine.bucket(d)),
+                )
+            },
+        )
     }
 
     /// Serve the router protocol on a TCP listener (thread per connection).
@@ -338,12 +596,35 @@ mod tests {
     }
 
     #[test]
+    fn scaling_unsupported_engine_is_rejected_without_mutation() {
+        let router = Router::new(local_cluster("maglev", 3).unwrap());
+        let before = router.topology();
+        assert!(matches!(router.handle(Request::ScaleUp), Response::Err(_)));
+        assert_eq!(router.topology(), before, "failed scale must not mutate topology");
+        assert_eq!(router.snapshot().shards.len(), 3);
+    }
+
+    #[test]
+    fn epochs_advance_and_settle() {
+        let router = Router::new(local_cluster("binomial", 2).unwrap());
+        assert_eq!(router.topology().0, 0);
+        router.scale_up().unwrap();
+        assert_eq!(router.topology().0, 1);
+        assert!(!router.snapshot().is_migrating(), "scale_up must settle before returning");
+        router.scale_down().unwrap();
+        assert_eq!(router.topology().0, 2);
+        assert_eq!(router.events().len(), 2);
+    }
+
+    #[test]
     fn stats_reports_topology() {
         let router = Router::new(local_cluster("binomial", 2).unwrap());
         match router.handle(Request::Stats) {
             Response::Info(s) => {
                 assert!(s.contains("n=2"));
                 assert!(s.contains("algo=binomial"));
+                assert!(s.contains("state=steady"));
+                assert!(s.contains("epoch=0"));
             }
             other => panic!("{other:?}"),
         }
@@ -354,6 +635,20 @@ mod tests {
         let router = Router::new(local_cluster("binomial", 2).unwrap());
         assert!(matches!(
             router.handle(Request::Get { key: "bad key".into() }),
+            Response::Err(_)
+        ));
+    }
+
+    #[test]
+    fn shard_internal_commands_rejected() {
+        let router = Router::new(local_cluster("binomial", 2).unwrap());
+        assert!(matches!(router.handle(Request::Scan), Response::Err(_)));
+        assert!(matches!(
+            router.handle(Request::ScanStripe { stripe: 0 }),
+            Response::Err(_)
+        ));
+        assert!(matches!(
+            router.handle(Request::PutNx { key: "k".into(), value: vec![1] }),
             Response::Err(_)
         ));
     }

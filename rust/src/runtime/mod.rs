@@ -13,11 +13,18 @@
 //!
 //! Artifacts are compiled once at load; executions are synchronous CPU
 //! calls.
+//!
+//! ## Feature gate
+//!
+//! The PJRT path needs the `xla` bindings crate, which is not available in
+//! the offline build. It is therefore compiled only with the **`pjrt`**
+//! cargo feature (which additionally requires vendoring the `xla` crate
+//! and declaring it as a path dependency). Without the feature, a stub
+//! [`PlacementRuntime`] with the identical API compiles in: `load` returns
+//! an error, so every caller degrades to the pure-Rust planning path.
+//! [`Manifest`] parsing and [`MigrationOutcome`] are always available.
 
-use std::collections::BTreeMap;
-use std::path::Path;
-
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
 
 /// Output of a bulk migration-plan execution.
 #[derive(Debug, Clone)]
@@ -30,21 +37,6 @@ pub struct MigrationOutcome {
     pub moved: Vec<u8>,
     /// Total number of moved keys.
     pub moved_count: u64,
-}
-
-struct SizedExe {
-    batch: usize,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// Compiled placement artifacts on a PJRT CPU client.
-pub struct PlacementRuntime {
-    _client: xla::PjRtClient,
-    lookups: Vec<SizedExe>,
-    migrates: Vec<SizedExe>,
-    hist: Option<SizedExe>,
-    /// ω baked into the artifacts.
-    pub omega: u32,
 }
 
 /// Parsed `manifest.txt`: `omega <w>` line + `artifact <name> <file>` lines.
@@ -91,133 +83,166 @@ impl Manifest {
     }
 }
 
-// SAFETY: the `xla` crate's handles hold `Rc`s and raw PJRT pointers, so
-// the compiler cannot derive Send.  Every `Rc` involved (client + the
-// client handles inside each executable) is created inside `load` and
-// confined to this struct; the coordinator serializes all access behind a
-// `Mutex` (see `router::Router::bulk`), so reference counts are never
-// touched from two threads at once, and the underlying PJRT C++ objects
-// are themselves thread-safe.
-unsafe impl Send for PlacementRuntime {}
-
+/// Extract the batch size from an artifact name like `lookup_b4096`.
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 fn parse_batch(name: &str, prefix: &str) -> Option<usize> {
     name.strip_prefix(prefix)?.parse().ok()
 }
 
-impl PlacementRuntime {
-    /// Load and compile every artifact listed in `<dir>/manifest.txt`.
-    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref();
-        let manifest_path = dir.join("manifest.txt");
-        let manifest = Manifest::parse(
-            &std::fs::read_to_string(&manifest_path)
-                .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?,
-        )?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::path::Path;
 
-        let mut lookups: BTreeMap<usize, xla::PjRtLoadedExecutable> = BTreeMap::new();
-        let mut migrates: BTreeMap<usize, xla::PjRtLoadedExecutable> = BTreeMap::new();
-        let mut hist = None;
-        for (name, file) in &manifest.artifacts {
-            let path = dir.join(file);
-            let compile = || -> Result<xla::PjRtLoadedExecutable> {
-                let proto = xla::HloModuleProto::from_text_file(
-                    path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-                )
-                .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
-                let comp = xla::XlaComputation::from_proto(&proto);
-                client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e}"))
-            };
-            if let Some(b) = parse_batch(name, "lookup_b") {
-                lookups.insert(b, compile()?);
-            } else if let Some(b) = parse_batch(name, "migrate_b") {
-                migrates.insert(b, compile()?);
-            } else if let Some(b) = parse_batch(name, "hist_b") {
-                hist = Some(SizedExe { batch: b, exe: compile()? });
+    use anyhow::{bail, Result};
+
+    use super::MigrationOutcome;
+
+    /// Offline stand-in for the PJRT runtime (built without the `pjrt`
+    /// feature). Carries the same API so callers compile unchanged;
+    /// [`PlacementRuntime::load`] always errors, which routes every
+    /// planner to the pure-Rust path.
+    pub struct PlacementRuntime {
+        /// ω baked into the artifacts (never populated in the stub).
+        pub omega: u32,
+    }
+
+    impl PlacementRuntime {
+        /// Always fails: the PJRT client is not compiled in.
+        pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+            bail!(
+                "binhash was built without the `pjrt` feature; cannot load XLA \
+                 artifacts from {:?} (vendor the `xla` bindings crate and rebuild \
+                 with `--features pjrt`)",
+                dir.as_ref()
+            )
+        }
+
+        /// Unreachable in the stub (no instance can be constructed).
+        pub fn lookup_batch(&self, _digests: &[u64], _n: u32) -> Result<Vec<u32>> {
+            bail!("pjrt feature disabled")
+        }
+
+        /// Unreachable in the stub (no instance can be constructed).
+        pub fn migration_plan(
+            &self,
+            _digests: &[u64],
+            _n_old: u32,
+            _n_new: u32,
+        ) -> Result<MigrationOutcome> {
+            bail!("pjrt feature disabled")
+        }
+
+        /// Unreachable in the stub (no instance can be constructed).
+        pub fn histogram(&self, _digests: &[u64], _n: u32) -> Result<Vec<u64>> {
+            bail!("pjrt feature disabled")
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::PlacementRuntime;
+
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use std::collections::BTreeMap;
+    use std::path::Path;
+
+    use anyhow::{anyhow, bail, Context, Result};
+
+    use super::{parse_batch, Manifest, MigrationOutcome};
+
+    struct SizedExe {
+        batch: usize,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    /// Compiled placement artifacts on a PJRT CPU client.
+    pub struct PlacementRuntime {
+        _client: xla::PjRtClient,
+        lookups: Vec<SizedExe>,
+        migrates: Vec<SizedExe>,
+        hist: Option<SizedExe>,
+        /// ω baked into the artifacts.
+        pub omega: u32,
+    }
+
+    // SAFETY: the `xla` crate's handles hold `Rc`s and raw PJRT pointers, so
+    // the compiler cannot derive Send.  Every `Rc` involved (client + the
+    // client handles inside each executable) is created inside `load` and
+    // confined to this struct; the coordinator serializes all access behind a
+    // `Mutex` (see `router::Router::bulk`), so reference counts are never
+    // touched from two threads at once, and the underlying PJRT C++ objects
+    // are themselves thread-safe.
+    unsafe impl Send for PlacementRuntime {}
+
+    impl PlacementRuntime {
+        /// Load and compile every artifact listed in `<dir>/manifest.txt`.
+        pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+            let dir = dir.as_ref();
+            let manifest_path = dir.join("manifest.txt");
+            let manifest = Manifest::parse(
+                &std::fs::read_to_string(&manifest_path)
+                    .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?,
+            )?;
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
+
+            let mut lookups: BTreeMap<usize, xla::PjRtLoadedExecutable> = BTreeMap::new();
+            let mut migrates: BTreeMap<usize, xla::PjRtLoadedExecutable> = BTreeMap::new();
+            let mut hist = None;
+            for (name, file) in &manifest.artifacts {
+                let path = dir.join(file);
+                let compile = || -> Result<xla::PjRtLoadedExecutable> {
+                    let proto = xla::HloModuleProto::from_text_file(
+                        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                    )
+                    .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e}"))
+                };
+                if let Some(b) = parse_batch(name, "lookup_b") {
+                    lookups.insert(b, compile()?);
+                } else if let Some(b) = parse_batch(name, "migrate_b") {
+                    migrates.insert(b, compile()?);
+                } else if let Some(b) = parse_batch(name, "hist_b") {
+                    hist = Some(SizedExe { batch: b, exe: compile()? });
+                }
             }
+            if lookups.is_empty() {
+                bail!("no lookup artifacts in {manifest_path:?}");
+            }
+            Ok(Self {
+                _client: client,
+                lookups: lookups.into_iter().map(|(batch, exe)| SizedExe { batch, exe }).collect(),
+                migrates: migrates.into_iter().map(|(batch, exe)| SizedExe { batch, exe }).collect(),
+                hist,
+                omega: manifest.omega,
+            })
         }
-        if lookups.is_empty() {
-            bail!("no lookup artifacts in {manifest_path:?}");
+
+        /// Pick the smallest executable whose batch covers `len`, defaulting to
+        /// the largest available (caller chunks by that size).
+        fn pick(exes: &[SizedExe], len: usize) -> &SizedExe {
+            exes.iter().find(|e| e.batch >= len).unwrap_or_else(|| exes.last().unwrap())
         }
-        Ok(Self {
-            _client: client,
-            lookups: lookups.into_iter().map(|(batch, exe)| SizedExe { batch, exe }).collect(),
-            migrates: migrates.into_iter().map(|(batch, exe)| SizedExe { batch, exe }).collect(),
-            hist,
-            omega: manifest.omega,
-        })
-    }
 
-    /// Pick the smallest executable whose batch covers `len`, defaulting to
-    /// the largest available (caller chunks by that size).
-    fn pick(exes: &[SizedExe], len: usize) -> &SizedExe {
-        exes.iter().find(|e| e.batch >= len).unwrap_or_else(|| exes.last().unwrap())
-    }
-
-    /// Bulk BinomialHash placement of `digests` over `n` buckets.
-    ///
-    /// Chunks by artifact batch size, zero-padding the tail; results are
-    /// bit-identical to `algorithms::binomial::lookup` (golden-tested).
-    pub fn lookup_batch(&self, digests: &[u64], n: u32) -> Result<Vec<u32>> {
-        let mut out = Vec::with_capacity(digests.len());
-        let mut rest = digests;
-        while !rest.is_empty() {
-            let sized = Self::pick(&self.lookups, rest.len());
-            let take = rest.len().min(sized.batch);
-            let (chunk, tail) = rest.split_at(take);
-            out.extend_from_slice(&self.run_lookup(sized, chunk, n)?);
-            rest = tail;
+        /// Bulk BinomialHash placement of `digests` over `n` buckets.
+        ///
+        /// Chunks by artifact batch size, zero-padding the tail; results are
+        /// bit-identical to `algorithms::binomial::lookup` (golden-tested).
+        pub fn lookup_batch(&self, digests: &[u64], n: u32) -> Result<Vec<u32>> {
+            let mut out = Vec::with_capacity(digests.len());
+            let mut rest = digests;
+            while !rest.is_empty() {
+                let sized = Self::pick(&self.lookups, rest.len());
+                let take = rest.len().min(sized.batch);
+                let (chunk, tail) = rest.split_at(take);
+                out.extend_from_slice(&self.run_lookup(sized, chunk, n)?);
+                rest = tail;
+            }
+            Ok(out)
         }
-        Ok(out)
-    }
 
-    fn run_lookup(&self, sized: &SizedExe, chunk: &[u64], n: u32) -> Result<Vec<u32>> {
-        let padded;
-        let input: &[u64] = if chunk.len() == sized.batch {
-            chunk
-        } else {
-            let mut p = chunk.to_vec();
-            p.resize(sized.batch, 0);
-            padded = p;
-            &padded
-        };
-        let d = xla::Literal::vec1(input);
-        let n_lit = xla::Literal::scalar(n as u64);
-        let result = sized
-            .exe
-            .execute::<xla::Literal>(&[d, n_lit])
-            .map_err(|e| anyhow!("execute: {e}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("sync: {e}"))?;
-        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
-        let mut v: Vec<u32> = out.to_vec().map_err(|e| anyhow!("to_vec: {e}"))?;
-        v.truncate(chunk.len());
-        Ok(v)
-    }
-
-    /// Bulk migration plan: placement under `n_old` and `n_new` plus the
-    /// moved mask and count.
-    pub fn migration_plan(
-        &self,
-        digests: &[u64],
-        n_old: u32,
-        n_new: u32,
-    ) -> Result<MigrationOutcome> {
-        if self.migrates.is_empty() {
-            bail!("no migrate artifacts loaded");
-        }
-        let mut outcome = MigrationOutcome {
-            old: Vec::with_capacity(digests.len()),
-            new: Vec::with_capacity(digests.len()),
-            moved: Vec::with_capacity(digests.len()),
-            moved_count: 0,
-        };
-        let mut rest = digests;
-        while !rest.is_empty() {
-            let sized = Self::pick(&self.migrates, rest.len());
-            let take = rest.len().min(sized.batch);
-            let (chunk, tail) = rest.split_at(take);
-
+        fn run_lookup(&self, sized: &SizedExe, chunk: &[u64], n: u32) -> Result<Vec<u32>> {
             let padded;
             let input: &[u64] = if chunk.len() == sized.batch {
                 chunk
@@ -228,82 +253,132 @@ impl PlacementRuntime {
                 &padded
             };
             let d = xla::Literal::vec1(input);
+            let n_lit = xla::Literal::scalar(n as u64);
             let result = sized
                 .exe
-                .execute::<xla::Literal>(&[
-                    d,
-                    xla::Literal::scalar(n_old as u64),
-                    xla::Literal::scalar(n_new as u64),
-                ])
-                .map_err(|e| anyhow!("execute: {e}"))?[0][0]
-                .to_literal_sync()
-                .map_err(|e| anyhow!("sync: {e}"))?;
-            let (old_l, new_l, moved_l, _count_l) =
-                result.to_tuple4().map_err(|e| anyhow!("untuple4: {e}"))?;
-            let mut old: Vec<u32> = old_l.to_vec().map_err(|e| anyhow!("old: {e}"))?;
-            let mut new: Vec<u32> = new_l.to_vec().map_err(|e| anyhow!("new: {e}"))?;
-            let mut moved: Vec<u8> = moved_l.to_vec().map_err(|e| anyhow!("moved: {e}"))?;
-            old.truncate(chunk.len());
-            new.truncate(chunk.len());
-            moved.truncate(chunk.len());
-            // The on-device count includes zero-pad lanes; recompute over
-            // the real lanes (cheap vector sum).
-            outcome.moved_count += moved.iter().map(|&m| m as u64).sum::<u64>();
-            outcome.old.extend_from_slice(&old);
-            outcome.new.extend_from_slice(&new);
-            outcome.moved.extend_from_slice(&moved);
-            rest = tail;
-        }
-        Ok(outcome)
-    }
-
-    /// Per-bucket key counts over `n ≤ 1024` buckets (telemetry offload).
-    pub fn histogram(&self, digests: &[u64], n: u32) -> Result<Vec<u64>> {
-        let sized = self.hist.as_ref().ok_or_else(|| anyhow!("no hist artifact loaded"))?;
-        let mut counts = vec![0u64; 1024];
-        for chunk in digests.chunks(sized.batch) {
-            let padded;
-            let input: &[u64] = if chunk.len() == sized.batch {
-                chunk
-            } else {
-                let mut p = chunk.to_vec();
-                p.resize(sized.batch, 0);
-                padded = p;
-                &padded
-            };
-            let result = sized
-                .exe
-                .execute::<xla::Literal>(&[
-                    xla::Literal::vec1(input),
-                    xla::Literal::scalar(n as u64),
-                ])
+                .execute::<xla::Literal>(&[d, n_lit])
                 .map_err(|e| anyhow!("execute: {e}"))?[0][0]
                 .to_literal_sync()
                 .map_err(|e| anyhow!("sync: {e}"))?;
             let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
-            let v: Vec<u64> = out.to_vec().map_err(|e| anyhow!("to_vec: {e}"))?;
-            for (c, x) in counts.iter_mut().zip(&v) {
-                *c += x;
-            }
-            if chunk.len() != sized.batch {
-                // Remove the zero-pad lanes' contribution exactly: digest 0
-                // is deterministic, so its bucket is known.
-                let pad = (sized.batch - chunk.len()) as u64;
-                let pad_bucket = crate::algorithms::binomial::lookup(0, n, self.omega);
-                counts[pad_bucket as usize] -= pad;
-            }
+            let mut v: Vec<u32> = out.to_vec().map_err(|e| anyhow!("to_vec: {e}"))?;
+            v.truncate(chunk.len());
+            Ok(v)
         }
-        counts.truncate(n.max(1) as usize);
-        Ok(counts)
+
+        /// Bulk migration plan: placement under `n_old` and `n_new` plus the
+        /// moved mask and count.
+        pub fn migration_plan(
+            &self,
+            digests: &[u64],
+            n_old: u32,
+            n_new: u32,
+        ) -> Result<MigrationOutcome> {
+            if self.migrates.is_empty() {
+                bail!("no migrate artifacts loaded");
+            }
+            let mut outcome = MigrationOutcome {
+                old: Vec::with_capacity(digests.len()),
+                new: Vec::with_capacity(digests.len()),
+                moved: Vec::with_capacity(digests.len()),
+                moved_count: 0,
+            };
+            let mut rest = digests;
+            while !rest.is_empty() {
+                let sized = Self::pick(&self.migrates, rest.len());
+                let take = rest.len().min(sized.batch);
+                let (chunk, tail) = rest.split_at(take);
+
+                let padded;
+                let input: &[u64] = if chunk.len() == sized.batch {
+                    chunk
+                } else {
+                    let mut p = chunk.to_vec();
+                    p.resize(sized.batch, 0);
+                    padded = p;
+                    &padded
+                };
+                let d = xla::Literal::vec1(input);
+                let result = sized
+                    .exe
+                    .execute::<xla::Literal>(&[
+                        d,
+                        xla::Literal::scalar(n_old as u64),
+                        xla::Literal::scalar(n_new as u64),
+                    ])
+                    .map_err(|e| anyhow!("execute: {e}"))?[0][0]
+                    .to_literal_sync()
+                    .map_err(|e| anyhow!("sync: {e}"))?;
+                let (old_l, new_l, moved_l, _count_l) =
+                    result.to_tuple4().map_err(|e| anyhow!("untuple4: {e}"))?;
+                let mut old: Vec<u32> = old_l.to_vec().map_err(|e| anyhow!("old: {e}"))?;
+                let mut new: Vec<u32> = new_l.to_vec().map_err(|e| anyhow!("new: {e}"))?;
+                let mut moved: Vec<u8> = moved_l.to_vec().map_err(|e| anyhow!("moved: {e}"))?;
+                old.truncate(chunk.len());
+                new.truncate(chunk.len());
+                moved.truncate(chunk.len());
+                // The on-device count includes zero-pad lanes; recompute over
+                // the real lanes (cheap vector sum).
+                outcome.moved_count += moved.iter().map(|&m| m as u64).sum::<u64>();
+                outcome.old.extend_from_slice(&old);
+                outcome.new.extend_from_slice(&new);
+                outcome.moved.extend_from_slice(&moved);
+                rest = tail;
+            }
+            Ok(outcome)
+        }
+
+        /// Per-bucket key counts over `n ≤ 1024` buckets (telemetry offload).
+        pub fn histogram(&self, digests: &[u64], n: u32) -> Result<Vec<u64>> {
+            let sized = self.hist.as_ref().ok_or_else(|| anyhow!("no hist artifact loaded"))?;
+            let mut counts = vec![0u64; 1024];
+            for chunk in digests.chunks(sized.batch) {
+                let padded;
+                let input: &[u64] = if chunk.len() == sized.batch {
+                    chunk
+                } else {
+                    let mut p = chunk.to_vec();
+                    p.resize(sized.batch, 0);
+                    padded = p;
+                    &padded
+                };
+                let result = sized
+                    .exe
+                    .execute::<xla::Literal>(&[
+                        xla::Literal::vec1(input),
+                        xla::Literal::scalar(n as u64),
+                    ])
+                    .map_err(|e| anyhow!("execute: {e}"))?[0][0]
+                    .to_literal_sync()
+                    .map_err(|e| anyhow!("sync: {e}"))?;
+                let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+                let v: Vec<u64> = out.to_vec().map_err(|e| anyhow!("to_vec: {e}"))?;
+                for (c, x) in counts.iter_mut().zip(&v) {
+                    *c += x;
+                }
+                if chunk.len() != sized.batch {
+                    // Remove the zero-pad lanes' contribution exactly: digest 0
+                    // is deterministic, so its bucket is known.
+                    let pad = (sized.batch - chunk.len()) as u64;
+                    let pad_bucket = crate::algorithms::binomial::lookup(0, n, self.omega);
+                    counts[pad_bucket as usize] -= pad;
+                }
+            }
+            counts.truncate(n.max(1) as usize);
+            Ok(counts)
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::PlacementRuntime;
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
     // Runtime integration tests live in rust/tests/ (they need built
-    // artifacts). Here: manifest parsing only.
+    // artifacts and the `pjrt` feature). Here: manifest parsing only.
     #[test]
     fn manifest_parses() {
         let m = Manifest::parse(
@@ -331,5 +406,12 @@ mod tests {
         assert_eq!(parse_batch("migrate_b65536", "lookup_b"), None);
         assert_eq!(parse_batch("lookup_b65536", "lookup_b"), Some(65536));
         assert_eq!(parse_batch("lookup_bXYZ", "lookup_b"), None);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_load_errors_with_guidance() {
+        let err = PlacementRuntime::load("artifacts").unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "{err}");
     }
 }

@@ -17,8 +17,10 @@ use anyhow::{anyhow, Result};
 
 use crate::proto::{self, Request, Response};
 
-/// Number of lock stripes (power of two).
-const STRIPES: usize = 16;
+/// Number of lock stripes (power of two). Public because the incremental
+/// rebalancer iterates stripes (`SCANSTRIPE <i>` for `i < STRIPES`); both
+/// ends of the wire share this constant.
+pub const STRIPES: usize = 16;
 
 /// An in-memory KV shard with striped locking.
 #[derive(Debug)]
@@ -56,6 +58,21 @@ impl Shard {
         self.stripe(&key).lock().unwrap().insert(key, value);
     }
 
+    /// Store a value only if the key is absent; `true` if it was stored.
+    ///
+    /// The rebalancer's copy primitive: a migration batch must never
+    /// overwrite a newer value a client already wrote to this shard.
+    pub fn put_nx(&self, key: String, value: Vec<u8>) -> bool {
+        self.ops.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.stripe(&key).lock().unwrap();
+        if map.contains_key(&key) {
+            false
+        } else {
+            map.insert(key, value);
+            true
+        }
+    }
+
     /// Delete a key; `true` if it existed.
     pub fn del(&self, key: &str) -> bool {
         self.ops.fetch_add(1, Ordering::Relaxed);
@@ -69,6 +86,13 @@ impl Shard {
             keys.extend(s.lock().unwrap().keys().cloned());
         }
         keys
+    }
+
+    /// Keys of one lock stripe (`stripe < STRIPES`): the incremental
+    /// rebalancer's unit of work — peak memory during a migration is one
+    /// stripe, never the whole shard.
+    pub fn scan_stripe(&self, stripe: usize) -> Vec<String> {
+        self.stripes[stripe].lock().unwrap().keys().cloned().collect()
     }
 
     /// Number of keys stored.
@@ -92,6 +116,13 @@ impl Shard {
                 self.put(key, value);
                 Response::Ok
             }
+            Request::PutNx { key, value } => {
+                if self.put_nx(key, value) {
+                    Response::Ok
+                } else {
+                    Response::Nil
+                }
+            }
             Request::Del { key } => {
                 if self.del(&key) {
                     Response::Ok
@@ -100,6 +131,13 @@ impl Shard {
                 }
             }
             Request::Scan => Response::Keys(self.scan()),
+            Request::ScanStripe { stripe } => {
+                if (stripe as usize) < STRIPES {
+                    Response::Keys(self.scan_stripe(stripe as usize))
+                } else {
+                    Response::Err(format!("stripe {stripe} out of range (< {STRIPES})"))
+                }
+            }
             Request::Count => Response::Num(self.count()),
             Request::Stats => Response::Info(self.stats()),
             Request::ScaleUp | Request::ScaleDown => Response::Err("not a coordinator".into()),
@@ -207,6 +245,15 @@ impl ShardClient {
         }
     }
 
+    /// Typed PUTNX; `true` if the value was stored (key was absent).
+    pub fn put_nx(&self, key: &str, value: Vec<u8>) -> Result<bool> {
+        match self.call(Request::PutNx { key: key.into(), value })? {
+            Response::Ok => Ok(true),
+            Response::Nil => Ok(false),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
     /// Typed DEL; `true` if the key existed.
     pub fn del(&self, key: &str) -> Result<bool> {
         match self.call(Request::Del { key: key.into() })? {
@@ -219,6 +266,14 @@ impl ShardClient {
     /// Typed SCAN.
     pub fn scan(&self) -> Result<Vec<String>> {
         match self.call(Request::Scan)? {
+            Response::Keys(k) => Ok(k),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Typed SCANSTRIPE.
+    pub fn scan_stripe(&self, stripe: u32) -> Result<Vec<String>> {
+        match self.call(Request::ScanStripe { stripe })? {
             Response::Keys(k) => Ok(k),
             other => Err(anyhow!("unexpected response {other:?}")),
         }
@@ -308,5 +363,34 @@ mod tests {
     fn shard_rejects_admin_commands() {
         let s = Shard::new(4);
         assert!(matches!(s.handle(Request::ScaleUp), Response::Err(_)));
+    }
+
+    #[test]
+    fn put_nx_never_overwrites() {
+        let s = Shard::new(5);
+        assert!(s.put_nx("k".into(), b"old".to_vec()));
+        assert!(!s.put_nx("k".into(), b"new".to_vec()));
+        assert_eq!(s.get("k"), Some(b"old".to_vec()));
+        let c = ShardClient::Local(s);
+        assert!(!c.put_nx("k", b"newer".to_vec()).unwrap());
+        assert!(c.put_nx("fresh", b"v".to_vec()).unwrap());
+    }
+
+    #[test]
+    fn stripe_scans_partition_the_keyset() {
+        let s = Shard::new(6);
+        for i in 0..64 {
+            s.put(format!("key-{i}"), vec![i as u8]);
+        }
+        let mut all: Vec<String> = (0..STRIPES).flat_map(|i| s.scan_stripe(i)).collect();
+        all.sort();
+        let mut want = s.scan();
+        want.sort();
+        assert_eq!(all, want);
+        assert_eq!(all.len(), 64);
+        assert!(matches!(
+            s.handle(Request::ScanStripe { stripe: STRIPES as u32 }),
+            Response::Err(_)
+        ));
     }
 }
