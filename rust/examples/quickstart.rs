@@ -70,5 +70,19 @@ fn main() {
     // --- 6. The whole state is 8 bytes: n + omega. Snapshot = copy.
     let snapshot = ch; // Copy
     println!("state size: {} bytes (Copy)", std::mem::size_of_val(&snapshot));
+
+    // --- 7. Every engine forks: the router scales by forking the live
+    // epoch's engine and resizing the fork, while the parent keeps
+    // routing — this works identically for stateful engines (anchor, dx,
+    // memento), whose state a by-name rebuild could not reproduce.
+    let mut next_epoch = ch.fork();
+    next_epoch.add_bucket();
+    assert_eq!(ch.len(), 11);
+    assert_eq!(next_epoch.len(), 12);
+    println!(
+        "fork: next epoch routes over n={} while the live epoch stays at n={}",
+        next_epoch.len(),
+        ch.len()
+    );
     println!("\nquickstart OK");
 }

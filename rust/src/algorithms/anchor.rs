@@ -103,6 +103,23 @@ impl ConsistentHasher for AnchorHash {
         self.remove_arbitrary(b);
         b
     }
+
+    fn fork(&self) -> Box<dyn ConsistentHasher> {
+        Box::new(self.clone())
+    }
+
+    fn max_buckets(&self) -> Option<u32> {
+        Some(self.a.len() as u32)
+    }
+
+    // LIFO-ready iff the working set is exactly `0..n`: the removal
+    // stack, top-down, must hold precisely `n, n+1, …, capacity-1`
+    // (construction/LIFO order).  Checking only the top is not enough —
+    // an arbitrary removal of bucket `n` itself would look LIFO while
+    // holes remain below it and working buckets sit above it.
+    fn lifo_ready(&self) -> bool {
+        self.r.iter().rev().copied().eq(self.n..self.capacity())
+    }
 }
 
 impl AnchorHash {
@@ -213,5 +230,25 @@ mod tests {
         let removed = h.remove_bucket();
         assert_eq!(removed, added);
         assert_eq!(h.len(), 5);
+    }
+
+    #[test]
+    fn lifo_ready_detects_disguised_arbitrary_removals() {
+        let mut h = AnchorHash::with_capacity(8, 8);
+        assert!(h.lifo_ready());
+        // Arbitrary removals whose most recent victim happens to equal
+        // the shrunken n must still be detected: the working set here is
+        // {0..5, 7}, not 0..6, and bucket 7 would outrange a shard list.
+        h.remove_arbitrary(5);
+        assert!(!h.lifo_ready());
+        h.remove_arbitrary(6);
+        assert_eq!(h.len(), 6);
+        assert!(!h.lifo_ready());
+        h.restore(6);
+        h.restore(5);
+        assert!(h.lifo_ready());
+        // Plain LIFO churn keeps readiness.
+        h.remove_bucket();
+        assert!(h.lifo_ready());
     }
 }

@@ -150,6 +150,10 @@ impl ConsistentHasher for BinomialHash {
         self.e = next_pow2(self.n as u64);
         self.n
     }
+
+    fn fork(&self) -> Box<dyn ConsistentHasher> {
+        Box::new(*self)
+    }
 }
 
 #[cfg(test)]

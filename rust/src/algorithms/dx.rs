@@ -98,6 +98,22 @@ impl ConsistentHasher for DxHash {
         self.n -= 1;
         b
     }
+
+    fn fork(&self) -> Box<dyn ConsistentHasher> {
+        Box::new(self.clone())
+    }
+
+    // `add_bucket` assigns at the frontier, so growth headroom is the
+    // slots above it; holes below it (arbitrary removals) are not
+    // reusable by LIFO scaling.
+    fn max_buckets(&self) -> Option<u32> {
+        Some(self.active.len() as u32 - self.frontier + self.n)
+    }
+
+    // LIFO-ready iff there are no holes below the frontier.
+    fn lifo_ready(&self) -> bool {
+        self.frontier == self.n
+    }
 }
 
 impl FaultTolerant for DxHash {

@@ -89,6 +89,10 @@ impl ConsistentHasher for FlipHash {
         self.n -= 1;
         self.n
     }
+
+    fn fork(&self) -> Box<dyn ConsistentHasher> {
+        Box::new(*self)
+    }
 }
 
 #[cfg(test)]

@@ -62,6 +62,10 @@ impl ConsistentHasher for JumpHash {
         self.n -= 1;
         self.n
     }
+
+    fn fork(&self) -> Box<dyn ConsistentHasher> {
+        Box::new(*self)
+    }
 }
 
 #[cfg(test)]

@@ -101,6 +101,10 @@ impl ConsistentHasher for JumpBackHash {
         self.n -= 1;
         self.n
     }
+
+    fn fork(&self) -> Box<dyn ConsistentHasher> {
+        Box::new(*self)
+    }
 }
 
 #[cfg(test)]

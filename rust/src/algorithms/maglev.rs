@@ -127,6 +127,17 @@ impl ConsistentHasher for Maglev {
         self.rebuild();
         self.n
     }
+
+    fn fork(&self) -> Box<dyn ConsistentHasher> {
+        Box::new(self.clone())
+    }
+
+    // A table rebuild may move a small fraction of keys between surviving
+    // buckets, so a scale-down must scan every shard, not just the
+    // retiring one.
+    fn minimal_disruption(&self) -> bool {
+        false
+    }
 }
 
 #[cfg(test)]

@@ -90,6 +90,16 @@ impl ConsistentHasher for MementoHash {
         );
         self.base.remove_bucket()
     }
+
+    fn fork(&self) -> Box<dyn ConsistentHasher> {
+        Box::new(self.clone())
+    }
+
+    // LIFO scaling is only defined while the failure table is empty
+    // (`add_bucket`/`remove_bucket` assert this).
+    fn lifo_ready(&self) -> bool {
+        self.removed.is_empty()
+    }
 }
 
 impl FaultTolerant for MementoHash {

@@ -18,6 +18,14 @@
 //! arithmetic class (float vs integer) and complexity — their exact
 //! constants were not recoverable, which affects absolute (not relative)
 //! timings.
+//!
+//! Every engine is **forkable**: [`ConsistentHasher::fork`] returns a
+//! deep, independently-mutable clone of the placement state.  The
+//! epoch-snapshot scaling path builds the next topology's engine by
+//! forking the live one and applying `add_bucket`/`remove_bucket`, so
+//! stateful engines (anchor's working/removed sets, dx's node-state
+//! array, memento's replacement table) scale exactly like the stateless
+//! family — no engine is ever reconstructed from its name.
 
 pub mod anchor;
 pub mod binomial;
@@ -60,6 +68,56 @@ pub trait ConsistentHasher: Send + Sync {
     /// # Panics
     /// Panics if the cluster would become empty.
     fn remove_bucket(&mut self) -> u32;
+
+    /// Deep, independently-mutable clone of this engine's placement
+    /// state.
+    ///
+    /// A fork maps every digest exactly as its parent does at the moment
+    /// of the fork, and mutating either side (`add_bucket`,
+    /// `remove_bucket`, arbitrary removals on [`FaultTolerant`] engines)
+    /// never affects the other.  The router's scaling path relies on
+    /// this: each epoch's engine is a fork of the previous epoch's, so
+    /// stateful engines carry their full state (anchor's removal
+    /// metadata, dx's node-state array, memento's failure table) across
+    /// topology changes.
+    fn fork(&self) -> Box<dyn ConsistentHasher>;
+
+    /// `true` when LIFO removal relocates only the removed bucket's keys
+    /// (the paper's minimal-disruption property, §3).
+    ///
+    /// Engines without the exact guarantee — maglev's table rebuild is
+    /// only approximately minimal, and the modulo anti-baseline
+    /// reshuffles ~half the keyset — return `false`, which makes the
+    /// migration planner scan every shard on scale-down instead of only
+    /// the retiring one.
+    fn minimal_disruption(&self) -> bool {
+        true
+    }
+
+    /// Hard upper bound on `len()` for engines whose state pre-allocates
+    /// a fixed slot range (anchor's anchor set, dx's NSArray); `None`
+    /// when the engine can grow without bound.
+    ///
+    /// The router checks this before a scale-up so a full engine is
+    /// rejected cleanly instead of `add_bucket` panicking mid-change.
+    /// (Named distinctly from the engines' inherent `capacity()`
+    /// accessors, which report raw slot counts.)
+    fn max_buckets(&self) -> Option<u32> {
+        None
+    }
+
+    /// `true` when the engine can scale at the LIFO tail right now:
+    /// `add_bucket` will assign bucket `n` and `remove_bucket` will
+    /// retire bucket `n-1`.
+    ///
+    /// Engines with outstanding arbitrary removals ([`FaultTolerant`])
+    /// return `false` — their bucket range has holes, so LIFO scaling is
+    /// undefined (and may panic) until every failed bucket is restored.
+    /// The router rejects scale ops in that state instead of mutating a
+    /// fork that would misroute or unwind mid-change.
+    fn lifo_ready(&self) -> bool {
+        true
+    }
 
     /// Convenience: hash a byte-string key and map it.
     fn bucket_for_key(&self, key: &[u8]) -> u32 {
@@ -144,6 +202,10 @@ mod tests {
         }
         assert!(by_name("nope", 3).is_none());
     }
+
+    // The fork contract (identical mapping at the fork point, full
+    // independence afterward, stateful-state carry-over) is pinned for
+    // every engine by `rust/tests/engine_fork.rs`.
 
     #[test]
     fn bucket_for_key_matches_digest_path() {

@@ -46,6 +46,17 @@ impl ConsistentHasher for ModuloHash {
         self.n -= 1;
         self.n
     }
+
+    fn fork(&self) -> Box<dyn ConsistentHasher> {
+        Box::new(*self)
+    }
+
+    // Resizing reshuffles ~half the keyset between surviving buckets (the
+    // whole point of the anti-baseline), so every shard is a migration
+    // source on scale-down.
+    fn minimal_disruption(&self) -> bool {
+        false
+    }
 }
 
 #[cfg(test)]

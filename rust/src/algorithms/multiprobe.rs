@@ -86,6 +86,10 @@ impl ConsistentHasher for MultiProbe {
         self.points.remove(i);
         b
     }
+
+    fn fork(&self) -> Box<dyn ConsistentHasher> {
+        Box::new(self.clone())
+    }
 }
 
 #[cfg(test)]

@@ -119,6 +119,10 @@ impl ConsistentHasher for PowerCh {
         self.n -= 1;
         self.n
     }
+
+    fn fork(&self) -> Box<dyn ConsistentHasher> {
+        Box::new(*self)
+    }
 }
 
 #[cfg(test)]

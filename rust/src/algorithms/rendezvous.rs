@@ -54,6 +54,10 @@ impl ConsistentHasher for Rendezvous {
         self.n -= 1;
         self.n
     }
+
+    fn fork(&self) -> Box<dyn ConsistentHasher> {
+        Box::new(*self)
+    }
 }
 
 #[cfg(test)]

@@ -75,6 +75,10 @@ impl ConsistentHasher for HashRing {
         }
         b
     }
+
+    fn fork(&self) -> Box<dyn ConsistentHasher> {
+        Box::new(self.clone())
+    }
 }
 
 #[cfg(test)]

@@ -6,14 +6,17 @@
 //!   engine + shard handles + event log). Shards join and leave in LIFO
 //!   order (the paper's §1 operating model); arbitrary failures are
 //!   handled by the Memento-wrapped engine (see
-//!   `examples/failover_memento.rs`).
+//!   `rust/examples/failover_memento.rs`).
 //! * [`PlacementSnapshot`] — the *immutable*, epoch-stamped view the
 //!   router's data path routes with. The router consumes a `Cluster` into
 //!   its first snapshot and publishes a fresh `Arc<PlacementSnapshot>` on
-//!   every topology change, so GET/PUT/DEL never contend with a
-//!   migration. While keys are still in flight the snapshot carries a
-//!   [`MigrationOrigin`] — the previous epoch's placement — enabling
-//!   dual-read (new owner, then old owner) routing.
+//!   every topology change — each epoch's engine is a
+//!   [`fork`](crate::algorithms::ConsistentHasher::fork) of the previous
+//!   epoch's, never a by-name rebuild — so GET/PUT/DEL never contend with
+//!   a migration and stateful engines keep their full placement state.
+//!   While keys are still in flight the snapshot carries a
+//!   [`MigrationOrigin`] — a fork of the previous epoch's engine —
+//!   enabling dual-read (new owner, then old owner) routing.
 
 use std::time::SystemTime;
 
@@ -44,12 +47,13 @@ pub enum EventKind {
 /// [`PlacementSnapshot`] so the data path can fall back to a key's old
 /// owner until the migration sweep has copied it.
 pub struct MigrationOrigin {
-    /// Placement engine of the epoch being migrated away from.
+    /// Placement engine of the epoch being migrated away from (an
+    /// unmodified fork of that epoch's engine).
     pub engine: Box<dyn ConsistentHasher>,
     /// Bucket range the migration scans for movable keys: every old shard
-    /// on scale-up (monotonicity moves keys from anywhere onto the new
-    /// bucket), but only the retiring shard on scale-down (minimal
-    /// disruption guarantees nothing else moves).
+    /// on scale-up, but only the retiring shard on scale-down when the
+    /// engine guarantees minimal disruption (engines without it — maglev,
+    /// modulo — scan everything there too).
     pub sources: std::ops::Range<u32>,
 }
 

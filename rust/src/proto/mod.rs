@@ -7,8 +7,10 @@
 //! PUT <key> <len>\n<bytes>    -> OK\n
 //! PUTNX <key> <len>\n<bytes>  -> OK\n | NIL\n        (shard only)
 //! DEL <key>\n                 -> OK\n | NIL\n
+//! DELTOMB <key>\n             -> OK\n | NIL\n        (shard only)
 //! SCAN\n                      -> KEYS <count>\n(<key>\n)*
 //! SCANSTRIPE <i>\n            -> KEYS <count>\n(<key>\n)*  (shard only)
+//! PURGETOMBS\n                -> NUM <count>\n       (shard only)
 //! COUNT\n                     -> NUM <count>\n
 //! STATS\n                     -> INFO <line>\n
 //! SCALEUP\n                   -> NUM <new-n>\n        (router only)
@@ -21,10 +23,13 @@
 //! `PUTNX` stores only if the key is absent (`NIL` = already present) and
 //! `SCANSTRIPE` lists one lock stripe; both exist for the incremental
 //! rebalancer, which streams stripes and copies without clobbering newer
-//! client writes.  The router's `STATS` line reports the placement epoch
-//! and a `state=migrating|steady` field; `SCALEUP`/`SCALEDOWN` issued
-//! while a migration is already in flight answer
-//! `ERR MIGRATING: <detail>`.
+//! client writes.  `DELTOMB` is the router's mid-migration delete: it
+//! removes the key *and* leaves a tombstone that bars a later `PUTNX`
+//! (the migration copy) from resurrecting it; `PURGETOMBS` clears the
+//! tombstones once the migration settles.  The router's `STATS` line
+//! reports the placement epoch and a `state=migrating|steady` field;
+//! `SCALEUP`/`SCALEDOWN` issued while a migration is already in flight
+//! answer `ERR MIGRATING: <detail>`.
 //!
 //! Blocking I/O over `std::io` — the servers are thread-per-connection
 //! (see DESIGN.md: the build is fully offline, so the stack is std-only).
@@ -46,6 +51,11 @@ pub enum Request {
     PutNx { key: String, value: Vec<u8> },
     /// Delete a key.
     Del { key: String },
+    /// Delete a key and leave a tombstone barring a later `PUTNX` from
+    /// resurrecting it (shard-internal; the router's mid-migration
+    /// delete, so a DEL racing the migration copy of the same key cannot
+    /// bring it back).
+    DelTomb { key: String },
     /// List all keys (shard-internal; used by the rebalancer).
     Scan,
     /// List the keys of one lock stripe (shard-internal; the incremental
@@ -54,6 +64,9 @@ pub enum Request {
         /// Stripe index in `[0, shard::STRIPES)`.
         stripe: u32,
     },
+    /// Clear all migration tombstones (shard-internal; issued by the
+    /// router once a migration settles).
+    PurgeTombs,
     /// Number of keys stored.
     Count,
     /// One-line stats.
@@ -100,6 +113,8 @@ pub fn read_request<R: Read>(r: &mut BufReader<R>) -> Result<Option<Request>> {
     let req = match cmd {
         "GET" => Request::Get { key: expect_key(parts.next())? },
         "DEL" => Request::Del { key: expect_key(parts.next())? },
+        "DELTOMB" => Request::DelTomb { key: expect_key(parts.next())? },
+        "PURGETOMBS" => Request::PurgeTombs,
         "PUT" | "PUTNX" => {
             let key = expect_key(parts.next())?;
             let len: usize =
@@ -141,18 +156,20 @@ fn expect_key(tok: Option<&str>) -> Result<String> {
 /// Write one request.
 pub fn write_request<W: Write>(w: &mut W, req: &Request) -> Result<()> {
     match req {
-        Request::Get { key } => write!(w, "GET {key}\n")?,
-        Request::Del { key } => write!(w, "DEL {key}\n")?,
+        Request::Get { key } => writeln!(w, "GET {key}")?,
+        Request::Del { key } => writeln!(w, "DEL {key}")?,
+        Request::DelTomb { key } => writeln!(w, "DELTOMB {key}")?,
+        Request::PurgeTombs => w.write_all(b"PURGETOMBS\n")?,
         Request::Put { key, value } => {
-            write!(w, "PUT {key} {}\n", value.len())?;
+            writeln!(w, "PUT {key} {}", value.len())?;
             w.write_all(value)?;
         }
         Request::PutNx { key, value } => {
-            write!(w, "PUTNX {key} {}\n", value.len())?;
+            writeln!(w, "PUTNX {key} {}", value.len())?;
             w.write_all(value)?;
         }
         Request::Scan => w.write_all(b"SCAN\n")?,
-        Request::ScanStripe { stripe } => write!(w, "SCANSTRIPE {stripe}\n")?,
+        Request::ScanStripe { stripe } => writeln!(w, "SCANSTRIPE {stripe}")?,
         Request::Count => w.write_all(b"COUNT\n")?,
         Request::Stats => w.write_all(b"STATS\n")?,
         Request::ScaleUp => w.write_all(b"SCALEUP\n")?,
@@ -204,19 +221,19 @@ pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> Result<()> {
         Response::Ok => w.write_all(b"OK\n")?,
         Response::Nil => w.write_all(b"NIL\n")?,
         Response::Val(value) => {
-            write!(w, "VAL {}\n", value.len())?;
+            writeln!(w, "VAL {}", value.len())?;
             w.write_all(value)?;
         }
         Response::Keys(keys) => {
-            write!(w, "KEYS {}\n", keys.len())?;
+            writeln!(w, "KEYS {}", keys.len())?;
             for k in keys {
                 w.write_all(k.as_bytes())?;
                 w.write_all(b"\n")?;
             }
         }
-        Response::Num(x) => write!(w, "NUM {x}\n")?,
-        Response::Info(s) => write!(w, "INFO {s}\n")?,
-        Response::Err(m) => write!(w, "ERR {m}\n")?,
+        Response::Num(x) => writeln!(w, "NUM {x}")?,
+        Response::Info(s) => writeln!(w, "INFO {s}")?,
+        Response::Err(m) => writeln!(w, "ERR {m}")?,
     }
     w.flush()?;
     Ok(())
@@ -247,8 +264,10 @@ mod tests {
             Request::Put { key: "k2".into(), value: b"hello\nworld\x00\xff".to_vec() },
             Request::PutNx { key: "k4".into(), value: b"\x01\x02".to_vec() },
             Request::Del { key: "k3".into() },
+            Request::DelTomb { key: "k5".into() },
             Request::Scan,
             Request::ScanStripe { stripe: 7 },
+            Request::PurgeTombs,
             Request::Count,
             Request::Stats,
             Request::ScaleUp,

@@ -15,10 +15,12 @@
 //! stripe of keys plus one batch of moves, never the full keyset, and the
 //! data path keeps serving (dual-read) while batches land.  The copy step
 //! is `PUTNX` so a migration batch can never clobber a newer value a
-//! client already wrote to the destination shard.
+//! client already wrote to the destination shard, nor resurrect a key a
+//! mid-migration `DELTOMB` tombstoned (see [`apply`]).
 
 use anyhow::Result;
 
+use crate::algorithms::ConsistentHasher;
 use crate::runtime::PlacementRuntime;
 use crate::shard::ShardClient;
 
@@ -55,8 +57,15 @@ impl MigrationPlan {
 
 /// How placement is recomputed during planning.
 pub enum PlanPath<'a> {
-    /// Pure-Rust loop over arbitrary `(old, new)` placement functions.
-    Rust(&'a dyn Fn(u64) -> u32, &'a dyn Fn(u64) -> u32),
+    /// Pure-Rust loop over the two epochs' placement engines (the old
+    /// engine is the router's fork of the pre-change snapshot, so this
+    /// works for every engine — stateless or stateful).
+    Engines {
+        /// Engine of the epoch being migrated away from.
+        old: &'a dyn ConsistentHasher,
+        /// Engine of the epoch being migrated into.
+        new: &'a dyn ConsistentHasher,
+    },
     /// AOT XLA artifact (BinomialHash engine only): bulk old/new placement
     /// on the PJRT runtime.
     Xla {
@@ -87,7 +96,8 @@ pub struct MigrationStats {
 /// `shards` must cover the union of the old and new topologies (every
 /// `Move::to` destination must be indexable); only the `sources` range is
 /// scanned — all old shards on scale-up, just the retiring shard on
-/// scale-down (minimal disruption).  Unlike the stop-the-world path this
+/// scale-down when the engine guarantees minimal disruption (every shard
+/// otherwise).  Unlike the stop-the-world path this
 /// never materializes the cluster's keyset — memory is bounded by the
 /// largest stripe — and every batch is visible to concurrent readers the
 /// moment it lands.
@@ -124,10 +134,10 @@ pub fn migrate_streaming(
 pub fn plan(keys: &[(String, u64)], path: PlanPath<'_>) -> Result<MigrationPlan> {
     let mut plan = MigrationPlan { moves: Vec::new(), scanned: keys.len() };
     match path {
-        PlanPath::Rust(old_fn, new_fn) => {
+        PlanPath::Engines { old, new } => {
             for (key, digest) in keys {
-                let from = old_fn(*digest);
-                let to = new_fn(*digest);
+                let from = old.bucket(*digest);
+                let to = new.bucket(*digest);
                 if from != to {
                     plan.moves.push(Move { key: key.clone(), from, to });
                 }
@@ -154,15 +164,25 @@ pub fn plan(keys: &[(String, u64)], path: PlanPath<'_>) -> Result<MigrationPlan>
 /// value a client already wrote to the destination mid-migration is newer
 /// than the copy we hold and must win), then delete the source copy.
 /// Returns the number of keys migrated.
+///
+/// A refused copy has two causes, told apart by re-reading the
+/// destination: a *live* value means a client write raced ahead (the
+/// stale source copy is retired here), while *no* value means a
+/// mid-migration DEL tombstoned the key between our read and the copy —
+/// the source copy is left for that DEL's own source-side delete, so the
+/// client's DEL observes the key it is deleting.
 pub fn apply(plan: &MigrationPlan, shards: &[ShardClient]) -> Result<u64> {
     let mut moved = 0u64;
     for m in &plan.moves {
         let src = &shards[m.from as usize];
         let dst = &shards[m.to as usize];
         if let Some(value) = src.get(&m.key)? {
-            dst.put_nx(&m.key, value)?;
-            src.del(&m.key)?;
-            moved += 1;
+            if dst.put_nx(&m.key, value)? {
+                src.del(&m.key)?;
+                moved += 1;
+            } else if dst.get(&m.key)?.is_some() {
+                src.del(&m.key)?;
+            }
         }
     }
     Ok(moved)
@@ -171,7 +191,7 @@ pub fn apply(plan: &MigrationPlan, shards: &[ShardClient]) -> Result<u64> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algorithms::binomial;
+    use crate::algorithms::binomial::{self, BinomialHash};
     use crate::hashing::SplitMix64Rng;
     use crate::shard::Shard;
 
@@ -189,11 +209,8 @@ mod tests {
     #[test]
     fn scale_up_moves_only_to_new_bucket() {
         let keys = keyset(20_000);
-        let plan = plan(
-            &keys,
-            PlanPath::Rust(&|d| binomial::lookup(d, 8, 6), &|d| binomial::lookup(d, 9, 6)),
-        )
-        .unwrap();
+        let (old, new) = (BinomialHash::new(8), BinomialHash::new(9));
+        let plan = plan(&keys, PlanPath::Engines { old: &old, new: &new }).unwrap();
         for m in &plan.moves {
             assert_eq!(m.to, 8, "monotonicity: moves only onto the new bucket");
         }
@@ -204,11 +221,8 @@ mod tests {
     #[test]
     fn scale_down_moves_only_from_removed_bucket() {
         let keys = keyset(20_000);
-        let plan = plan(
-            &keys,
-            PlanPath::Rust(&|d| binomial::lookup(d, 9, 6), &|d| binomial::lookup(d, 8, 6)),
-        )
-        .unwrap();
+        let (old, new) = (BinomialHash::new(9), BinomialHash::new(8));
+        let plan = plan(&keys, PlanPath::Engines { old: &old, new: &new }).unwrap();
         for m in &plan.moves {
             assert_eq!(m.from, 8, "minimal disruption: only the removed bucket's keys move");
         }
@@ -227,12 +241,10 @@ mod tests {
             }
         }
         const BATCH: usize = 64;
+        let (old, new) = (BinomialHash::new(2), BinomialHash::new(3));
         let stats = migrate_streaming(&shards, 0..2, BATCH, |chunk| {
             assert!(chunk.len() <= BATCH, "batch bound violated: {}", chunk.len());
-            plan(
-                chunk,
-                PlanPath::Rust(&|d| binomial::lookup(d, 2, 6), &|d| binomial::lookup(d, 3, 6)),
-            )
+            plan(chunk, PlanPath::Engines { old: &old, new: &new })
         })
         .unwrap();
         assert_eq!(stats.scanned, 2_000);
@@ -266,11 +278,9 @@ mod tests {
             }
         }
         let (raced_key, raced_to) = raced.expect("keyset contains a moving key");
+        let (old, new) = (BinomialHash::new(2), BinomialHash::new(3));
         migrate_streaming(&shards, 0..2, 128, |chunk| {
-            plan(
-                chunk,
-                PlanPath::Rust(&|d| binomial::lookup(d, 2, 6), &|d| binomial::lookup(d, 3, 6)),
-            )
+            plan(chunk, PlanPath::Engines { old: &old, new: &new })
         })
         .unwrap();
         assert_eq!(
@@ -283,12 +293,26 @@ mod tests {
     #[test]
     fn empty_plan_on_no_change() {
         let keys = keyset(1_000);
-        let plan = plan(
-            &keys,
-            PlanPath::Rust(&|d| binomial::lookup(d, 5, 6), &|d| binomial::lookup(d, 5, 6)),
-        )
-        .unwrap();
+        let (old, new) = (BinomialHash::new(5), BinomialHash::new(5));
+        let plan = plan(&keys, PlanPath::Engines { old: &old, new: &new }).unwrap();
         assert!(plan.moves.is_empty());
         assert_eq!(plan.moved_fraction(), 0.0);
+    }
+
+    #[test]
+    fn plan_from_forked_stateful_engine_matches_mutation() {
+        // The router's scaling path plans with a fork of the live engine;
+        // for a stateful engine the fork must carry the construction
+        // state, or the plan would disagree with the data path's routing.
+        let keys = keyset(5_000);
+        let mut live = crate::algorithms::anchor::AnchorHash::with_capacity(6, 32);
+        let old = live.fork();
+        let added = live.add_bucket();
+        let plan =
+            plan(&keys, PlanPath::Engines { old: &*old, new: &live }).unwrap();
+        for m in &plan.moves {
+            assert_eq!(m.to, added, "anchor scale-up move not onto the new bucket");
+        }
+        assert!(!plan.moves.is_empty());
     }
 }

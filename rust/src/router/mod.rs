@@ -13,10 +13,12 @@
 //! in three phases, none of which blocks GET/PUT/DEL:
 //!
 //! 1. **Publish** a new epoch whose snapshot routes with the *new* engine
-//!    and carries a [`MigrationOrigin`] (the old engine), enabling
-//!    dual-read: a GET that misses on a key's new owner retries the old
-//!    owner.  PUTs land on the new owner and retire the old copy; DELs
-//!    remove both.
+//!    — a [`ConsistentHasher::fork`](crate::algorithms::ConsistentHasher::fork)
+//!    of the current one with the bucket added/removed — and carries a
+//!    [`MigrationOrigin`] (a fork of the old engine), enabling dual-read:
+//!    a GET that misses on a key's new owner retries the old owner.  PUTs
+//!    land on the new owner and retire the old copy; DELs tombstone the
+//!    new owner (`DELTOMB`) and remove the old copy.
 //! 2. **Quiesce** the superseded snapshot (wait for its in-flight readers
 //!    — `Arc::strong_count` — to drain; readers hold a snapshot only for
 //!    one request, so this settles in microseconds), then run the
@@ -24,11 +26,20 @@
 //!    and move keys in bounded batches ([`rebalance::migrate_streaming`]),
 //!    optionally planning batches on the PJRT bulk artifacts.
 //! 3. **Settle**: publish the same epoch without the origin (and, on
-//!    scale-down, without the retiring shard handle).
+//!    scale-down, without the retiring shard handle), then purge the
+//!    migration tombstones.
 //!
-//! Known anomaly (documented, not defended): a DEL racing the migration
-//! copy of the same key can resurrect it (the copy step has no tombstone).
-//! Fixing this needs per-key versions; see ROADMAP.
+//! Because each epoch's engine is forked from the previous one, every
+//! registered engine scales — the stateless constant-time family and the
+//! stateful minimal-memory one (anchor, dx, memento) alike; there is no
+//! name-reconstruction whitelist.  Engines without exact minimal
+//! disruption (maglev, the modulo anti-baseline) scan every shard on
+//! scale-down instead of only the retiring one
+//! ([`ConsistentHasher::minimal_disruption`](crate::algorithms::ConsistentHasher::minimal_disruption)).
+//!
+//! The copy step (`PUTNX`) cannot clobber a newer client write, and the
+//! `DELTOMB` tombstone bars it from resurrecting a key whose DEL raced
+//! the migration sweep — the former "known anomaly" of this module.
 
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
@@ -51,11 +62,6 @@ pub type ShardSpawner = Box<dyn Fn(u32) -> ShardClient + Send + Sync>;
 /// Keys per migration batch: small enough that a batch is visible to
 /// readers almost immediately, large enough to amortize planning.
 const MIGRATION_BATCH: usize = 512;
-
-/// Engines the scaling path supports: pure functions of `(digest, n)`
-/// that can be re-instantiated at any size from their name alone, and
-/// whose monotonicity/minimal-disruption keep migrations minimal.
-const SCALABLE_ENGINES: &[&str] = &["binomial", "jump", "jumpback", "fliphash", "powerch"];
 
 /// The router: published placement snapshot + metrics + optional XLA bulk
 /// runtime.
@@ -179,9 +185,11 @@ impl Router {
                     self.metrics.summary()
                 ))
             }
-            Request::Scan | Request::ScanStripe { .. } | Request::PutNx { .. } => {
-                Response::Err("shard-internal command".into())
-            }
+            Request::Scan
+            | Request::ScanStripe { .. }
+            | Request::PutNx { .. }
+            | Request::DelTomb { .. }
+            | Request::PurgeTombs => Response::Err("shard-internal command".into()),
             Request::ScaleUp => match self.scale_up() {
                 Ok(n) => Response::Num(n as u64),
                 Err(e) => Response::Err(e.to_string()),
@@ -287,9 +295,12 @@ impl Router {
         self.metrics.placement_latency.record(t0.elapsed());
         match snap.fallback_route(digest, bucket) {
             // Mid-migration: the key may live on either owner — delete
-            // both; it existed if either copy did.
+            // both; it existed if either copy did.  The new-owner delete
+            // leaves a tombstone so an in-flight migration copy (PUTNX)
+            // of this key cannot resurrect it after the delete wins the
+            // race; the tombstones are purged when the migration settles.
             Some((_, old_shard)) => {
-                let new_r = shard.call(Request::Del { key: key.clone() });
+                let new_r = shard.call(Request::DelTomb { key: key.clone() });
                 let old_r = old_shard.call(Request::Del { key });
                 match (new_r, old_r) {
                     (Ok(Response::Ok), Ok(_)) | (Ok(_), Ok(Response::Ok)) => Response::Ok,
@@ -304,14 +315,13 @@ impl Router {
         }
     }
 
-    /// Re-instantiate a scalable engine at size `n`.
-    fn rebuild_engine(name: &str, n: u32) -> Result<Box<dyn crate::algorithms::ConsistentHasher>> {
-        ensure!(
-            SCALABLE_ENGINES.contains(&name),
-            "scaling with engine {name:?} is not supported; use one of {SCALABLE_ENGINES:?}"
-        );
-        crate::algorithms::by_name(name, n)
-            .ok_or_else(|| anyhow!("engine {name:?} vanished from the registry"))
+    /// Clear migration tombstones on every shard (idempotent; called once
+    /// a migration settles, and defensively before a new one starts).
+    fn purge_tombstones(shards: &[ShardClient]) -> Result<()> {
+        for s in shards {
+            s.purge_tombstones()?;
+        }
+        Ok(())
     }
 
     /// Add a shard and incrementally migrate exactly the keys that now
@@ -323,17 +333,55 @@ impl Router {
             .try_lock()
             .map_err(|_| anyhow!("MIGRATING: a topology change is already in flight"))?;
         let base = self.resume_interrupted(self.snapshot())?;
-        let name = base.engine.name();
+        Self::purge_tombstones(&base.shards)?;
         let n_old = base.engine.len();
         let n_new = n_old + 1;
-        // Fail fast — nothing is mutated or published for an unsupported
-        // engine (the old stop-the-world path joined the shard first and
-        // left the cluster half-changed on error).
-        let new_engine = Self::rebuild_engine(name, n_new)?;
-        let old_engine = Self::rebuild_engine(name, n_old)?;
+        // Fail fast — nothing is mutated or published for an engine at
+        // its pre-allocated capacity (anchor's anchor set, dx's NSArray);
+        // `add_bucket` would panic mid-change otherwise.
+        if let Some(cap) = base.engine.max_buckets() {
+            ensure!(
+                n_new <= cap,
+                "engine {:?} is at its capacity of {cap} buckets; cannot scale up",
+                base.engine.name()
+            );
+        }
+        // A fork of an engine with outstanding arbitrary removals would
+        // not grow at the LIFO tail (or would panic in add_bucket);
+        // reject before anything is mutated or published.
+        ensure!(
+            base.engine.lifo_ready(),
+            "engine {:?} has outstanding arbitrary removals; restore failed buckets \
+             before scaling",
+            base.engine.name()
+        );
+        // The next epoch's engine is a fork of the live one with the new
+        // bucket added; the origin keeps an unmodified fork for dual-read
+        // and migration planning.  No engine is rebuilt from its name, so
+        // stateful engines carry their full state across the change.
+        let old_engine = base.engine.fork();
+        let mut new_engine = base.engine.fork();
+        let added = new_engine.add_bucket();
+        // The new shard handle is pushed at index n_old, so the engine
+        // must have grown at the LIFO tail.  An engine with outstanding
+        // arbitrary removals (e.g. anchor restoring a failed bucket
+        // instead) would route the "new" bucket to the wrong handle; the
+        // mutated fork is discarded and nothing has been published.
+        ensure!(
+            added == n_old,
+            "engine {:?} added bucket {added} instead of the LIFO tail {n_old} \
+             (restore failed buckets before scaling)",
+            base.engine.name()
+        );
 
         let mut shards = base.shards.clone();
-        shards.push((self.spawn_shard)(n_old));
+        let joining = (self.spawn_shard)(n_old);
+        // A joining shard may be a reconnection to a remote process with
+        // leftover state (e.g. retired earlier after a best-effort purge
+        // failed); clear its tombstones before any migration copy can be
+        // refused by them.  Failing here is still pre-publish.
+        joining.purge_tombstones()?;
+        shards.push(joining);
         let epoch = base.epoch + 1;
         self.publish(PlacementSnapshot {
             epoch,
@@ -357,14 +405,20 @@ impl Router {
         self.run_migration(&migrating)?;
         self.publish(PlacementSnapshot {
             epoch,
-            engine: Self::rebuild_engine(name, n_new)?,
+            engine: migrating.engine.fork(),
             shards,
             origin: None,
         });
         // Drain dual-read holders of the migrating snapshot before
         // returning, so every future topology change only ever has one
-        // live predecessor to quiesce.
+        // live predecessor to quiesce — after which no request can still
+        // be writing migration tombstones, and they can be purged.  The
+        // scale op has fully settled by now, so a transient purge failure
+        // must not turn it into a client error: stale tombstones are
+        // harmless until the next migration, and the next scale op
+        // re-purges (and fails fast there) before publishing anything.
         Self::quiesce(&migrating);
+        let _ = Self::purge_tombstones(&migrating.shards);
         self.metrics.epochs.fetch_add(1, Ordering::Relaxed);
         Ok(n_new)
     }
@@ -377,12 +431,36 @@ impl Router {
             .try_lock()
             .map_err(|_| anyhow!("MIGRATING: a topology change is already in flight"))?;
         let base = self.resume_interrupted(self.snapshot())?;
+        Self::purge_tombstones(&base.shards)?;
         let n_old = base.engine.len();
         ensure!(n_old > 1, "cannot scale below one shard");
         let n_new = n_old - 1;
-        let name = base.engine.name();
-        let new_engine = Self::rebuild_engine(name, n_new)?;
-        let old_engine = Self::rebuild_engine(name, n_old)?;
+        // As in scale_up: a degraded engine cannot shrink at the LIFO
+        // tail (memento/dx panic in remove_bucket); reject up front.
+        ensure!(
+            base.engine.lifo_ready(),
+            "engine {:?} has outstanding arbitrary removals; restore failed buckets \
+             before scaling",
+            base.engine.name()
+        );
+        let old_engine = base.engine.fork();
+        let mut new_engine = base.engine.fork();
+        let removed = new_engine.remove_bucket();
+        // As in scale_up: the shard list drops index n_new, so the engine
+        // must have shrunk at the LIFO tail (a discarded fork; nothing
+        // published on error).
+        ensure!(
+            removed == n_new,
+            "engine {:?} removed bucket {removed} instead of the LIFO tail {n_new} \
+             (restore failed buckets before scaling)",
+            base.engine.name()
+        );
+        // Minimal disruption: only the retiring shard's keys move, so it
+        // is the sole migration source — a scale-down costs O(retiring
+        // shard), not O(cluster keyset).  Engines without the exact
+        // guarantee (maglev's table rebuild, modulo) also shuffle keys
+        // between surviving shards, so every shard must be scanned.
+        let sources = if base.engine.minimal_disruption() { n_new..n_old } else { 0..n_old };
 
         let epoch = base.epoch + 1;
         // The migrating snapshot routes with the new engine (never onto
@@ -392,10 +470,7 @@ impl Router {
             epoch,
             engine: new_engine,
             shards: base.shards.clone(),
-            // Minimal disruption: only the retiring shard's keys move, so
-            // it is the sole migration source — a scale-down costs
-            // O(retiring shard), not O(cluster keyset).
-            origin: Some(MigrationOrigin { engine: old_engine, sources: n_new..n_old }),
+            origin: Some(MigrationOrigin { engine: old_engine, sources }),
         });
         events.push(TopologyEvent {
             epoch,
@@ -413,12 +488,17 @@ impl Router {
         shards.truncate(n_new as usize);
         self.publish(PlacementSnapshot {
             epoch,
-            engine: Self::rebuild_engine(name, n_new)?,
+            engine: migrating.engine.fork(),
             shards,
             origin: None,
         });
-        // As in scale_up: drain dual-read holders before returning.
+        // As in scale_up: drain dual-read holders, then purge the
+        // tombstones their DELs may have written (best-effort — the op
+        // has settled; the next scale op re-purges before publishing).
+        // The retiring shard is included: a remote process outlives its
+        // handle and could rejoin a later epoch carrying stale tombstones.
         Self::quiesce(&migrating);
+        let _ = Self::purge_tombstones(&migrating.shards);
         self.metrics.epochs.fetch_add(1, Ordering::Relaxed);
         Ok(n_new)
     }
@@ -444,7 +524,7 @@ impl Router {
         shards.truncate(n as usize); // no-op for an interrupted scale-up
         self.publish(PlacementSnapshot {
             epoch: base.epoch,
-            engine: Self::rebuild_engine(base.engine.name(), n)?,
+            engine: base.engine.fork(),
             shards,
             origin: None,
         });
@@ -488,7 +568,7 @@ impl Router {
             |chunk| {
                 rebalance::plan(
                     chunk,
-                    PlanPath::Rust(&|d| origin.engine.bucket(d), &|d| snap.engine.bucket(d)),
+                    PlanPath::Engines { old: &*origin.engine, new: &*snap.engine },
                 )
             },
         )
@@ -596,12 +676,144 @@ mod tests {
     }
 
     #[test]
-    fn scaling_unsupported_engine_is_rejected_without_mutation() {
-        let router = Router::new(local_cluster("maglev", 3).unwrap());
+    fn scale_cycle_with_stateful_memento_engine() {
+        let router = Router::new(local_cluster("memento", 3).unwrap());
+        for i in 0..300 {
+            router.handle(Request::Put { key: format!("s{i}"), value: vec![i as u8] });
+        }
+        assert_eq!(router.handle(Request::ScaleUp), Response::Num(4));
+        assert_eq!(router.handle(Request::ScaleDown), Response::Num(3));
+        for i in 0..300 {
+            assert_eq!(
+                router.handle(Request::Get { key: format!("s{i}") }),
+                Response::Val(vec![i as u8]),
+                "key s{i} lost scaling a stateful engine"
+            );
+        }
+    }
+
+    #[test]
+    fn maglev_scale_down_scans_all_shards() {
+        // maglev lacks exact minimal disruption: on scale-down keys can
+        // move between surviving shards, so the migration must scan every
+        // shard, not just the retiring one.
+        let router = Router::new(local_cluster("maglev", 4).unwrap());
+        for i in 0..400 {
+            router.handle(Request::Put { key: format!("m{i}"), value: vec![i as u8] });
+        }
+        assert_eq!(router.handle(Request::ScaleDown), Response::Num(3));
+        for i in 0..400 {
+            assert_eq!(
+                router.handle(Request::Get { key: format!("m{i}") }),
+                Response::Val(vec![i as u8]),
+                "key m{i} stranded after maglev scale-down"
+            );
+        }
+        assert_eq!(router.handle(Request::Count), Response::Num(400));
+    }
+
+    #[test]
+    fn scaling_engine_at_capacity_is_rejected_without_mutation() {
+        use crate::algorithms::anchor::AnchorHash;
+        let shards = (0..3).map(|i| ShardClient::Local(Shard::new(i))).collect();
+        let cluster = Cluster::new(Box::new(AnchorHash::with_capacity(3, 3)), shards);
+        let router = Router::new(cluster);
         let before = router.topology();
         assert!(matches!(router.handle(Request::ScaleUp), Response::Err(_)));
         assert_eq!(router.topology(), before, "failed scale must not mutate topology");
         assert_eq!(router.snapshot().shards.len(), 3);
+    }
+
+    #[test]
+    fn scaling_with_outstanding_failures_is_rejected_without_mutation() {
+        // An engine with an arbitrary removal outstanding cannot scale at
+        // the LIFO tail (anchor would restore the failed bucket instead
+        // of growing; memento and dx panic in add_bucket/remove_bucket).
+        // The router must answer ERR before mutating or publishing
+        // anything — and without poisoning the admin mutex, so later
+        // admin ops still work.
+        use crate::algorithms::{
+            anchor::AnchorHash, dx::DxHash, memento::MementoHash, FaultTolerant,
+        };
+        use crate::algorithms::ConsistentHasher;
+        let degraded: Vec<Box<dyn ConsistentHasher>> = vec![
+            {
+                let mut e = AnchorHash::with_capacity(4, 8);
+                e.remove_arbitrary(1);
+                Box::new(e)
+            },
+            {
+                let mut e = DxHash::with_capacity(4, 8);
+                e.remove_arbitrary(1);
+                Box::new(e)
+            },
+            {
+                let mut e = MementoHash::new(4);
+                e.remove_arbitrary(1);
+                Box::new(e)
+            },
+        ];
+        for engine in degraded {
+            let name = engine.name();
+            let shards = (0..engine.len()).map(|i| ShardClient::Local(Shard::new(i))).collect();
+            let router = Router::new(Cluster::new(engine, shards));
+            let before = router.topology();
+            assert!(
+                matches!(router.handle(Request::ScaleUp), Response::Err(_)),
+                "{name}: degraded scale-up must be rejected"
+            );
+            assert!(
+                matches!(router.handle(Request::ScaleDown), Response::Err(_)),
+                "{name}: degraded scale-down must be rejected"
+            );
+            assert_eq!(router.topology(), before, "{name}: failed scale mutated topology");
+            // The admin mutex must not be poisoned by the rejection.
+            assert!(router.events().is_empty(), "{name}: rejected scale logged an event");
+        }
+    }
+
+    #[test]
+    fn del_during_migration_cannot_resurrect_key() {
+        let router = Router::new(local_cluster("binomial", 2).unwrap());
+        let old_engine = crate::algorithms::by_name("binomial", 2).unwrap();
+        let new_engine = crate::algorithms::by_name("binomial", 3).unwrap();
+        // A key that moves onto the joining bucket when scaling 2 -> 3.
+        let key = (0..)
+            .map(|i| format!("mv{i}"))
+            .find(|k| {
+                let d = crate::hashing::xxhash64(k.as_bytes(), 0);
+                old_engine.bucket(d) != new_engine.bucket(d)
+            })
+            .unwrap();
+        let d = crate::hashing::xxhash64(key.as_bytes(), 0);
+        let (from, to) = (old_engine.bucket(d), new_engine.bucket(d));
+        assert_eq!(
+            router.handle(Request::Put { key: key.clone(), value: b"v".to_vec() }),
+            Response::Ok
+        );
+
+        // Freeze the moment mid-migration where the sweep has read the
+        // source copy but not yet written it to the destination.
+        let base = router.snapshot();
+        let mut shards = base.shards.clone();
+        shards.push(ShardClient::Local(Shard::new(2)));
+        let copied = shards[from as usize].get(&key).unwrap().unwrap();
+        router.publish(PlacementSnapshot {
+            epoch: base.epoch + 1,
+            engine: new_engine,
+            shards: shards.clone(),
+            origin: Some(MigrationOrigin { engine: old_engine, sources: 0..2 }),
+        });
+
+        // The client DEL lands while the copy is in flight...
+        assert_eq!(router.handle(Request::Del { key: key.clone() }), Response::Ok);
+        // ...then the sweep's PUTNX arrives late and must be refused.
+        assert!(!shards[to as usize].put_nx(&key, copied).unwrap());
+        assert_eq!(
+            router.handle(Request::Get { key: key.clone() }),
+            Response::Nil,
+            "DEL racing a migration copy resurrected the key"
+        );
     }
 
     #[test]
@@ -651,6 +863,11 @@ mod tests {
             router.handle(Request::PutNx { key: "k".into(), value: vec![1] }),
             Response::Err(_)
         ));
+        assert!(matches!(
+            router.handle(Request::DelTomb { key: "k".into() }),
+            Response::Err(_)
+        ));
+        assert!(matches!(router.handle(Request::PurgeTombs), Response::Err(_)));
     }
 
     #[test]

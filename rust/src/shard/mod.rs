@@ -7,7 +7,7 @@
 //! the examples run a full cluster in one process while production
 //! deploys one shard per host (`binhashd shard`).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -22,12 +22,23 @@ use crate::proto::{self, Request, Response};
 /// ends of the wire share this constant.
 pub const STRIPES: usize = 16;
 
+/// One lock stripe: live values plus migration tombstones.
+#[derive(Debug, Default)]
+struct Stripe {
+    live: HashMap<String, Vec<u8>>,
+    /// Keys deleted by `DELTOMB` while a migration was in flight. A
+    /// tombstone bars `PUTNX` (the migration copy step) from
+    /// resurrecting the deleted key; a client `PUT` clears it, and the
+    /// router purges the whole set once the migration settles.
+    tombs: HashSet<String>,
+}
+
 /// An in-memory KV shard with striped locking.
 #[derive(Debug)]
 pub struct Shard {
     /// Shard id (equals its bucket index in the cluster).
     pub id: u32,
-    stripes: Vec<Mutex<HashMap<String, Vec<u8>>>>,
+    stripes: Vec<Mutex<Stripe>>,
     ops: AtomicU64,
 }
 
@@ -36,12 +47,12 @@ impl Shard {
     pub fn new(id: u32) -> Arc<Self> {
         Arc::new(Self {
             id,
-            stripes: (0..STRIPES).map(|_| Mutex::new(HashMap::new())).collect(),
+            stripes: (0..STRIPES).map(|_| Mutex::new(Stripe::default())).collect(),
             ops: AtomicU64::new(0),
         })
     }
 
-    fn stripe(&self, key: &str) -> &Mutex<HashMap<String, Vec<u8>>> {
+    fn stripe(&self, key: &str) -> &Mutex<Stripe> {
         let h = crate::hashing::xxhash64(key.as_bytes(), 0x517) as usize;
         &self.stripes[h & (STRIPES - 1)]
     }
@@ -49,26 +60,32 @@ impl Shard {
     /// Fetch a value.
     pub fn get(&self, key: &str) -> Option<Vec<u8>> {
         self.ops.fetch_add(1, Ordering::Relaxed);
-        self.stripe(key).lock().unwrap().get(key).cloned()
+        self.stripe(key).lock().unwrap().live.get(key).cloned()
     }
 
-    /// Store a value.
+    /// Store a value (clears any tombstone: a client write is always
+    /// newer than the delete the tombstone recorded).
     pub fn put(&self, key: String, value: Vec<u8>) {
         self.ops.fetch_add(1, Ordering::Relaxed);
-        self.stripe(&key).lock().unwrap().insert(key, value);
+        let mut s = self.stripe(&key).lock().unwrap();
+        s.tombs.remove(&key);
+        s.live.insert(key, value);
     }
 
-    /// Store a value only if the key is absent; `true` if it was stored.
+    /// Store a value only if the key is absent *and* not tombstoned;
+    /// `true` if it was stored.
     ///
     /// The rebalancer's copy primitive: a migration batch must never
-    /// overwrite a newer value a client already wrote to this shard.
+    /// overwrite a newer value a client already wrote to this shard, and
+    /// must never resurrect a key a client deleted while the copy was in
+    /// flight (the tombstone records that delete).
     pub fn put_nx(&self, key: String, value: Vec<u8>) -> bool {
         self.ops.fetch_add(1, Ordering::Relaxed);
-        let mut map = self.stripe(&key).lock().unwrap();
-        if map.contains_key(&key) {
+        let mut s = self.stripe(&key).lock().unwrap();
+        if s.live.contains_key(&key) || s.tombs.contains(&key) {
             false
         } else {
-            map.insert(key, value);
+            s.live.insert(key, value);
             true
         }
     }
@@ -76,14 +93,38 @@ impl Shard {
     /// Delete a key; `true` if it existed.
     pub fn del(&self, key: &str) -> bool {
         self.ops.fetch_add(1, Ordering::Relaxed);
-        self.stripe(key).lock().unwrap().remove(key).is_some()
+        self.stripe(key).lock().unwrap().live.remove(key).is_some()
+    }
+
+    /// Delete a key and leave a tombstone; `true` if it existed.
+    ///
+    /// The router's mid-migration delete: the tombstone guarantees that a
+    /// migration copy (`PUTNX`) holding the pre-delete value cannot bring
+    /// the key back after this delete wins the race.
+    pub fn del_tomb(&self, key: &str) -> bool {
+        self.ops.fetch_add(1, Ordering::Relaxed);
+        let mut s = self.stripe(key).lock().unwrap();
+        s.tombs.insert(key.to_string());
+        s.live.remove(key).is_some()
+    }
+
+    /// Drop every tombstone (the migration they guarded has settled);
+    /// returns how many were cleared.
+    pub fn purge_tombstones(&self) -> u64 {
+        let mut purged = 0u64;
+        for s in &self.stripes {
+            let mut s = s.lock().unwrap();
+            purged += s.tombs.len() as u64;
+            s.tombs.clear();
+        }
+        purged
     }
 
     /// All keys currently stored (rebalancer input).
     pub fn scan(&self) -> Vec<String> {
         let mut keys = Vec::new();
         for s in &self.stripes {
-            keys.extend(s.lock().unwrap().keys().cloned());
+            keys.extend(s.lock().unwrap().live.keys().cloned());
         }
         keys
     }
@@ -92,17 +133,29 @@ impl Shard {
     /// rebalancer's unit of work — peak memory during a migration is one
     /// stripe, never the whole shard.
     pub fn scan_stripe(&self, stripe: usize) -> Vec<String> {
-        self.stripes[stripe].lock().unwrap().keys().cloned().collect()
+        self.stripes[stripe].lock().unwrap().live.keys().cloned().collect()
     }
 
     /// Number of keys stored.
     pub fn count(&self) -> u64 {
-        self.stripes.iter().map(|s| s.lock().unwrap().len() as u64).sum()
+        self.stripes.iter().map(|s| s.lock().unwrap().live.len() as u64).sum()
     }
 
     /// One-line stats.
     pub fn stats(&self) -> String {
-        format!("shard={} keys={} ops={}", self.id, self.count(), self.ops.load(Ordering::Relaxed))
+        // One pass so keys= and tombs= come from the same instant per
+        // stripe (and half the lock acquisitions of two sweeps).
+        let (mut keys, mut tombs) = (0u64, 0usize);
+        for s in &self.stripes {
+            let s = s.lock().unwrap();
+            keys += s.live.len() as u64;
+            tombs += s.tombs.len();
+        }
+        format!(
+            "shard={} keys={keys} tombs={tombs} ops={}",
+            self.id,
+            self.ops.load(Ordering::Relaxed)
+        )
     }
 
     /// Handle one parsed request (shared by TCP and in-process paths).
@@ -130,6 +183,14 @@ impl Shard {
                     Response::Nil
                 }
             }
+            Request::DelTomb { key } => {
+                if self.del_tomb(&key) {
+                    Response::Ok
+                } else {
+                    Response::Nil
+                }
+            }
+            Request::PurgeTombs => Response::Num(self.purge_tombstones()),
             Request::Scan => Response::Keys(self.scan()),
             Request::ScanStripe { stripe } => {
                 if (stripe as usize) < STRIPES {
@@ -263,6 +324,24 @@ impl ShardClient {
         }
     }
 
+    /// Typed DELTOMB: delete and leave a migration tombstone; `true` if
+    /// the key existed.
+    pub fn del_tomb(&self, key: &str) -> Result<bool> {
+        match self.call(Request::DelTomb { key: key.into() })? {
+            Response::Ok => Ok(true),
+            Response::Nil => Ok(false),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Typed PURGETOMBS; returns how many tombstones were cleared.
+    pub fn purge_tombstones(&self) -> Result<u64> {
+        match self.call(Request::PurgeTombs)? {
+            Response::Num(x) => Ok(x),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
     /// Typed SCAN.
     pub fn scan(&self) -> Result<Vec<String>> {
         match self.call(Request::Scan)? {
@@ -374,6 +453,63 @@ mod tests {
         let c = ShardClient::Local(s);
         assert!(!c.put_nx("k", b"newer".to_vec()).unwrap());
         assert!(c.put_nx("fresh", b"v".to_vec()).unwrap());
+    }
+
+    #[test]
+    fn tombstone_bars_put_nx_until_purged() {
+        let s = Shard::new(7);
+        s.put("k".into(), b"v".to_vec());
+        assert!(s.del_tomb("k"));
+        assert_eq!(s.get("k"), None);
+        assert_eq!(s.count(), 0);
+        // The migration copy must be refused: the delete won the race.
+        assert!(!s.put_nx("k".into(), b"stale".to_vec()));
+        assert_eq!(s.get("k"), None);
+        // A tombstone for a never-stored key works the same way.
+        assert!(!s.del_tomb("ghost"));
+        assert!(!s.put_nx("ghost".into(), b"stale".to_vec()));
+        // A client PUT is newer than the tombstoned delete and clears it.
+        s.put("k".into(), b"fresh".to_vec());
+        assert_eq!(s.get("k"), Some(b"fresh".to_vec()));
+        // Settling purges the remaining tombstone and re-enables PUTNX.
+        assert_eq!(s.purge_tombstones(), 1);
+        assert!(s.put_nx("ghost".into(), b"reborn".to_vec()));
+        assert!(s.stats().contains("tombs=0"));
+    }
+
+    #[test]
+    fn del_racing_migration_copy_cannot_resurrect() {
+        // The exact interleaving of the former "known anomaly": the
+        // migration sweep reads the source copy, the client DEL lands on
+        // both owners, then the sweep's PUTNX arrives at the destination.
+        let src = Shard::new(8);
+        let dst = Shard::new(9);
+        src.put("k".into(), b"v".to_vec());
+        let copied = src.get("k").unwrap(); // sweep reads the source
+        assert!(!dst.del_tomb("k")); // client DEL, new owner first (no copy there yet)
+        assert!(src.del("k")); // ... then old owner
+        assert!(!dst.put_nx("k".into(), copied)); // sweep copy refused
+        assert_eq!(dst.get("k"), None, "DEL racing the migration copy resurrected the key");
+        assert_eq!(src.get("k"), None);
+    }
+
+    #[test]
+    fn del_tomb_and_purge_over_the_wire() {
+        let s = Shard::new(10);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let srv = s.clone();
+        std::thread::spawn(move || {
+            let _ = serve(srv, listener);
+        });
+
+        let c = ShardClient::Remote(RemotePool::new(addr, 1));
+        c.put("x", b"1".to_vec()).unwrap();
+        assert!(c.del_tomb("x").unwrap());
+        assert!(!c.put_nx("x", b"stale".to_vec()).unwrap());
+        assert_eq!(c.get("x").unwrap(), None);
+        assert_eq!(c.purge_tombstones().unwrap(), 1);
+        assert!(c.put_nx("x", b"new".to_vec()).unwrap());
     }
 
     #[test]

@@ -93,12 +93,12 @@ fn gets_never_fail_during_scale_cycles() {
 }
 
 #[test]
-fn overwrites_land_correctly_during_migration_window() {
+fn overwrites_and_deletes_land_correctly_during_migration_window() {
     // PUTs issued while epochs churn must win over any in-flight migration
     // copy of the same key (the copy step is PUTNX and the mid-migration
-    // write path retires the old copy).  DELs run after the churn: a DEL
-    // racing a migration copy is a documented anomaly (no tombstones), so
-    // it is exercised on a settled topology here.
+    // write path retires the old copy), and DELs must stick: the
+    // mid-migration delete tombstones the new owner, so a racing
+    // migration copy cannot resurrect the key.
     const N: usize = 1_000;
     let router = Router::new(local_cluster("binomial", 2).unwrap());
     for i in 0..N {
@@ -119,11 +119,24 @@ fn overwrites_land_correctly_during_migration_window() {
             }
         })
     };
+    let deleter = {
+        let router = router.clone();
+        std::thread::spawn(move || {
+            for i in (N - 100)..N {
+                assert_eq!(
+                    router.handle(Request::Del { key: format!("w{i}") }),
+                    Response::Ok,
+                    "delete of w{i} failed during migration"
+                );
+            }
+        })
+    };
     for _ in 0..3 {
         assert_eq!(router.handle(Request::ScaleUp), Response::Num(3));
         assert_eq!(router.handle(Request::ScaleDown), Response::Num(2));
     }
     writer.join().expect("writer thread panicked");
+    deleter.join().expect("deleter thread panicked");
 
     for i in 0..N / 2 {
         assert_eq!(
@@ -132,20 +145,19 @@ fn overwrites_land_correctly_during_migration_window() {
             "overwrite of w{i} lost during migration"
         );
     }
-    for i in N / 2..N {
+    for i in N / 2..(N - 100) {
         assert_eq!(
             router.handle(Request::Get { key: format!("w{i}") }),
             Response::Val(value_for(i)),
             "untouched key w{i} lost during migration"
         );
     }
-
-    // Settled topology: deletes must remove exactly one logical copy.
     for i in (N - 100)..N {
-        assert_eq!(router.handle(Request::Del { key: format!("w{i}") }), Response::Ok);
-    }
-    for i in (N - 100)..N {
-        assert_eq!(router.handle(Request::Get { key: format!("w{i}") }), Response::Nil);
+        assert_eq!(
+            router.handle(Request::Get { key: format!("w{i}") }),
+            Response::Nil,
+            "deleted key w{i} resurrected by a migration copy"
+        );
     }
     assert_eq!(router.handle(Request::Count), Response::Num((N - 100) as u64));
 }

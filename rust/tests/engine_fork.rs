@@ -1,0 +1,151 @@
+//! Fork/scale property sweep over the whole engine suite.
+//!
+//! The epoch-snapshot scaling path no longer reconstructs engines from
+//! their names: every topology change forks the live engine
+//! ([`ConsistentHasher::fork`]) and applies `add_bucket`/`remove_bucket`
+//! to the fork.  These tests pin the two contracts that path relies on,
+//! for every engine in `ALL_ALGORITHMS` (and the modulo anti-baseline):
+//!
+//! * a fork maps identically to its parent at the moment of the fork, and
+//!   mutating either side never moves keys on the other — including the
+//!   stateful engines' hidden state (anchor's removal metadata, dx's
+//!   node-state array, memento's failure table);
+//! * a full router scale-up/scale-down cycle preserves every key, for
+//!   engines with and without the minimal-disruption guarantee.
+
+use binhash::algorithms::{self, ConsistentHasher, FaultTolerant, ALL_ALGORITHMS, ANTI_BASELINE};
+use binhash::hashing::SplitMix64Rng;
+use binhash::proto::{Request, Response};
+use binhash::router::{local_cluster, Router};
+
+fn digests(seed: u64, k: usize) -> Vec<u64> {
+    let mut rng = SplitMix64Rng::new(seed);
+    (0..k).map(|_| rng.next_u64()).collect()
+}
+
+fn mapping(h: &dyn ConsistentHasher, digests: &[u64]) -> Vec<u32> {
+    digests.iter().map(|&d| h.bucket(d)).collect()
+}
+
+/// Every engine name the fork contract must hold for (the 12 registered
+/// algorithms plus the modulo anti-baseline).
+fn all_engines() -> impl Iterator<Item = &'static str> {
+    ALL_ALGORITHMS.iter().copied().chain(std::iter::once(ANTI_BASELINE))
+}
+
+#[test]
+fn fork_is_identical_then_independent() {
+    let ds = digests(0xF0_01, 2_000);
+    for name in all_engines() {
+        let mut parent = algorithms::by_name(name, 9).unwrap();
+        let before = mapping(&*parent, &ds);
+
+        // Identical at the fork point.
+        let mut fork = parent.fork();
+        assert_eq!(mapping(&*fork, &ds), before, "{name}: fork diverges from parent");
+
+        // Fork mutations never leak into the parent...
+        fork.add_bucket();
+        fork.add_bucket();
+        fork.remove_bucket();
+        assert_eq!(fork.len(), 10, "{name}");
+        assert_eq!(mapping(&*parent, &ds), before, "{name}: fork mutation moved parent keys");
+
+        // ...and parent mutations never leak into the fork.
+        let fork_view = mapping(&*fork, &ds);
+        parent.remove_bucket();
+        assert_eq!(mapping(&*fork, &ds), fork_view, "{name}: parent mutation moved fork keys");
+
+        // A fork of a fork is just as independent.
+        let mut grandchild = fork.fork();
+        grandchild.remove_bucket();
+        assert_eq!(mapping(&*fork, &ds), fork_view, "{name}: grandchild mutation leaked");
+    }
+}
+
+#[test]
+fn fork_carries_stateful_engine_state() {
+    // The whitelist the fork API replaced existed because anchor, dx and
+    // memento cannot be rebuilt from `(name, n)` once their state has
+    // diverged from a fresh construction.  Put each into such a state via
+    // arbitrary removals, fork, and require the fork to agree with the
+    // degraded instance everywhere — then heal the parent and require the
+    // fork to stay degraded (deep copy, not a shared view).
+    use binhash::algorithms::{anchor::AnchorHash, dx::DxHash, memento::MementoHash};
+    let ds = digests(0xF0_02, 2_000);
+
+    // AnchorHash: removal metadata (A/K/W/L arrays + removal stack).
+    let mut a = AnchorHash::with_capacity(12, 32);
+    a.remove_arbitrary(3);
+    a.remove_arbitrary(7);
+    let degraded = mapping(&a, &ds);
+    let fork = a.fork();
+    assert_eq!(mapping(&*fork, &ds), degraded, "anchor: fork lost removal state");
+    a.restore(7);
+    a.restore(3);
+    assert_eq!(mapping(&*fork, &ds), degraded, "anchor: healing the parent changed the fork");
+
+    // DxHash: node-state bitmap with a hole.
+    let mut d = DxHash::new(12);
+    d.remove_arbitrary(5);
+    let degraded = mapping(&d, &ds);
+    let fork = d.fork();
+    assert_eq!(mapping(&*fork, &ds), degraded, "dx: fork lost node-state");
+    d.restore(5);
+    assert_eq!(mapping(&*fork, &ds), degraded, "dx: healing the parent changed the fork");
+
+    // MementoHash: replacement (failure) table.
+    let mut m = MementoHash::new(12);
+    m.remove_arbitrary(2);
+    m.remove_arbitrary(9);
+    let degraded = mapping(&m, &ds);
+    let fork = m.fork();
+    assert_eq!(mapping(&*fork, &ds), degraded, "memento: fork lost the failure table");
+    m.restore(2);
+    m.restore(9);
+    assert_eq!(mapping(&*fork, &ds), degraded, "memento: healing the parent changed the fork");
+    for &dg in &ds {
+        let b = fork.bucket(dg);
+        assert_ne!(b, 2, "memento fork routed onto a failed bucket");
+        assert_ne!(b, 9, "memento fork routed onto a failed bucket");
+    }
+}
+
+#[test]
+fn scale_cycle_preserves_keys_for_every_engine() {
+    const KEYS: usize = 300;
+    for name in all_engines() {
+        let router = Router::new(local_cluster(name, 4).unwrap());
+        for i in 0..KEYS {
+            assert_eq!(
+                router.handle(Request::Put { key: format!("k{i}"), value: vec![i as u8, 7] }),
+                Response::Ok,
+                "{name}: put failed"
+            );
+        }
+        assert_eq!(router.handle(Request::ScaleUp), Response::Num(5), "{name}");
+        for i in 0..KEYS {
+            assert_eq!(
+                router.handle(Request::Get { key: format!("k{i}") }),
+                Response::Val(vec![i as u8, 7]),
+                "{name}: key k{i} lost after scale-up"
+            );
+        }
+        assert_eq!(router.handle(Request::ScaleDown), Response::Num(4), "{name}");
+        for i in 0..KEYS {
+            assert_eq!(
+                router.handle(Request::Get { key: format!("k{i}") }),
+                Response::Val(vec![i as u8, 7]),
+                "{name}: key k{i} lost after scale-down"
+            );
+        }
+        assert_eq!(
+            router.handle(Request::Count),
+            Response::Num(KEYS as u64),
+            "{name}: key count drifted across the scale cycle"
+        );
+        assert!(!router.snapshot().is_migrating(), "{name}: cycle did not settle");
+        assert_eq!(router.topology().1, 4, "{name}");
+        assert_eq!(router.topology().2, name, "{name}: STATS engine drifted");
+    }
+}
