@@ -7,12 +7,19 @@
 //!  * `dyn dispatch`   — through `Box<dyn ConsistentHasher>` (registry path)
 //!  * `batch x4`       — 4-way interleaved bulk loop (rebalancer path)
 //!  * `xxh+lookup`     — string key end-to-end placement (hash + lookup)
+//!
+//! Plus a placement-vs-routing breakdown: engine lookup ns vs full
+//! `Router::handle_ref` GET ns on a warm local cluster, so the routing
+//! overhead ratio (everything around the paper's constant-time lookup)
+//! is tracked release over release.
 
 use std::hint::black_box;
 use std::time::Instant;
 
 use binhash::algorithms::{self, binomial};
 use binhash::hashing::xxhash64;
+use binhash::proto::{RequestRef, Response};
+use binhash::router::{local_cluster, Router};
 use binhash::workload::UniformDigests;
 
 const BATCH: usize = 2_000_000;
@@ -186,6 +193,53 @@ fn main() {
         println!(
             "n={n:<7} free={free:>6.2}ns  dyn={dynd:>6.2}ns  batch4={batch4:>6.2}ns  \
              pre-EM={pre:>6.2}ns  branchless={branchless:>6.2}ns  key+hash={keyed:>6.2}ns"
+        );
+    }
+
+    // --- Placement vs routing: what a full local GET costs around the
+    // engine lookup (snapshot load + digest + stripe map + Arc bump).
+    // This ratio is the overhead the zero-allocation data path attacks.
+    println!("\nplacement vs routing (local binomial cluster, warm keys):");
+    const ROUTED_KEYS: usize = 100_000;
+    for n in [4u32, 16, 64] {
+        let router = Router::new(local_cluster("binomial", n).unwrap());
+        let keys: Vec<String> =
+            (0..ROUTED_KEYS).map(|i| format!("tenant-3/obj-{i:08x}")).collect();
+        for k in &keys {
+            router.handle_ref(RequestRef::Put { key: k, value: vec![0x5A; 32].into() });
+        }
+        let digests: Vec<u64> = keys.iter().map(|k| xxhash64(k.as_bytes(), 0)).collect();
+        let engine = algorithms::by_name("binomial", n).unwrap();
+        let place = time_ns(
+            || {
+                let mut acc = 0u64;
+                for &d in &digests {
+                    acc = acc.wrapping_add(engine.bucket(d) as u64);
+                }
+                acc
+            },
+            digests.len(),
+        );
+        let full = time_ns(
+            || {
+                let mut hits = 0u64;
+                for k in &keys {
+                    if matches!(
+                        router.handle_ref(RequestRef::Get { key: k }),
+                        Response::Val(_)
+                    ) {
+                        hits += 1;
+                    }
+                }
+                assert_eq!(hits as usize, ROUTED_KEYS);
+                hits
+            },
+            keys.len(),
+        );
+        println!(
+            "n={n:<4} engine lookup={place:>6.2}ns  full GET handle={full:>7.2}ns  \
+             routing overhead={:.1}x",
+            full / place
         );
     }
 }

@@ -7,31 +7,51 @@
 //! latter hammers reads while a background admin thread cycles
 //! scale-up/scale-down, so it prices the epoch-snapshot design (readers
 //! never block on a migration; mid-migration keys cost one extra hop via
-//! dual-read).
+//! dual-read).  The driver goes through `Router::handle_ref` with
+//! borrowed keys and `Arc` values — the same allocation-free path the
+//! servers use.
 //!
-//! Custom harness (`harness = false`): ops/s + ns/op over seeded key sets.
+//! Custom harness (`harness = false`): ops/s + ns/op over seeded key sets,
+//! printed human-readably *and* written as `BENCH_router.json` (override
+//! the path with `BENCH_OUT`) — CI uploads the JSON so the perf
+//! trajectory is tracked release over release.
 
+use std::fmt::Write as _;
 use std::hint::black_box;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use binhash::proto::Request;
+use binhash::proto::{RequestRef, Value};
 use binhash::router::{local_cluster, Router};
 use binhash::workload::StringKeys;
 
 const OPS: usize = 200_000;
 
+fn ns_op(d: Duration, ops: usize) -> f64 {
+    d.as_nanos() as f64 / ops as f64
+}
+
+/// One `{"ns_op": ..., "ops_per_sec": ...}` JSON object.
+fn op_json(ns: f64) -> String {
+    format!("{{\"ns_op\": {ns:.1}, \"ops_per_sec\": {:.0}}}", 1e9 / ns)
+}
+
 fn main() {
+    let mut clusters_json = Vec::new();
     for n in [4u32, 16, 64] {
         let router = Router::new(local_cluster("binomial", n).unwrap());
         let mut gen = StringKeys::new(7, 8, 32);
         let keys: Vec<String> = (0..OPS).map(|_| gen.next_key()).collect();
+        let values: Vec<Value> =
+            (0..256).map(|i| vec![i as u8; 32].into()).collect();
 
-        // PUT phase.
+        // PUT phase (first insert per key allocates its map entry;
+        // repeats of hot keys overwrite in place).
         let t0 = Instant::now();
         for (i, k) in keys.iter().enumerate() {
-            let r = router.handle(Request::Put { key: k.clone(), value: vec![(i & 0xFF) as u8] });
+            let r = router
+                .handle_ref(RequestRef::Put { key: k, value: values[i & 0xFF].clone() });
             black_box(r);
         }
         let put = t0.elapsed();
@@ -39,7 +59,7 @@ fn main() {
         // GET phase (steady topology).
         let t0 = Instant::now();
         for k in &keys {
-            let r = router.handle(Request::Get { key: k.clone() });
+            let r = router.handle_ref(RequestRef::Get { key: k });
             black_box(r);
         }
         let get = t0.elapsed();
@@ -62,16 +82,21 @@ fn main() {
         };
         let t0 = Instant::now();
         for k in &keys {
-            let r = router.handle(Request::Get { key: k.clone() });
+            let r = router.handle_ref(RequestRef::Get { key: k });
             black_box(r);
         }
         let churn = t0.elapsed();
         stop.store(true, Ordering::Relaxed);
         let cycles = admin.join().expect("admin thread");
 
-        let put_ns = put.as_nanos() as f64 / OPS as f64;
-        let get_ns = get.as_nanos() as f64 / OPS as f64;
-        let churn_ns = churn.as_nanos() as f64 / OPS as f64;
+        let put_ns = ns_op(put, OPS);
+        let get_ns = ns_op(get, OPS);
+        let churn_ns = ns_op(churn, OPS);
+        let dual_reads = router.metrics.dual_reads.load(Ordering::Relaxed);
+        let batches = router.metrics.migration_batches.load(Ordering::Relaxed);
+        let place_p50 = router.metrics.placement_latency.quantile_ns(0.5);
+        let place_p99 = router.metrics.placement_latency.quantile_ns(0.99);
+        let place_mean = router.metrics.placement_latency.mean_ns();
         println!(
             "n={n:<4} put: {put_ns:>8.0} ns/op ({:>9.0} op/s)   get: {get_ns:>8.0} ns/op ({:>9.0} op/s)",
             1e9 / put_ns,
@@ -79,17 +104,38 @@ fn main() {
         );
         println!(
             "      get under churn: {churn_ns:>8.0} ns/op ({:>9.0} op/s) across {cycles} scale cycles, \
-             {} dual-reads, {} migration batches",
+             {dual_reads} dual-reads, {batches} migration batches",
             1e9 / churn_ns,
-            router.metrics.dual_reads.load(Ordering::Relaxed),
-            router.metrics.migration_batches.load(Ordering::Relaxed),
         );
         println!(
-            "      placement p50={}ns p99={}ns mean={:.0}ns  (of end-to-end mean {:.0}ns)",
-            router.metrics.placement_latency.quantile_ns(0.5),
-            router.metrics.placement_latency.quantile_ns(0.99),
-            router.metrics.placement_latency.mean_ns(),
+            "      placement p50={place_p50}ns p99={place_p99}ns mean={place_mean:.0}ns  \
+             (of end-to-end mean {:.0}ns)",
             router.metrics.latency.mean_ns(),
         );
+
+        let mut c = String::new();
+        write!(
+            c,
+            "    {{\"n\": {n}, \
+             \"steady\": {{\"put\": {}, \"get\": {}}}, \
+             \"churn\": {{\"get\": {}, \"scale_cycles\": {cycles}, \
+             \"dual_reads\": {dual_reads}, \"migration_batches\": {batches}}}, \
+             \"placement_ns\": {{\"p50\": {place_p50}, \"p99\": {place_p99}, \
+             \"mean\": {place_mean:.1}}}}}",
+            op_json(put_ns),
+            op_json(get_ns),
+            op_json(churn_ns),
+        )
+        .expect("write to String");
+        clusters_json.push(c);
     }
+
+    let json = format!(
+        "{{\n  \"bench\": \"router_hotpath\",\n  \"ops_per_phase\": {OPS},\n  \
+         \"clusters\": [\n{}\n  ]\n}}\n",
+        clusters_json.join(",\n")
+    );
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_router.json".to_string());
+    std::fs::write(&out, &json).expect("write bench JSON");
+    println!("wrote {out}");
 }

@@ -74,7 +74,7 @@ fn main() -> Result<()> {
     let mut loaded = 0usize;
     for _ in 0..OBJECTS {
         let (key, _) = zipf.next_key();
-        router.handle(Request::Put { key, value: vec![0xAB; 64] });
+        router.handle(Request::Put { key, value: vec![0xAB; 64].into() });
         loaded += 1;
     }
     let load_s = t0.elapsed().as_secs_f64();
@@ -94,7 +94,7 @@ fn main() -> Result<()> {
             for i in 0..TRAFFIC_OPS / CLIENTS {
                 let (key, _) = zipf.next_key();
                 if i % 10 == 0 {
-                    router.handle(Request::Put { key, value: vec![1; 64] });
+                    router.handle(Request::Put { key, value: vec![1; 64].into() });
                 } else if !matches!(
                     router.handle(Request::Get { key }),
                     binhash::proto::Response::Nil

@@ -60,8 +60,10 @@ pub struct MigrationOrigin {
 /// An immutable, epoch-stamped placement view: frozen engine + shard
 /// handles + optional in-flight migration origin.
 ///
-/// Published by the router behind an `Arc` swap; never mutated after
-/// publication, so the data path reads it lock-free (one `Arc` clone).
+/// Published by the router through an atomic pointer swap (a hand-rolled
+/// std-only arc-swap; see `router` for the reader-gate protocol); never
+/// mutated after publication, so the data path reads it lock-free — one
+/// atomic load plus a refcount bump, no `RwLock` anywhere.
 /// During a migration the shard list covers the *union* of the old and
 /// new topologies (scale-down keeps the retiring shard reachable for
 /// dual reads until the final snapshot drops it).

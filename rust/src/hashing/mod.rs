@@ -98,6 +98,70 @@ impl SplitMix64Rng {
     }
 }
 
+/// xxhash64-backed [`std::hash::BuildHasher`] for the shard stripe maps,
+/// replacing the default SipHash-1-3 on the hot path.
+///
+/// Tradeoff, stated honestly: xxhash64 is not a keyed PRF, so this is
+/// weaker against adversarial collision-flooding than SipHash.  Two
+/// mitigations keep the exposure small: the seed is drawn per process at
+/// startup (clock + ASLR entropy, so collisions cannot be precomputed
+/// offline against a known constant), and keys are length- (≤512) and
+/// charset-validated at the wire before ever reaching a map.  Streaming
+/// `write` calls chain the seed, so multi-part hashing (`Hash for
+/// String` writes the bytes then a length terminator) stays well mixed.
+#[derive(Debug, Clone, Copy)]
+pub struct XxBuildHasher {
+    seed: u64,
+}
+
+/// Per-process stripe-map seed: sampled once, shared by every map so a
+/// shard's stripes stay mutually consistent within the process.
+fn process_seed() -> u64 {
+    use std::sync::OnceLock;
+    static SEED: OnceLock<u64> = OnceLock::new();
+    *SEED.get_or_init(|| {
+        let clock = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        let aslr = &SEED as *const _ as u64;
+        splitmix64(clock ^ aslr.rotate_left(32) ^ PHI64)
+    })
+}
+
+impl Default for XxBuildHasher {
+    fn default() -> Self {
+        Self { seed: process_seed() }
+    }
+}
+
+/// Hasher state for [`XxBuildHasher`].
+#[derive(Debug, Clone)]
+pub struct XxHasher64 {
+    state: u64,
+}
+
+impl std::hash::Hasher for XxHasher64 {
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        self.state = xxhash64(bytes, self.state);
+    }
+
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+impl std::hash::BuildHasher for XxBuildHasher {
+    type Hasher = XxHasher64;
+
+    #[inline]
+    fn build_hasher(&self) -> XxHasher64 {
+        XxHasher64 { state: self.seed }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -158,6 +222,32 @@ mod tests {
         }
         let mean = sum / 10_000.0;
         assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn xx_build_hasher_is_deterministic_and_mixes() {
+        use std::hash::{BuildHasher, Hash, Hasher};
+        let bh = XxBuildHasher::default();
+        let hash_of = |s: &str| {
+            let mut h = bh.build_hasher();
+            s.hash(&mut h);
+            h.finish()
+        };
+        assert_eq!(hash_of("key-1"), hash_of("key-1"));
+        assert_ne!(hash_of("key-1"), hash_of("key-2"));
+        // Two instances share the per-process seed (stripe maps must
+        // agree with each other within a process).
+        let other = XxBuildHasher::default();
+        let mut h = other.build_hasher();
+        "key-1".hash(&mut h);
+        assert_eq!(hash_of("key-1"), h.finish());
+        // A HashMap keyed with it behaves.
+        let mut m = std::collections::HashMap::with_hasher(XxBuildHasher::default());
+        for i in 0..1_000 {
+            m.insert(format!("k{i}"), i);
+        }
+        assert_eq!(m.len(), 1_000);
+        assert_eq!(m.get("k512"), Some(&512));
     }
 
     #[test]

@@ -20,35 +20,69 @@
 //! Keys are ASCII tokens without whitespace (the router rejects others);
 //! values are arbitrary bytes.  Errors: `ERR <msg>\n`.
 //!
+//! ## Borrowed parsing: the zero-allocation server path
+//!
+//! The server loops parse with [`read_request_ref`] into a
+//! [`RequestRef`] that *borrows* the command line from a per-connection
+//! reusable [`RecvBuf`] — no per-request line `String` and no key
+//! `to_string()`.  Value payloads are read once into a freshly allocated
+//! [`Value`] (`Arc<[u8]>`) that then flows through router, shard map and
+//! migration without ever being copied again; a GET answers with a
+//! refcount bump of the stored `Arc`.  The owned [`Request`] enum
+//! survives for admin paths, tests and client helpers
+//! ([`RequestRef::into_owned`] / [`Request::as_view`] convert).
+//!
+//! Parse failures come in two severities, which is what keeps a typo from
+//! killing a connection:
+//!
+//! * **recoverable** (unknown command, missing/invalid key, bad integer)
+//!   — the line was consumed and the stream is still framed;
+//!   [`read_request_ref`] yields [`Wire::Bad`] and the server answers
+//!   `ERR <msg>` and keeps serving.  (A `PUT` whose *length* token was
+//!   unparseable is reported this way too; if the client really sent a
+//!   payload it has desynced itself — its next "commands" will error.)
+//! * **framing / IO** (stream error, truncated payload, value above
+//!   [`MAX_VALUE_LEN`]) — the byte stream is no longer trustworthy; the
+//!   functions return `Err` and the server drops the connection.
+//!
+//! Responses are serialized into a per-connection output buffer with
+//! [`encode_response`]; servers flush once per drained read burst, so a
+//! pipelined client pays one syscall per burst, not one per response.
+//!
 //! `PUTNX` stores only if the key is absent (`NIL` = already present) and
 //! `SCANSTRIPE` lists one lock stripe; both exist for the incremental
-//! rebalancer, which streams stripes and copies without clobbering newer
-//! client writes.  `DELTOMB` is the router's mid-migration delete: it
-//! removes the key *and* leaves a tombstone that bars a later `PUTNX`
-//! (the migration copy) from resurrecting it; `PURGETOMBS` clears the
-//! tombstones once the migration settles.  The router's `STATS` line
-//! reports the placement epoch and a `state=migrating|steady` field;
-//! `SCALEUP`/`SCALEDOWN` issued while a migration is already in flight
-//! answer `ERR MIGRATING: <detail>`.
+//! rebalancer.  `DELTOMB` removes a key *and* leaves a tombstone that
+//! bars a later `PUTNX` from resurrecting it; `PURGETOMBS` clears the
+//! tombstones once a migration settles.
 //!
 //! Blocking I/O over `std::io` — the servers are thread-per-connection
 //! (see DESIGN.md: the build is fully offline, so the stack is std-only).
 
 use std::io::{BufRead, BufReader, Read, Write};
+use std::mem::MaybeUninit;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-/// A parsed request.
+/// A value payload: refcounted shared bytes.  GET answers clone the `Arc`
+/// (refcount bump), never the bytes; PUT moves the parsed buffer into the
+/// shard map without a re-copy.
+pub type Value = Arc<[u8]>;
+
+/// Hard cap on a single value payload (framing guard).
+pub const MAX_VALUE_LEN: usize = 64 << 20;
+
+/// A parsed request (owned form — admin paths, tests, client helpers).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Request {
     /// Fetch a value.
     Get { key: String },
     /// Store a value.
-    Put { key: String, value: Vec<u8> },
+    Put { key: String, value: Value },
     /// Store a value only if the key is absent (shard-internal; the
     /// rebalancer's copy step, so a migration never overwrites a newer
     /// client write that already reached the destination shard).
-    PutNx { key: String, value: Vec<u8> },
+    PutNx { key: String, value: Value },
     /// Delete a key.
     Del { key: String },
     /// Delete a key and leave a tombstone barring a later `PUTNX` from
@@ -77,13 +111,111 @@ pub enum Request {
     ScaleDown,
 }
 
+/// A parsed request borrowing its key from a connection's [`RecvBuf`] —
+/// the server data path's allocation-free view.  Value payloads are
+/// carried as [`Value`] (the one buffer the parser allocated) so they can
+/// be moved straight into storage.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RequestRef<'a> {
+    /// Fetch a value.
+    Get {
+        /// Object key.
+        key: &'a str,
+    },
+    /// Store a value.
+    Put {
+        /// Object key.
+        key: &'a str,
+        /// Parsed payload, moved into the shard map without a re-copy.
+        value: Value,
+    },
+    /// Store only if absent (shard-internal; migration copy step).
+    PutNx {
+        /// Object key.
+        key: &'a str,
+        /// Parsed payload.
+        value: Value,
+    },
+    /// Delete a key.
+    Del {
+        /// Object key.
+        key: &'a str,
+    },
+    /// Delete and tombstone (shard-internal; mid-migration delete).
+    DelTomb {
+        /// Object key.
+        key: &'a str,
+    },
+    /// List all keys (shard-internal).
+    Scan,
+    /// List one lock stripe's keys (shard-internal).
+    ScanStripe {
+        /// Stripe index in `[0, shard::STRIPES)`.
+        stripe: u32,
+    },
+    /// Clear migration tombstones (shard-internal).
+    PurgeTombs,
+    /// Number of keys stored.
+    Count,
+    /// One-line stats.
+    Stats,
+    /// Add a shard (router admin).
+    ScaleUp,
+    /// Remove the last shard (router admin).
+    ScaleDown,
+}
+
+impl Request {
+    /// Borrowed view of this request (key borrowed, value refcount-bumped)
+    /// — the bridge from the owned API into the allocation-free path.
+    pub fn as_view(&self) -> RequestRef<'_> {
+        match self {
+            Request::Get { key } => RequestRef::Get { key },
+            Request::Put { key, value } => RequestRef::Put { key, value: value.clone() },
+            Request::PutNx { key, value } => RequestRef::PutNx { key, value: value.clone() },
+            Request::Del { key } => RequestRef::Del { key },
+            Request::DelTomb { key } => RequestRef::DelTomb { key },
+            Request::Scan => RequestRef::Scan,
+            Request::ScanStripe { stripe } => RequestRef::ScanStripe { stripe: *stripe },
+            Request::PurgeTombs => RequestRef::PurgeTombs,
+            Request::Count => RequestRef::Count,
+            Request::Stats => RequestRef::Stats,
+            Request::ScaleUp => RequestRef::ScaleUp,
+            Request::ScaleDown => RequestRef::ScaleDown,
+        }
+    }
+}
+
+impl RequestRef<'_> {
+    /// Convert to the owned form (allocates the key — admin/test paths).
+    pub fn into_owned(self) -> Request {
+        match self {
+            RequestRef::Get { key } => Request::Get { key: key.to_string() },
+            RequestRef::Put { key, value } => Request::Put { key: key.to_string(), value },
+            RequestRef::PutNx { key, value } => {
+                Request::PutNx { key: key.to_string(), value }
+            }
+            RequestRef::Del { key } => Request::Del { key: key.to_string() },
+            RequestRef::DelTomb { key } => Request::DelTomb { key: key.to_string() },
+            RequestRef::Scan => Request::Scan,
+            RequestRef::ScanStripe { stripe } => Request::ScanStripe { stripe },
+            RequestRef::PurgeTombs => Request::PurgeTombs,
+            RequestRef::Count => Request::Count,
+            RequestRef::Stats => Request::Stats,
+            RequestRef::ScaleUp => Request::ScaleUp,
+            RequestRef::ScaleDown => Request::ScaleDown,
+        }
+    }
+}
+
 /// A response.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Response {
     /// Success without payload.
     Ok,
-    /// A value payload.
-    Val(Vec<u8>),
+    /// A value payload (shared buffer — cloning a `Response::Val` bumps a
+    /// refcount, it never copies the bytes).
+    Val(Value),
     /// Key absent.
     Nil,
     /// Key listing.
@@ -96,87 +228,173 @@ pub enum Response {
     Err(String),
 }
 
+/// Per-connection reusable parse scratch: the command line lives here and
+/// [`RequestRef`] borrows from it, so a connection allocates its line
+/// buffer once, not once per request.
+#[derive(Debug, Default)]
+pub struct RecvBuf {
+    line: String,
+}
+
+impl RecvBuf {
+    /// New empty scratch buffer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Outcome of parsing one request line.
+#[derive(Debug)]
+pub enum Wire<'a> {
+    /// A well-formed request.
+    Req(RequestRef<'a>),
+    /// A recoverable protocol error: the stream is still framed — answer
+    /// `ERR <msg>` and keep the connection.
+    Bad(String),
+}
+
 /// `true` when `key` is a legal wire token.
 pub fn valid_key(key: &str) -> bool {
     !key.is_empty() && key.len() <= 512 && key.bytes().all(|b| b.is_ascii_graphic())
 }
 
-/// Read one request from a buffered stream. Returns `None` on clean EOF.
-pub fn read_request<R: Read>(r: &mut BufReader<R>) -> Result<Option<Request>> {
-    let mut line = String::new();
-    if r.read_line(&mut line)? == 0 {
+fn key_tok(tok: Option<&str>) -> Result<&str, String> {
+    match tok {
+        None => Err("missing key".to_string()),
+        Some(key) if !valid_key(key) => Err(format!("invalid key {key:?}")),
+        Some(key) => Ok(key),
+    }
+}
+
+/// Read a value payload into a freshly allocated [`Value`] — the single
+/// buffer that then travels to the shard map without being copied again.
+///
+/// Cost note: the buffer is zero-initialized (one memset pass the old
+/// `vec![0; len]` got lazily from calloc) before `read_exact` fills it —
+/// the price of building the `Arc` in place on stable Rust.  What it
+/// buys: no second allocation and no `Vec`→`Arc` byte copy when the
+/// value is stored, shared, or migrated.
+fn read_value<R: Read>(r: &mut R, len: usize) -> Result<Value> {
+    let mut uninit: Arc<[MaybeUninit<u8>]> = Arc::new_uninit_slice(len);
+    let slice = Arc::get_mut(&mut uninit).expect("freshly allocated Arc is unique");
+    for b in slice.iter_mut() {
+        b.write(0);
+    }
+    // SAFETY: every byte was just initialized above.
+    let mut value: Arc<[u8]> = unsafe { uninit.assume_init() };
+    let slice = Arc::get_mut(&mut value).expect("still unique");
+    r.read_exact(slice)?;
+    Ok(value)
+}
+
+/// Read one request into `buf`, borrowing the key from it.  Returns
+/// `Ok(None)` on clean EOF, [`Wire::Bad`] for recoverable parse failures
+/// (answer `ERR`, keep the connection), and `Err` only for framing/IO
+/// errors (drop the connection).
+pub fn read_request_ref<'a, R: Read>(
+    r: &mut BufReader<R>,
+    buf: &'a mut RecvBuf,
+) -> Result<Option<Wire<'a>>> {
+    buf.line.clear();
+    if r.read_line(&mut buf.line)? == 0 {
         return Ok(None);
     }
-    let line = line.trim_end();
+    let line = buf.line.trim_end();
     let mut parts = line.split(' ');
     let cmd = parts.next().unwrap_or("");
+    macro_rules! try_bad {
+        ($e:expr) => {
+            match $e {
+                Ok(x) => x,
+                Err(m) => return Ok(Some(Wire::Bad(m))),
+            }
+        };
+    }
     let req = match cmd {
-        "GET" => Request::Get { key: expect_key(parts.next())? },
-        "DEL" => Request::Del { key: expect_key(parts.next())? },
-        "DELTOMB" => Request::DelTomb { key: expect_key(parts.next())? },
-        "PURGETOMBS" => Request::PurgeTombs,
+        "GET" => RequestRef::Get { key: try_bad!(key_tok(parts.next())) },
+        "DEL" => RequestRef::Del { key: try_bad!(key_tok(parts.next())) },
+        "DELTOMB" => RequestRef::DelTomb { key: try_bad!(key_tok(parts.next())) },
+        "PURGETOMBS" => RequestRef::PurgeTombs,
         "PUT" | "PUTNX" => {
-            let key = expect_key(parts.next())?;
-            let len: usize =
-                parts.next().ok_or_else(|| anyhow!("{cmd} missing length"))?.parse()?;
-            if len > 64 << 20 {
+            let key = try_bad!(key_tok(parts.next()));
+            let len: usize = try_bad!(parts
+                .next()
+                .ok_or_else(|| format!("{cmd} missing length"))
+                .and_then(|t| t
+                    .parse()
+                    .map_err(|e| format!("bad {cmd} length {t:?}: {e}"))));
+            if len > MAX_VALUE_LEN {
+                // The payload follows on the wire; there is no way to stay
+                // framed without buffering it — drop the connection.
                 bail!("value too large: {len}");
             }
-            let mut value = vec![0u8; len];
-            r.read_exact(&mut value)?;
+            let value = read_value(r, len)?;
             if cmd == "PUT" {
-                Request::Put { key, value }
+                RequestRef::Put { key, value }
             } else {
-                Request::PutNx { key, value }
+                RequestRef::PutNx { key, value }
             }
         }
-        "SCAN" => Request::Scan,
+        "SCAN" => RequestRef::Scan,
         "SCANSTRIPE" => {
-            let stripe: u32 =
-                parts.next().ok_or_else(|| anyhow!("SCANSTRIPE missing index"))?.parse()?;
-            Request::ScanStripe { stripe }
+            let stripe: u32 = try_bad!(parts
+                .next()
+                .ok_or_else(|| "SCANSTRIPE missing index".to_string())
+                .and_then(|t| t
+                    .parse()
+                    .map_err(|e| format!("bad SCANSTRIPE index {t:?}: {e}"))));
+            RequestRef::ScanStripe { stripe }
         }
-        "COUNT" => Request::Count,
-        "STATS" => Request::Stats,
-        "SCALEUP" => Request::ScaleUp,
-        "SCALEDOWN" => Request::ScaleDown,
-        other => bail!("unknown command {other:?}"),
+        "COUNT" => RequestRef::Count,
+        "STATS" => RequestRef::Stats,
+        "SCALEUP" => RequestRef::ScaleUp,
+        "SCALEDOWN" => RequestRef::ScaleDown,
+        other => return Ok(Some(Wire::Bad(format!("unknown command {other:?}")))),
     };
-    Ok(Some(req))
+    Ok(Some(Wire::Req(req)))
 }
 
-fn expect_key(tok: Option<&str>) -> Result<String> {
-    let key = tok.ok_or_else(|| anyhow!("missing key"))?;
-    if !valid_key(key) {
-        bail!("invalid key {key:?}");
+/// Read one request in owned form. Returns `None` on clean EOF and `Err`
+/// on *any* parse failure (legacy strict behavior — clients and tests;
+/// servers use [`read_request_ref`] and stay alive on recoverable ones).
+pub fn read_request<R: Read>(r: &mut BufReader<R>) -> Result<Option<Request>> {
+    let mut buf = RecvBuf::new();
+    match read_request_ref(r, &mut buf)? {
+        None => Ok(None),
+        Some(Wire::Req(req)) => Ok(Some(req.into_owned())),
+        Some(Wire::Bad(msg)) => Err(anyhow!(msg)),
     }
-    Ok(key.to_string())
 }
 
-/// Write one request.
-pub fn write_request<W: Write>(w: &mut W, req: &Request) -> Result<()> {
+/// Write one request (borrowed form — the servers' forwarding path).
+pub fn write_request_ref<W: Write>(w: &mut W, req: &RequestRef<'_>) -> Result<()> {
     match req {
-        Request::Get { key } => writeln!(w, "GET {key}")?,
-        Request::Del { key } => writeln!(w, "DEL {key}")?,
-        Request::DelTomb { key } => writeln!(w, "DELTOMB {key}")?,
-        Request::PurgeTombs => w.write_all(b"PURGETOMBS\n")?,
-        Request::Put { key, value } => {
+        RequestRef::Get { key } => writeln!(w, "GET {key}")?,
+        RequestRef::Del { key } => writeln!(w, "DEL {key}")?,
+        RequestRef::DelTomb { key } => writeln!(w, "DELTOMB {key}")?,
+        RequestRef::PurgeTombs => w.write_all(b"PURGETOMBS\n")?,
+        RequestRef::Put { key, value } => {
             writeln!(w, "PUT {key} {}", value.len())?;
             w.write_all(value)?;
         }
-        Request::PutNx { key, value } => {
+        RequestRef::PutNx { key, value } => {
             writeln!(w, "PUTNX {key} {}", value.len())?;
             w.write_all(value)?;
         }
-        Request::Scan => w.write_all(b"SCAN\n")?,
-        Request::ScanStripe { stripe } => writeln!(w, "SCANSTRIPE {stripe}")?,
-        Request::Count => w.write_all(b"COUNT\n")?,
-        Request::Stats => w.write_all(b"STATS\n")?,
-        Request::ScaleUp => w.write_all(b"SCALEUP\n")?,
-        Request::ScaleDown => w.write_all(b"SCALEDOWN\n")?,
+        RequestRef::Scan => w.write_all(b"SCAN\n")?,
+        RequestRef::ScanStripe { stripe } => writeln!(w, "SCANSTRIPE {stripe}")?,
+        RequestRef::Count => w.write_all(b"COUNT\n")?,
+        RequestRef::Stats => w.write_all(b"STATS\n")?,
+        RequestRef::ScaleUp => w.write_all(b"SCALEUP\n")?,
+        RequestRef::ScaleDown => w.write_all(b"SCALEDOWN\n")?,
     }
     w.flush()?;
     Ok(())
+}
+
+/// Write one request (owned form).
+pub fn write_request<W: Write>(w: &mut W, req: &Request) -> Result<()> {
+    write_request_ref(w, &req.as_view())
 }
 
 /// Read one response.
@@ -192,13 +410,16 @@ pub fn read_response<R: Read>(r: &mut BufReader<R>) -> Result<Response> {
         "NIL" => Response::Nil,
         "VAL" => {
             let len: usize = rest.parse()?;
-            let mut value = vec![0u8; len];
-            r.read_exact(&mut value)?;
-            Response::Val(value)
+            if len > MAX_VALUE_LEN {
+                bail!("value too large: {len}");
+            }
+            Response::Val(read_value(r, len)?)
         }
         "KEYS" => {
             let count: usize = rest.parse()?;
-            let mut keys = Vec::with_capacity(count.min(1 << 20));
+            // Cap the pre-allocation: a hostile/oversized count must fail
+            // at the truncated stream, not by reserving memory up front.
+            let mut keys = Vec::with_capacity(count.min(4096));
             for _ in 0..count {
                 let mut k = String::new();
                 if r.read_line(&mut k)? == 0 {
@@ -215,27 +436,79 @@ pub fn read_response<R: Read>(r: &mut BufReader<R>) -> Result<Response> {
     })
 }
 
-/// Write one response.
-pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> Result<()> {
+/// Serialize one response into an output buffer *without* flushing — the
+/// servers coalesce a pipelined burst's responses and flush once.
+pub fn encode_response(out: &mut Vec<u8>, resp: &Response) -> Result<()> {
     match resp {
-        Response::Ok => w.write_all(b"OK\n")?,
-        Response::Nil => w.write_all(b"NIL\n")?,
+        Response::Ok => out.extend_from_slice(b"OK\n"),
+        Response::Nil => out.extend_from_slice(b"NIL\n"),
         Response::Val(value) => {
-            writeln!(w, "VAL {}", value.len())?;
-            w.write_all(value)?;
+            writeln!(out, "VAL {}", value.len())?;
+            out.extend_from_slice(value);
         }
         Response::Keys(keys) => {
-            writeln!(w, "KEYS {}", keys.len())?;
+            writeln!(out, "KEYS {}", keys.len())?;
             for k in keys {
-                w.write_all(k.as_bytes())?;
-                w.write_all(b"\n")?;
+                out.extend_from_slice(k.as_bytes());
+                out.push(b'\n');
             }
         }
-        Response::Num(x) => writeln!(w, "NUM {x}")?,
-        Response::Info(s) => writeln!(w, "INFO {s}")?,
-        Response::Err(m) => writeln!(w, "ERR {m}")?,
+        Response::Num(x) => writeln!(out, "NUM {x}")?,
+        Response::Info(s) => writeln!(out, "INFO {s}")?,
+        Response::Err(m) => writeln!(out, "ERR {m}")?,
     }
+    Ok(())
+}
+
+/// Write one response and flush (single-response convenience path).
+pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> Result<()> {
+    let mut buf = Vec::with_capacity(64);
+    encode_response(&mut buf, resp)?;
+    w.write_all(&buf)?;
     w.flush()?;
+    Ok(())
+}
+
+/// Flush the coalesced response buffer once it reaches this size even if
+/// the read burst hasn't drained, bounding per-connection memory.
+const FLUSH_HIGH_WATER: usize = 32 << 10;
+
+/// Serve one framed connection until EOF: the shared read→handle→encode
+/// loop of the router and shard servers (`handle` is the only
+/// difference).  Parses borrowed requests from a reusable [`RecvBuf`],
+/// answers `ERR` (and keeps the connection) on recoverable parse
+/// failures, returns `Err` on framing/IO errors, and coalesces pipelined
+/// responses — a flush is deferred only while the read buffer provably
+/// holds another complete command line (a partial line means the next
+/// `read_line` hits the socket; never withhold a response across a read
+/// that could block).  A `PUT` whose header arrived but whose announced
+/// payload stalls can still block post-flush — framing obliges the
+/// client to send the payload without waiting on earlier responses.
+pub fn serve_framed<R: Read, W: Write>(
+    rd: &mut BufReader<R>,
+    wr: &mut W,
+    mut handle: impl FnMut(RequestRef<'_>) -> Response,
+) -> Result<()> {
+    let mut scratch = RecvBuf::new();
+    let mut out = Vec::with_capacity(4 << 10);
+    loop {
+        let resp = match read_request_ref(rd, &mut scratch)? {
+            None => break,
+            Some(Wire::Req(req)) => handle(req),
+            Some(Wire::Bad(msg)) => Response::Err(msg),
+        };
+        encode_response(&mut out, &resp)?;
+        let next_is_buffered = rd.buffer().contains(&b'\n');
+        if !next_is_buffered || out.len() >= FLUSH_HIGH_WATER {
+            wr.write_all(&out)?;
+            wr.flush()?;
+            out.clear();
+        }
+    }
+    if !out.is_empty() {
+        wr.write_all(&out)?;
+        wr.flush()?;
+    }
     Ok(())
 }
 
@@ -261,8 +534,8 @@ mod tests {
     fn request_roundtrips() {
         for req in [
             Request::Get { key: "k1".into() },
-            Request::Put { key: "k2".into(), value: b"hello\nworld\x00\xff".to_vec() },
-            Request::PutNx { key: "k4".into(), value: b"\x01\x02".to_vec() },
+            Request::Put { key: "k2".into(), value: b"hello\nworld\x00\xff".to_vec().into() },
+            Request::PutNx { key: "k4".into(), value: b"\x01\x02".to_vec().into() },
             Request::Del { key: "k3".into() },
             Request::DelTomb { key: "k5".into() },
             Request::Scan,
@@ -278,11 +551,19 @@ mod tests {
     }
 
     #[test]
+    fn owned_and_borrowed_views_roundtrip() {
+        let req = Request::Put { key: "k".into(), value: b"v".to_vec().into() };
+        assert_eq!(req.as_view().into_owned(), req);
+        let req = Request::ScanStripe { stripe: 3 };
+        assert_eq!(req.as_view().into_owned(), req);
+    }
+
+    #[test]
     fn response_roundtrips() {
         for resp in [
             Response::Ok,
             Response::Nil,
-            Response::Val(vec![0u8, 1, 2, 255, b'\n']),
+            Response::Val(vec![0u8, 1, 2, 255, b'\n'].into()),
             Response::Keys(vec!["a".into(), "b/c".into()]),
             Response::Keys(Vec::new()),
             Response::Num(42),
@@ -312,6 +593,77 @@ mod tests {
     }
 
     #[test]
+    fn recoverable_failures_keep_the_stream_framed() {
+        // Four recoverable mistakes, then a healthy request: the borrowed
+        // parser must report each as Wire::Bad and stay in sync.
+        let input = b"BOGUS x\nGET\nSCANSTRIPE nope\nPUT k notanint\nGET ok\n";
+        let mut r = BufReader::new(&input[..]);
+        let mut buf = RecvBuf::new();
+        for _ in 0..4 {
+            match read_request_ref(&mut r, &mut buf).unwrap().unwrap() {
+                Wire::Bad(msg) => assert!(!msg.is_empty()),
+                Wire::Req(req) => panic!("expected Bad, got {req:?}"),
+            }
+        }
+        match read_request_ref(&mut r, &mut buf).unwrap().unwrap() {
+            Wire::Req(RequestRef::Get { key }) => assert_eq!(key, "ok"),
+            other => panic!("expected GET ok, got {other:?}"),
+        }
+        assert!(read_request_ref(&mut r, &mut buf).unwrap().is_none());
+    }
+
+    #[test]
+    fn invalid_key_is_recoverable() {
+        let long = format!("DEL {}\nCOUNT\n", "x".repeat(600));
+        let mut r = BufReader::new(long.as_bytes());
+        let mut buf = RecvBuf::new();
+        assert!(matches!(
+            read_request_ref(&mut r, &mut buf).unwrap().unwrap(),
+            Wire::Bad(_)
+        ));
+        assert!(matches!(
+            read_request_ref(&mut r, &mut buf).unwrap().unwrap(),
+            Wire::Req(RequestRef::Count)
+        ));
+    }
+
+    #[test]
+    fn truncated_put_payload_is_a_framing_error() {
+        // Header promises 10 bytes, stream ends after 3: the connection
+        // cannot be trusted any further.
+        let mut r = BufReader::new(&b"PUT k 10\nabc"[..]);
+        let mut buf = RecvBuf::new();
+        assert!(read_request_ref(&mut r, &mut buf).is_err());
+    }
+
+    #[test]
+    fn empty_put_payload_parses() {
+        let mut r = BufReader::new(&b"PUT k 0\n"[..]);
+        let mut buf = RecvBuf::new();
+        match read_request_ref(&mut r, &mut buf).unwrap().unwrap() {
+            Wire::Req(RequestRef::Put { key, value }) => {
+                assert_eq!(key, "k");
+                assert!(value.is_empty());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_keys_count_errors_without_huge_alloc() {
+        // A hostile KEYS count must fail at the truncated stream, not by
+        // pre-allocating count * sizeof(String).
+        let mut r = BufReader::new(&b"KEYS 18446744073709551615\n"[..]);
+        assert!(read_response(&mut r).is_err());
+    }
+
+    #[test]
+    fn truncated_val_response_errors() {
+        let mut r = BufReader::new(&b"VAL 10\nabc"[..]);
+        assert!(read_response(&mut r).is_err());
+    }
+
+    #[test]
     fn pipelined_requests() {
         let mut buf = Vec::new();
         write_request(&mut buf, &Request::Get { key: "a".into() }).unwrap();
@@ -320,6 +672,19 @@ mod tests {
         assert_eq!(read_request(&mut r).unwrap().unwrap(), Request::Get { key: "a".into() });
         assert_eq!(read_request(&mut r).unwrap().unwrap(), Request::Count);
         assert!(read_request(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn encode_response_coalesces_without_flush() {
+        let mut out = Vec::new();
+        encode_response(&mut out, &Response::Ok).unwrap();
+        encode_response(&mut out, &Response::Val(b"xy".to_vec().into())).unwrap();
+        encode_response(&mut out, &Response::Nil).unwrap();
+        assert_eq!(&out[..], b"OK\nVAL 2\nxyNIL\n");
+        let mut r = BufReader::new(&out[..]);
+        assert_eq!(read_response(&mut r).unwrap(), Response::Ok);
+        assert_eq!(read_response(&mut r).unwrap(), Response::Val(b"xy".to_vec().into()));
+        assert_eq!(read_response(&mut r).unwrap(), Response::Nil);
     }
 
     #[test]

@@ -18,9 +18,10 @@
 //! client already wrote to the destination shard, nor resurrect a key a
 //! mid-migration `DELTOMB` tombstoned (see [`apply`]).
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::algorithms::ConsistentHasher;
+use crate::proto::{RequestRef, Response};
 use crate::runtime::PlacementRuntime;
 use crate::shard::ShardClient;
 
@@ -29,6 +30,9 @@ use crate::shard::ShardClient;
 pub struct Move {
     /// Object key.
     pub key: String,
+    /// The key's digest (`shard::key_digest`), carried from planning so
+    /// `apply` threads it into local shard calls instead of re-hashing.
+    pub digest: u64,
     /// Source bucket.
     pub from: u32,
     /// Destination bucket.
@@ -139,17 +143,18 @@ pub fn plan(keys: &[(String, u64)], path: PlanPath<'_>) -> Result<MigrationPlan>
                 let from = old.bucket(*digest);
                 let to = new.bucket(*digest);
                 if from != to {
-                    plan.moves.push(Move { key: key.clone(), from, to });
+                    plan.moves.push(Move { key: key.clone(), digest: *digest, from, to });
                 }
             }
         }
         PlanPath::Xla { runtime, n_old, n_new } => {
             let digests: Vec<u64> = keys.iter().map(|(_, d)| *d).collect();
             let outcome = runtime.migration_plan(&digests, n_old, n_new)?;
-            for (i, (key, _)) in keys.iter().enumerate() {
+            for (i, (key, digest)) in keys.iter().enumerate() {
                 if outcome.moved[i] != 0 {
                     plan.moves.push(Move {
                         key: key.clone(),
+                        digest: *digest,
                         from: outcome.old[i],
                         to: outcome.new[i],
                     });
@@ -163,7 +168,9 @@ pub fn plan(keys: &[(String, u64)], path: PlanPath<'_>) -> Result<MigrationPlan>
 /// Apply a plan: copy each key to its destination shard (`PUTNX` — a
 /// value a client already wrote to the destination mid-migration is newer
 /// than the copy we hold and must win), then delete the source copy.
-/// Returns the number of keys migrated.
+/// Values are `Arc<[u8]>`, so a local-to-local move transfers a refcount,
+/// not bytes; only remote hops serialize the payload.  Returns the number
+/// of keys migrated.
 ///
 /// A refused copy has two causes, told apart by re-reading the
 /// destination: a *live* value means a client write raced ahead (the
@@ -176,13 +183,26 @@ pub fn apply(plan: &MigrationPlan, shards: &[ShardClient]) -> Result<u64> {
     for m in &plan.moves {
         let src = &shards[m.from as usize];
         let dst = &shards[m.to as usize];
-        if let Some(value) = src.get(&m.key)? {
-            if dst.put_nx(&m.key, value)? {
-                src.del(&m.key)?;
+        let d = Some(m.digest);
+        let value = match src.call_ref(RequestRef::Get { key: &m.key }, d)? {
+            Response::Val(v) => v,
+            Response::Nil => continue,
+            other => bail!("unexpected GET response {other:?}"),
+        };
+        match dst.call_ref(RequestRef::PutNx { key: &m.key, value }, d)? {
+            Response::Ok => {
+                src.call_ref(RequestRef::Del { key: &m.key }, d)?;
                 moved += 1;
-            } else if dst.get(&m.key)?.is_some() {
-                src.del(&m.key)?;
             }
+            Response::Nil => {
+                if matches!(
+                    dst.call_ref(RequestRef::Get { key: &m.key }, d)?,
+                    Response::Val(_)
+                ) {
+                    src.call_ref(RequestRef::Del { key: &m.key }, d)?;
+                }
+            }
+            other => bail!("unexpected PUTNX response {other:?}"),
         }
     }
     Ok(moved)
@@ -237,7 +257,7 @@ mod tests {
         for (key, digest) in &keys {
             let b = binomial::lookup(*digest, 2, 6);
             if let ShardClient::Local(s) = &shards[b as usize] {
-                s.put(key.clone(), b"x".to_vec());
+                s.put(key, b"x".to_vec().into(), *digest);
             }
         }
         const BATCH: usize = 64;
@@ -271,9 +291,9 @@ mod tests {
         for (key, digest) in &keys {
             let from = binomial::lookup(*digest, 2, 6);
             let to = binomial::lookup(*digest, 3, 6);
-            shards[from as usize].put(key, b"stale".to_vec()).unwrap();
+            shards[from as usize].put(key, b"stale".to_vec().into()).unwrap();
             if raced.is_none() && from != to {
-                shards[to as usize].put(key, b"fresh".to_vec()).unwrap();
+                shards[to as usize].put(key, b"fresh".to_vec().into()).unwrap();
                 raced = Some((key.clone(), to));
             }
         }
@@ -284,8 +304,8 @@ mod tests {
         })
         .unwrap();
         assert_eq!(
-            shards[raced_to as usize].get(&raced_key).unwrap(),
-            Some(b"fresh".to_vec()),
+            shards[raced_to as usize].get(&raced_key).unwrap().as_deref(),
+            Some(&b"fresh"[..]),
             "migration clobbered a newer destination write"
         );
     }

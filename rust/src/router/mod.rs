@@ -4,13 +4,46 @@
 //! with the cluster's consistent-hashing engine (constant-time BinomialHash
 //! by default), and forwards to the owning shard.
 //!
+//! ## Lock-free, allocation-free data path
+//!
+//! BinomialHash decides placement in nanoseconds with 8 bytes of state;
+//! the routing around it is built to the same budget.  In steady state a
+//! local GET/PUT/DEL through [`Router::handle_ref`] performs **zero heap
+//! allocations** (pinned by `rust/tests/zero_alloc.rs`) and acquires **no
+//! lock** for snapshot access:
+//!
+//! * The current [`PlacementSnapshot`] is published through a hand-rolled
+//!   atomic `Arc` swap: an `AtomicPtr` whose pointer owns one strong
+//!   count.  [`Router::snapshot`] is one atomic pointer load plus a
+//!   refcount bump, guarded by a generation-validated reader gate: a
+//!   reader registers in the gate slot of the current generation's
+//!   parity, re-checks the generation, and only then touches the
+//!   pointer (retrying if a publish raced in).  A publisher swaps the
+//!   pointer, advances the generation, and drains the *superseded*
+//!   parity slot to zero before releasing the superseded snapshot's
+//!   stored count — that closes the classic load-then-bump race (a
+//!   reader holding the superseded raw pointer without having bumped its
+//!   count yet).  Readers arriving during the drain validate against the
+//!   new generation and land in the other slot, so publication cannot be
+//!   starved.
+//! * Requests are parsed into borrowed [`RequestRef`]s from a reusable
+//!   per-connection [`proto::RecvBuf`] — no per-line `String`, no key
+//!   copies — and responses are coalesced per pipelined burst (one flush
+//!   per drained read buffer, not per response).
+//! * Values are `Arc<[u8]>` end to end: a GET bumps a refcount, a PUT
+//!   moves the parsed buffer into the shard map, and the key digest the
+//!   router computes for placement is threaded into local shard calls so
+//!   the stripe map never re-hashes the key.
+//!
+//! Reclamation keeps the pre-existing protocol: superseded snapshots are
+//! quiesced with `Arc::strong_count` (now with bounded exponential
+//! backoff instead of a pure `yield_now` spin) before migration batches
+//! delete source copies.
+//!
 //! ## Concurrency model: epoch snapshots + incremental migration
 //!
-//! The data path routes with an immutable [`PlacementSnapshot`] behind an
-//! `Arc` swap (hand-rolled with `std::sync`: the `RwLock` is held only for
-//! the `Arc` clone/store — a few ns — never across shard I/O or migration
-//! work).  Topology changes are serialized by an admin mutex and proceed
-//! in three phases, none of which blocks GET/PUT/DEL:
+//! Topology changes are serialized by an admin mutex and proceed in three
+//! phases, none of which blocks GET/PUT/DEL:
 //!
 //! 1. **Publish** a new epoch whose snapshot routes with the *new* engine
 //!    — a [`ConsistentHasher::fork`](crate::algorithms::ConsistentHasher::fork)
@@ -20,38 +53,40 @@
 //!    land on the new owner and retire the old copy; DELs tombstone the
 //!    new owner (`DELTOMB`) and remove the old copy.
 //! 2. **Quiesce** the superseded snapshot (wait for its in-flight readers
-//!    — `Arc::strong_count` — to drain; readers hold a snapshot only for
-//!    one request, so this settles in microseconds), then run the
-//!    incremental migration: stream every source shard stripe-by-stripe
-//!    and move keys in bounded batches ([`rebalance::migrate_streaming`]),
-//!    optionally planning batches on the PJRT bulk artifacts.
+//!    to drain; readers hold a snapshot only for one request, so this
+//!    settles in microseconds), then run the incremental migration:
+//!    stream every source shard stripe-by-stripe and move keys in bounded
+//!    batches ([`rebalance::migrate_streaming`]), optionally planning
+//!    batches on the PJRT bulk artifacts.
 //! 3. **Settle**: publish the same epoch without the origin (and, on
 //!    scale-down, without the retiring shard handle), then purge the
 //!    migration tombstones.
 //!
-//! Because each epoch's engine is forked from the previous one, every
-//! registered engine scales — the stateless constant-time family and the
-//! stateful minimal-memory one (anchor, dx, memento) alike; there is no
-//! name-reconstruction whitelist.  Engines without exact minimal
-//! disruption (maglev, the modulo anti-baseline) scan every shard on
-//! scale-down instead of only the retiring one
-//! ([`ConsistentHasher::minimal_disruption`](crate::algorithms::ConsistentHasher::minimal_disruption)).
+//! Snapshot hold-time contract: the data path holds a snapshot for one
+//! shard call.  Aggregations that fan out over possibly-remote shards
+//! (`COUNT`, [`Router::shard_count`]) clone the shard handles and drop
+//! the snapshot *before* any I/O, so a slow shard can never stall a
+//! concurrent scale op at its quiesce barrier.
 //!
+//! Because each epoch's engine is forked from the previous one, every
+//! registered engine scales; engines without exact minimal disruption
+//! (maglev, the modulo anti-baseline) scan every shard on scale-down
+//! ([`ConsistentHasher::minimal_disruption`](crate::algorithms::ConsistentHasher::minimal_disruption)).
 //! The copy step (`PUTNX`) cannot clobber a newer client write, and the
 //! `DELTOMB` tombstone bars it from resurrecting a key whose DEL raced
-//! the migration sweep — the former "known anomaly" of this module.
+//! the migration sweep.
 
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::Ordering;
-use std::sync::{Arc, Mutex, RwLock};
-use std::time::Instant;
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Result};
 
 use crate::cluster::{Cluster, EventKind, MigrationOrigin, PlacementSnapshot, TopologyEvent};
 use crate::metrics::RouterMetrics;
-use crate::proto::{self, Request, Response};
+use crate::proto::{self, Request, RequestRef, Response, Value};
 use crate::rebalance::{self, MigrationStats, PlanPath};
 use crate::runtime::PlacementRuntime;
 use crate::shard::{Shard, ShardClient};
@@ -63,11 +98,32 @@ pub type ShardSpawner = Box<dyn Fn(u32) -> ShardClient + Send + Sync>;
 /// readers almost immediately, large enough to amortize planning.
 const MIGRATION_BATCH: usize = 512;
 
+// The atomic snapshot swap shares `PlacementSnapshot` across threads
+// through a raw pointer — outside the compiler's auto-trait reasoning —
+// so pin the bound it would otherwise infer from `Arc` alone.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<PlacementSnapshot>();
+};
+
 /// The router: published placement snapshot + metrics + optional XLA bulk
 /// runtime.
 pub struct Router {
-    /// Current snapshot; swapped atomically on each migration phase.
-    current: RwLock<Arc<PlacementSnapshot>>,
+    /// Current snapshot, published as a raw `Arc` pointer that owns one
+    /// strong count; swapped atomically on each migration phase.  Never
+    /// mutated through — only loaded (data path) and swapped (publish).
+    current: AtomicPtr<PlacementSnapshot>,
+    /// Publication generation; bumped by `publish` after each swap.
+    /// Readers validate it between registering in a gate slot and
+    /// touching the pointer, so a reader that raced a publish retries
+    /// instead of bumping a possibly-reclaimed snapshot.
+    generation: AtomicU64,
+    /// Readers currently inside the load-and-bump window, slotted by
+    /// generation parity.  `publish` bumps `generation` and then drains
+    /// the *superseded* parity slot to zero; readers validated against
+    /// the new generation live in the other slot, so the drain waits only
+    /// for the finite set of pre-swap readers and cannot be starved.
+    gate: [AtomicU64; 2],
     /// Serializes topology changes and owns the event log. The data path
     /// never touches this; `SCALEUP`/`SCALEDOWN` take it with `try_lock`
     /// and answer `ERR MIGRATING` when a change is already in flight.
@@ -95,7 +151,9 @@ impl Router {
     ) -> Arc<Self> {
         let (snapshot, events) = cluster.into_snapshot();
         Arc::new(Self {
-            current: RwLock::new(Arc::new(snapshot)),
+            current: AtomicPtr::new(Arc::into_raw(Arc::new(snapshot)).cast_mut()),
+            generation: AtomicU64::new(0),
+            gate: [AtomicU64::new(0), AtomicU64::new(0)],
             admin: Mutex::new(events),
             metrics: RouterMetrics::new(),
             bulk: bulk.map(Mutex::new),
@@ -103,28 +161,95 @@ impl Router {
         })
     }
 
-    /// The current placement snapshot (one `Arc` clone; never blocks on a
-    /// migration).
+    /// The current placement snapshot: one atomic pointer load plus a
+    /// refcount bump — no lock, no allocation, never blocks on a
+    /// migration.
     ///
     /// Hold-time contract: drop the handle promptly (one request's worth
     /// of work). Scale operations wait for superseded snapshots' readers
     /// to drain before deleting migrated source copies, so a handle held
     /// across blocking work stalls — not corrupts — topology changes.
     pub fn snapshot(&self) -> Arc<PlacementSnapshot> {
-        self.current.read().unwrap().clone()
+        // Generation-validated gate (SeqCst throughout): register in the
+        // current generation's slot, then re-check the generation.  If a
+        // publish raced in between, this slot may be (or already have
+        // been) drained — deregister and retry against the new
+        // generation.  A validated reader is provably covered: its slot
+        // increment is globally ordered before the publisher's generation
+        // bump (the validation load still saw the old generation), hence
+        // before the publisher's drain of that slot.
+        loop {
+            let gen = self.generation.load(Ordering::SeqCst);
+            let slot = &self.gate[(gen & 1) as usize];
+            slot.fetch_add(1, Ordering::SeqCst);
+            if self.generation.load(Ordering::SeqCst) == gen {
+                let ptr = self.current.load(Ordering::SeqCst);
+                // SAFETY: `ptr` came from `Arc::into_raw` and its strong
+                // count cannot reach zero here: the store itself owns one
+                // count, and `publish` releases it only after draining
+                // this generation's slot — which this reader occupies.
+                let snap = unsafe {
+                    Arc::increment_strong_count(ptr);
+                    Arc::from_raw(ptr.cast_const())
+                };
+                slot.fetch_sub(1, Ordering::SeqCst);
+                return snap;
+            }
+            slot.fetch_sub(1, Ordering::SeqCst);
+        }
     }
 
+    /// Publish a new snapshot: swap the pointer, advance the generation,
+    /// drain the superseded generation's reader slot, then release the
+    /// superseded snapshot's stored count (in-flight readers keep it
+    /// alive via their own counts until they drop).
+    ///
+    /// Callers are serialized by the admin mutex, so at most one drain is
+    /// in flight and the two gate slots strictly alternate.
     fn publish(&self, snapshot: PlacementSnapshot) {
-        *self.current.write().unwrap() = Arc::new(snapshot);
+        let new_ptr = Arc::into_raw(Arc::new(snapshot)).cast_mut();
+        let old_ptr = self.current.swap(new_ptr, Ordering::SeqCst);
+        let gen = self.generation.fetch_add(1, Ordering::SeqCst);
+        // Drain readers validated against the superseded generation: a
+        // finite set (new readers land in the other slot; a reader that
+        // raced us blips this slot once, fails validation, and leaves),
+        // each inside a nanoseconds-long load-and-bump window.
+        let slot = &self.gate[(gen & 1) as usize];
+        let mut spins = 0u32;
+        while slot.load(Ordering::SeqCst) != 0 {
+            if spins < 64 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+            spins += 1;
+        }
+        // SAFETY: `old_ptr` came from `Arc::into_raw` in `with_options`
+        // or a previous `publish`; reclaiming the store's single count.
+        // Every reader that loaded `old_ptr` has already bumped its own
+        // strong count (it was validated, so the drain waited for it).
+        unsafe { drop(Arc::from_raw(old_ptr.cast_const())) };
     }
 
     /// Wait until no in-flight request still routes with `snap` (all
     /// reader clones dropped). After a publish no new reader can acquire
     /// it, and readers hold a snapshot only for the duration of one shard
-    /// call, so this settles in microseconds.
+    /// call, so this normally settles in microseconds; the backoff ramps
+    /// from busy-spin through `yield_now` to bounded sleeps so a reader
+    /// stuck behind a slow remote shard doesn't burn a core here.
     fn quiesce(snap: &Arc<PlacementSnapshot>) {
+        let mut round = 0u32;
         while Arc::strong_count(snap) > 1 {
-            std::thread::yield_now();
+            match round {
+                0..=15 => std::hint::spin_loop(),
+                16..=63 => std::thread::yield_now(),
+                _ => {
+                    // 50µs, 100µs, ... capped at 3.2ms per wait.
+                    let exp = (round - 64).min(6);
+                    std::thread::sleep(Duration::from_micros(50u64 << exp));
+                }
+            }
+            round = round.saturating_add(1);
         }
     }
 
@@ -141,26 +266,44 @@ impl Router {
 
     /// Key count on one shard (telemetry; used by examples/benches).
     pub fn shard_count(&self, bucket: u32) -> Result<u64> {
-        let snap = self.snapshot();
-        ensure!((bucket as usize) < snap.shards.len(), "bucket {bucket} out of range");
-        snap.shards[bucket as usize].count()
+        // Clone the handle and drop the snapshot before the (possibly
+        // remote, slow) COUNT round-trip — see the hold-time contract.
+        let shard = {
+            let snap = self.snapshot();
+            ensure!((bucket as usize) < snap.shards.len(), "bucket {bucket} out of range");
+            snap.shards[bucket as usize].clone()
+        };
+        shard.count()
     }
 
-    /// Handle one data/admin request end-to-end.
+    /// Handle one data/admin request end-to-end (owned form; the server
+    /// loop and the zero-allocation fast path go through
+    /// [`handle_ref`](Self::handle_ref)).
     pub fn handle(&self, req: Request) -> Response {
+        self.handle_ref(req.as_view())
+    }
+
+    /// Handle one data/admin request end-to-end without taking ownership
+    /// of the key.  Steady-state GET/PUT/DEL through here is allocation-
+    /// and lock-free (one atomic snapshot load, digest reuse in the local
+    /// shard call, `Arc` value sharing).
+    pub fn handle_ref(&self, req: RequestRef<'_>) -> Response {
         let start = Instant::now();
         let resp = match req {
-            Request::Get { key } => self.data_get(key),
-            Request::Put { key, value } => self.data_put(key, value),
-            Request::Del { key } => self.data_del(key),
-            // COUNT sums every shard in the snapshot. Mid-migration a key
-            // sits on both owners between the copy and the source delete,
-            // so the total can transiently over-report by up to one batch.
-            Request::Count => {
-                let snap = self.snapshot();
+            RequestRef::Get { key } => self.data_get(key),
+            RequestRef::Put { key, value } => self.data_put(key, value),
+            RequestRef::Del { key } => self.data_del(key),
+            // COUNT sums every shard. The handles are cloned and the
+            // snapshot dropped before any shard I/O so a slow shard
+            // cannot stall a concurrent scale op's quiesce barrier.
+            // Mid-migration a key sits on both owners between the copy
+            // and the source delete, so the total can transiently
+            // over-report by up to one batch.
+            RequestRef::Count => {
+                let shards = self.snapshot().shards.clone();
                 let mut total = 0u64;
                 let mut err = None;
-                for s in &snap.shards {
+                for s in &shards {
                     match s.count() {
                         Ok(x) => total += x,
                         Err(e) => {
@@ -174,7 +317,7 @@ impl Router {
                     Some(e) => Response::Err(e.to_string()),
                 }
             }
-            Request::Stats => {
+            RequestRef::Stats => {
                 let snap = self.snapshot();
                 Response::Info(format!(
                     "epoch={} n={} algo={} state={} {}",
@@ -185,16 +328,16 @@ impl Router {
                     self.metrics.summary()
                 ))
             }
-            Request::Scan
-            | Request::ScanStripe { .. }
-            | Request::PutNx { .. }
-            | Request::DelTomb { .. }
-            | Request::PurgeTombs => Response::Err("shard-internal command".into()),
-            Request::ScaleUp => match self.scale_up() {
+            RequestRef::Scan
+            | RequestRef::ScanStripe { .. }
+            | RequestRef::PutNx { .. }
+            | RequestRef::DelTomb { .. }
+            | RequestRef::PurgeTombs => Response::Err("shard-internal command".into()),
+            RequestRef::ScaleUp => match self.scale_up() {
                 Ok(n) => Response::Num(n as u64),
                 Err(e) => Response::Err(e.to_string()),
             },
-            Request::ScaleDown => match self.scale_down() {
+            RequestRef::ScaleDown => match self.scale_down() {
                 Ok(n) => Response::Num(n as u64),
                 Err(e) => Response::Err(e.to_string()),
             },
@@ -207,7 +350,7 @@ impl Router {
     }
 
     /// Validate a key, count the op, and return its digest.
-    fn admit(&self, key: &str, counter: &std::sync::atomic::AtomicU64) -> Result<u64, Response> {
+    fn admit(&self, key: &str, counter: &AtomicU64) -> Result<u64, Response> {
         if !proto::valid_key(key) {
             return Err(Response::Err(format!("invalid key {key:?}")));
         }
@@ -215,8 +358,8 @@ impl Router {
         Ok(crate::hashing::xxhash64(key.as_bytes(), 0))
     }
 
-    fn data_get(&self, key: String) -> Response {
-        let digest = match self.admit(&key, &self.metrics.gets) {
+    fn data_get(&self, key: &str) -> Response {
+        let digest = match self.admit(key, &self.metrics.gets) {
             Ok(d) => d,
             Err(resp) => return resp,
         };
@@ -231,30 +374,34 @@ impl Router {
             // (PUTNX/PUT before the source DEL), so a key that vanished
             // from the old owner between our two probes is already
             // readable on the new one; the third probe closes that window.
-            Some((_, old_shard)) => match shard.call(Request::Get { key: key.clone() }) {
-                Ok(Response::Nil) => {
-                    self.metrics.dual_reads.fetch_add(1, Ordering::Relaxed);
-                    match old_shard.call(Request::Get { key: key.clone() }) {
-                        Ok(Response::Nil) => match shard.call(Request::Get { key }) {
+            Some((_, old_shard)) => {
+                match shard.call_ref(RequestRef::Get { key }, Some(digest)) {
+                    Ok(Response::Nil) => {
+                        self.metrics.dual_reads.fetch_add(1, Ordering::Relaxed);
+                        match old_shard.call_ref(RequestRef::Get { key }, Some(digest)) {
+                            Ok(Response::Nil) => {
+                                match shard.call_ref(RequestRef::Get { key }, Some(digest)) {
+                                    Ok(resp) => resp,
+                                    Err(e) => Response::Err(e.to_string()),
+                                }
+                            }
                             Ok(resp) => resp,
                             Err(e) => Response::Err(e.to_string()),
-                        },
-                        Ok(resp) => resp,
-                        Err(e) => Response::Err(e.to_string()),
+                        }
                     }
+                    Ok(resp) => resp,
+                    Err(e) => Response::Err(e.to_string()),
                 }
-                Ok(resp) => resp,
-                Err(e) => Response::Err(e.to_string()),
-            },
-            None => match shard.call(Request::Get { key }) {
+            }
+            None => match shard.call_ref(RequestRef::Get { key }, Some(digest)) {
                 Ok(resp) => resp,
                 Err(e) => Response::Err(e.to_string()),
             },
         }
     }
 
-    fn data_put(&self, key: String, value: Vec<u8>) -> Response {
-        let digest = match self.admit(&key, &self.metrics.puts) {
+    fn data_put(&self, key: &str, value: Value) -> Response {
+        let digest = match self.admit(key, &self.metrics.puts) {
             Ok(d) => d,
             Err(resp) => return resp,
         };
@@ -270,22 +417,22 @@ impl Router {
             // migration sweep (PUTNX) cannot clobber it, so a cleanup
             // failure must not turn a durable write into a client error.
             Some((_, old_shard)) => {
-                let resp = match shard.call(Request::Put { key: key.clone(), value }) {
+                let resp = match shard.call_ref(RequestRef::Put { key, value }, Some(digest)) {
                     Ok(resp) => resp,
                     Err(e) => return Response::Err(e.to_string()),
                 };
-                let _ = old_shard.call(Request::Del { key });
+                let _ = old_shard.call_ref(RequestRef::Del { key }, Some(digest));
                 resp
             }
-            None => match shard.call(Request::Put { key, value }) {
+            None => match shard.call_ref(RequestRef::Put { key, value }, Some(digest)) {
                 Ok(resp) => resp,
                 Err(e) => Response::Err(e.to_string()),
             },
         }
     }
 
-    fn data_del(&self, key: String) -> Response {
-        let digest = match self.admit(&key, &self.metrics.dels) {
+    fn data_del(&self, key: &str) -> Response {
+        let digest = match self.admit(key, &self.metrics.dels) {
             Ok(d) => d,
             Err(resp) => return resp,
         };
@@ -300,15 +447,15 @@ impl Router {
             // of this key cannot resurrect it after the delete wins the
             // race; the tombstones are purged when the migration settles.
             Some((_, old_shard)) => {
-                let new_r = shard.call(Request::DelTomb { key: key.clone() });
-                let old_r = old_shard.call(Request::Del { key });
+                let new_r = shard.call_ref(RequestRef::DelTomb { key }, Some(digest));
+                let old_r = old_shard.call_ref(RequestRef::Del { key }, Some(digest));
                 match (new_r, old_r) {
                     (Ok(Response::Ok), Ok(_)) | (Ok(_), Ok(Response::Ok)) => Response::Ok,
                     (Ok(resp), Ok(_)) => resp,
                     (Err(e), _) | (_, Err(e)) => Response::Err(e.to_string()),
                 }
             }
-            None => match shard.call(Request::Del { key }) {
+            None => match shard.call_ref(RequestRef::Del { key }, Some(digest)) {
                 Ok(resp) => resp,
                 Err(e) => Response::Err(e.to_string()),
             },
@@ -589,11 +736,18 @@ impl Router {
         sock.set_nodelay(true)?;
         let mut rd = BufReader::new(sock.try_clone()?);
         let mut wr = sock;
-        while let Some(req) = proto::read_request(&mut rd)? {
-            let resp = self.handle(req);
-            proto::write_response(&mut wr, &resp)?;
-        }
-        Ok(())
+        // Borrowed parsing + coalesced responses; recoverable parse
+        // failures answer ERR and keep the connection (see
+        // `proto::serve_framed`).
+        proto::serve_framed(&mut rd, &mut wr, |req| self.handle_ref(req))
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        // SAFETY: reclaiming the stored pointer's strong count; no reader
+        // can race a `&mut self` drop.
+        unsafe { drop(Arc::from_raw(self.current.load(Ordering::SeqCst).cast_const())) };
     }
 }
 
@@ -607,21 +761,65 @@ pub fn local_cluster(algorithm: &str, n: u32) -> Result<Cluster> {
 
 #[cfg(test)]
 mod tests {
+    use std::io::Write;
+
     use super::*;
+
+    fn val(bytes: &[u8]) -> Value {
+        bytes.to_vec().into()
+    }
 
     #[test]
     fn put_get_del_roundtrip() {
         let router = Router::new(local_cluster("binomial", 4).unwrap());
         assert_eq!(
-            router.handle(Request::Put { key: "a".into(), value: b"1".to_vec() }),
+            router.handle(Request::Put { key: "a".into(), value: val(b"1") }),
             Response::Ok
         );
-        assert_eq!(
-            router.handle(Request::Get { key: "a".into() }),
-            Response::Val(b"1".to_vec())
-        );
+        assert_eq!(router.handle(Request::Get { key: "a".into() }), Response::Val(val(b"1")));
         assert_eq!(router.handle(Request::Del { key: "a".into() }), Response::Ok);
         assert_eq!(router.handle(Request::Get { key: "a".into() }), Response::Nil);
+    }
+
+    #[test]
+    fn borrowed_and_owned_paths_agree() {
+        let router = Router::new(local_cluster("binomial", 4).unwrap());
+        assert_eq!(
+            router.handle_ref(RequestRef::Put { key: "b", value: val(b"2") }),
+            Response::Ok
+        );
+        assert_eq!(router.handle(Request::Get { key: "b".into() }), Response::Val(val(b"2")));
+        assert_eq!(router.handle_ref(RequestRef::Get { key: "b" }), Response::Val(val(b"2")));
+        assert_eq!(router.handle_ref(RequestRef::Del { key: "b" }), Response::Ok);
+        assert_eq!(router.handle(Request::Get { key: "b".into() }), Response::Nil);
+    }
+
+    #[test]
+    fn snapshot_swap_is_visible_and_refcounted() {
+        let router = Router::new(local_cluster("binomial", 2).unwrap());
+        let before = router.snapshot();
+        assert_eq!(before.epoch, 0);
+        // Publish a new snapshot while `before` is still held — exactly
+        // what a scale op's publish phase does under in-flight readers.
+        // (Not `scale_up()` here: that quiesces on outstanding handles
+        // and would wait for `before`.)
+        router.publish(PlacementSnapshot {
+            epoch: before.epoch + 1,
+            engine: before.engine.fork(),
+            shards: before.shards.clone(),
+            origin: None,
+        });
+        // The superseded handle stays valid after the swap...
+        assert_eq!(before.epoch, 0);
+        assert_eq!(before.engine.len(), 2);
+        // ...and new loads see the published epoch.
+        let after = router.snapshot();
+        assert_eq!(after.epoch, 1);
+        assert!(!Arc::ptr_eq(&before, &after));
+        // Two loads of an unchanged snapshot share the allocation.
+        assert!(Arc::ptr_eq(&after, &router.snapshot()));
+        // `before` is now the only holder of the superseded snapshot.
+        assert_eq!(Arc::strong_count(&before), 1);
     }
 
     #[test]
@@ -629,7 +827,7 @@ mod tests {
         let router = Router::new(local_cluster("binomial", 3).unwrap());
         for i in 0..500 {
             assert_eq!(
-                router.handle(Request::Put { key: format!("k{i}"), value: vec![i as u8] }),
+                router.handle(Request::Put { key: format!("k{i}"), value: val(&[i as u8]) }),
                 Response::Ok
             );
         }
@@ -637,7 +835,7 @@ mod tests {
         for i in 0..500 {
             assert_eq!(
                 router.handle(Request::Get { key: format!("k{i}") }),
-                Response::Val(vec![i as u8]),
+                Response::Val(val(&[i as u8])),
                 "key k{i} lost after scale-up"
             );
         }
@@ -647,13 +845,13 @@ mod tests {
     fn scale_down_preserves_all_keys() {
         let router = Router::new(local_cluster("binomial", 5).unwrap());
         for i in 0..500 {
-            router.handle(Request::Put { key: format!("k{i}"), value: vec![i as u8] });
+            router.handle(Request::Put { key: format!("k{i}"), value: val(&[i as u8]) });
         }
         assert_eq!(router.handle(Request::ScaleDown), Response::Num(4));
         for i in 0..500 {
             assert_eq!(
                 router.handle(Request::Get { key: format!("k{i}") }),
-                Response::Val(vec![i as u8]),
+                Response::Val(val(&[i as u8])),
                 "key k{i} lost after scale-down"
             );
         }
@@ -663,14 +861,14 @@ mod tests {
     fn scale_cycle_with_jumpback_engine() {
         let router = Router::new(local_cluster("jumpback", 4).unwrap());
         for i in 0..300 {
-            router.handle(Request::Put { key: format!("j{i}"), value: vec![1] });
+            router.handle(Request::Put { key: format!("j{i}"), value: val(&[1]) });
         }
         assert_eq!(router.handle(Request::ScaleUp), Response::Num(5));
         assert_eq!(router.handle(Request::ScaleDown), Response::Num(4));
         for i in 0..300 {
             assert_eq!(
                 router.handle(Request::Get { key: format!("j{i}") }),
-                Response::Val(vec![1])
+                Response::Val(val(&[1]))
             );
         }
     }
@@ -679,14 +877,14 @@ mod tests {
     fn scale_cycle_with_stateful_memento_engine() {
         let router = Router::new(local_cluster("memento", 3).unwrap());
         for i in 0..300 {
-            router.handle(Request::Put { key: format!("s{i}"), value: vec![i as u8] });
+            router.handle(Request::Put { key: format!("s{i}"), value: val(&[i as u8]) });
         }
         assert_eq!(router.handle(Request::ScaleUp), Response::Num(4));
         assert_eq!(router.handle(Request::ScaleDown), Response::Num(3));
         for i in 0..300 {
             assert_eq!(
                 router.handle(Request::Get { key: format!("s{i}") }),
-                Response::Val(vec![i as u8]),
+                Response::Val(val(&[i as u8])),
                 "key s{i} lost scaling a stateful engine"
             );
         }
@@ -699,13 +897,13 @@ mod tests {
         // shard, not just the retiring one.
         let router = Router::new(local_cluster("maglev", 4).unwrap());
         for i in 0..400 {
-            router.handle(Request::Put { key: format!("m{i}"), value: vec![i as u8] });
+            router.handle(Request::Put { key: format!("m{i}"), value: val(&[i as u8]) });
         }
         assert_eq!(router.handle(Request::ScaleDown), Response::Num(3));
         for i in 0..400 {
             assert_eq!(
                 router.handle(Request::Get { key: format!("m{i}") }),
-                Response::Val(vec![i as u8]),
+                Response::Val(val(&[i as u8])),
                 "key m{i} stranded after maglev scale-down"
             );
         }
@@ -732,10 +930,10 @@ mod tests {
         // The router must answer ERR before mutating or publishing
         // anything — and without poisoning the admin mutex, so later
         // admin ops still work.
+        use crate::algorithms::ConsistentHasher;
         use crate::algorithms::{
             anchor::AnchorHash, dx::DxHash, memento::MementoHash, FaultTolerant,
         };
-        use crate::algorithms::ConsistentHasher;
         let degraded: Vec<Box<dyn ConsistentHasher>> = vec![
             {
                 let mut e = AnchorHash::with_capacity(4, 8);
@@ -788,7 +986,7 @@ mod tests {
         let d = crate::hashing::xxhash64(key.as_bytes(), 0);
         let (from, to) = (old_engine.bucket(d), new_engine.bucket(d));
         assert_eq!(
-            router.handle(Request::Put { key: key.clone(), value: b"v".to_vec() }),
+            router.handle(Request::Put { key: key.clone(), value: val(b"v") }),
             Response::Ok
         );
 
@@ -860,7 +1058,7 @@ mod tests {
             Response::Err(_)
         ));
         assert!(matches!(
-            router.handle(Request::PutNx { key: "k".into(), value: vec![1] }),
+            router.handle(Request::PutNx { key: "k".into(), value: val(&[1]) }),
             Response::Err(_)
         ));
         assert!(matches!(
@@ -874,9 +1072,32 @@ mod tests {
     fn count_sums_shards() {
         let router = Router::new(local_cluster("binomial", 3).unwrap());
         for i in 0..64 {
-            router.handle(Request::Put { key: format!("c{i}"), value: vec![0] });
+            router.handle(Request::Put { key: format!("c{i}"), value: val(&[0]) });
         }
         assert_eq!(router.handle(Request::Count), Response::Num(64));
+    }
+
+    #[test]
+    fn count_does_not_hold_the_snapshot_across_shard_io() {
+        // COUNT must clone the handles and release the snapshot before
+        // summing — otherwise a slow shard would stall a concurrent scale
+        // op's quiesce barrier.  With local shards "slow I/O" can't be
+        // injected directly, so pin the observable contract: while a
+        // COUNT's result is still being consumed, the router can publish
+        // and fully settle a topology change.
+        let router = Router::new(local_cluster("binomial", 3).unwrap());
+        for i in 0..100 {
+            router.handle(Request::Put { key: format!("h{i}"), value: val(&[1]) });
+        }
+        let before = router.snapshot();
+        let counted = router.handle(Request::Count);
+        // The snapshot handle from before the COUNT is the only
+        // outstanding one — COUNT itself left nothing pinned.
+        assert_eq!(Arc::strong_count(&before), 2, "COUNT leaked a snapshot reference");
+        drop(before);
+        assert_eq!(counted, Response::Num(100));
+        router.scale_up().unwrap();
+        assert_eq!(router.handle(Request::Count), Response::Num(100));
     }
 
     #[test]
@@ -891,10 +1112,33 @@ mod tests {
         let sock = TcpStream::connect(addr).unwrap();
         let mut rd = BufReader::new(sock.try_clone().unwrap());
         let mut wr = sock;
-        proto::write_request(&mut wr, &Request::Put { key: "x".into(), value: b"yz".to_vec() })
+        proto::write_request(&mut wr, &Request::Put { key: "x".into(), value: val(b"yz") })
             .unwrap();
         assert_eq!(proto::read_response(&mut rd).unwrap(), Response::Ok);
         proto::write_request(&mut wr, &Request::Get { key: "x".into() }).unwrap();
-        assert_eq!(proto::read_response(&mut rd).unwrap(), Response::Val(b"yz".to_vec()));
+        assert_eq!(proto::read_response(&mut rd).unwrap(), Response::Val(val(b"yz")));
+    }
+
+    #[test]
+    fn router_malformed_command_keeps_the_connection() {
+        let router = Router::new(local_cluster("binomial", 2).unwrap());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let _ = router.serve(listener);
+        });
+
+        let sock = TcpStream::connect(addr).unwrap();
+        let mut rd = BufReader::new(sock.try_clone().unwrap());
+        let mut wr = sock;
+        wr.write_all(b"FROB x\n").unwrap();
+        wr.flush().unwrap();
+        assert!(matches!(proto::read_response(&mut rd).unwrap(), Response::Err(_)));
+        // The connection survived: a valid request still round-trips.
+        proto::write_request(&mut wr, &Request::Put { key: "y".into(), value: val(b"1") })
+            .unwrap();
+        assert_eq!(proto::read_response(&mut rd).unwrap(), Response::Ok);
+        proto::write_request(&mut wr, &Request::Get { key: "y".into() }).unwrap();
+        assert_eq!(proto::read_response(&mut rd).unwrap(), Response::Val(val(b"1")));
     }
 }

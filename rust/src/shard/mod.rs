@@ -6,6 +6,19 @@
 //! [`ShardClient`] — the router uses the same client type for both, so
 //! the examples run a full cluster in one process while production
 //! deploys one shard per host (`binhashd shard`).
+//!
+//! ## Zero-allocation steady state
+//!
+//! Values are stored as [`Value`] (`Arc<[u8]>`): a GET clones the `Arc`
+//! (refcount bump, never a byte copy) and a PUT moves the caller's buffer
+//! in; overwriting an existing key reuses the stored key `String`, so the
+//! steady-state local GET/PUT/DEL path performs no heap allocation (pinned
+//! by `rust/tests/zero_alloc.rs`).  The stripe maps hash with
+//! [`XxBuildHasher`](crate::hashing::XxBuildHasher) instead of SipHash,
+//! and every keyed operation takes the key's xxhash64 digest — the router
+//! passes the digest it already computed for placement, so a local call
+//! hashes the key exactly once end to end (remote shards recompute it
+//! from the wire via [`key_digest`]).
 
 use std::collections::{HashMap, HashSet};
 use std::io::BufReader;
@@ -15,22 +28,36 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
-use crate::proto::{self, Request, Response};
+use crate::hashing::XxBuildHasher;
+use crate::proto::{self, Request, RequestRef, Response, Value};
 
 /// Number of lock stripes (power of two). Public because the incremental
 /// rebalancer iterates stripes (`SCANSTRIPE <i>` for `i < STRIPES`); both
 /// ends of the wire share this constant.
 pub const STRIPES: usize = 16;
 
+/// Decorrelates stripe selection from the placement engine's use of the
+/// same digest (otherwise low digest bits could bias both).
+const STRIPE_SEED: u64 = 0x517;
+
+/// The canonical key → digest map (xxhash64, seed 0).  Placement, stripe
+/// selection and migration planning all derive from this one digest, so
+/// both ends of the wire agree on stripe membership and a local call can
+/// reuse the router's already-computed digest.
+#[inline]
+pub fn key_digest(key: &str) -> u64 {
+    crate::hashing::xxhash64(key.as_bytes(), 0)
+}
+
 /// One lock stripe: live values plus migration tombstones.
 #[derive(Debug, Default)]
 struct Stripe {
-    live: HashMap<String, Vec<u8>>,
+    live: HashMap<String, Value, XxBuildHasher>,
     /// Keys deleted by `DELTOMB` while a migration was in flight. A
     /// tombstone bars `PUTNX` (the migration copy step) from
     /// resurrecting the deleted key; a client `PUT` clears it, and the
     /// router purges the whole set once the migration settles.
-    tombs: HashSet<String>,
+    tombs: HashSet<String, XxBuildHasher>,
 }
 
 /// An in-memory KV shard with striped locking.
@@ -52,24 +79,31 @@ impl Shard {
         })
     }
 
-    fn stripe(&self, key: &str) -> &Mutex<Stripe> {
-        let h = crate::hashing::xxhash64(key.as_bytes(), 0x517) as usize;
+    fn stripe(&self, digest: u64) -> &Mutex<Stripe> {
+        let h = crate::hashing::splitmix64(digest ^ STRIPE_SEED) as usize;
         &self.stripes[h & (STRIPES - 1)]
     }
 
-    /// Fetch a value.
-    pub fn get(&self, key: &str) -> Option<Vec<u8>> {
+    /// Fetch a value (a refcount bump of the stored buffer, never a copy).
+    /// `digest` must be [`key_digest`]`(key)`.
+    pub fn get(&self, key: &str, digest: u64) -> Option<Value> {
         self.ops.fetch_add(1, Ordering::Relaxed);
-        self.stripe(key).lock().unwrap().live.get(key).cloned()
+        self.stripe(digest).lock().unwrap().live.get(key).cloned()
     }
 
-    /// Store a value (clears any tombstone: a client write is always
-    /// newer than the delete the tombstone recorded).
-    pub fn put(&self, key: String, value: Vec<u8>) {
+    /// Store a value, moving the buffer in (clears any tombstone: a client
+    /// write is always newer than the delete the tombstone recorded).
+    /// Overwriting an existing key reuses its stored `String` — no
+    /// allocation in steady state.
+    pub fn put(&self, key: &str, value: Value, digest: u64) {
         self.ops.fetch_add(1, Ordering::Relaxed);
-        let mut s = self.stripe(&key).lock().unwrap();
-        s.tombs.remove(&key);
-        s.live.insert(key, value);
+        let mut s = self.stripe(digest).lock().unwrap();
+        s.tombs.remove(key);
+        if let Some(slot) = s.live.get_mut(key) {
+            *slot = value;
+        } else {
+            s.live.insert(key.to_owned(), value);
+        }
     }
 
     /// Store a value only if the key is absent *and* not tombstoned;
@@ -79,21 +113,21 @@ impl Shard {
     /// overwrite a newer value a client already wrote to this shard, and
     /// must never resurrect a key a client deleted while the copy was in
     /// flight (the tombstone records that delete).
-    pub fn put_nx(&self, key: String, value: Vec<u8>) -> bool {
+    pub fn put_nx(&self, key: &str, value: Value, digest: u64) -> bool {
         self.ops.fetch_add(1, Ordering::Relaxed);
-        let mut s = self.stripe(&key).lock().unwrap();
-        if s.live.contains_key(&key) || s.tombs.contains(&key) {
+        let mut s = self.stripe(digest).lock().unwrap();
+        if s.live.contains_key(key) || s.tombs.contains(key) {
             false
         } else {
-            s.live.insert(key, value);
+            s.live.insert(key.to_owned(), value);
             true
         }
     }
 
     /// Delete a key; `true` if it existed.
-    pub fn del(&self, key: &str) -> bool {
+    pub fn del(&self, key: &str, digest: u64) -> bool {
         self.ops.fetch_add(1, Ordering::Relaxed);
-        self.stripe(key).lock().unwrap().live.remove(key).is_some()
+        self.stripe(digest).lock().unwrap().live.remove(key).is_some()
     }
 
     /// Delete a key and leave a tombstone; `true` if it existed.
@@ -101,9 +135,9 @@ impl Shard {
     /// The router's mid-migration delete: the tombstone guarantees that a
     /// migration copy (`PUTNX`) holding the pre-delete value cannot bring
     /// the key back after this delete wins the race.
-    pub fn del_tomb(&self, key: &str) -> bool {
+    pub fn del_tomb(&self, key: &str, digest: u64) -> bool {
         self.ops.fetch_add(1, Ordering::Relaxed);
-        let mut s = self.stripe(key).lock().unwrap();
+        let mut s = self.stripe(digest).lock().unwrap();
         s.tombs.insert(key.to_string());
         s.live.remove(key).is_some()
     }
@@ -158,51 +192,67 @@ impl Shard {
         )
     }
 
-    /// Handle one parsed request (shared by TCP and in-process paths).
-    pub fn handle(&self, req: Request) -> Response {
+    /// Handle one borrowed request.  `digest` is the key's [`key_digest`]
+    /// when the caller already computed it (the router's local fast path);
+    /// `None` makes the shard hash the key itself (the wire path).
+    pub fn handle_ref(&self, req: RequestRef<'_>, digest: Option<u64>) -> Response {
         match req {
-            Request::Get { key } => match self.get(&key) {
-                Some(v) => Response::Val(v),
-                None => Response::Nil,
-            },
-            Request::Put { key, value } => {
-                self.put(key, value);
+            RequestRef::Get { key } => {
+                let d = digest.unwrap_or_else(|| key_digest(key));
+                match self.get(key, d) {
+                    Some(v) => Response::Val(v),
+                    None => Response::Nil,
+                }
+            }
+            RequestRef::Put { key, value } => {
+                let d = digest.unwrap_or_else(|| key_digest(key));
+                self.put(key, value, d);
                 Response::Ok
             }
-            Request::PutNx { key, value } => {
-                if self.put_nx(key, value) {
+            RequestRef::PutNx { key, value } => {
+                let d = digest.unwrap_or_else(|| key_digest(key));
+                if self.put_nx(key, value, d) {
                     Response::Ok
                 } else {
                     Response::Nil
                 }
             }
-            Request::Del { key } => {
-                if self.del(&key) {
+            RequestRef::Del { key } => {
+                let d = digest.unwrap_or_else(|| key_digest(key));
+                if self.del(key, d) {
                     Response::Ok
                 } else {
                     Response::Nil
                 }
             }
-            Request::DelTomb { key } => {
-                if self.del_tomb(&key) {
+            RequestRef::DelTomb { key } => {
+                let d = digest.unwrap_or_else(|| key_digest(key));
+                if self.del_tomb(key, d) {
                     Response::Ok
                 } else {
                     Response::Nil
                 }
             }
-            Request::PurgeTombs => Response::Num(self.purge_tombstones()),
-            Request::Scan => Response::Keys(self.scan()),
-            Request::ScanStripe { stripe } => {
+            RequestRef::PurgeTombs => Response::Num(self.purge_tombstones()),
+            RequestRef::Scan => Response::Keys(self.scan()),
+            RequestRef::ScanStripe { stripe } => {
                 if (stripe as usize) < STRIPES {
                     Response::Keys(self.scan_stripe(stripe as usize))
                 } else {
                     Response::Err(format!("stripe {stripe} out of range (< {STRIPES})"))
                 }
             }
-            Request::Count => Response::Num(self.count()),
-            Request::Stats => Response::Info(self.stats()),
-            Request::ScaleUp | Request::ScaleDown => Response::Err("not a coordinator".into()),
+            RequestRef::Count => Response::Num(self.count()),
+            RequestRef::Stats => Response::Info(self.stats()),
+            RequestRef::ScaleUp | RequestRef::ScaleDown => {
+                Response::Err("not a coordinator".into())
+            }
         }
+    }
+
+    /// Handle one owned request (admin/test convenience).
+    pub fn handle(&self, req: &Request) -> Response {
+        self.handle_ref(req.as_view(), None)
     }
 }
 
@@ -221,11 +271,9 @@ fn serve_conn(shard: Arc<Shard>, sock: TcpStream) -> Result<()> {
     sock.set_nodelay(true)?;
     let mut rd = BufReader::new(sock.try_clone()?);
     let mut wr = sock;
-    while let Some(req) = proto::read_request(&mut rd)? {
-        let resp = shard.handle(req);
-        proto::write_response(&mut wr, &resp)?;
-    }
-    Ok(())
+    // Borrowed parsing + coalesced responses; recoverable parse failures
+    // answer ERR and keep the connection (see `proto::serve_framed`).
+    proto::serve_framed(&mut rd, &mut wr, |req| shard.handle_ref(req, None))
 }
 
 /// Client handle to a shard: in-process or remote TCP (pooled connections).
@@ -259,7 +307,7 @@ impl RemotePool {
         })
     }
 
-    fn call(&self, req: &Request) -> Result<Response> {
+    fn call(&self, req: &RequestRef<'_>) -> Result<Response> {
         let i = self.next.fetch_add(1, Ordering::Relaxed) % self.conns.len();
         let mut slot = self.conns[i].lock().unwrap();
         if slot.is_none() {
@@ -270,7 +318,7 @@ impl RemotePool {
         }
         let conn = slot.as_mut().unwrap();
         let result = (|| {
-            proto::write_request(&mut conn.wr, req)?;
+            proto::write_request_ref(&mut conn.wr, req)?;
             proto::read_response(&mut conn.rd)
         })();
         if result.is_err() {
@@ -281,34 +329,41 @@ impl RemotePool {
 }
 
 impl ShardClient {
-    /// Issue a request and await the response.
-    pub fn call(&self, req: Request) -> Result<Response> {
+    /// Issue a borrowed request.  `digest` is the key's [`key_digest`]
+    /// when already computed: a local shard reuses it (no re-hash); a
+    /// remote shard serializes the request and hashes from the wire.
+    pub fn call_ref(&self, req: RequestRef<'_>, digest: Option<u64>) -> Result<Response> {
         match self {
-            ShardClient::Local(shard) => Ok(shard.handle(req)),
+            ShardClient::Local(shard) => Ok(shard.handle_ref(req, digest)),
             ShardClient::Remote(pool) => pool.call(&req),
         }
     }
 
+    /// Issue an owned request and await the response.
+    pub fn call(&self, req: &Request) -> Result<Response> {
+        self.call_ref(req.as_view(), None)
+    }
+
     /// Typed GET.
-    pub fn get(&self, key: &str) -> Result<Option<Vec<u8>>> {
-        match self.call(Request::Get { key: key.into() })? {
+    pub fn get(&self, key: &str) -> Result<Option<Value>> {
+        match self.call_ref(RequestRef::Get { key }, None)? {
             Response::Val(v) => Ok(Some(v)),
             Response::Nil => Ok(None),
             other => Err(anyhow!("unexpected response {other:?}")),
         }
     }
 
-    /// Typed PUT.
-    pub fn put(&self, key: &str, value: Vec<u8>) -> Result<()> {
-        match self.call(Request::Put { key: key.into(), value })? {
+    /// Typed PUT (the value buffer is moved/shared, never copied locally).
+    pub fn put(&self, key: &str, value: Value) -> Result<()> {
+        match self.call_ref(RequestRef::Put { key, value }, None)? {
             Response::Ok => Ok(()),
             other => Err(anyhow!("unexpected response {other:?}")),
         }
     }
 
     /// Typed PUTNX; `true` if the value was stored (key was absent).
-    pub fn put_nx(&self, key: &str, value: Vec<u8>) -> Result<bool> {
-        match self.call(Request::PutNx { key: key.into(), value })? {
+    pub fn put_nx(&self, key: &str, value: Value) -> Result<bool> {
+        match self.call_ref(RequestRef::PutNx { key, value }, None)? {
             Response::Ok => Ok(true),
             Response::Nil => Ok(false),
             other => Err(anyhow!("unexpected response {other:?}")),
@@ -317,7 +372,7 @@ impl ShardClient {
 
     /// Typed DEL; `true` if the key existed.
     pub fn del(&self, key: &str) -> Result<bool> {
-        match self.call(Request::Del { key: key.into() })? {
+        match self.call_ref(RequestRef::Del { key }, None)? {
             Response::Ok => Ok(true),
             Response::Nil => Ok(false),
             other => Err(anyhow!("unexpected response {other:?}")),
@@ -327,7 +382,7 @@ impl ShardClient {
     /// Typed DELTOMB: delete and leave a migration tombstone; `true` if
     /// the key existed.
     pub fn del_tomb(&self, key: &str) -> Result<bool> {
-        match self.call(Request::DelTomb { key: key.into() })? {
+        match self.call_ref(RequestRef::DelTomb { key }, None)? {
             Response::Ok => Ok(true),
             Response::Nil => Ok(false),
             other => Err(anyhow!("unexpected response {other:?}")),
@@ -336,7 +391,7 @@ impl ShardClient {
 
     /// Typed PURGETOMBS; returns how many tombstones were cleared.
     pub fn purge_tombstones(&self) -> Result<u64> {
-        match self.call(Request::PurgeTombs)? {
+        match self.call_ref(RequestRef::PurgeTombs, None)? {
             Response::Num(x) => Ok(x),
             other => Err(anyhow!("unexpected response {other:?}")),
         }
@@ -344,7 +399,7 @@ impl ShardClient {
 
     /// Typed SCAN.
     pub fn scan(&self) -> Result<Vec<String>> {
-        match self.call(Request::Scan)? {
+        match self.call_ref(RequestRef::Scan, None)? {
             Response::Keys(k) => Ok(k),
             other => Err(anyhow!("unexpected response {other:?}")),
         }
@@ -352,7 +407,7 @@ impl ShardClient {
 
     /// Typed SCANSTRIPE.
     pub fn scan_stripe(&self, stripe: u32) -> Result<Vec<String>> {
-        match self.call(Request::ScanStripe { stripe })? {
+        match self.call_ref(RequestRef::ScanStripe { stripe }, None)? {
             Response::Keys(k) => Ok(k),
             other => Err(anyhow!("unexpected response {other:?}")),
         }
@@ -360,7 +415,7 @@ impl ShardClient {
 
     /// Typed COUNT.
     pub fn count(&self) -> Result<u64> {
-        match self.call(Request::Count)? {
+        match self.call_ref(RequestRef::Count, None)? {
             Response::Num(x) => Ok(x),
             other => Err(anyhow!("unexpected response {other:?}")),
         }
@@ -369,27 +424,58 @@ impl ShardClient {
 
 #[cfg(test)]
 mod tests {
+    use std::io::Write;
+
     use super::*;
+
+    /// Digest shorthand for direct `Shard` calls.
+    fn kd(key: &str) -> u64 {
+        key_digest(key)
+    }
+
+    fn val(bytes: &[u8]) -> Value {
+        bytes.to_vec().into()
+    }
 
     #[test]
     fn shard_basic_ops() {
         let s = Shard::new(0);
-        assert_eq!(s.get("a"), None);
-        s.put("a".into(), b"1".to_vec());
-        s.put("b".into(), b"2".to_vec());
-        assert_eq!(s.get("a"), Some(b"1".to_vec()));
+        assert_eq!(s.get("a", kd("a")), None);
+        s.put("a", val(b"1"), kd("a"));
+        s.put("b", val(b"2"), kd("b"));
+        assert_eq!(s.get("a", kd("a")).as_deref(), Some(&b"1"[..]));
         assert_eq!(s.count(), 2);
-        assert!(s.del("a"));
-        assert!(!s.del("a"));
+        assert!(s.del("a", kd("a")));
+        assert!(!s.del("a", kd("a")));
         assert_eq!(s.count(), 1);
         assert_eq!(s.scan(), vec!["b".to_string()]);
     }
 
     #[test]
+    fn overwrite_reuses_the_stored_key() {
+        let s = Shard::new(11);
+        s.put("k", val(b"old"), kd("k"));
+        s.put("k", val(b"new"), kd("k"));
+        assert_eq!(s.get("k", kd("k")).as_deref(), Some(&b"new"[..]));
+        assert_eq!(s.count(), 1);
+    }
+
+    #[test]
+    fn get_shares_the_stored_buffer() {
+        // The zero-copy contract: two GETs of one key return the same
+        // allocation, not two copies.
+        let s = Shard::new(12);
+        s.put("k", val(b"payload"), kd("k"));
+        let a = s.get("k", kd("k")).unwrap();
+        let b = s.get("k", kd("k")).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "GET must bump a refcount, not copy");
+    }
+
+    #[test]
     fn local_client_roundtrip() {
         let c = ShardClient::Local(Shard::new(1));
-        c.put("k", b"v".to_vec()).unwrap();
-        assert_eq!(c.get("k").unwrap(), Some(b"v".to_vec()));
+        c.put("k", val(b"v")).unwrap();
+        assert_eq!(c.get("k").unwrap().as_deref(), Some(&b"v"[..]));
         assert_eq!(c.count().unwrap(), 1);
         assert!(c.del("k").unwrap());
         assert_eq!(c.get("k").unwrap(), None);
@@ -406,8 +492,8 @@ mod tests {
         });
 
         let c = ShardClient::Remote(RemotePool::new(addr, 2));
-        c.put("x", vec![9u8; 1000]).unwrap();
-        assert_eq!(c.get("x").unwrap(), Some(vec![9u8; 1000]));
+        c.put("x", vec![9u8; 1000].into()).unwrap();
+        assert_eq!(c.get("x").unwrap().as_deref(), Some(&vec![9u8; 1000][..]));
         assert_eq!(c.count().unwrap(), 1);
         assert_eq!(c.scan().unwrap(), vec!["x".to_string()]);
     }
@@ -428,7 +514,7 @@ mod tests {
             let c = ShardClient::Remote(pool.clone());
             handles.push(std::thread::spawn(move || {
                 for i in 0..50 {
-                    c.put(&format!("k-{t}-{i}"), vec![t]).unwrap();
+                    c.put(&format!("k-{t}-{i}"), vec![t].into()).unwrap();
                 }
             }));
         }
@@ -439,41 +525,107 @@ mod tests {
     }
 
     #[test]
+    fn malformed_command_answers_err_and_keeps_the_connection() {
+        // A typo'd command must not tear down the TCP session: the server
+        // answers ERR and the next (valid) request still works.
+        let s = Shard::new(13);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let srv = s.clone();
+        std::thread::spawn(move || {
+            let _ = serve(srv, listener);
+        });
+
+        let sock = TcpStream::connect(addr).unwrap();
+        let mut rd = BufReader::new(sock.try_clone().unwrap());
+        let mut wr = sock;
+        wr.write_all(b"BOGUS x\n").unwrap();
+        wr.flush().unwrap();
+        assert!(matches!(proto::read_response(&mut rd).unwrap(), Response::Err(_)));
+        wr.write_all(b"SCANSTRIPE notanumber\n").unwrap();
+        wr.flush().unwrap();
+        assert!(matches!(proto::read_response(&mut rd).unwrap(), Response::Err(_)));
+        proto::write_request(&mut wr, &Request::Put { key: "x".into(), value: val(b"1") })
+            .unwrap();
+        assert_eq!(proto::read_response(&mut rd).unwrap(), Response::Ok);
+        assert_eq!(s.count(), 1);
+    }
+
+    #[test]
+    fn pipelined_burst_is_answered_in_order() {
+        // The server coalesces responses and flushes once per drained
+        // burst; the client must still see every response, in order.
+        let s = Shard::new(14);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let srv = s.clone();
+        std::thread::spawn(move || {
+            let _ = serve(srv, listener);
+        });
+
+        let sock = TcpStream::connect(addr).unwrap();
+        let mut rd = BufReader::new(sock.try_clone().unwrap());
+        let mut wr = sock;
+        let mut burst = Vec::new();
+        for i in 0..32 {
+            proto::write_request(
+                &mut burst,
+                &Request::Put { key: format!("p{i}"), value: val(&[i as u8]) },
+            )
+            .unwrap();
+        }
+        for i in 0..32 {
+            proto::write_request(&mut burst, &Request::Get { key: format!("p{i}") }).unwrap();
+        }
+        wr.write_all(&burst).unwrap();
+        wr.flush().unwrap();
+        for _ in 0..32 {
+            assert_eq!(proto::read_response(&mut rd).unwrap(), Response::Ok);
+        }
+        for i in 0..32 {
+            assert_eq!(
+                proto::read_response(&mut rd).unwrap(),
+                Response::Val(val(&[i as u8]))
+            );
+        }
+    }
+
+    #[test]
     fn shard_rejects_admin_commands() {
         let s = Shard::new(4);
-        assert!(matches!(s.handle(Request::ScaleUp), Response::Err(_)));
+        assert!(matches!(s.handle(&Request::ScaleUp), Response::Err(_)));
     }
 
     #[test]
     fn put_nx_never_overwrites() {
         let s = Shard::new(5);
-        assert!(s.put_nx("k".into(), b"old".to_vec()));
-        assert!(!s.put_nx("k".into(), b"new".to_vec()));
-        assert_eq!(s.get("k"), Some(b"old".to_vec()));
+        assert!(s.put_nx("k", val(b"old"), kd("k")));
+        assert!(!s.put_nx("k", val(b"new"), kd("k")));
+        assert_eq!(s.get("k", kd("k")).as_deref(), Some(&b"old"[..]));
         let c = ShardClient::Local(s);
-        assert!(!c.put_nx("k", b"newer".to_vec()).unwrap());
-        assert!(c.put_nx("fresh", b"v".to_vec()).unwrap());
+        assert!(!c.put_nx("k", val(b"newer")).unwrap());
+        assert!(c.put_nx("fresh", val(b"v")).unwrap());
     }
 
     #[test]
     fn tombstone_bars_put_nx_until_purged() {
         let s = Shard::new(7);
-        s.put("k".into(), b"v".to_vec());
-        assert!(s.del_tomb("k"));
-        assert_eq!(s.get("k"), None);
+        s.put("k", val(b"v"), kd("k"));
+        assert!(s.del_tomb("k", kd("k")));
+        assert_eq!(s.get("k", kd("k")), None);
         assert_eq!(s.count(), 0);
         // The migration copy must be refused: the delete won the race.
-        assert!(!s.put_nx("k".into(), b"stale".to_vec()));
-        assert_eq!(s.get("k"), None);
+        assert!(!s.put_nx("k", val(b"stale"), kd("k")));
+        assert_eq!(s.get("k", kd("k")), None);
         // A tombstone for a never-stored key works the same way.
-        assert!(!s.del_tomb("ghost"));
-        assert!(!s.put_nx("ghost".into(), b"stale".to_vec()));
+        assert!(!s.del_tomb("ghost", kd("ghost")));
+        assert!(!s.put_nx("ghost", val(b"stale"), kd("ghost")));
         // A client PUT is newer than the tombstoned delete and clears it.
-        s.put("k".into(), b"fresh".to_vec());
-        assert_eq!(s.get("k"), Some(b"fresh".to_vec()));
+        s.put("k", val(b"fresh"), kd("k"));
+        assert_eq!(s.get("k", kd("k")).as_deref(), Some(&b"fresh"[..]));
         // Settling purges the remaining tombstone and re-enables PUTNX.
         assert_eq!(s.purge_tombstones(), 1);
-        assert!(s.put_nx("ghost".into(), b"reborn".to_vec()));
+        assert!(s.put_nx("ghost", val(b"reborn"), kd("ghost")));
         assert!(s.stats().contains("tombs=0"));
     }
 
@@ -484,13 +636,17 @@ mod tests {
         // both owners, then the sweep's PUTNX arrives at the destination.
         let src = Shard::new(8);
         let dst = Shard::new(9);
-        src.put("k".into(), b"v".to_vec());
-        let copied = src.get("k").unwrap(); // sweep reads the source
-        assert!(!dst.del_tomb("k")); // client DEL, new owner first (no copy there yet)
-        assert!(src.del("k")); // ... then old owner
-        assert!(!dst.put_nx("k".into(), copied)); // sweep copy refused
-        assert_eq!(dst.get("k"), None, "DEL racing the migration copy resurrected the key");
-        assert_eq!(src.get("k"), None);
+        src.put("k", val(b"v"), kd("k"));
+        let copied = src.get("k", kd("k")).unwrap(); // sweep reads the source
+        assert!(!dst.del_tomb("k", kd("k"))); // client DEL, new owner first (no copy there yet)
+        assert!(src.del("k", kd("k"))); // ... then old owner
+        assert!(!dst.put_nx("k", copied, kd("k"))); // sweep copy refused
+        assert_eq!(
+            dst.get("k", kd("k")),
+            None,
+            "DEL racing the migration copy resurrected the key"
+        );
+        assert_eq!(src.get("k", kd("k")), None);
     }
 
     #[test]
@@ -504,19 +660,20 @@ mod tests {
         });
 
         let c = ShardClient::Remote(RemotePool::new(addr, 1));
-        c.put("x", b"1".to_vec()).unwrap();
+        c.put("x", val(b"1")).unwrap();
         assert!(c.del_tomb("x").unwrap());
-        assert!(!c.put_nx("x", b"stale".to_vec()).unwrap());
+        assert!(!c.put_nx("x", val(b"stale")).unwrap());
         assert_eq!(c.get("x").unwrap(), None);
         assert_eq!(c.purge_tombstones().unwrap(), 1);
-        assert!(c.put_nx("x", b"new".to_vec()).unwrap());
+        assert!(c.put_nx("x", val(b"new")).unwrap());
     }
 
     #[test]
     fn stripe_scans_partition_the_keyset() {
         let s = Shard::new(6);
         for i in 0..64 {
-            s.put(format!("key-{i}"), vec![i as u8]);
+            let k = format!("key-{i}");
+            s.put(&k, val(&[i as u8]), kd(&k));
         }
         let mut all: Vec<String> = (0..STRIPES).flat_map(|i| s.scan_stripe(i)).collect();
         all.sort();
@@ -525,8 +682,21 @@ mod tests {
         assert_eq!(all, want);
         assert_eq!(all.len(), 64);
         assert!(matches!(
-            s.handle(Request::ScanStripe { stripe: STRIPES as u32 }),
+            s.handle(&Request::ScanStripe { stripe: STRIPES as u32 }),
             Response::Err(_)
         ));
+    }
+
+    #[test]
+    fn local_and_wire_paths_agree_on_stripes() {
+        // A key written through the digest-threaded local path must be
+        // visible to the wire path (which recomputes the digest), i.e.
+        // both must select the same stripe.
+        let s = Shard::new(15);
+        s.put("agree", val(b"1"), kd("agree"));
+        assert_eq!(
+            s.handle_ref(RequestRef::Get { key: "agree" }, None),
+            Response::Val(val(b"1"))
+        );
     }
 }

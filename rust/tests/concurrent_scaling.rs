@@ -15,15 +15,15 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use binhash::proto::{Request, Response};
+use binhash::proto::{Request, Response, Value};
 use binhash::router::{local_cluster, Router};
 
 const KEYS: usize = 2_000;
 const READERS: usize = 4;
 const CYCLES: usize = 5;
 
-fn value_for(i: usize) -> Vec<u8> {
-    vec![(i & 0xFF) as u8, ((i >> 8) & 0xFF) as u8, 0x5A]
+fn value_for(i: usize) -> Value {
+    vec![(i & 0xFF) as u8, ((i >> 8) & 0xFF) as u8, 0x5A].into()
 }
 
 #[test]
@@ -112,7 +112,7 @@ fn overwrites_and_deletes_land_correctly_during_migration_window() {
                 assert_eq!(
                     router.handle(Request::Put {
                         key: format!("w{i}"),
-                        value: b"v2".to_vec()
+                        value: b"v2".to_vec().into()
                     }),
                     Response::Ok
                 );
@@ -141,7 +141,7 @@ fn overwrites_and_deletes_land_correctly_during_migration_window() {
     for i in 0..N / 2 {
         assert_eq!(
             router.handle(Request::Get { key: format!("w{i}") }),
-            Response::Val(b"v2".to_vec()),
+            Response::Val(b"v2".to_vec().into()),
             "overwrite of w{i} lost during migration"
         );
     }

@@ -118,7 +118,7 @@ fn scale_cycle_preserves_keys_for_every_engine() {
         let router = Router::new(local_cluster(name, 4).unwrap());
         for i in 0..KEYS {
             assert_eq!(
-                router.handle(Request::Put { key: format!("k{i}"), value: vec![i as u8, 7] }),
+                router.handle(Request::Put { key: format!("k{i}"), value: vec![i as u8, 7].into() }),
                 Response::Ok,
                 "{name}: put failed"
             );
@@ -127,7 +127,7 @@ fn scale_cycle_preserves_keys_for_every_engine() {
         for i in 0..KEYS {
             assert_eq!(
                 router.handle(Request::Get { key: format!("k{i}") }),
-                Response::Val(vec![i as u8, 7]),
+                Response::Val(vec![i as u8, 7].into()),
                 "{name}: key k{i} lost after scale-up"
             );
         }
@@ -135,7 +135,7 @@ fn scale_cycle_preserves_keys_for_every_engine() {
         for i in 0..KEYS {
             assert_eq!(
                 router.handle(Request::Get { key: format!("k{i}") }),
-                Response::Val(vec![i as u8, 7]),
+                Response::Val(vec![i as u8, 7].into()),
                 "{name}: key k{i} lost after scale-down"
             );
         }

@@ -1,0 +1,140 @@
+//! Pins the zero-allocation claim of the router's steady-state data path:
+//! once the keyset is warm, local GET / PUT-overwrite / DEL through
+//! `Router::handle` must not touch the heap at all — the snapshot is one
+//! atomic load, the key is borrowed, the value is a shared `Arc<[u8]>`
+//! (GET bumps a refcount, PUT moves the caller's buffer in, the map slot
+//! is reused), and the shard stripe reuses the router's digest.
+//!
+//! Mechanism: a counting `#[global_allocator]` that increments a counter
+//! for every `alloc`/`alloc_zeroed`/`realloc` issued *by this thread
+//! while armed* (thread-local arming keeps harness/background threads out
+//! of the count; deallocations are free — dropping warm state is fine).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::hint::black_box;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use binhash::proto::{Request, Response, Value};
+use binhash::router::{local_cluster, Router};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static ARMED: Cell<bool> = const { Cell::new(false) };
+}
+
+fn note() {
+    // `try_with` so allocations during TLS teardown can't panic.
+    let _ = ARMED.try_with(|armed| {
+        if armed.get() {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+    });
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        note();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        note();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        note();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn arm(on: bool) {
+    ARMED.with(|armed| armed.set(on));
+}
+
+fn value_of(i: usize, tag: u8) -> Value {
+    vec![i as u8, (i >> 8) as u8, tag].into()
+}
+
+#[test]
+fn steady_state_data_path_allocates_nothing() {
+    const KEYS: usize = 256;
+    let router = Router::new(local_cluster("binomial", 4).unwrap());
+
+    // Warm-up: first insertion of each key allocates its map entry.
+    for i in 0..KEYS {
+        assert_eq!(
+            router.handle(Request::Put { key: format!("za{i}"), value: value_of(i, 0) }),
+            Response::Ok
+        );
+    }
+
+    // Pre-build every measured request outside the counting window (the
+    // owned `Request` carries a pre-allocated key `String` and a
+    // pre-allocated `Arc` value; `handle` only moves/borrows them).
+    let gets: Vec<Request> =
+        (0..KEYS).map(|i| Request::Get { key: format!("za{i}") }).collect();
+    let overwrites: Vec<Request> = (0..KEYS)
+        .map(|i| Request::Put { key: format!("za{i}"), value: value_of(i, 1) })
+        .collect();
+    let dels: Vec<Request> =
+        (0..KEYS / 4).map(|i| Request::Del { key: format!("za{i}") }).collect();
+    let miss_gets: Vec<Request> =
+        (0..KEYS / 4).map(|i| Request::Get { key: format!("za{i}") }).collect();
+
+    ALLOCS.store(0, Ordering::Relaxed);
+    arm(true);
+    let mut unexpected = 0u32;
+    for req in gets {
+        if !matches!(black_box(router.handle(req)), Response::Val(_)) {
+            unexpected += 1;
+        }
+    }
+    for req in overwrites {
+        if !matches!(black_box(router.handle(req)), Response::Ok) {
+            unexpected += 1;
+        }
+    }
+    for req in dels {
+        if !matches!(black_box(router.handle(req)), Response::Ok) {
+            unexpected += 1;
+        }
+    }
+    for req in miss_gets {
+        if !matches!(black_box(router.handle(req)), Response::Nil) {
+            unexpected += 1;
+        }
+    }
+    arm(false);
+    let allocs = ALLOCS.load(Ordering::Relaxed);
+
+    assert_eq!(unexpected, 0, "a steady-state op answered unexpectedly");
+    assert_eq!(
+        allocs, 0,
+        "steady-state local GET/PUT/DEL must be allocation-free, saw {allocs} allocations"
+    );
+
+    // Correctness after the measured window: overwrites landed, deletes
+    // stuck, untouched keys intact.
+    for i in 0..KEYS / 4 {
+        assert_eq!(router.handle(Request::Get { key: format!("za{i}") }), Response::Nil);
+    }
+    for i in KEYS / 4..KEYS {
+        assert_eq!(
+            router.handle(Request::Get { key: format!("za{i}") }),
+            Response::Val(value_of(i, 1)),
+            "overwrite of za{i} lost"
+        );
+    }
+}
