@@ -3,13 +3,18 @@
 //! paper's constant-time claim buys the *system* (L3 target: placement is
 //! never the router bottleneck).
 //!
-//! Three phases per cluster size: PUT, GET, and GET-under-churn — the
-//! latter hammers reads while a background admin thread cycles
-//! scale-up/scale-down, so it prices the epoch-snapshot design (readers
-//! never block on a migration; mid-migration keys cost one extra hop via
-//! dual-read).  The driver goes through `Router::handle_ref` with
-//! borrowed keys and `Arc` values — the same allocation-free path the
-//! servers use.
+//! Four phases per cluster size: PUT, GET, GET-under-churn, and
+//! GET-while-failed-over.  Churn hammers reads while a background admin
+//! thread cycles scale-up/scale-down, so it prices the epoch-snapshot
+//! design (readers never block on a migration; mid-migration keys cost
+//! one extra hop via dual-read).  The failover phase runs on a memento
+//! cluster (the fault-tolerant wrapper the paper's §7 points to) with
+//! one shard failed: it prices the degraded data path — the replacement
+//! chain walk, the `is_failed` guard, and the marooned-key
+//! `UNAVAILABLE` short-circuit that answers instead of dialing a dead
+//! shard — reporting p50/p99 alongside ns/op.  The driver goes through
+//! `Router::handle_ref` with borrowed keys and `Arc` values — the same
+//! allocation-free path the servers use.
 //!
 //! Custom harness (`harness = false`): ops/s + ns/op over seeded key sets,
 //! printed human-readably *and* written as `BENCH_router.json` (override
@@ -22,7 +27,8 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use binhash::proto::{RequestRef, Value};
+use binhash::metrics::LatencyHistogram;
+use binhash::proto::{RequestRef, Response, Value};
 use binhash::router::{local_cluster, Router};
 use binhash::workload::StringKeys;
 
@@ -89,6 +95,40 @@ fn main() {
         stop.store(true, Ordering::Relaxed);
         let cycles = admin.join().expect("admin thread");
 
+        // Failover phase: a memento cluster of the same size with one
+        // shard failed.  GETs split into survivor hits (priced per-op
+        // with p50/p99) and marooned UNAVAILABLE answers (counted — they
+        // must short-circuit, not dial a dead shard).
+        let fo_router = Router::new(local_cluster("memento", n).unwrap());
+        for (i, k) in keys.iter().enumerate() {
+            let r = fo_router
+                .handle_ref(RequestRef::Put { key: k, value: values[i & 0xFF].clone() });
+            black_box(r);
+        }
+        fo_router.fail_shard(n / 2).expect("fail_shard");
+        // ns/op from a bare loop, exactly like the steady/churn phases —
+        // comparing the JSON numbers must price the degraded path, not
+        // per-op instrumentation overhead.
+        let t0 = Instant::now();
+        for k in &keys {
+            let r = fo_router.handle_ref(RequestRef::Get { key: k });
+            black_box(r);
+        }
+        let failover = t0.elapsed();
+        // Separate instrumented pass for the tail percentiles and the
+        // marooned count.
+        let fo_hist = LatencyHistogram::new();
+        let mut fo_unavailable = 0u64;
+        for k in &keys {
+            let t1 = Instant::now();
+            let r = fo_router.handle_ref(RequestRef::Get { key: k });
+            fo_hist.record(t1.elapsed());
+            if matches!(r, Response::Err(_)) {
+                fo_unavailable += 1;
+            }
+            black_box(r);
+        }
+
         let put_ns = ns_op(put, OPS);
         let get_ns = ns_op(get, OPS);
         let churn_ns = ns_op(churn, OPS);
@@ -112,6 +152,15 @@ fn main() {
              (of end-to-end mean {:.0}ns)",
             router.metrics.latency.mean_ns(),
         );
+        let failover_ns = ns_op(failover, OPS);
+        let fo_p50 = fo_hist.quantile_ns(0.5);
+        let fo_p99 = fo_hist.quantile_ns(0.99);
+        println!(
+            "      get while failed over (memento, 1/{n} shards down): \
+             {failover_ns:>8.0} ns/op ({:>9.0} op/s)  p50={fo_p50}ns p99={fo_p99}ns  \
+             {fo_unavailable} marooned keys answered UNAVAILABLE",
+            1e9 / failover_ns,
+        );
 
         let mut c = String::new();
         write!(
@@ -120,11 +169,15 @@ fn main() {
              \"steady\": {{\"put\": {}, \"get\": {}}}, \
              \"churn\": {{\"get\": {}, \"scale_cycles\": {cycles}, \
              \"dual_reads\": {dual_reads}, \"migration_batches\": {batches}}}, \
+             \"failover\": {{\"get\": {}, \"engine\": \"memento\", \
+             \"failed_shards\": 1, \"p50\": {fo_p50}, \"p99\": {fo_p99}, \
+             \"unavailable\": {fo_unavailable}}}, \
              \"placement_ns\": {{\"p50\": {place_p50}, \"p99\": {place_p99}, \
              \"mean\": {place_mean:.1}}}}}",
             op_json(put_ns),
             op_json(get_ns),
             op_json(churn_ns),
+            op_json(failover_ns),
         )
         .expect("write to String");
         clusters_json.push(c);

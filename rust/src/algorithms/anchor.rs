@@ -120,6 +120,39 @@ impl ConsistentHasher for AnchorHash {
     fn lifo_ready(&self) -> bool {
         self.r.iter().rev().copied().eq(self.n..self.capacity())
     }
+
+    // `add_bucket` pops the removal stack, so while arbitrary removals
+    // are outstanding it would *restore* the most recent failure instead
+    // of growing at the tail — restore-then-resize is the only legal
+    // order for anchor.
+    fn grow_ready(&self) -> Result<(), String> {
+        if self.lifo_ready() {
+            return Ok(());
+        }
+        let top = self.r.last().copied().expect("degraded anchor has a removal stack");
+        Err(format!(
+            "add_bucket would restore failed bucket {top} instead of growing at the \
+             tail; restore the failed buckets (in reverse removal order) before resizing"
+        ))
+    }
+
+    fn shrink_ready(&self) -> Result<(), String> {
+        if self.lifo_ready() {
+            return Ok(());
+        }
+        Err("remove_bucket would retire a bucket out of LIFO order while failed \
+             buckets are outstanding; restore them (in reverse removal order) before \
+             resizing"
+            .to_string())
+    }
+
+    fn as_fault_tolerant(&self) -> Option<&dyn FaultTolerant> {
+        Some(self)
+    }
+
+    fn as_fault_tolerant_mut(&mut self) -> Option<&mut dyn FaultTolerant> {
+        Some(self)
+    }
 }
 
 impl AnchorHash {
@@ -154,6 +187,19 @@ impl FaultTolerant for AnchorHash {
 
     fn is_working(&self, b: u32) -> bool {
         (b as usize) < self.a.len() && self.a[b as usize] == 0 && !self.r.contains(&b)
+    }
+
+    // The removal metadata (`A[b]` = working-set size at removal time)
+    // only unwinds in reverse order, so `restore` is stack-disciplined;
+    // report the required order instead of letting `restore` assert.
+    fn restore_blocked(&self, b: u32) -> Option<String> {
+        match self.r.last() {
+            Some(&top) if top == b => None,
+            Some(&top) => Some(format!(
+                "anchor restores in reverse removal order; restore bucket {top} first"
+            )),
+            None => Some("anchor has no removed bucket to restore".to_string()),
+        }
     }
 }
 
@@ -250,5 +296,24 @@ mod tests {
         // Plain LIFO churn keeps readiness.
         h.remove_bucket();
         assert!(h.lifo_ready());
+    }
+
+    #[test]
+    fn degraded_scaling_and_restore_order_hints() {
+        let mut h = AnchorHash::with_capacity(6, 16);
+        assert!(h.grow_ready().is_ok());
+        assert!(h.shrink_ready().is_ok());
+        h.remove_arbitrary(2);
+        h.remove_arbitrary(4);
+        // Growth would restore 4, not grow: named in the reason.
+        assert!(h.grow_ready().unwrap_err().contains('4'));
+        assert!(h.shrink_ready().is_err());
+        // Restore order: 4 (top of stack) first, then 2.
+        assert!(h.restore_blocked(4).is_none());
+        assert!(h.restore_blocked(2).unwrap().contains('4'));
+        h.restore(4);
+        assert!(h.restore_blocked(2).is_none());
+        h.restore(2);
+        assert!(h.grow_ready().is_ok());
     }
 }

@@ -114,6 +114,36 @@ impl ConsistentHasher for DxHash {
     fn lifo_ready(&self) -> bool {
         self.frontier == self.n
     }
+
+    // Growth *composes* with outstanding failures: `add_bucket` assigns
+    // at the frontier, which is disjoint from any holes below it, so a
+    // degraded dx cluster can still scale up (capacity headroom is
+    // reported via `max_buckets`).
+    fn grow_ready(&self) -> Result<(), String> {
+        Ok(())
+    }
+
+    // Shrink retires the frontier bucket, so it composes with failures
+    // exactly when that bucket is itself still working.
+    fn shrink_ready(&self) -> Result<(), String> {
+        let tail = self.frontier - 1;
+        if self.active[tail as usize] {
+            Ok(())
+        } else {
+            Err(format!(
+                "the LIFO tail bucket {tail} is itself failed; restore it before \
+                 scaling down"
+            ))
+        }
+    }
+
+    fn as_fault_tolerant(&self) -> Option<&dyn FaultTolerant> {
+        Some(self)
+    }
+
+    fn as_fault_tolerant_mut(&mut self) -> Option<&mut dyn FaultTolerant> {
+        Some(self)
+    }
 }
 
 impl FaultTolerant for DxHash {
@@ -203,6 +233,26 @@ mod tests {
     fn capacity_exhaustion_panics() {
         let mut h = DxHash::with_capacity(4, 4);
         h.add_bucket();
+    }
+
+    #[test]
+    fn degraded_growth_composes_but_failed_tail_blocks_shrink() {
+        let mut h = DxHash::new(4);
+        h.remove_arbitrary(1);
+        // A hole below the frontier never blocks growth: the next bucket
+        // is assigned at the frontier (id 4 here), not in the hole.
+        assert!(h.grow_ready().is_ok());
+        assert!(!h.lifo_ready());
+        assert_eq!(h.add_bucket(), 4);
+        assert_eq!(h.len(), 4);
+        // The frontier bucket is working: shrink composes too.
+        assert!(h.shrink_ready().is_ok());
+        assert_eq!(h.remove_bucket(), 4);
+        // Fail the tail itself: shrink must report it, not panic.
+        h.remove_arbitrary(3);
+        assert!(h.shrink_ready().unwrap_err().contains('3'));
+        h.restore(3);
+        assert!(h.shrink_ready().is_ok());
     }
 
     #[test]

@@ -100,6 +100,32 @@ impl ConsistentHasher for MementoHash {
     fn lifo_ready(&self) -> bool {
         self.removed.is_empty()
     }
+
+    // Resizing the base changes every replacement chain's modulus, which
+    // would silently remap keys resting on failed buckets — the published
+    // design (and this implementation's asserts) therefore forbids
+    // resizing until the failure table is empty.
+    fn grow_ready(&self) -> Result<(), String> {
+        if self.removed.is_empty() {
+            Ok(())
+        } else {
+            Err("resizing would change the replacement-chain modulus while the \
+                 failure table is non-empty; restore the failed buckets first"
+                .to_string())
+        }
+    }
+
+    fn shrink_ready(&self) -> Result<(), String> {
+        self.grow_ready()
+    }
+
+    fn as_fault_tolerant(&self) -> Option<&dyn FaultTolerant> {
+        Some(self)
+    }
+
+    fn as_fault_tolerant_mut(&mut self) -> Option<&mut dyn FaultTolerant> {
+        Some(self)
+    }
 }
 
 impl FaultTolerant for MementoHash {
@@ -202,5 +228,18 @@ mod tests {
         let mut m = MementoHash::new(8);
         m.remove_arbitrary(3);
         m.add_bucket();
+    }
+
+    #[test]
+    fn degraded_scaling_reports_instead_of_panicking() {
+        let mut m = MementoHash::new(8);
+        assert!(m.grow_ready().is_ok());
+        m.remove_arbitrary(3);
+        assert!(m.grow_ready().unwrap_err().contains("restore"));
+        assert!(m.shrink_ready().is_err());
+        // Restore order is unconstrained for memento.
+        assert!(m.restore_blocked(3).is_none());
+        m.restore(3);
+        assert!(m.grow_ready().is_ok() && m.shrink_ready().is_ok());
     }
 }

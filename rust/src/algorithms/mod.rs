@@ -26,6 +26,35 @@
 //! stateful engines (anchor's working/removed sets, dx's node-state
 //! array, memento's replacement table) scale exactly like the stateless
 //! family — no engine is ever reconstructed from its name.
+//!
+//! ## Failover: the [`FaultTolerant`] surface through `fork`
+//!
+//! `fork` returns `Box<dyn ConsistentHasher>`, which would sever the
+//! arbitrary-removal interface of the three fault-tolerant engines
+//! (anchor, dx, memento).  [`ConsistentHasher::as_fault_tolerant`] /
+//! [`as_fault_tolerant_mut`](ConsistentHasher::as_fault_tolerant_mut)
+//! re-expose it: the router forks the live engine, downcasts the fork,
+//! applies [`FaultTolerant::remove_arbitrary`], and publishes the result
+//! as a *degraded* epoch — O(1) engine work, no key scan (minimal
+//! disruption guarantees only the dead bucket's keys moved, and their
+//! data is on the dead shard anyway).
+//!
+//! The failover lifecycle an engine sees is **steady → degraded →
+//! restored-or-rescaled**:
+//!
+//! * *degraded*: one or more arbitrary removals outstanding.  Lookups
+//!   route around the holes; bucket ids stay stable (no renumbering).
+//! * *restored*: [`FaultTolerant::restore`] re-fills a hole.  Engines may
+//!   constrain the order ([`FaultTolerant::restore_blocked`] — anchor
+//!   restores in reverse removal order); the caller asks first instead of
+//!   hitting an assert.
+//! * *rescaled*: LIFO scaling while degraded is per-engine
+//!   ([`ConsistentHasher::grow_ready`] /
+//!   [`shrink_ready`](ConsistentHasher::shrink_ready)): dx's add
+//!   frontier is disjoint from its holes, so it composes; anchor's
+//!   `add_bucket` would *restore* the most recent failure instead of
+//!   growing, and memento's asserts fire — both report
+//!   restore-then-resize, and the router fails fast with that reason.
 
 pub mod anchor;
 pub mod binomial;
@@ -119,6 +148,64 @@ pub trait ConsistentHasher: Send + Sync {
         true
     }
 
+    /// `Ok(())` when `add_bucket` will assign a fresh id at the
+    /// assignment frontier (one past the highest id ever assigned) right
+    /// now; `Err(reason)` naming what blocks growth otherwise — never
+    /// panics.
+    ///
+    /// The default ties growth to [`lifo_ready`](Self::lifo_ready).
+    /// Fault-tolerant engines refine it: dx grows at its frontier even
+    /// with holes outstanding (growth *composes* with failures), while
+    /// anchor's `add_bucket` would restore the most recent failure
+    /// instead of growing and memento's would panic — both explain that
+    /// failed buckets must be restored first.  Capacity limits are
+    /// reported separately via [`max_buckets`](Self::max_buckets).
+    fn grow_ready(&self) -> Result<(), String> {
+        if self.lifo_ready() {
+            Ok(())
+        } else {
+            Err("outstanding arbitrary removals leave holes in the bucket range; \
+                 restore the failed buckets first"
+                .to_string())
+        }
+    }
+
+    /// `Ok(())` when `remove_bucket` will retire the bucket at the
+    /// assignment frontier (the highest assigned id) right now;
+    /// `Err(reason)` otherwise — never panics.
+    ///
+    /// Same contract as [`grow_ready`](Self::grow_ready): dx can shrink
+    /// while degraded as long as the frontier bucket itself is working;
+    /// anchor and memento require all failures restored first.
+    fn shrink_ready(&self) -> Result<(), String> {
+        if self.lifo_ready() {
+            Ok(())
+        } else {
+            Err("outstanding arbitrary removals leave holes in the bucket range; \
+                 restore the failed buckets first"
+                .to_string())
+        }
+    }
+
+    /// This engine's [`FaultTolerant`] surface, if it has one (read-only
+    /// view: failed-bucket queries, degraded STATS).
+    ///
+    /// Default `None`: most engines only support LIFO resizing.  The
+    /// fault-tolerant trio (anchor, dx, memento) return `Some(self)`,
+    /// which is what lets a `Box<dyn ConsistentHasher>` produced by
+    /// [`fork`](Self::fork) keep its failover capability — the router
+    /// never needs the concrete type.
+    fn as_fault_tolerant(&self) -> Option<&dyn FaultTolerant> {
+        None
+    }
+
+    /// Mutable access to this engine's [`FaultTolerant`] surface, if it
+    /// has one (`remove_arbitrary` / `restore` on a forked engine — the
+    /// router's failover publish path).
+    fn as_fault_tolerant_mut(&mut self) -> Option<&mut dyn FaultTolerant> {
+        None
+    }
+
     /// Convenience: hash a byte-string key and map it.
     fn bucket_for_key(&self, key: &[u8]) -> u32 {
         self.bucket(xxhash64(key, 0))
@@ -127,6 +214,11 @@ pub trait ConsistentHasher: Send + Sync {
 
 /// Algorithms that natively support removing an *arbitrary* bucket (not
 /// just the last-added one) with minimal disruption.
+///
+/// Reached through a trait object via
+/// [`ConsistentHasher::as_fault_tolerant`] /
+/// [`as_fault_tolerant_mut`](ConsistentHasher::as_fault_tolerant_mut),
+/// so a forked engine keeps the surface.
 pub trait FaultTolerant: ConsistentHasher {
     /// Remove bucket `b` (which must be working).
     fn remove_arbitrary(&mut self, b: u32);
@@ -136,6 +228,17 @@ pub trait FaultTolerant: ConsistentHasher {
 
     /// Is bucket `b` currently working?
     fn is_working(&self, b: u32) -> bool;
+
+    /// `None` when [`restore`](Self::restore)`(b)` is legal right now;
+    /// `Some(reason)` otherwise — never panics.
+    ///
+    /// Engines with ordering constraints refine this: anchor restores in
+    /// reverse removal order and names the bucket that must come back
+    /// first.  The caller is expected to have checked that `b` is
+    /// actually failed; this reports *ordering* blocks only.
+    fn restore_blocked(&self, _b: u32) -> Option<String> {
+        None
+    }
 }
 
 /// Names of every registered algorithm, in benchmark display order.
@@ -206,6 +309,35 @@ mod tests {
     // The fork contract (identical mapping at the fork point, full
     // independence afterward, stateful-state carry-over) is pinned for
     // every engine by `rust/tests/engine_fork.rs`.
+
+    #[test]
+    fn fault_tolerant_surface_survives_fork() {
+        const FT: &[&str] = &["anchor", "dx", "memento"];
+        for name in ALL_ALGORITHMS {
+            let mut h = by_name(name, 8).unwrap();
+            let expect_ft = FT.contains(name);
+            assert_eq!(h.as_fault_tolerant().is_some(), expect_ft, "{name}");
+            assert_eq!(h.as_fault_tolerant_mut().is_some(), expect_ft, "{name}");
+            // The downcast must survive the type-erasing fork — that is
+            // the whole point of the hook.
+            let mut fork = h.fork();
+            assert_eq!(fork.as_fault_tolerant().is_some(), expect_ft, "{name}: fork lost it");
+            if let Some(ft) = fork.as_fault_tolerant_mut() {
+                ft.remove_arbitrary(2);
+                assert!(!ft.is_working(2), "{name}: downcast mutation had no effect");
+                assert_eq!(fork.len(), 7, "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn healthy_engines_are_scale_ready() {
+        for name in ALL_ALGORITHMS {
+            let h = by_name(name, 6).unwrap();
+            assert!(h.grow_ready().is_ok(), "{name}");
+            assert!(h.shrink_ready().is_ok(), "{name}");
+        }
+    }
 
     #[test]
     fn bucket_for_key_matches_digest_path() {

@@ -17,6 +17,17 @@
 //!   While keys are still in flight the snapshot carries a
 //!   [`MigrationOrigin`] — a fork of the previous epoch's engine —
 //!   enabling dual-read (new owner, then old owner) routing.
+//!
+//! A snapshot can additionally be **degraded** ([`DegradedState`]): one
+//! or more shards have *failed* (arbitrary removal, not LIFO retirement).
+//! The engine — a fault-tolerant one, reached through
+//! [`as_fault_tolerant_mut`](crate::algorithms::ConsistentHasher::as_fault_tolerant_mut)
+//! on a fork — already routes every key to a survivor; the degraded state
+//! records *which* bucket ids are dead (their shard handles stay in
+//! `shards` so indices never shift, but must never be contacted) and the
+//! pre-failure placement, so a miss on a key whose data is marooned on a
+//! dead shard answers a distinguishable `UNAVAILABLE` error instead of
+//! `NIL` — or worse, a hang on a dead connection.
 
 use std::time::SystemTime;
 
@@ -41,6 +52,11 @@ pub enum EventKind {
     Joined(u32),
     /// Bucket left (always the last-added).
     Left(u32),
+    /// Bucket failed (arbitrary removal; data marooned until restore).
+    Failed(u32),
+    /// Bucket restored after a failure (rejoins empty; keys written to
+    /// survivors while it was down migrate back to it).
+    Restored(u32),
 }
 
 /// The previous topology's placement, kept inside a migrating
@@ -50,11 +66,21 @@ pub struct MigrationOrigin {
     /// Placement engine of the epoch being migrated away from (an
     /// unmodified fork of that epoch's engine).
     pub engine: Box<dyn ConsistentHasher>,
-    /// Bucket range the migration scans for movable keys: every old shard
-    /// on scale-up, but only the retiring shard on scale-down when the
-    /// engine guarantees minimal disruption (engines without it — maglev,
-    /// modulo — scan everything there too).
-    pub sources: std::ops::Range<u32>,
+    /// Bucket ids the migration scans for movable keys: every *reachable*
+    /// old shard on scale-up and on a failed-shard restore, but only the
+    /// retiring shard on scale-down when the engine guarantees minimal
+    /// disruption (engines without it — maglev, modulo — scan everything
+    /// there too).  A list, not a range, because a degraded topology has
+    /// holes: a dead shard must never be scanned.
+    pub sources: Vec<u32>,
+    /// Shard-list length once this migration settles: one less than the
+    /// migrating snapshot's list on scale-down (the retiring handle is
+    /// dropped), unchanged otherwise.  Recorded explicitly so an
+    /// interrupted migration can be resumed and settled without
+    /// inferring the intent from engine/list length arithmetic — which
+    /// breaks down on degraded topologies, where the engine's working
+    /// count is always below the slot count.
+    pub settle_len: usize,
 }
 
 /// An immutable, epoch-stamped placement view: frozen engine + shard
@@ -73,10 +99,59 @@ pub struct PlacementSnapshot {
     pub epoch: u64,
     /// Frozen placement engine for this snapshot's topology.
     pub engine: Box<dyn ConsistentHasher>,
-    /// Shard handles; bucket id = index.
+    /// Shard handles; bucket id = index.  On a degraded snapshot the
+    /// failed buckets' handles are still present (indices never shift)
+    /// but must not be contacted — [`is_failed`](Self::is_failed) guards.
     pub shards: Vec<ShardClient>,
     /// `Some` while keys are still being migrated into this topology.
     pub origin: Option<MigrationOrigin>,
+    /// `Some` while one or more shards are failed.
+    pub degraded: Option<DegradedState>,
+}
+
+/// Failed-shard bookkeeping carried by a degraded [`PlacementSnapshot`].
+pub struct DegradedState {
+    /// Failed bucket ids, sorted ascending.
+    pub failed: Vec<u32>,
+    /// One `(placement, bucket)` pair per outstanding failure, in
+    /// failure order: the engine is a fork taken immediately *before*
+    /// that bucket was removed, so `engine.bucket(d) == bucket`
+    /// identifies exactly the keys whose data that failure marooned.  A
+    /// per-failure record — rather than one engine frozen at the first
+    /// failure — stays correct when the cluster scales *between*
+    /// failures: an engine frozen earlier could never name a bucket
+    /// that joined after it was forked, and keys marooned on such a
+    /// bucket would read as silent misses instead of `UNAVAILABLE`.
+    pub maroons: Vec<(Box<dyn ConsistentHasher>, u32)>,
+}
+
+/// `a,b,c` rendering for bucket-id lists in STATS and operator-facing
+/// errors.
+pub(crate) fn bucket_csv(ids: &[u32]) -> String {
+    let mut s = String::new();
+    for (i, b) in ids.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&b.to_string());
+    }
+    s
+}
+
+impl DegradedState {
+    /// Deep copy for the next published snapshot (snapshots are
+    /// immutable, so each epoch carries its own fork).
+    pub fn fork(&self) -> Self {
+        Self {
+            failed: self.failed.clone(),
+            maroons: self.maroons.iter().map(|(e, b)| (e.fork(), *b)).collect(),
+        }
+    }
+
+    /// Failed ids as `a,b,c` for STATS and operator-facing errors.
+    pub fn failed_csv(&self) -> String {
+        bucket_csv(&self.failed)
+    }
 }
 
 impl PlacementSnapshot {
@@ -90,6 +165,37 @@ impl PlacementSnapshot {
     /// `true` while a migration into this topology is in flight.
     pub fn is_migrating(&self) -> bool {
         self.origin.is_some()
+    }
+
+    /// `true` while one or more shards are failed.
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.is_some()
+    }
+
+    /// `true` when bucket `b` is failed: its handle must not be
+    /// contacted.  O(log #failed), and free (`None` short-circuit) on a
+    /// healthy snapshot — the steady-state data path never pays for
+    /// failover support.
+    #[inline]
+    pub fn is_failed(&self, b: u32) -> bool {
+        match &self.degraded {
+            None => false,
+            Some(d) => d.failed.binary_search(&b).is_ok(),
+        }
+    }
+
+    /// The failed bucket a missing key's data is marooned on, if any:
+    /// the earliest outstanding failure whose pre-removal placement
+    /// owned the key.  `None` on a healthy snapshot or when the key's
+    /// data was never on a dead shard (a genuine miss).  Costs one
+    /// engine lookup per outstanding failure, and only on the miss path
+    /// of a degraded snapshot.
+    #[inline]
+    pub fn marooned(&self, digest: u64) -> Option<u32> {
+        let d = self.degraded.as_ref()?;
+        d.maroons
+            .iter()
+            .find_map(|(engine, b)| (engine.bucket(digest) == *b).then_some(*b))
     }
 
     /// The *previous* topology's owner of `digest`, when a migration is in
@@ -192,6 +298,7 @@ impl Cluster {
                 engine: self.placement,
                 shards: self.shards,
                 origin: None,
+                degraded: None,
             },
             self.events,
         )
@@ -289,8 +396,10 @@ mod tests {
             shards,
             origin: Some(MigrationOrigin {
                 engine: Box::new(BinomialHash::new(3)),
-                sources: 0..3,
+                sources: vec![0, 1, 2],
+                settle_len: 4,
             }),
+            degraded: None,
         };
         assert!(snap.is_migrating());
         let mut rng = crate::hashing::SplitMix64Rng::new(3);
@@ -306,5 +415,57 @@ mod tests {
             }
         }
         assert!(fallbacks > 0);
+    }
+
+    #[test]
+    fn degraded_snapshot_marks_marooned_keys() {
+        use crate::algorithms::{memento::MementoHash, ConsistentHasher, FaultTolerant};
+        let mut engine = MementoHash::new(4);
+        let pre_fail: Box<dyn ConsistentHasher> = engine.fork();
+        engine.remove_arbitrary(2);
+        let shards: Vec<ShardClient> =
+            (0..4).map(|i| ShardClient::Local(Shard::new(i))).collect();
+        let snap = PlacementSnapshot {
+            epoch: 3,
+            engine: Box::new(engine),
+            shards,
+            origin: None,
+            degraded: Some(DegradedState { failed: vec![2], maroons: vec![(pre_fail, 2)] }),
+        };
+        assert!(snap.is_degraded());
+        assert!(snap.is_failed(2));
+        assert!(!snap.is_failed(1));
+        assert_eq!(snap.degraded.as_ref().unwrap().failed_csv(), "2");
+        let mut rng = crate::hashing::SplitMix64Rng::new(9);
+        let mut marooned = 0;
+        for _ in 0..2_000 {
+            let d = rng.next_u64();
+            let (b, _) = snap.route(d);
+            assert_ne!(b, 2, "degraded engine routed to the failed bucket");
+            match snap.marooned(d) {
+                // Marooned exactly when the healthy placement said 2.
+                Some(f) => {
+                    assert_eq!(f, 2);
+                    marooned += 1;
+                }
+                None => assert_eq!(
+                    snap.degraded.as_ref().unwrap().maroons[0].0.bucket(d),
+                    b,
+                    "non-marooned keys must not have moved (minimal disruption)"
+                ),
+            }
+        }
+        assert!(marooned > 0, "no key was marooned on the failed bucket");
+        // A healthy snapshot answers the same queries for free.
+        let healthy = PlacementSnapshot {
+            epoch: 0,
+            engine: Box::new(MementoHash::new(4)),
+            shards: (0..4).map(|i| ShardClient::Local(Shard::new(i))).collect(),
+            origin: None,
+            degraded: None,
+        };
+        assert!(!healthy.is_degraded());
+        assert!(!healthy.is_failed(2));
+        assert_eq!(healthy.marooned(12345), None);
     }
 }

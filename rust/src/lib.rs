@@ -18,7 +18,10 @@
 //!   thread-per-connection servers (the build is fully offline — no tokio
 //!   or async runtime), in-memory storage nodes, and incremental
 //!   migration. Topology changes publish immutable placement snapshots;
-//!   the data path never blocks on a rebalance.
+//!   the data path never blocks on a rebalance.  Failover (`FAIL` /
+//!   `RESTORE` wire ops) publishes *degraded* epochs that route around
+//!   dead shards through the fault-tolerant engines (anchor, dx,
+//!   memento) and migrates a restored shard's keyspace back to it.
 //! * [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas bulk
 //!   placement artifacts (`artifacts/*.hlo.txt`); compiled in only with
 //!   the `pjrt` cargo feature (a same-API stub otherwise).

@@ -92,6 +92,15 @@ pub struct RouterMetrics {
     pub dual_reads: AtomicU64,
     /// Topology epochs applied.
     pub epochs: AtomicU64,
+    /// Shards failed over (`FAIL` admin ops that published a degraded
+    /// epoch).
+    pub failovers: AtomicU64,
+    /// Failed shards restored (`RESTORE` admin ops that converged).
+    pub restores: AtomicU64,
+    /// Reads answered `UNAVAILABLE` because the key's data is marooned
+    /// on a failed shard (the router routed *around* the dead shard
+    /// instead of hanging on it).
+    pub unavailable: AtomicU64,
     /// End-to-end request latency.
     pub latency: LatencyHistogram,
     /// Placement (hash lookup) latency.
@@ -108,7 +117,8 @@ impl RouterMetrics {
     pub fn summary(&self) -> String {
         format!(
             "gets={} puts={} dels={} errors={} migrated={} batches={} \
-             dual_reads={} epochs={} p50={}ns p99={}ns mean={:.0}ns",
+             dual_reads={} epochs={} failovers={} restores={} unavailable={} \
+             p50={}ns p99={}ns mean={:.0}ns",
             self.gets.load(Ordering::Relaxed),
             self.puts.load(Ordering::Relaxed),
             self.dels.load(Ordering::Relaxed),
@@ -117,6 +127,9 @@ impl RouterMetrics {
             self.migration_batches.load(Ordering::Relaxed),
             self.dual_reads.load(Ordering::Relaxed),
             self.epochs.load(Ordering::Relaxed),
+            self.failovers.load(Ordering::Relaxed),
+            self.restores.load(Ordering::Relaxed),
+            self.unavailable.load(Ordering::Relaxed),
             self.latency.quantile_ns(0.5),
             self.latency.quantile_ns(0.99),
             self.latency.mean_ns(),

@@ -11,10 +11,13 @@
 //! SCAN\n                      -> KEYS <count>\n(<key>\n)*
 //! SCANSTRIPE <i>\n            -> KEYS <count>\n(<key>\n)*  (shard only)
 //! PURGETOMBS\n                -> NUM <count>\n       (shard only)
+//! WIPE\n                      -> NUM <count>\n       (shard only)
 //! COUNT\n                     -> NUM <count>\n
 //! STATS\n                     -> INFO <line>\n
 //! SCALEUP\n                   -> NUM <new-n>\n        (router only)
 //! SCALEDOWN\n                 -> NUM <new-n>\n        (router only)
+//! FAIL <id>\n                 -> NUM <working-n>\n    (router only)
+//! RESTORE <id>\n              -> NUM <working-n>\n    (router only)
 //! ```
 //!
 //! Keys are ASCII tokens without whitespace (the router rejects others);
@@ -54,6 +57,14 @@
 //! rebalancer.  `DELTOMB` removes a key *and* leaves a tombstone that
 //! bars a later `PUTNX` from resurrecting it; `PURGETOMBS` clears the
 //! tombstones once a migration settles.
+//!
+//! `FAIL <id>` / `RESTORE <id>` are the router's failover admin pair:
+//! FAIL publishes a degraded epoch that routes around the dead shard
+//! (O(1), no key movement — the dead shard's data is marooned and reads
+//! of it answer `ERR UNAVAILABLE: …`), RESTORE rejoins it *empty* (the
+//! router issues `WIPE` first: writes and deletes issued while it was
+//! down never reached it, so its contents are stale) and migrates the
+//! keys written to survivors in the interim back onto it.
 //!
 //! Blocking I/O over `std::io` — the servers are thread-per-connection
 //! (see DESIGN.md: the build is fully offline, so the stack is std-only).
@@ -109,6 +120,22 @@ pub enum Request {
     ScaleUp,
     /// Remove the last shard (router admin).
     ScaleDown,
+    /// Fail a shard over: publish a degraded epoch that routes around it
+    /// (router admin).
+    Fail {
+        /// Bucket id of the failed shard.
+        shard: u32,
+    },
+    /// Restore a failed shard: wipe it, rejoin it, migrate its keyspace
+    /// back (router admin).
+    Restore {
+        /// Bucket id of the shard to restore.
+        shard: u32,
+    },
+    /// Drop every stored key and tombstone (shard-internal; issued by the
+    /// router before a failed shard rejoins, because the shard missed
+    /// every write and delete while it was down).
+    Wipe,
 }
 
 /// A parsed request borrowing its key from a connection's [`RecvBuf`] —
@@ -163,6 +190,18 @@ pub enum RequestRef<'a> {
     ScaleUp,
     /// Remove the last shard (router admin).
     ScaleDown,
+    /// Fail a shard over (router admin).
+    Fail {
+        /// Bucket id of the failed shard.
+        shard: u32,
+    },
+    /// Restore a failed shard (router admin).
+    Restore {
+        /// Bucket id of the shard to restore.
+        shard: u32,
+    },
+    /// Drop every stored key and tombstone (shard-internal).
+    Wipe,
 }
 
 impl Request {
@@ -182,6 +221,9 @@ impl Request {
             Request::Stats => RequestRef::Stats,
             Request::ScaleUp => RequestRef::ScaleUp,
             Request::ScaleDown => RequestRef::ScaleDown,
+            Request::Fail { shard } => RequestRef::Fail { shard: *shard },
+            Request::Restore { shard } => RequestRef::Restore { shard: *shard },
+            Request::Wipe => RequestRef::Wipe,
         }
     }
 }
@@ -204,6 +246,9 @@ impl RequestRef<'_> {
             RequestRef::Stats => Request::Stats,
             RequestRef::ScaleUp => Request::ScaleUp,
             RequestRef::ScaleDown => Request::ScaleDown,
+            RequestRef::Fail { shard } => Request::Fail { shard },
+            RequestRef::Restore { shard } => Request::Restore { shard },
+            RequestRef::Wipe => Request::Wipe,
         }
     }
 }
@@ -349,6 +394,20 @@ pub fn read_request_ref<'a, R: Read>(
         "STATS" => RequestRef::Stats,
         "SCALEUP" => RequestRef::ScaleUp,
         "SCALEDOWN" => RequestRef::ScaleDown,
+        "FAIL" | "RESTORE" => {
+            let shard: u32 = try_bad!(parts
+                .next()
+                .ok_or_else(|| format!("{cmd} missing shard id"))
+                .and_then(|t| t
+                    .parse()
+                    .map_err(|e| format!("bad {cmd} shard id {t:?}: {e}"))));
+            if cmd == "FAIL" {
+                RequestRef::Fail { shard }
+            } else {
+                RequestRef::Restore { shard }
+            }
+        }
+        "WIPE" => RequestRef::Wipe,
         other => return Ok(Some(Wire::Bad(format!("unknown command {other:?}")))),
     };
     Ok(Some(Wire::Req(req)))
@@ -387,6 +446,9 @@ pub fn write_request_ref<W: Write>(w: &mut W, req: &RequestRef<'_>) -> Result<()
         RequestRef::Stats => w.write_all(b"STATS\n")?,
         RequestRef::ScaleUp => w.write_all(b"SCALEUP\n")?,
         RequestRef::ScaleDown => w.write_all(b"SCALEDOWN\n")?,
+        RequestRef::Fail { shard } => writeln!(w, "FAIL {shard}")?,
+        RequestRef::Restore { shard } => writeln!(w, "RESTORE {shard}")?,
+        RequestRef::Wipe => w.write_all(b"WIPE\n")?,
     }
     w.flush()?;
     Ok(())
@@ -545,8 +607,45 @@ mod tests {
             Request::Stats,
             Request::ScaleUp,
             Request::ScaleDown,
+            Request::Fail { shard: 3 },
+            Request::Restore { shard: 3 },
+            Request::Wipe,
         ] {
             assert_eq!(roundtrip_req(req.clone()), req);
+        }
+    }
+
+    #[test]
+    fn zero_length_values_roundtrip() {
+        // The empty-payload edge: `PUT k 0` builds an empty `Arc<[u8]>`
+        // through `new_uninit_slice(0)` + `read_exact(&mut [])`; it must
+        // survive request and response framing bit-exactly.
+        let empty: Value = Vec::new().into();
+        for req in [
+            Request::Put { key: "e".into(), value: empty.clone() },
+            Request::PutNx { key: "e".into(), value: empty.clone() },
+        ] {
+            assert_eq!(roundtrip_req(req.clone()), req);
+        }
+        assert_eq!(roundtrip_resp(Response::Val(empty.clone())), Response::Val(empty));
+    }
+
+    #[test]
+    fn bad_failover_arguments_are_recoverable() {
+        // Missing / non-numeric / overflowing shard ids must answer ERR
+        // and keep the stream framed, like every other recoverable typo.
+        let input = b"FAIL\nRESTORE notanumber\nFAIL 99999999999999999999\nFAIL 2\n";
+        let mut r = BufReader::new(&input[..]);
+        let mut buf = RecvBuf::new();
+        for _ in 0..3 {
+            match read_request_ref(&mut r, &mut buf).unwrap().unwrap() {
+                Wire::Bad(msg) => assert!(!msg.is_empty()),
+                Wire::Req(req) => panic!("expected Bad, got {req:?}"),
+            }
+        }
+        match read_request_ref(&mut r, &mut buf).unwrap().unwrap() {
+            Wire::Req(RequestRef::Fail { shard }) => assert_eq!(shard, 2),
+            other => panic!("expected FAIL 2, got {other:?}"),
         }
     }
 

@@ -98,22 +98,25 @@ pub struct MigrationStats {
 /// `plan_batch`, and apply it immediately.
 ///
 /// `shards` must cover the union of the old and new topologies (every
-/// `Move::to` destination must be indexable); only the `sources` range is
-/// scanned — all old shards on scale-up, just the retiring shard on
-/// scale-down when the engine guarantees minimal disruption (every shard
-/// otherwise).  Unlike the stop-the-world path this
+/// `Move::to` destination must be indexable); only the `sources` shards
+/// are scanned — every *reachable* old shard on scale-up and on a
+/// failed-shard restore, just the retiring shard on scale-down when the
+/// engine guarantees minimal disruption (every shard otherwise).  The
+/// list may have holes: a degraded topology's failed shards are excluded
+/// by the router, because a dead shard can neither be scanned nor be a
+/// legal destination.  Unlike the stop-the-world path this
 /// never materializes the cluster's keyset — memory is bounded by the
 /// largest stripe — and every batch is visible to concurrent readers the
 /// moment it lands.
 pub fn migrate_streaming(
     shards: &[ShardClient],
-    sources: std::ops::Range<u32>,
+    sources: &[u32],
     batch_size: usize,
     mut plan_batch: impl FnMut(&[(String, u64)]) -> Result<MigrationPlan>,
 ) -> Result<MigrationStats> {
     let batch_size = batch_size.max(1);
     let mut stats = MigrationStats::default();
-    for shard in shards[sources.start as usize..sources.end as usize].iter() {
+    for shard in sources.iter().map(|&b| &shards[b as usize]) {
         for stripe in 0..crate::shard::STRIPES as u32 {
             let digested: Vec<(String, u64)> = shard
                 .scan_stripe(stripe)?
@@ -262,7 +265,7 @@ mod tests {
         }
         const BATCH: usize = 64;
         let (old, new) = (BinomialHash::new(2), BinomialHash::new(3));
-        let stats = migrate_streaming(&shards, 0..2, BATCH, |chunk| {
+        let stats = migrate_streaming(&shards, &[0, 1], BATCH, |chunk| {
             assert!(chunk.len() <= BATCH, "batch bound violated: {}", chunk.len());
             plan(chunk, PlanPath::Engines { old: &old, new: &new })
         })
@@ -299,7 +302,7 @@ mod tests {
         }
         let (raced_key, raced_to) = raced.expect("keyset contains a moving key");
         let (old, new) = (BinomialHash::new(2), BinomialHash::new(3));
-        migrate_streaming(&shards, 0..2, 128, |chunk| {
+        migrate_streaming(&shards, &[0, 1], 128, |chunk| {
             plan(chunk, PlanPath::Engines { old: &old, new: &new })
         })
         .unwrap();

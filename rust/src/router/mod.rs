@@ -75,6 +75,61 @@
 //! The copy step (`PUTNX`) cannot clobber a newer client write, and the
 //! `DELTOMB` tombstone bars it from resurrecting a key whose DEL raced
 //! the migration sweep.
+//!
+//! ## Failover: steady → degraded → restored (or rescaled)
+//!
+//! LIFO scaling retires the *tail* shard after draining it; real shards
+//! die in arbitrary positions with their data still on them.  The
+//! fault-tolerant engines (anchor, dx, memento) already place around
+//! arbitrary holes; [`Router::fail_shard`] and [`Router::restore_shard`]
+//! (wire ops `FAIL <id>` / `RESTORE <id>`) drive that capability through
+//! the same epoch-snapshot machinery:
+//!
+//! * **FAIL** forks the live engine, reaches its
+//!   [`FaultTolerant`](crate::algorithms::FaultTolerant) surface through
+//!   [`as_fault_tolerant_mut`](crate::algorithms::ConsistentHasher::as_fault_tolerant_mut)
+//!   (the hook that survives the type-erasing `fork`), applies
+//!   `remove_arbitrary(id)`, and publishes a **degraded** epoch — O(1)
+//!   engine work, no shard I/O, no quiesce wait (a reader stuck on the
+//!   dying shard must not delay the failover that routes around it).
+//!   The dead shard's handle stays in the snapshot (bucket ids never
+//!   shift) but [`PlacementSnapshot::is_failed`] bars every code path
+//!   from contacting it: reads, dual-read fallbacks, mid-migration
+//!   write-backs, COUNT/STATS fan-outs, tombstone purges and migration
+//!   scans all skip it.  FAIL even composes with an in-flight migration:
+//!   the origin engine gets the same arbitrary removal (so dual-read
+//!   keeps working) and the dead shard is dropped from the remaining
+//!   migration sources.
+//! * **Degraded serving**: keys whose pre-failure owner was the dead
+//!   shard are *marooned* — there is no replica to fail over to (yet;
+//!   see ROADMAP).  A GET that misses and maps to a dead pre-failure
+//!   owner answers a distinguishable `ERR UNAVAILABLE: …` instead of a
+//!   silent `NIL` or a hang on a dead connection; a PUT makes the key
+//!   immediately reachable again on its surviving owner.  The check is
+//!   conservative: a key PUT-then-DELeted *while* degraded also reads
+//!   `UNAVAILABLE` until the shard is restored (the router cannot tell
+//!   it from a never-rewritten marooned key without tombstoning every
+//!   degraded delete).
+//! * **RESTORE** wipes the rejoining shard (`WIPE` — it missed every
+//!   write and delete while it was down, so its contents are
+//!   unreconcilable), forks-and-`restore(id)`s the engine, and publishes
+//!   the restored epoch *with a migration origin* (the degraded engine):
+//!   keys written to survivors during the outage stream back to the
+//!   restored shard in bounded batches while dual-read serves them, then
+//!   the epoch settles.  Engines constrain restore order through
+//!   [`restore_blocked`](crate::algorithms::FaultTolerant::restore_blocked)
+//!   (anchor: reverse removal order) — violations answer `ERR`, never
+//!   panic under the admin lock.
+//! * **Scaling while degraded** is per-engine
+//!   ([`grow_ready`](crate::algorithms::ConsistentHasher::grow_ready) /
+//!   [`shrink_ready`](crate::algorithms::ConsistentHasher::shrink_ready)):
+//!   dx grows at its frontier with holes outstanding (the scale composes
+//!   with the failure; migration sources skip dead shards), while anchor
+//!   and memento fail fast with the engine's own reason *and* the failed
+//!   bucket list, so the operator knows exactly what to `RESTORE` first.
+//!
+//! Data on a failed shard is lost unless it comes back before anyone
+//! needed it — replication is the named follow-up in ROADMAP.md.
 
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
@@ -82,9 +137,13 @@ use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
-use crate::cluster::{Cluster, EventKind, MigrationOrigin, PlacementSnapshot, TopologyEvent};
+use crate::algorithms::ConsistentHasher;
+use crate::cluster::{
+    bucket_csv as csv, Cluster, DegradedState, EventKind, MigrationOrigin, PlacementSnapshot,
+    TopologyEvent,
+};
 use crate::metrics::RouterMetrics;
 use crate::proto::{self, Request, RequestRef, Response, Value};
 use crate::rebalance::{self, MigrationStats, PlanPath};
@@ -97,6 +156,34 @@ pub type ShardSpawner = Box<dyn Fn(u32) -> ShardClient + Send + Sync>;
 /// Keys per migration batch: small enough that a batch is visible to
 /// readers almost immediately, large enough to amortize planning.
 const MIGRATION_BATCH: usize = 512;
+
+/// Buckets in `0..slots` the engine reports as not working.  Derived from
+/// the engine itself (not the snapshot's degraded record) so it is
+/// correct even for a router constructed directly over a pre-degraded
+/// engine.
+fn failed_buckets(engine: &dyn ConsistentHasher, slots: usize) -> Vec<u32> {
+    match engine.as_fault_tolerant() {
+        None => Vec::new(),
+        Some(ft) => (0..slots as u32).filter(|&b| !ft.is_working(b)).collect(),
+    }
+}
+
+/// The one operator-facing rejection for scale/restore ops blocked by a
+/// degraded engine: names the engine, the engine's own reason, and the
+/// failed buckets, so the operator sees exactly which bucket to
+/// `RESTORE` (previously two near-identical strings that named neither).
+fn scale_rejection(engine: &dyn ConsistentHasher, slots: usize, reason: &str) -> anyhow::Error {
+    let failed = failed_buckets(engine, slots);
+    if failed.is_empty() {
+        anyhow!("engine {:?} cannot scale: {reason}", engine.name())
+    } else {
+        anyhow!(
+            "engine {:?} cannot scale: {reason} (failed buckets: {}; RESTORE them first)",
+            engine.name(),
+            csv(&failed)
+        )
+    }
+}
 
 // The atomic snapshot swap shares `PlacementSnapshot` across threads
 // through a raw pointer — outside the compiler's auto-trait reasoning —
@@ -271,6 +358,7 @@ impl Router {
         let shard = {
             let snap = self.snapshot();
             ensure!((bucket as usize) < snap.shards.len(), "bucket {bucket} out of range");
+            ensure!(!snap.is_failed(bucket), "UNAVAILABLE: shard {bucket} is failed");
             snap.shards[bucket as usize].clone()
         };
         shard.count()
@@ -293,14 +381,24 @@ impl Router {
             RequestRef::Get { key } => self.data_get(key),
             RequestRef::Put { key, value } => self.data_put(key, value),
             RequestRef::Del { key } => self.data_del(key),
-            // COUNT sums every shard. The handles are cloned and the
-            // snapshot dropped before any shard I/O so a slow shard
-            // cannot stall a concurrent scale op's quiesce barrier.
-            // Mid-migration a key sits on both owners between the copy
-            // and the source delete, so the total can transiently
-            // over-report by up to one batch.
+            // COUNT sums every *reachable* shard. The handles are cloned
+            // and the snapshot dropped before any shard I/O so a slow
+            // shard cannot stall a concurrent scale op's quiesce barrier;
+            // failed shards are skipped (a dead connection would hang the
+            // whole aggregation), so a degraded COUNT reports the
+            // reachable keyset only.  Mid-migration a key sits on both
+            // owners between the copy and the source delete, so the total
+            // can transiently over-report by up to one batch.
             RequestRef::Count => {
-                let shards = self.snapshot().shards.clone();
+                let shards: Vec<ShardClient> = {
+                    let snap = self.snapshot();
+                    snap.shards
+                        .iter()
+                        .enumerate()
+                        .filter(|(b, _)| !snap.is_failed(*b as u32))
+                        .map(|(_, s)| s.clone())
+                        .collect()
+                };
                 let mut total = 0u64;
                 let mut err = None;
                 for s in &shards {
@@ -319,12 +417,24 @@ impl Router {
             }
             RequestRef::Stats => {
                 let snap = self.snapshot();
+                let state = if snap.is_migrating() {
+                    "migrating"
+                } else if snap.is_degraded() {
+                    "degraded"
+                } else {
+                    "steady"
+                };
                 Response::Info(format!(
-                    "epoch={} n={} algo={} state={} {}",
+                    "epoch={} n={} shards={} algo={} state={} failed={} {}",
                     snap.epoch,
                     snap.engine.len(),
+                    snap.shards.len(),
                     snap.engine.name(),
-                    if snap.is_migrating() { "migrating" } else { "steady" },
+                    state,
+                    match &snap.degraded {
+                        Some(d) => d.failed_csv(),
+                        None => "-".to_string(),
+                    },
                     self.metrics.summary()
                 ))
             }
@@ -332,12 +442,21 @@ impl Router {
             | RequestRef::ScanStripe { .. }
             | RequestRef::PutNx { .. }
             | RequestRef::DelTomb { .. }
-            | RequestRef::PurgeTombs => Response::Err("shard-internal command".into()),
+            | RequestRef::PurgeTombs
+            | RequestRef::Wipe => Response::Err("shard-internal command".into()),
             RequestRef::ScaleUp => match self.scale_up() {
                 Ok(n) => Response::Num(n as u64),
                 Err(e) => Response::Err(e.to_string()),
             },
             RequestRef::ScaleDown => match self.scale_down() {
+                Ok(n) => Response::Num(n as u64),
+                Err(e) => Response::Err(e.to_string()),
+            },
+            RequestRef::Fail { shard } => match self.fail_shard(shard) {
+                Ok(n) => Response::Num(n as u64),
+                Err(e) => Response::Err(e.to_string()),
+            },
+            RequestRef::Restore { shard } => match self.restore_shard(shard) {
                 Ok(n) => Response::Num(n as u64),
                 Err(e) => Response::Err(e.to_string()),
             },
@@ -358,6 +477,16 @@ impl Router {
         Ok(crate::hashing::xxhash64(key.as_bytes(), 0))
     }
 
+    /// The distinguishable degraded-read answer: the key's data sits on a
+    /// failed shard, so a miss on the surviving owner is *not* "absent".
+    fn unavailable(&self, key: &str, failed: u32) -> Response {
+        self.metrics.unavailable.fetch_add(1, Ordering::Relaxed);
+        Response::Err(format!(
+            "UNAVAILABLE: key {key} is marooned on failed shard {failed}; \
+             RESTORE {failed} (it rejoins empty) or re-PUT the key"
+        ))
+    }
+
     fn data_get(&self, key: &str) -> Response {
         let digest = match self.admit(key, &self.metrics.gets) {
             Ok(d) => d,
@@ -367,15 +496,21 @@ impl Router {
         let snap = self.snapshot();
         let (bucket, shard) = snap.route(digest);
         self.metrics.placement_latency.record(t0.elapsed());
-        match snap.fallback_route(digest, bucket) {
+        let resp = match snap.fallback_route(digest, bucket) {
             // Mid-migration, the key may not have reached its new owner
             // yet: dual-read, new owner then old owner — and if both miss,
             // re-probe the new owner once.  Copies always land new-first
             // (PUTNX/PUT before the source DEL), so a key that vanished
             // from the old owner between our two probes is already
             // readable on the new one; the third probe closes that window.
-            Some((_, old_shard)) => {
+            Some((old_bucket, old_shard)) => {
                 match shard.call_ref(RequestRef::Get { key }, Some(digest)) {
+                    // The old owner died mid-migration (FAIL composed
+                    // into an in-flight sweep): the un-migrated copy is
+                    // marooned there — never dial a dead shard.
+                    Ok(Response::Nil) if snap.is_failed(old_bucket) => {
+                        return self.unavailable(key, old_bucket);
+                    }
                     Ok(Response::Nil) => {
                         self.metrics.dual_reads.fetch_add(1, Ordering::Relaxed);
                         match old_shard.call_ref(RequestRef::Get { key }, Some(digest)) {
@@ -397,7 +532,15 @@ impl Router {
                 Ok(resp) => resp,
                 Err(e) => Response::Err(e.to_string()),
             },
+        };
+        // A miss while degraded may be a marooned key (its pre-failure
+        // owner is dead), not an absent one — free on healthy snapshots.
+        if matches!(resp, Response::Nil) {
+            if let Some(f) = snap.marooned(digest) {
+                return self.unavailable(key, f);
+            }
         }
+        resp
     }
 
     fn data_put(&self, key: &str, value: Value) -> Response {
@@ -415,13 +558,18 @@ impl Router {
             // a stale value.  The old-copy delete is best-effort: once the
             // new owner holds the value, reads route there first and the
             // migration sweep (PUTNX) cannot clobber it, so a cleanup
-            // failure must not turn a durable write into a client error.
-            Some((_, old_shard)) => {
+            // failure must not turn a durable write into a client error —
+            // and it is skipped entirely when the old owner is a failed
+            // shard (its copy is unreachable either way, and it rejoins
+            // only after a WIPE).
+            Some((old_bucket, old_shard)) => {
                 let resp = match shard.call_ref(RequestRef::Put { key, value }, Some(digest)) {
                     Ok(resp) => resp,
                     Err(e) => return Response::Err(e.to_string()),
                 };
-                let _ = old_shard.call_ref(RequestRef::Del { key }, Some(digest));
+                if !snap.is_failed(old_bucket) {
+                    let _ = old_shard.call_ref(RequestRef::Del { key }, Some(digest));
+                }
                 resp
             }
             None => match shard.call_ref(RequestRef::Put { key, value }, Some(digest)) {
@@ -446,9 +594,16 @@ impl Router {
             // leaves a tombstone so an in-flight migration copy (PUTNX)
             // of this key cannot resurrect it after the delete wins the
             // race; the tombstones are purged when the migration settles.
-            Some((_, old_shard)) => {
+            // A failed old owner is never dialed: its copy can only
+            // resurface through a RESTORE, which wipes it first, so the
+            // delete is vacuously complete there.
+            Some((old_bucket, old_shard)) => {
                 let new_r = shard.call_ref(RequestRef::DelTomb { key }, Some(digest));
-                let old_r = old_shard.call_ref(RequestRef::Del { key }, Some(digest));
+                let old_r = if snap.is_failed(old_bucket) {
+                    Ok(Response::Nil)
+                } else {
+                    old_shard.call_ref(RequestRef::Del { key }, Some(digest))
+                };
                 match (new_r, old_r) {
                     (Ok(Response::Ok), Ok(_)) | (Ok(_), Ok(Response::Ok)) => Response::Ok,
                     (Ok(resp), Ok(_)) => resp,
@@ -462,46 +617,58 @@ impl Router {
         }
     }
 
-    /// Clear migration tombstones on every shard (idempotent; called once
-    /// a migration settles, and defensively before a new one starts).
-    fn purge_tombstones(shards: &[ShardClient]) -> Result<()> {
-        for s in shards {
-            s.purge_tombstones()?;
+    /// Clear migration tombstones on every *reachable* shard (idempotent;
+    /// called once a migration settles, and defensively before a new one
+    /// starts).  Failed shards are skipped — a dead connection must not
+    /// block an admin op, and a failed shard is wiped (keys *and*
+    /// tombstones) before it can rejoin anyway.
+    fn purge_tombstones(snap: &PlacementSnapshot) -> Result<()> {
+        for (b, s) in snap.shards.iter().enumerate() {
+            if !snap.is_failed(b as u32) {
+                s.purge_tombstones()?;
+            }
         }
         Ok(())
     }
 
     /// Add a shard and incrementally migrate exactly the keys that now
     /// belong to it, serving reads and writes throughout.  Returns the new
-    /// cluster size.
+    /// *working* shard count.
+    ///
+    /// Composes with a degraded topology when the engine's growth does
+    /// ([`ConsistentHasher::grow_ready`]): dx grows at its frontier with
+    /// holes outstanding, anchor/memento answer a clean `ERR` naming the
+    /// buckets to restore.  Dead shards are excluded from the migration
+    /// scan — keys marooned on them stay marooned (and keep answering
+    /// `UNAVAILABLE`) across the scale.
     pub fn scale_up(&self) -> Result<u32> {
         let mut events = self
             .admin
             .try_lock()
             .map_err(|_| anyhow!("MIGRATING: a topology change is already in flight"))?;
         let base = self.resume_interrupted(self.snapshot())?;
-        Self::purge_tombstones(&base.shards)?;
-        let n_old = base.engine.len();
-        let n_new = n_old + 1;
+        Self::purge_tombstones(&base)?;
+        // The shard list covers every assigned bucket id (working or
+        // failed); the joining handle lands at its tail.  On a healthy
+        // topology this equals the working count.
+        let n_slots = base.shards.len() as u32;
+        let n_work = base.engine.len();
         // Fail fast — nothing is mutated or published for an engine at
         // its pre-allocated capacity (anchor's anchor set, dx's NSArray);
         // `add_bucket` would panic mid-change otherwise.
         if let Some(cap) = base.engine.max_buckets() {
             ensure!(
-                n_new <= cap,
+                n_work < cap,
                 "engine {:?} is at its capacity of {cap} buckets; cannot scale up",
                 base.engine.name()
             );
         }
-        // A fork of an engine with outstanding arbitrary removals would
-        // not grow at the LIFO tail (or would panic in add_bucket);
-        // reject before anything is mutated or published.
-        ensure!(
-            base.engine.lifo_ready(),
-            "engine {:?} has outstanding arbitrary removals; restore failed buckets \
-             before scaling",
-            base.engine.name()
-        );
+        // Per-engine degraded-scaling hint: reject (naming the engine's
+        // reason and the failed buckets) before anything is mutated or
+        // published, instead of panicking in add_bucket.
+        base.engine
+            .grow_ready()
+            .map_err(|reason| scale_rejection(&*base.engine, n_slots as usize, &reason))?;
         // The next epoch's engine is a fork of the live one with the new
         // bucket added; the origin keeps an unmodified fork for dual-read
         // and migration planning.  No engine is rebuilt from its name, so
@@ -509,38 +676,49 @@ impl Router {
         let old_engine = base.engine.fork();
         let mut new_engine = base.engine.fork();
         let added = new_engine.add_bucket();
-        // The new shard handle is pushed at index n_old, so the engine
-        // must have grown at the LIFO tail.  An engine with outstanding
-        // arbitrary removals (e.g. anchor restoring a failed bucket
-        // instead) would route the "new" bucket to the wrong handle; the
-        // mutated fork is discarded and nothing has been published.
+        // The new shard handle is pushed at index n_slots, so the engine
+        // must have grown at the assignment frontier.  An engine that
+        // grew elsewhere would route the "new" bucket to the wrong
+        // handle; the mutated fork is discarded and nothing has been
+        // published.
         ensure!(
-            added == n_old,
-            "engine {:?} added bucket {added} instead of the LIFO tail {n_old} \
-             (restore failed buckets before scaling)",
-            base.engine.name()
+            added == n_slots,
+            "engine {:?} added bucket {added} instead of the frontier {n_slots}; \
+             scale aborted before publishing{}",
+            base.engine.name(),
+            match failed_buckets(&*base.engine, n_slots as usize) {
+                f if f.is_empty() => String::new(),
+                f => format!(" (failed buckets: {}; RESTORE them first)", csv(&f)),
+            }
         );
 
         let mut shards = base.shards.clone();
-        let joining = (self.spawn_shard)(n_old);
+        let joining = (self.spawn_shard)(n_slots);
         // A joining shard may be a reconnection to a remote process with
         // leftover state (e.g. retired earlier after a best-effort purge
         // failed); clear its tombstones before any migration copy can be
         // refused by them.  Failing here is still pre-publish.
         joining.purge_tombstones()?;
         shards.push(joining);
+        // Monotonicity: any reachable old shard may hold keys that now
+        // belong to the joining bucket, so all of them are migration
+        // sources; dead shards cannot be scanned.
+        let sources: Vec<u32> = (0..n_slots).filter(|&b| !base.is_failed(b)).collect();
         let epoch = base.epoch + 1;
         self.publish(PlacementSnapshot {
             epoch,
             engine: new_engine,
             shards: shards.clone(),
-            // Monotonicity: any old shard may hold keys that now belong to
-            // the joining bucket, so all of them are migration sources.
-            origin: Some(MigrationOrigin { engine: old_engine, sources: 0..n_old }),
+            origin: Some(MigrationOrigin {
+                engine: old_engine,
+                sources,
+                settle_len: shards.len(),
+            }),
+            degraded: base.degraded.as_ref().map(|d| d.fork()),
         });
         events.push(TopologyEvent {
             epoch,
-            kind: EventKind::Joined(n_old),
+            kind: EventKind::Joined(n_slots),
             at: std::time::SystemTime::now(),
         });
         // No reader may still route with the pre-migration snapshot once
@@ -555,6 +733,7 @@ impl Router {
             engine: migrating.engine.fork(),
             shards,
             origin: None,
+            degraded: migrating.degraded.as_ref().map(|d| d.fork()),
         });
         // Drain dual-read holders of the migrating snapshot before
         // returning, so every future topology change only ever has one
@@ -565,49 +744,64 @@ impl Router {
         // harmless until the next migration, and the next scale op
         // re-purges (and fails fast there) before publishing anything.
         Self::quiesce(&migrating);
-        let _ = Self::purge_tombstones(&migrating.shards);
+        let _ = Self::purge_tombstones(&migrating);
         self.metrics.epochs.fetch_add(1, Ordering::Relaxed);
-        Ok(n_new)
+        Ok(n_work + 1)
     }
 
     /// Remove the last shard after incrementally migrating its keys away,
-    /// serving reads and writes throughout.  Returns the new cluster size.
+    /// serving reads and writes throughout.  Returns the new *working*
+    /// shard count.
+    ///
+    /// Composes with a degraded topology when the engine's shrink does
+    /// ([`ConsistentHasher::shrink_ready`]): dx retires a working
+    /// frontier bucket with holes outstanding, anchor/memento answer a
+    /// clean `ERR` naming the buckets to restore.
     pub fn scale_down(&self) -> Result<u32> {
         let mut events = self
             .admin
             .try_lock()
             .map_err(|_| anyhow!("MIGRATING: a topology change is already in flight"))?;
         let base = self.resume_interrupted(self.snapshot())?;
-        Self::purge_tombstones(&base.shards)?;
-        let n_old = base.engine.len();
-        ensure!(n_old > 1, "cannot scale below one shard");
-        let n_new = n_old - 1;
-        // As in scale_up: a degraded engine cannot shrink at the LIFO
-        // tail (memento/dx panic in remove_bucket); reject up front.
-        ensure!(
-            base.engine.lifo_ready(),
-            "engine {:?} has outstanding arbitrary removals; restore failed buckets \
-             before scaling",
-            base.engine.name()
-        );
+        Self::purge_tombstones(&base)?;
+        let n_slots = base.shards.len() as u32;
+        let n_work = base.engine.len();
+        ensure!(n_work > 1, "cannot scale below one working shard");
+        // Per-engine degraded-scaling hint (memento/dx would panic in
+        // remove_bucket otherwise); reject up front with the engine's
+        // reason and the failed bucket list.
+        base.engine
+            .shrink_ready()
+            .map_err(|reason| scale_rejection(&*base.engine, n_slots as usize, &reason))?;
+        let retiring = n_slots - 1;
         let old_engine = base.engine.fork();
         let mut new_engine = base.engine.fork();
         let removed = new_engine.remove_bucket();
-        // As in scale_up: the shard list drops index n_new, so the engine
-        // must have shrunk at the LIFO tail (a discarded fork; nothing
-        // published on error).
+        // The shard list drops its tail index, so the engine must have
+        // shrunk exactly there (a discarded fork; nothing published on
+        // error).
         ensure!(
-            removed == n_new,
-            "engine {:?} removed bucket {removed} instead of the LIFO tail {n_new} \
-             (restore failed buckets before scaling)",
-            base.engine.name()
+            removed == retiring,
+            "engine {:?} removed bucket {removed} instead of the frontier {retiring}; \
+             scale aborted before publishing{}",
+            base.engine.name(),
+            match failed_buckets(&*base.engine, n_slots as usize) {
+                f if f.is_empty() => String::new(),
+                f => format!(" (failed buckets: {}; RESTORE them first)", csv(&f)),
+            }
         );
         // Minimal disruption: only the retiring shard's keys move, so it
         // is the sole migration source — a scale-down costs O(retiring
         // shard), not O(cluster keyset).  Engines without the exact
         // guarantee (maglev's table rebuild, modulo) also shuffle keys
-        // between surviving shards, so every shard must be scanned.
-        let sources = if base.engine.minimal_disruption() { n_new..n_old } else { 0..n_old };
+        // between surviving shards, so every reachable shard must be
+        // scanned (those engines are never degraded — they are not fault
+        // tolerant — but the filter keeps the invariant explicit).
+        let sources: Vec<u32> = if base.engine.minimal_disruption() {
+            vec![retiring]
+        } else {
+            (0..n_slots).filter(|&b| !base.is_failed(b)).collect()
+        };
 
         let epoch = base.epoch + 1;
         // The migrating snapshot routes with the new engine (never onto
@@ -617,11 +811,16 @@ impl Router {
             epoch,
             engine: new_engine,
             shards: base.shards.clone(),
-            origin: Some(MigrationOrigin { engine: old_engine, sources }),
+            origin: Some(MigrationOrigin {
+                engine: old_engine,
+                sources,
+                settle_len: retiring as usize,
+            }),
+            degraded: base.degraded.as_ref().map(|d| d.fork()),
         });
         events.push(TopologyEvent {
             epoch,
-            kind: EventKind::Left(n_new),
+            kind: EventKind::Left(retiring),
             at: std::time::SystemTime::now(),
         });
         let mut shards = base.shards.clone();
@@ -632,12 +831,13 @@ impl Router {
         let migrating = self.snapshot();
         self.run_migration(&migrating)?;
         // Settle: drop the retiring shard handle.
-        shards.truncate(n_new as usize);
+        shards.truncate(retiring as usize);
         self.publish(PlacementSnapshot {
             epoch,
             engine: migrating.engine.fork(),
             shards,
             origin: None,
+            degraded: migrating.degraded.as_ref().map(|d| d.fork()),
         });
         // As in scale_up: drain dual-read holders, then purge the
         // tombstones their DELs may have written (best-effort — the op
@@ -645,35 +845,266 @@ impl Router {
         // The retiring shard is included: a remote process outlives its
         // handle and could rejoin a later epoch carrying stale tombstones.
         Self::quiesce(&migrating);
-        let _ = Self::purge_tombstones(&migrating.shards);
+        let _ = Self::purge_tombstones(&migrating);
         self.metrics.epochs.fetch_add(1, Ordering::Relaxed);
-        Ok(n_new)
+        Ok(n_work - 1)
     }
 
-    /// Complete an interrupted migration: if a previous scale op failed
-    /// mid-sweep (e.g. a remote shard hiccup) the migrating snapshot is
-    /// still published — dual-read keeps every key serveable — but the
-    /// topology never settled.  Re-running the sweep is idempotent (PUTNX
-    /// copies, source deletes of already-moved keys are no-ops), after
-    /// which the snapshot settles normally.  Without this, a retried scale
-    /// op would build a fresh origin from the stuck topology and strand
-    /// never-migrated keys outside both routes.
+    /// Fail shard `id` over: publish a degraded epoch whose engine has
+    /// `remove_arbitrary(id)` applied to a fork of the live one, so no
+    /// request ever routes to the dead shard again.  Returns the new
+    /// *working* shard count.
+    ///
+    /// O(1) engine work and **zero shard I/O**: the shard is presumed
+    /// dead, so nothing dials it — and unlike the scale ops there is no
+    /// quiesce wait either (a reader already stuck on the dying shard
+    /// must not delay the failover that routes around it; nothing here
+    /// deletes data, so stale readers are safe).  The skipped quiesce
+    /// narrows the "one live predecessor" chain the scale ops maintain:
+    /// a pre-FAIL reader that somehow held its snapshot all the way into
+    /// a *later* op's migration deletes could read a spurious miss — but
+    /// that requires holding one snapshot across two admin ops, an
+    /// extreme violation of the one-shard-call hold-time contract, and
+    /// the window is memory-safe either way (the superseded `Arc` stays
+    /// alive until its holders drop).  Keys whose data is on the dead
+    /// shard become *marooned*: reads answer `UNAVAILABLE` until a
+    /// RESTORE (or a re-PUT) supersedes them.
+    ///
+    /// Composes with an in-flight migration: the origin engine gets the
+    /// same removal (dual-read keeps working, minus the dead shard) and
+    /// the dead shard is dropped from the remaining migration sources —
+    /// deliberately *without* resuming the sweep first, since the dead
+    /// shard may be one of its sources.
+    pub fn fail_shard(&self, id: u32) -> Result<u32> {
+        let mut events = self
+            .admin
+            .try_lock()
+            .map_err(|_| anyhow!("MIGRATING: a topology change is already in flight"))?;
+        let base = self.snapshot();
+        let n_slots = base.shards.len() as u32;
+        ensure!(id < n_slots, "shard {id} out of range (cluster has {n_slots} slots)");
+        let ft_view = base.engine.as_fault_tolerant().ok_or_else(|| {
+            anyhow!(
+                "engine {:?} is not fault-tolerant (no arbitrary-removal support); \
+                 FAIL/RESTORE need one of: anchor, dx, memento",
+                base.engine.name()
+            )
+        })?;
+        ensure!(
+            ft_view.is_working(id),
+            "shard {id} is not a working bucket of engine {:?} (failed buckets: {})",
+            base.engine.name(),
+            csv(&failed_buckets(&*base.engine, n_slots as usize))
+        );
+        ensure!(base.engine.len() > 1, "cannot fail the last working shard");
+
+        let mut new_engine = base.engine.fork();
+        new_engine
+            .as_fault_tolerant_mut()
+            .expect("fork keeps the fault-tolerant surface")
+            .remove_arbitrary(id);
+        let working = new_engine.len();
+
+        // Compose with an in-flight migration (see doc comment).  The
+        // origin engine may not know the bucket (interrupted scale-up of
+        // the very shard that died) or may be down to one working bucket
+        // — in both cases the removal is skipped and the data path's
+        // `is_failed` check keeps the dead shard undialed.
+        let origin = base.origin.as_ref().map(|o| {
+            let mut old = o.engine.fork();
+            if let Some(oft) = old.as_fault_tolerant_mut() {
+                if oft.is_working(id) && old.len() > 1 {
+                    oft.remove_arbitrary(id);
+                }
+            }
+            MigrationOrigin {
+                engine: old,
+                sources: o.sources.iter().copied().filter(|&b| b != id).collect(),
+                settle_len: o.settle_len,
+            }
+        });
+        // The marooned record pairs this failure with the live engine as
+        // of *just before* the removal — per-failure, so it stays
+        // correct when the cluster scaled since an earlier failure (an
+        // older engine could never name a bucket that joined after it).
+        let degraded = Some(match &base.degraded {
+            Some(d) => {
+                let mut next = d.fork();
+                next.failed.push(id);
+                next.failed.sort_unstable();
+                next.maroons.push((base.engine.fork(), id));
+                next
+            }
+            None => DegradedState {
+                failed: vec![id],
+                maroons: vec![(base.engine.fork(), id)],
+            },
+        });
+
+        let epoch = base.epoch + 1;
+        self.publish(PlacementSnapshot {
+            epoch,
+            engine: new_engine,
+            shards: base.shards.clone(),
+            origin,
+            degraded,
+        });
+        events.push(TopologyEvent {
+            epoch,
+            kind: EventKind::Failed(id),
+            at: std::time::SystemTime::now(),
+        });
+        self.metrics.failovers.fetch_add(1, Ordering::Relaxed);
+        self.metrics.epochs.fetch_add(1, Ordering::Relaxed);
+        Ok(working)
+    }
+
+    /// Restore failed shard `id`: wipe it (it missed every write and
+    /// delete while it was down — its contents are unreconcilable
+    /// without replication), publish the restored epoch with the
+    /// degraded engine as migration origin, and stream the keys written
+    /// to survivors during the outage back onto it, serving reads and
+    /// writes throughout.  Returns the new *working* shard count.
+    ///
+    /// Engines with restore-order constraints reject cleanly here
+    /// ([`FaultTolerant::restore_blocked`](crate::algorithms::FaultTolerant::restore_blocked)
+    /// — anchor restores in reverse removal order).
+    pub fn restore_shard(&self, id: u32) -> Result<u32> {
+        let mut events = self
+            .admin
+            .try_lock()
+            .map_err(|_| anyhow!("MIGRATING: a topology change is already in flight"))?;
+        // Unlike FAIL, a restore runs a migration, so an interrupted
+        // sweep must settle first (its sources already exclude dead
+        // shards, so the resume never dials one).
+        let base = self.resume_interrupted(self.snapshot())?;
+        let Some(deg) = &base.degraded else {
+            bail!("no failed shards to restore (cluster is healthy)");
+        };
+        ensure!(
+            deg.failed.binary_search(&id).is_ok(),
+            "shard {id} is not failed (failed buckets: {})",
+            deg.failed_csv()
+        );
+
+        let mut new_engine = base.engine.fork();
+        {
+            let ft = new_engine
+                .as_fault_tolerant_mut()
+                .expect("degraded engine must be fault-tolerant");
+            if let Some(reason) = ft.restore_blocked(id) {
+                bail!("cannot restore shard {id}: {reason}");
+            }
+            ft.restore(id);
+        }
+        let working = new_engine.len();
+
+        // Pre-publish shard I/O, so a still-dead shard fails the RESTORE
+        // cleanly before anything is mutated: wipe the rejoining shard,
+        // then clear stale tombstones on every reachable survivor (the
+        // restore migration's PUTNX copies must not be refused by
+        // leftovers of an earlier sweep).
+        base.shards[id as usize].wipe()?;
+        Self::purge_tombstones(&base)?;
+
+        let remaining: Vec<u32> = deg.failed.iter().copied().filter(|&b| b != id).collect();
+        let degraded = if remaining.is_empty() {
+            None
+        } else {
+            Some(DegradedState {
+                failed: remaining,
+                // Keys this failure marooned were wiped with the shard:
+                // drop its marooned record, keep the other failures'.
+                maroons: deg
+                    .maroons
+                    .iter()
+                    .filter(|(_, b)| *b != id)
+                    .map(|(e, b)| (e.fork(), *b))
+                    .collect(),
+            })
+        };
+        // Any reachable shard of the degraded topology may hold keys the
+        // restored engine maps back to `id` (the replacement chains
+        // scattered them); the rejoining shard itself is empty and the
+        // still-failed ones cannot be scanned.
+        let n_slots = base.shards.len() as u32;
+        let sources: Vec<u32> =
+            (0..n_slots).filter(|&b| b != id && !base.is_failed(b)).collect();
+
+        let epoch = base.epoch + 1;
+        self.publish(PlacementSnapshot {
+            epoch,
+            engine: new_engine,
+            shards: base.shards.clone(),
+            origin: Some(MigrationOrigin {
+                engine: base.engine.fork(),
+                sources,
+                settle_len: base.shards.len(),
+            }),
+            degraded,
+        });
+        events.push(TopologyEvent {
+            epoch,
+            kind: EventKind::Restored(id),
+            at: std::time::SystemTime::now(),
+        });
+        // As in the scale ops: no reader may still route with the
+        // pre-restore snapshot once batches start deleting survivor
+        // copies (it would have no dual-read fallback onto `id`).
+        Self::quiesce(&base);
+        drop(base);
+        let migrating = self.snapshot();
+        self.run_migration(&migrating)?;
+        self.publish(PlacementSnapshot {
+            epoch,
+            engine: migrating.engine.fork(),
+            shards: migrating.shards.clone(),
+            origin: None,
+            degraded: migrating.degraded.as_ref().map(|d| d.fork()),
+        });
+        Self::quiesce(&migrating);
+        let _ = Self::purge_tombstones(&migrating);
+        self.metrics.restores.fetch_add(1, Ordering::Relaxed);
+        self.metrics.epochs.fetch_add(1, Ordering::Relaxed);
+        Ok(working)
+    }
+
+    /// Complete an interrupted migration: if a previous scale/restore op
+    /// failed mid-sweep (e.g. a remote shard hiccup) the migrating
+    /// snapshot is still published — dual-read keeps every key serveable
+    /// — but the topology never settled.  Re-running the sweep is
+    /// idempotent (PUTNX copies, source deletes of already-moved keys are
+    /// no-ops), after which the snapshot settles normally.  Without this,
+    /// a retried scale op would build a fresh origin from the stuck
+    /// topology and strand never-migrated keys outside both routes.
+    ///
+    /// The settle shard count comes from the origin's recorded
+    /// `settle_len`, *not* from `engine.len()`: on a degraded topology
+    /// the working count is always below the slot count, and inferring
+    /// the truncation from it would chop live shard handles (the
+    /// resume-path twin of the scale paths' degraded guards — pinned by
+    /// `resume_of_interrupted_degraded_migration_settles_safely`).
     fn resume_interrupted(
         &self,
         base: Arc<PlacementSnapshot>,
     ) -> Result<Arc<PlacementSnapshot>> {
-        if !base.is_migrating() {
+        let Some(origin) = &base.origin else {
             return Ok(base);
-        }
+        };
+        let settle_len = origin.settle_len;
+        debug_assert!(
+            settle_len <= base.shards.len(),
+            "settle_len beyond the migrating shard list"
+        );
         self.run_migration(&base)?;
-        let n = base.engine.len();
         let mut shards = base.shards.clone();
-        shards.truncate(n as usize); // no-op for an interrupted scale-up
+        shards.truncate(settle_len);
         self.publish(PlacementSnapshot {
             epoch: base.epoch,
             engine: base.engine.fork(),
             shards,
             origin: None,
+            degraded: base.degraded.as_ref().map(|d| d.fork()),
         });
         Self::quiesce(&base);
         drop(base);
@@ -703,14 +1134,14 @@ impl Router {
             let runtime = bulk.lock().unwrap();
             return rebalance::migrate_streaming(
                 &snap.shards,
-                origin.sources.clone(),
+                &origin.sources,
                 MIGRATION_BATCH,
                 |chunk| rebalance::plan(chunk, PlanPath::Xla { runtime: &runtime, n_old, n_new }),
             );
         }
         rebalance::migrate_streaming(
             &snap.shards,
-            origin.sources.clone(),
+            &origin.sources,
             MIGRATION_BATCH,
             |chunk| {
                 rebalance::plan(
@@ -808,6 +1239,7 @@ mod tests {
             engine: before.engine.fork(),
             shards: before.shards.clone(),
             origin: None,
+            degraded: None,
         });
         // The superseded handle stays valid after the swap...
         assert_eq!(before.epoch, 0);
@@ -924,24 +1356,18 @@ mod tests {
 
     #[test]
     fn scaling_with_outstanding_failures_is_rejected_without_mutation() {
-        // An engine with an arbitrary removal outstanding cannot scale at
-        // the LIFO tail (anchor would restore the failed bucket instead
-        // of growing; memento and dx panic in add_bucket/remove_bucket).
-        // The router must answer ERR before mutating or publishing
-        // anything — and without poisoning the admin mutex, so later
-        // admin ops still work.
+        // Anchor's add_bucket would *restore* the failed bucket instead
+        // of growing, and memento's asserts fire — for both, the router
+        // must answer one clean ERR that names the engine and the failed
+        // buckets, before mutating or publishing anything, and without
+        // poisoning the admin mutex.  (dx is different: its growth
+        // composes with failures — covered by
+        // `dx_scales_while_degraded` in rust/tests/failover.rs.)
         use crate::algorithms::ConsistentHasher;
-        use crate::algorithms::{
-            anchor::AnchorHash, dx::DxHash, memento::MementoHash, FaultTolerant,
-        };
+        use crate::algorithms::{anchor::AnchorHash, memento::MementoHash, FaultTolerant};
         let degraded: Vec<Box<dyn ConsistentHasher>> = vec![
             {
                 let mut e = AnchorHash::with_capacity(4, 8);
-                e.remove_arbitrary(1);
-                Box::new(e)
-            },
-            {
-                let mut e = DxHash::with_capacity(4, 8);
                 e.remove_arbitrary(1);
                 Box::new(e)
             },
@@ -953,21 +1379,113 @@ mod tests {
         ];
         for engine in degraded {
             let name = engine.name();
+            // `Cluster::new` pairs one handle per *working* bucket; a
+            // directly-constructed degraded router is only used to probe
+            // rejections, never to route.
             let shards = (0..engine.len()).map(|i| ShardClient::Local(Shard::new(i))).collect();
             let router = Router::new(Cluster::new(engine, shards));
             let before = router.topology();
-            assert!(
-                matches!(router.handle(Request::ScaleUp), Response::Err(_)),
-                "{name}: degraded scale-up must be rejected"
-            );
-            assert!(
-                matches!(router.handle(Request::ScaleDown), Response::Err(_)),
-                "{name}: degraded scale-down must be rejected"
-            );
+            for req in [Request::ScaleUp, Request::ScaleDown] {
+                match router.handle(req) {
+                    Response::Err(msg) => {
+                        assert!(
+                            msg.contains(name),
+                            "{name}: rejection must name the engine: {msg}"
+                        );
+                        assert!(
+                            msg.contains("failed buckets: 1"),
+                            "{name}: rejection must name the failed bucket: {msg}"
+                        );
+                        assert!(
+                            msg.contains("RESTORE"),
+                            "{name}: rejection must point at the fix: {msg}"
+                        );
+                    }
+                    other => panic!("{name}: degraded scale must be rejected, got {other:?}"),
+                }
+            }
             assert_eq!(router.topology(), before, "{name}: failed scale mutated topology");
             // The admin mutex must not be poisoned by the rejection.
             assert!(router.events().is_empty(), "{name}: rejected scale logged an event");
         }
+    }
+
+    #[test]
+    fn failover_on_non_fault_tolerant_engine_is_a_clean_err() {
+        // The paper's core BinomialHash is LIFO-only; FAIL/RESTORE must
+        // answer ERR without mutating or publishing anything.
+        let router = Router::new(local_cluster("binomial", 3).unwrap());
+        let before = router.topology();
+        match router.handle(Request::Fail { shard: 1 }) {
+            Response::Err(msg) => {
+                assert!(msg.contains("not fault-tolerant"), "{msg}");
+                assert!(msg.contains("binomial"), "{msg}");
+            }
+            other => panic!("expected ERR, got {other:?}"),
+        }
+        assert!(matches!(router.handle(Request::Restore { shard: 1 }), Response::Err(_)));
+        assert_eq!(router.topology(), before);
+        assert!(router.events().is_empty());
+        assert_eq!(router.handle(Request::Count), Response::Num(0));
+    }
+
+    #[test]
+    fn resume_of_interrupted_degraded_migration_settles_safely() {
+        // A crash mid-sweep can leave a *degraded* migrating snapshot
+        // (here: a dx scale-up composed with an outstanding failure).
+        // The next admin op resumes it; the settle must truncate the
+        // shard list to the origin's recorded `settle_len` — inferring
+        // it from `engine.len()` (the working count, which sits below
+        // the slot count while degraded) would chop the joining shard
+        // right after the resumed sweep filled it.
+        let router = Router::new(local_cluster("dx", 3).unwrap());
+        for i in 0..200 {
+            router.handle(Request::Put { key: format!("r{i}"), value: val(&[i as u8]) });
+        }
+        assert_eq!(router.handle(Request::Fail { shard: 1 }), Response::Num(2));
+
+        // Freeze the moment mid-scale-up where the migrating epoch is
+        // published but the sweep never ran (the "crash").
+        let base = router.snapshot();
+        let old_engine = base.engine.fork();
+        let mut new_engine = base.engine.fork();
+        assert_eq!(new_engine.add_bucket(), 3, "dx must grow at the frontier");
+        let mut shards = base.shards.clone();
+        shards.push(ShardClient::Local(Shard::new(3)));
+        router.publish(PlacementSnapshot {
+            epoch: base.epoch + 1,
+            engine: new_engine,
+            shards,
+            origin: Some(MigrationOrigin {
+                engine: old_engine,
+                sources: vec![0, 2],
+                settle_len: 4,
+            }),
+            degraded: base.degraded.as_ref().map(|d| d.fork()),
+        });
+
+        // The next admin op resumes the sweep, settles at 4 slots, then
+        // performs its own change (retiring the joining bucket again).
+        assert_eq!(router.handle(Request::ScaleDown), Response::Num(2));
+        let snap = router.snapshot();
+        assert_eq!(snap.shards.len(), 3, "resume settled to the wrong shard list");
+        assert!(!snap.is_migrating());
+        assert!(snap.is_degraded());
+        // Every key is either served correctly or marooned on the failed
+        // shard — never silently lost by a mis-truncated settle.
+        let mut marooned = 0;
+        for i in 0..200 {
+            match router.handle(Request::Get { key: format!("r{i}") }) {
+                Response::Val(v) => assert_eq!(v, val(&[i as u8]), "r{i} corrupted"),
+                Response::Err(msg) => {
+                    assert!(msg.starts_with("UNAVAILABLE"), "r{i}: {msg}");
+                    marooned += 1;
+                }
+                other => panic!("r{i}: {other:?}"),
+            }
+        }
+        assert!(marooned > 0, "some keys must be marooned on failed shard 1");
+        assert!(marooned < 200, "survivor keys must still be served");
     }
 
     #[test]
@@ -1000,7 +1518,12 @@ mod tests {
             epoch: base.epoch + 1,
             engine: new_engine,
             shards: shards.clone(),
-            origin: Some(MigrationOrigin { engine: old_engine, sources: 0..2 }),
+            origin: Some(MigrationOrigin {
+                engine: old_engine,
+                sources: vec![0, 1],
+                settle_len: 3,
+            }),
+            degraded: None,
         });
 
         // The client DEL lands while the copy is in flight...
@@ -1066,6 +1589,56 @@ mod tests {
             Response::Err(_)
         ));
         assert!(matches!(router.handle(Request::PurgeTombs), Response::Err(_)));
+        assert!(matches!(router.handle(Request::Wipe), Response::Err(_)));
+    }
+
+    #[test]
+    fn empty_values_survive_routing_and_migration() {
+        // The zero-length payload edge (`PUT k 0`) end to end: store,
+        // read, migrate across a scale cycle, and read again — an empty
+        // `Arc<[u8]>` must behave exactly like any other value.
+        let router = Router::new(local_cluster("binomial", 3).unwrap());
+        let empty: Value = Vec::new().into();
+        for i in 0..64 {
+            assert_eq!(
+                router.handle(Request::Put { key: format!("ev{i}"), value: empty.clone() }),
+                Response::Ok
+            );
+        }
+        assert_eq!(router.handle(Request::Count), Response::Num(64));
+        assert_eq!(router.handle(Request::ScaleUp), Response::Num(4));
+        assert_eq!(router.handle(Request::ScaleDown), Response::Num(3));
+        for i in 0..64 {
+            assert_eq!(
+                router.handle(Request::Get { key: format!("ev{i}") }),
+                Response::Val(empty.clone()),
+                "empty value ev{i} lost in migration"
+            );
+        }
+        assert_eq!(router.handle(Request::Count), Response::Num(64));
+    }
+
+    #[test]
+    fn empty_values_roundtrip_the_router_wire() {
+        let router = Router::new(local_cluster("binomial", 2).unwrap());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let _ = router.serve(listener);
+        });
+
+        let sock = TcpStream::connect(addr).unwrap();
+        let mut rd = BufReader::new(sock.try_clone().unwrap());
+        let mut wr = sock;
+        let empty: Value = Vec::new().into();
+        proto::write_request(&mut wr, &Request::Put { key: "e".into(), value: empty.clone() })
+            .unwrap();
+        assert_eq!(proto::read_response(&mut rd).unwrap(), Response::Ok);
+        proto::write_request(&mut wr, &Request::Get { key: "e".into() }).unwrap();
+        assert_eq!(proto::read_response(&mut rd).unwrap(), Response::Val(empty));
+        // The connection stays framed after a zero-length payload.
+        proto::write_request(&mut wr, &Request::Del { key: "e".into() }).unwrap();
+        assert_eq!(proto::read_response(&mut rd).unwrap(), Response::Ok);
     }
 
     #[test]

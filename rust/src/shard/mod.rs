@@ -154,6 +154,25 @@ impl Shard {
         purged
     }
 
+    /// Drop every stored key *and* tombstone; returns how many keys were
+    /// cleared.
+    ///
+    /// The failover rejoin primitive: a shard that was failed missed
+    /// every write and delete issued while it was down, so its contents
+    /// are unreconcilable without versioning — the router wipes it before
+    /// restoring it into the topology and migrates the authoritative
+    /// copies (held by the survivors) back onto it.
+    pub fn wipe(&self) -> u64 {
+        let mut cleared = 0u64;
+        for s in &self.stripes {
+            let mut s = s.lock().unwrap();
+            cleared += s.live.len() as u64;
+            s.live.clear();
+            s.tombs.clear();
+        }
+        cleared
+    }
+
     /// All keys currently stored (rebalancer input).
     pub fn scan(&self) -> Vec<String> {
         let mut keys = Vec::new();
@@ -234,6 +253,7 @@ impl Shard {
                 }
             }
             RequestRef::PurgeTombs => Response::Num(self.purge_tombstones()),
+            RequestRef::Wipe => Response::Num(self.wipe()),
             RequestRef::Scan => Response::Keys(self.scan()),
             RequestRef::ScanStripe { stripe } => {
                 if (stripe as usize) < STRIPES {
@@ -244,9 +264,10 @@ impl Shard {
             }
             RequestRef::Count => Response::Num(self.count()),
             RequestRef::Stats => Response::Info(self.stats()),
-            RequestRef::ScaleUp | RequestRef::ScaleDown => {
-                Response::Err("not a coordinator".into())
-            }
+            RequestRef::ScaleUp
+            | RequestRef::ScaleDown
+            | RequestRef::Fail { .. }
+            | RequestRef::Restore { .. } => Response::Err("not a coordinator".into()),
         }
     }
 
@@ -392,6 +413,15 @@ impl ShardClient {
     /// Typed PURGETOMBS; returns how many tombstones were cleared.
     pub fn purge_tombstones(&self) -> Result<u64> {
         match self.call_ref(RequestRef::PurgeTombs, None)? {
+            Response::Num(x) => Ok(x),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Typed WIPE: drop every key and tombstone (failover rejoin);
+    /// returns how many keys were cleared.
+    pub fn wipe(&self) -> Result<u64> {
+        match self.call_ref(RequestRef::Wipe, None)? {
             Response::Num(x) => Ok(x),
             other => Err(anyhow!("unexpected response {other:?}")),
         }
@@ -666,6 +696,57 @@ mod tests {
         assert_eq!(c.get("x").unwrap(), None);
         assert_eq!(c.purge_tombstones().unwrap(), 1);
         assert!(c.put_nx("x", val(b"new")).unwrap());
+    }
+
+    #[test]
+    fn wipe_clears_keys_and_tombstones() {
+        let s = Shard::new(16);
+        for i in 0..20 {
+            let k = format!("w{i}");
+            s.put(&k, val(&[i as u8]), kd(&k));
+        }
+        s.del_tomb("w0", kd("w0"));
+        assert_eq!(s.wipe(), 19);
+        assert_eq!(s.count(), 0);
+        assert!(s.stats().contains("tombs=0"));
+        // The tombstone went with the wipe: PUTNX works again.
+        assert!(s.put_nx("w0", val(b"fresh"), kd("w0")));
+
+        // And over the wire.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let srv = s.clone();
+        std::thread::spawn(move || {
+            let _ = serve(srv, listener);
+        });
+        let c = ShardClient::Remote(RemotePool::new(addr, 1));
+        assert_eq!(c.wipe().unwrap(), 1);
+        assert_eq!(c.count().unwrap(), 0);
+    }
+
+    #[test]
+    fn empty_values_store_and_roundtrip_the_wire() {
+        // Zero-length payload edge (`PUT k 0`): store, share, and serve
+        // an empty `Arc<[u8]>` locally and over TCP.
+        let s = Shard::new(17);
+        let empty: Value = Vec::new().into();
+        s.put("e", empty.clone(), kd("e"));
+        let got = s.get("e", kd("e")).unwrap();
+        assert!(got.is_empty());
+        assert!(Arc::ptr_eq(&got, &empty), "empty GET must share the buffer too");
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let srv = s.clone();
+        std::thread::spawn(move || {
+            let _ = serve(srv, listener);
+        });
+        let c = ShardClient::Remote(RemotePool::new(addr, 1));
+        assert_eq!(c.get("e").unwrap().as_deref(), Some(&b""[..]));
+        c.put("e2", Vec::new().into()).unwrap();
+        assert_eq!(c.get("e2").unwrap().as_deref(), Some(&b""[..]));
+        assert!(!c.put_nx("e2", val(b"x")).unwrap(), "empty value must count as present");
+        assert_eq!(c.count().unwrap(), 2);
     }
 
     #[test]

@@ -1,0 +1,528 @@
+//! Failover integration sweep: all three fault-tolerant engines (anchor,
+//! dx, memento) fail over and restore *through the router*.
+//!
+//! Pins the acceptance contract of the failover subsystem:
+//!
+//! * `FAIL <id>` publishes a degraded epoch with O(1) engine work and no
+//!   shard I/O — it works even when the failed shard is a dead TCP
+//!   endpoint that would hang any dial;
+//! * while degraded, no request routes to the dead shard: reachable keys
+//!   serve normally, marooned ones answer a distinguishable
+//!   `UNAVAILABLE` error, and a re-PUT makes a key reachable again;
+//! * `RESTORE <id>` rejoins the shard empty (WIPE) and migrates the keys
+//!   written to survivors during the outage back onto it — deleted keys
+//!   stay dead, and engines with restore-order constraints (anchor)
+//!   reject out-of-order restores cleanly;
+//! * scaling while degraded composes for dx (frontier growth) and fails
+//!   fast with the engine's reason for anchor and memento.
+
+use std::net::{TcpListener, TcpStream};
+
+use binhash::algorithms::{by_name, ConsistentHasher};
+use binhash::cluster::Cluster;
+use binhash::proto::{self, Request, Response, Value};
+use binhash::router::{local_cluster, Router};
+use binhash::shard::{key_digest, RemotePool, Shard, ShardClient};
+
+const FT_ENGINES: &[&str] = &["anchor", "dx", "memento"];
+
+fn val(i: usize) -> Value {
+    vec![i as u8, (i >> 8) as u8, 0xEE].into()
+}
+
+/// GET through the router, classifying the degraded-read contract.
+enum Read {
+    Hit(Value),
+    Miss,
+    Unavailable,
+}
+
+fn classify(router: &Router, key: &str) -> Read {
+    match router.handle(Request::Get { key: key.into() }) {
+        Response::Val(v) => Read::Hit(v),
+        Response::Nil => Read::Miss,
+        Response::Err(msg) => {
+            assert!(msg.starts_with("UNAVAILABLE"), "unexpected error for {key}: {msg}");
+            Read::Unavailable
+        }
+        other => panic!("{key}: {other:?}"),
+    }
+}
+
+#[test]
+fn every_fault_tolerant_engine_fails_over_and_restores_through_the_router() {
+    const KEYS: usize = 600;
+    const FAILED: u32 = 2;
+    for name in FT_ENGINES {
+        let router = Router::new(local_cluster(name, 5).unwrap());
+        for i in 0..KEYS {
+            assert_eq!(
+                router.handle(Request::Put { key: format!("f{i}"), value: val(i) }),
+                Response::Ok,
+                "{name}"
+            );
+        }
+        // The healthy placement tells us which keys will be marooned.
+        let pre_fail = by_name(name, 5).unwrap();
+        let marooned: Vec<usize> = (0..KEYS)
+            .filter(|i| pre_fail.bucket(key_digest(&format!("f{i}"))) == FAILED)
+            .collect();
+        assert!(!marooned.is_empty(), "{name}: keyset never hit bucket {FAILED}");
+
+        assert_eq!(router.handle(Request::Fail { shard: FAILED }), Response::Num(4), "{name}");
+        match router.handle(Request::Stats) {
+            Response::Info(s) => {
+                assert!(s.contains("state=degraded"), "{name}: {s}");
+                assert!(s.contains("failed=2"), "{name}: {s}");
+                assert!(s.contains("failovers=1"), "{name}: {s}");
+            }
+            other => panic!("{name}: {other:?}"),
+        }
+        // Degraded serving: reachable keys answer, marooned ones answer
+        // UNAVAILABLE — and nothing hangs or misroutes.
+        for i in 0..KEYS {
+            match classify(&router, &format!("f{i}")) {
+                Read::Hit(v) => {
+                    assert_eq!(v, val(i), "{name}: f{i} corrupted");
+                    assert!(
+                        !marooned.contains(&i),
+                        "{name}: marooned f{i} served from a dead shard?"
+                    );
+                }
+                Read::Unavailable => {
+                    assert!(marooned.contains(&i), "{name}: reachable f{i} unavailable");
+                }
+                Read::Miss => panic!("{name}: f{i} silently missing while degraded"),
+            }
+        }
+        // COUNT skips the dead shard: exactly the reachable keys.
+        assert_eq!(
+            router.handle(Request::Count),
+            Response::Num((KEYS - marooned.len()) as u64),
+            "{name}"
+        );
+        assert!(router.shard_count(FAILED).is_err(), "{name}: shard_count dialed a dead shard");
+
+        // A write supersedes the marooned copy: the key is reachable
+        // again immediately, and survives the later restore migration.
+        let rewritten = marooned[0];
+        assert_eq!(
+            router.handle(Request::Put {
+                key: format!("f{rewritten}"),
+                value: b"rewritten".to_vec().into()
+            }),
+            Response::Ok,
+            "{name}"
+        );
+        assert_eq!(
+            router.handle(Request::Get { key: format!("f{rewritten}") }),
+            Response::Val(b"rewritten".to_vec().into()),
+            "{name}: re-PUT key still unavailable"
+        );
+        // Re-failing an already-failed shard is a clean rejection.
+        assert!(matches!(router.handle(Request::Fail { shard: FAILED }), Response::Err(_)));
+
+        assert_eq!(
+            router.handle(Request::Restore { shard: FAILED }),
+            Response::Num(5),
+            "{name}"
+        );
+        let snap = router.snapshot();
+        assert!(!snap.is_migrating() && !snap.is_degraded(), "{name}: restore did not settle");
+        match router.handle(Request::Stats) {
+            Response::Info(s) => {
+                assert!(s.contains("state=steady"), "{name}: {s}");
+                assert!(s.contains("failed=-"), "{name}: {s}");
+                assert!(s.contains("restores=1"), "{name}: {s}");
+            }
+            other => panic!("{name}: {other:?}"),
+        }
+        // Post-restore: survivors intact, the rewritten key migrated
+        // back, never-rewritten marooned keys are lost (their only copy
+        // died with the shard — replication is the ROADMAP follow-up),
+        // and nothing answers UNAVAILABLE anymore.
+        for i in 0..KEYS {
+            match classify(&router, &format!("f{i}")) {
+                Read::Hit(v) => {
+                    if i == rewritten {
+                        assert_eq!(v.as_ref(), &b"rewritten"[..], "{name}");
+                    } else {
+                        assert_eq!(v, val(i), "{name}: f{i} corrupted by restore");
+                        assert!(!marooned.contains(&i), "{name}: f{i} resurrected stale data");
+                    }
+                }
+                Read::Miss => {
+                    assert!(
+                        marooned.contains(&i) && i != rewritten,
+                        "{name}: reachable f{i} lost by restore"
+                    );
+                }
+                Read::Unavailable => panic!("{name}: f{i} unavailable after restore"),
+            }
+        }
+        // The restored shard owns its keyspace again: keys written while
+        // it was down migrated back.
+        assert!(router.shard_count(FAILED).unwrap() > 0, "{name}: restored shard left empty");
+        // And the cluster scales again now that it is healthy.
+        assert_eq!(router.handle(Request::ScaleUp), Response::Num(6), "{name}");
+        assert_eq!(router.handle(Request::ScaleDown), Response::Num(5), "{name}");
+    }
+}
+
+#[test]
+fn fail_never_dials_the_dead_shard_even_over_tcp() {
+    // The failed shard here is a *dead TCP endpoint* — any code path
+    // that dials it would error (or hang, with a black-holed address);
+    // FAIL must succeed instantly and the data path must route around
+    // it.  RESTORE, by contrast, must dial it (WIPE) and therefore fails
+    // cleanly while it is still dead.
+    // Port 1 is privileged and unbindable by test processes: connects
+    // are refused instantly, and no parallel test can accidentally
+    // start listening there (a dropped ephemeral port could be reused).
+    let dead_addr = "127.0.0.1:1".parse().unwrap();
+    let engine = by_name("memento", 3).unwrap();
+    let shards = vec![
+        ShardClient::Local(Shard::new(0)),
+        ShardClient::Local(Shard::new(1)),
+        ShardClient::Remote(RemotePool::new(dead_addr, 1)),
+    ];
+    let router = Router::new(Cluster::new(engine, shards));
+
+    assert_eq!(router.handle(Request::Fail { shard: 2 }), Response::Num(2));
+    // Writes land on survivors; reads of them never touch the dead
+    // endpoint.
+    for i in 0..100 {
+        assert_eq!(
+            router.handle(Request::Put { key: format!("d{i}"), value: val(i) }),
+            Response::Ok
+        );
+        assert_eq!(
+            router.handle(Request::Get { key: format!("d{i}") }),
+            Response::Val(val(i))
+        );
+    }
+    // An absent key whose pre-failure owner is the dead shard answers
+    // UNAVAILABLE instantly instead of dialing a dead connection.
+    let healthy = by_name("memento", 3).unwrap();
+    let ghost = (0..)
+        .map(|i| format!("ghost{i}"))
+        .find(|k| healthy.bucket(key_digest(k)) == 2)
+        .unwrap();
+    assert!(matches!(
+        router.handle(Request::Get { key: ghost.clone() }),
+        Response::Err(msg) if msg.starts_with("UNAVAILABLE")
+    ));
+    // COUNT and STATS skip it too.
+    assert_eq!(router.handle(Request::Count), Response::Num(100));
+    // RESTORE needs the shard back (WIPE round-trip): while it is still
+    // dead this fails cleanly and mutates nothing.
+    assert!(matches!(router.handle(Request::Restore { shard: 2 }), Response::Err(_)));
+    let snap = router.snapshot();
+    assert!(snap.is_degraded(), "failed restore must leave the degraded epoch in place");
+    assert_eq!(router.handle(Request::Count), Response::Num(100));
+}
+
+#[test]
+fn anchor_enforces_restore_order_cleanly() {
+    let router = Router::new(local_cluster("anchor", 6).unwrap());
+    for i in 0..200 {
+        router.handle(Request::Put { key: format!("a{i}"), value: val(i) });
+    }
+    assert_eq!(router.handle(Request::Fail { shard: 1 }), Response::Num(5));
+    assert_eq!(router.handle(Request::Fail { shard: 4 }), Response::Num(4));
+    // Anchor restores in reverse removal order: 4 first, then 1 — the
+    // violation answers ERR (naming the required bucket), never panics
+    // under the admin lock.
+    match router.handle(Request::Restore { shard: 1 }) {
+        Response::Err(msg) => assert!(msg.contains('4'), "{msg}"),
+        other => panic!("{other:?}"),
+    }
+    assert_eq!(router.handle(Request::Restore { shard: 4 }), Response::Num(5));
+    assert_eq!(router.handle(Request::Restore { shard: 1 }), Response::Num(6));
+    assert!(!router.snapshot().is_degraded());
+    // Still serving and scalable after the ordered recovery.
+    for i in 0..200 {
+        match classify(&router, &format!("a{i}")) {
+            Read::Hit(v) => assert_eq!(v, val(i)),
+            Read::Miss => {} // marooned data died with its shard
+            Read::Unavailable => panic!("a{i} unavailable after full recovery"),
+        }
+    }
+    assert_eq!(router.handle(Request::ScaleUp), Response::Num(7));
+}
+
+#[test]
+fn memento_survives_multiple_overlapping_failures() {
+    let router = Router::new(local_cluster("memento", 6).unwrap());
+    for i in 0..400 {
+        router.handle(Request::Put { key: format!("m{i}"), value: val(i) });
+    }
+    assert_eq!(router.handle(Request::Fail { shard: 1 }), Response::Num(5));
+    assert_eq!(router.handle(Request::Fail { shard: 3 }), Response::Num(4));
+    match router.handle(Request::Stats) {
+        Response::Info(s) => assert!(s.contains("failed=1,3"), "{s}"),
+        other => panic!("{other:?}"),
+    }
+    // Scaling is blocked with *both* buckets named.
+    match router.handle(Request::ScaleUp) {
+        Response::Err(msg) => {
+            assert!(msg.contains("memento"), "{msg}");
+            assert!(msg.contains("failed buckets: 1,3"), "{msg}");
+            assert!(msg.contains("RESTORE"), "{msg}");
+        }
+        other => panic!("{other:?}"),
+    }
+    // Every read respects the two-failure degraded contract.
+    for i in 0..400 {
+        match classify(&router, &format!("m{i}")) {
+            Read::Hit(v) => assert_eq!(v, val(i), "m{i} corrupted"),
+            Read::Unavailable => {}
+            Read::Miss => panic!("m{i} silently missing while degraded"),
+        }
+    }
+    // Memento restores in any order.
+    assert_eq!(router.handle(Request::Restore { shard: 1 }), Response::Num(5));
+    assert_eq!(router.handle(Request::Restore { shard: 3 }), Response::Num(6));
+    assert!(!router.snapshot().is_degraded());
+    assert_eq!(router.handle(Request::ScaleUp), Response::Num(7));
+}
+
+#[test]
+fn dx_scales_while_degraded() {
+    // dx's add frontier is disjoint from its failure holes, so a
+    // degraded dx cluster can still grow (and retire a working frontier
+    // bucket) — the scale composes with the outstanding failure instead
+    // of being blanket-rejected.
+    let router = Router::new(local_cluster("dx", 4).unwrap());
+    for i in 0..400 {
+        router.handle(Request::Put { key: format!("x{i}"), value: val(i) });
+    }
+    assert_eq!(router.handle(Request::Fail { shard: 1 }), Response::Num(3));
+    // Grow: the new bucket takes id 4 (the frontier), shards stay
+    // addressable, keys migrate onto it from the *reachable* shards.
+    assert_eq!(router.handle(Request::ScaleUp), Response::Num(4));
+    let snap = router.snapshot();
+    assert_eq!(snap.shards.len(), 5);
+    assert!(snap.is_degraded());
+    assert!(router.shard_count(4).unwrap() > 0, "joining shard received no keys");
+    // Shrink it again while still degraded.
+    assert_eq!(router.handle(Request::ScaleDown), Response::Num(3));
+    assert_eq!(router.snapshot().shards.len(), 4);
+    // Reads held the degraded contract across both scales.
+    let mut unavailable = 0;
+    for i in 0..400 {
+        match classify(&router, &format!("x{i}")) {
+            Read::Hit(v) => assert_eq!(v, val(i), "x{i} corrupted"),
+            Read::Unavailable => unavailable += 1,
+            Read::Miss => panic!("x{i} silently missing"),
+        }
+    }
+    assert!(unavailable > 0, "no key was marooned on failed bucket 1");
+    // Recover, then verify the cluster is fully healthy.
+    assert_eq!(router.handle(Request::Restore { shard: 1 }), Response::Num(4));
+    assert!(!router.snapshot().is_degraded());
+    for i in 0..400 {
+        match classify(&router, &format!("x{i}")) {
+            Read::Hit(v) => assert_eq!(v, val(i)),
+            Read::Miss => {} // marooned data died with the shard
+            Read::Unavailable => panic!("x{i} unavailable after restore"),
+        }
+    }
+}
+
+#[test]
+fn second_failure_after_degraded_scale_still_answers_unavailable() {
+    // fail 1 → scale up (bucket 4 joins while degraded; keys migrate
+    // onto it) → fail 4.  Keys marooned on the *post-scale* bucket must
+    // still answer UNAVAILABLE, never a silent NIL: the marooned record
+    // is kept per failure (paired with the engine as of that removal),
+    // because an engine frozen at the first failure could never name a
+    // bucket that joined afterwards.
+    let router = Router::new(local_cluster("dx", 4).unwrap());
+    for i in 0..400 {
+        router.handle(Request::Put { key: format!("y{i}"), value: val(i) });
+    }
+    assert_eq!(router.handle(Request::Fail { shard: 1 }), Response::Num(3));
+    assert_eq!(router.handle(Request::ScaleUp), Response::Num(4));
+    // Which keys physically live on the joining bucket now?
+    let on_new: Vec<usize> = {
+        let snap = router.snapshot();
+        (0..400).filter(|i| snap.route(key_digest(&format!("y{i}"))).0 == 4).collect()
+    };
+    assert!(!on_new.is_empty(), "scale-up moved nothing onto bucket 4");
+    assert_eq!(router.handle(Request::Fail { shard: 4 }), Response::Num(3));
+    for &i in &on_new {
+        match router.handle(Request::Get { key: format!("y{i}") }) {
+            Response::Err(msg) => {
+                assert!(msg.starts_with("UNAVAILABLE"), "y{i}: {msg}");
+                assert!(msg.contains("shard 4"), "y{i}: wrong marooning shard: {msg}");
+            }
+            other => panic!("y{i} marooned on the post-scale bucket answered {other:?}"),
+        }
+    }
+    // Everything else still honors the degraded contract.
+    for i in (0..400).filter(|i| !on_new.contains(i)) {
+        match classify(&router, &format!("y{i}")) {
+            Read::Hit(v) => assert_eq!(v, val(i), "y{i} corrupted"),
+            Read::Unavailable => {} // marooned on bucket 1
+            Read::Miss => panic!("y{i} silently missing while degraded"),
+        }
+    }
+    // Both failures restore independently (any order for dx).
+    assert_eq!(router.handle(Request::Restore { shard: 4 }), Response::Num(4));
+    assert_eq!(router.handle(Request::Restore { shard: 1 }), Response::Num(5));
+    assert!(!router.snapshot().is_degraded());
+}
+
+#[test]
+fn failover_admin_validation() {
+    let router = Router::new(local_cluster("memento", 3).unwrap());
+    // Out of range.
+    assert!(matches!(router.handle(Request::Fail { shard: 9 }), Response::Err(_)));
+    // Restore on a healthy cluster.
+    match router.handle(Request::Restore { shard: 1 }) {
+        Response::Err(msg) => assert!(msg.contains("healthy"), "{msg}"),
+        other => panic!("{other:?}"),
+    }
+    assert_eq!(router.handle(Request::Fail { shard: 0 }), Response::Num(2));
+    // Restore of a shard that is not the failed one names the failed set.
+    match router.handle(Request::Restore { shard: 1 }) {
+        Response::Err(msg) => assert!(msg.contains("failed buckets: 0"), "{msg}"),
+        other => panic!("{other:?}"),
+    }
+    // Double-fail of the same shard.
+    assert!(matches!(router.handle(Request::Fail { shard: 0 }), Response::Err(_)));
+    // Failing down to the last working shard is refused.
+    assert_eq!(router.handle(Request::Fail { shard: 1 }), Response::Num(1));
+    match router.handle(Request::Fail { shard: 2 }) {
+        Response::Err(msg) => assert!(msg.contains("last working"), "{msg}"),
+        other => panic!("{other:?}"),
+    }
+    // Nothing above corrupted the topology: restore everything and go.
+    assert_eq!(router.handle(Request::Restore { shard: 1 }), Response::Num(2));
+    assert_eq!(router.handle(Request::Restore { shard: 0 }), Response::Num(3));
+    assert!(!router.snapshot().is_degraded());
+    assert_eq!(router.events().len(), 4, "2 FAILs + 2 RESTOREs recorded");
+}
+
+#[test]
+fn failover_drives_over_the_wire() {
+    // FAIL/RESTORE are router admin wire ops: drive a full cycle through
+    // a real TCP connection (and confirm a shard server rejects them).
+    let router = Router::new(local_cluster("dx", 3).unwrap());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let r = router.clone();
+    std::thread::spawn(move || {
+        let _ = r.serve(listener);
+    });
+
+    let sock = TcpStream::connect(addr).unwrap();
+    let mut rd = std::io::BufReader::new(sock.try_clone().unwrap());
+    let mut wr = sock;
+    proto::write_request(&mut wr, &Request::Put { key: "wk".into(), value: val(1) }).unwrap();
+    assert_eq!(proto::read_response(&mut rd).unwrap(), Response::Ok);
+    proto::write_request(&mut wr, &Request::Fail { shard: 1 }).unwrap();
+    assert_eq!(proto::read_response(&mut rd).unwrap(), Response::Num(2));
+    proto::write_request(&mut wr, &Request::Stats).unwrap();
+    match proto::read_response(&mut rd).unwrap() {
+        Response::Info(s) => assert!(s.contains("failed=1"), "{s}"),
+        other => panic!("{other:?}"),
+    }
+    proto::write_request(&mut wr, &Request::Restore { shard: 1 }).unwrap();
+    assert_eq!(proto::read_response(&mut rd).unwrap(), Response::Num(3));
+    proto::write_request(&mut wr, &Request::Get { key: "wk".into() }).unwrap();
+    assert_eq!(proto::read_response(&mut rd).unwrap(), Response::Val(val(1)));
+
+    // A standalone shard server is not a coordinator.
+    let shard = Shard::new(7);
+    let slistener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let saddr = slistener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        let _ = binhash::shard::serve(shard, slistener);
+    });
+    let c = ShardClient::Remote(RemotePool::new(saddr, 1));
+    assert!(matches!(c.call(&Request::Fail { shard: 0 }).unwrap(), Response::Err(_)));
+}
+
+#[test]
+fn restored_shard_is_isolated_from_its_stale_past() {
+    // Regression guard for resurrection-through-restore: values that
+    // physically sit on the failed shard (here: we can reach inside the
+    // Local handle) must not reappear after RESTORE — the wipe precedes
+    // the rejoin.
+    let router = Router::new(local_cluster("memento", 3).unwrap());
+    let stale_holder = match &router.snapshot().shards[1] {
+        ShardClient::Local(s) => s.clone(),
+        _ => unreachable!(),
+    };
+    // Keys owned by bucket 1 under the healthy engine.
+    let healthy = by_name("memento", 3).unwrap();
+    let owned: Vec<String> = (0..2_000)
+        .map(|i| format!("s{i}"))
+        .filter(|k| healthy.bucket(key_digest(k)) == 1)
+        .take(50)
+        .collect();
+    assert!(owned.len() >= 10);
+    for k in &owned {
+        assert_eq!(
+            router.handle(Request::Put { key: k.clone(), value: b"pre".to_vec().into() }),
+            Response::Ok
+        );
+    }
+    assert_eq!(router.handle(Request::Fail { shard: 1 }), Response::Num(2));
+    // While degraded: delete one, overwrite another (both land on
+    // survivors), leave the rest marooned.
+    let deleted = &owned[0];
+    let overwritten = &owned[1];
+    router.handle(Request::Del { key: deleted.clone() });
+    assert_eq!(
+        router.handle(Request::Put {
+            key: overwritten.clone(),
+            value: b"post".to_vec().into()
+        }),
+        Response::Ok
+    );
+    // The dead shard still physically holds every "pre" value.
+    assert_eq!(stale_holder.count(), owned.len() as u64);
+
+    assert_eq!(router.handle(Request::Restore { shard: 1 }), Response::Num(3));
+    // The stale copies are gone from the shard map itself...
+    assert!(
+        stale_holder.get(deleted, key_digest(deleted)).is_none(),
+        "wipe left the deleted key's stale value on the restored shard"
+    );
+    // ...the delete stuck, the overwrite won, the marooned rest are lost
+    // (not resurrected with stale data).
+    assert_eq!(router.handle(Request::Get { key: deleted.clone() }), Response::Nil);
+    assert_eq!(
+        router.handle(Request::Get { key: overwritten.clone() }),
+        Response::Val(b"post".to_vec().into())
+    );
+    for k in &owned[2..] {
+        assert_eq!(
+            router.handle(Request::Get { key: k.clone() }),
+            Response::Nil,
+            "{k} resurrected stale data through the restore"
+        );
+    }
+}
+
+#[test]
+fn snapshot_marooned_matches_engine_view() {
+    // The router's UNAVAILABLE contract rests on
+    // `PlacementSnapshot::marooned`; sanity-check it against the engine
+    // for a live degraded router.
+    let router = Router::new(local_cluster("dx", 4).unwrap());
+    router.handle(Request::Fail { shard: 3 });
+    let snap = router.snapshot();
+    let healthy: Box<dyn ConsistentHasher> = by_name("dx", 4).unwrap();
+    let mut hits = 0u64;
+    for i in 0..2_000u64 {
+        let d = key_digest(&format!("mm{i}"));
+        let expect = healthy.bucket(d) == 3;
+        assert_eq!(snap.marooned(d).is_some(), expect, "digest {d:#x}");
+        hits += u64::from(expect);
+    }
+    assert!(hits > 0);
+}

@@ -80,6 +80,18 @@ fn steady_state_data_path_allocates_nothing() {
         );
     }
 
+    // Zero-length values ride the same contract: an empty `Arc<[u8]>`
+    // (what `PUT k 0` parses into) is stored, shared and overwritten
+    // without touching the heap once the `Arc` itself exists.
+    const EMPTY_KEYS: usize = 32;
+    let empty: Value = Vec::new().into();
+    for i in 0..EMPTY_KEYS {
+        assert_eq!(
+            router.handle(Request::Put { key: format!("ze{i}"), value: empty.clone() }),
+            Response::Ok
+        );
+    }
+
     // Pre-build every measured request outside the counting window (the
     // owned `Request` carries a pre-allocated key `String` and a
     // pre-allocated `Arc` value; `handle` only moves/borrows them).
@@ -92,6 +104,11 @@ fn steady_state_data_path_allocates_nothing() {
         (0..KEYS / 4).map(|i| Request::Del { key: format!("za{i}") }).collect();
     let miss_gets: Vec<Request> =
         (0..KEYS / 4).map(|i| Request::Get { key: format!("za{i}") }).collect();
+    let empty_gets: Vec<Request> =
+        (0..EMPTY_KEYS).map(|i| Request::Get { key: format!("ze{i}") }).collect();
+    let empty_overwrites: Vec<Request> = (0..EMPTY_KEYS)
+        .map(|i| Request::Put { key: format!("ze{i}"), value: empty.clone() })
+        .collect();
 
     ALLOCS.store(0, Ordering::Relaxed);
     arm(true);
@@ -113,6 +130,17 @@ fn steady_state_data_path_allocates_nothing() {
     }
     for req in miss_gets {
         if !matches!(black_box(router.handle(req)), Response::Nil) {
+            unexpected += 1;
+        }
+    }
+    for req in empty_gets {
+        match black_box(router.handle(req)) {
+            Response::Val(v) if v.is_empty() => {}
+            _ => unexpected += 1,
+        }
+    }
+    for req in empty_overwrites {
+        if !matches!(black_box(router.handle(req)), Response::Ok) {
             unexpected += 1;
         }
     }
