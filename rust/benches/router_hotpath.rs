@@ -3,7 +3,9 @@
 //! paper's constant-time claim buys the *system* (L3 target: placement is
 //! never the router bottleneck).
 //!
-//! Four phases per cluster size: PUT, GET, GET-under-churn, and
+//! Five phases per cluster size: PUT, GET, batched MGET/MPUT (batch
+//! sizes 1/8/64, reported as ns per *key* and keys/s — the number the
+//! batched data plane exists to move), GET-under-churn, and
 //! GET-while-failed-over.  Churn hammers reads while a background admin
 //! thread cycles scale-up/scale-down, so it prices the epoch-snapshot
 //! design (readers never block on a migration; mid-migration keys cost
@@ -28,8 +30,8 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use binhash::metrics::LatencyHistogram;
-use binhash::proto::{RequestRef, Response, Value};
-use binhash::router::{local_cluster, Router};
+use binhash::proto::{Request, RequestRef, Response, Value};
+use binhash::router::{local_cluster, BatchScratch, Router};
 use binhash::workload::StringKeys;
 
 const OPS: usize = 200_000;
@@ -69,6 +71,70 @@ fn main() {
             black_box(r);
         }
         let get = t0.elapsed();
+
+        // Batch phase (steady topology): MGET/MPUT keybatches through
+        // `handle_batch` with reused scratch — the per-connection server
+        // path.  ns per key, so batch=1 prices the batch machinery's
+        // overhead and batch=64 its amortization against the singleton
+        // GET above.
+        let mut batch_json = Vec::new();
+        let mut mget64_ns = f64::NAN;
+        for bs in [1usize, 8, 64] {
+            let mut scratch = BatchScratch::new();
+            let mut out = Vec::new();
+            let mget_reqs: Vec<Request> = keys
+                .chunks(bs)
+                .map(|c| Request::MGet { keys: c.to_vec() })
+                .collect();
+            let mput_reqs: Vec<Request> = keys
+                .chunks(bs)
+                .map(|c| Request::MPut {
+                    keys: c.to_vec(),
+                    values: (0..c.len()).map(|j| values[j & 0xFF].clone()).collect(),
+                })
+                .collect();
+
+            let t0 = Instant::now();
+            for req in &mget_reqs {
+                let (op, batch) = req.as_view().into_batch().unwrap();
+                router.handle_batch(op, &batch, &mut scratch, &mut out);
+                black_box(&out);
+            }
+            let mget_ns_key = ns_op(t0.elapsed(), OPS);
+            if bs == 64 {
+                mget64_ns = mget_ns_key;
+            }
+
+            let t0 = Instant::now();
+            for req in &mput_reqs {
+                let (op, batch) = req.as_view().into_batch().unwrap();
+                router.handle_batch(op, &batch, &mut scratch, &mut out);
+                black_box(&out);
+            }
+            let mput_ns_key = ns_op(t0.elapsed(), OPS);
+
+            println!(
+                "      batch={bs:<3} mget: {mget_ns_key:>8.0} ns/key ({:>9.0} keys/s)   \
+                 mput: {mput_ns_key:>8.0} ns/key ({:>9.0} keys/s)",
+                1e9 / mget_ns_key,
+                1e9 / mput_ns_key,
+            );
+            let mut b = String::new();
+            write!(
+                b,
+                "{{\"batch\": {bs}, \
+                 \"mget\": {{\"ns_key\": {mget_ns_key:.1}, \"keys_per_sec\": {:.0}}}, \
+                 \"mput\": {{\"ns_key\": {mput_ns_key:.1}, \"keys_per_sec\": {:.0}}}}}",
+                1e9 / mget_ns_key,
+                1e9 / mput_ns_key,
+            )
+            .expect("write to String");
+            batch_json.push(b);
+        }
+        // keys/s of MGET@64 over the singleton GET phase — the
+        // batched-data-plane acceptance ratio (≥2× expected).
+        let batch_speedup = ns_op(get, OPS) / mget64_ns;
+        println!("      mget@64 speedup over singleton GET: {batch_speedup:.2}x");
 
         // GET phase under topology churn: a background thread cycles
         // scale-up/scale-down while this thread keeps reading.
@@ -167,6 +233,7 @@ fn main() {
             c,
             "    {{\"n\": {n}, \
              \"steady\": {{\"put\": {}, \"get\": {}}}, \
+             \"batch\": {{\"sizes\": [{}], \"mget64_vs_get\": {batch_speedup:.2}}}, \
              \"churn\": {{\"get\": {}, \"scale_cycles\": {cycles}, \
              \"dual_reads\": {dual_reads}, \"migration_batches\": {batches}}}, \
              \"failover\": {{\"get\": {}, \"engine\": \"memento\", \
@@ -176,6 +243,7 @@ fn main() {
              \"mean\": {place_mean:.1}}}}}",
             op_json(put_ns),
             op_json(get_ns),
+            batch_json.join(", "),
             op_json(churn_ns),
             op_json(failover_ns),
         )

@@ -101,6 +101,18 @@ pub struct RouterMetrics {
     /// on a failed shard (the router routed *around* the dead shard
     /// instead of hanging on it).
     pub unavailable: AtomicU64,
+    /// Valid keys admitted from `MGET` batch frames (each also counts in
+    /// `gets`, exactly like singleton admission, so `mget_keys / gets`
+    /// is the read path's batch adoption).
+    pub mget_keys: AtomicU64,
+    /// Valid keys admitted from `MPUT` batch frames (each also counts in
+    /// `puts`).
+    pub mput_keys: AtomicU64,
+    /// Per-shard fan-outs issued by the batch path: one per (batch,
+    /// owner-shard) group.  `mget_keys + mput_keys` over `batch_fanouts`
+    /// is the realized batching factor — how many keys each shard
+    /// round-trip amortized.
+    pub batch_fanouts: AtomicU64,
     /// End-to-end request latency.
     pub latency: LatencyHistogram,
     /// Placement (hash lookup) latency.
@@ -118,6 +130,7 @@ impl RouterMetrics {
         format!(
             "gets={} puts={} dels={} errors={} migrated={} batches={} \
              dual_reads={} epochs={} failovers={} restores={} unavailable={} \
+             mget_keys={} mput_keys={} batch_fanouts={} \
              p50={}ns p99={}ns mean={:.0}ns",
             self.gets.load(Ordering::Relaxed),
             self.puts.load(Ordering::Relaxed),
@@ -130,6 +143,9 @@ impl RouterMetrics {
             self.failovers.load(Ordering::Relaxed),
             self.restores.load(Ordering::Relaxed),
             self.unavailable.load(Ordering::Relaxed),
+            self.mget_keys.load(Ordering::Relaxed),
+            self.mput_keys.load(Ordering::Relaxed),
+            self.batch_fanouts.load(Ordering::Relaxed),
             self.latency.quantile_ns(0.5),
             self.latency.quantile_ns(0.99),
             self.latency.mean_ns(),
@@ -165,8 +181,13 @@ mod tests {
     fn metrics_summary_formats() {
         let m = RouterMetrics::new();
         m.gets.fetch_add(3, Ordering::Relaxed);
+        m.mget_keys.fetch_add(2, Ordering::Relaxed);
+        m.batch_fanouts.fetch_add(1, Ordering::Relaxed);
         m.latency.record(Duration::from_micros(5));
         let s = m.summary();
         assert!(s.contains("gets=3"));
+        assert!(s.contains("mget_keys=2"));
+        assert!(s.contains("mput_keys=0"));
+        assert!(s.contains("batch_fanouts=1"));
     }
 }

@@ -20,6 +20,40 @@
 //! RESTORE <id>\n              -> NUM <working-n>\n    (router only)
 //! ```
 //!
+//! ## Batched commands: one round-trip per keybatch
+//!
+//! Placement is O(1) nanoseconds; a round-trip is O(10µs–1ms).  The batch
+//! frames let one round-trip carry up to [`MAX_BATCH`] keys, so the wire
+//! cost amortizes across the batch (heavy readers and the rebalancer's
+//! stripe streaming both use them):
+//!
+//! ```text
+//! MGET <n> <k1> ... <kn>\n    -> MULTI <n>\n(<sub-response>)*
+//! MDEL <n> <k1> ... <kn>\n    -> MULTI <n>\n(<sub-response>)*
+//! MDELTOMB <n> <k1> ... <kn>\n                        (shard only)
+//! MPUT <n> <k1> <l1> ... <kn> <ln>\n<bytes1>...<bytesn>
+//! MPUTNX <n> ...              (same framing as MPUT)   (shard only)
+//! ```
+//!
+//! `MPUT`/`MPUTNX` announce every key and payload length on the header
+//! line, then stream the payloads back to back.  Every batch answers
+//! `MULTI <n>` followed by exactly `n` positional sub-responses — the
+//! i-th sub-response answers the i-th key, whatever the server did
+//! internally to group the keys (see `router` for the fan-out ordering
+//! guarantees).  Sub-responses are the singleton forms (`VAL`/`NIL` for
+//! MGET, `OK`/`NIL`/`ERR` for the rest); `MULTI` never nests.
+//!
+//! Batch counts are hostile-input-hardened: a count above [`MAX_BATCH`],
+//! a count/token-list mismatch, or an unparseable per-key length answers
+//! a *recoverable* `ERR` (the header line was consumed; the connection
+//! stays framed — though an `MPUT` client that already streamed payloads
+//! after a bad header has desynced itself, exactly like a singleton `PUT`
+//! with a bad length token), and no pre-allocation is sized from a
+//! client-supplied count beyond the cap.  A put batch's payloads must
+//! total at most [`MAX_VALUE_LEN`] — beyond that (or any truncated
+//! payload) the stream is untrustworthy and the connection drops, as for
+//! a singleton `PUT`.
+//!
 //! Keys are ASCII tokens without whitespace (the router rejects others);
 //! values are arbitrary bytes.  Errors: `ERR <msg>\n`.
 //!
@@ -28,11 +62,14 @@
 //! The server loops parse with [`read_request_ref`] into a
 //! [`RequestRef`] that *borrows* the command line from a per-connection
 //! reusable [`RecvBuf`] — no per-request line `String` and no key
-//! `to_string()`.  Value payloads are read once into a freshly allocated
-//! [`Value`] (`Arc<[u8]>`) that then flows through router, shard map and
-//! migration without ever being copied again; a GET answers with a
-//! refcount bump of the stored `Arc`.  The owned [`Request`] enum
-//! survives for admin paths, tests and client helpers
+//! `to_string()`.  Batch frames parse the same way: the key list becomes
+//! a span table (byte offsets into the line) reused across requests, and
+//! a [`BatchRef`] view hands out `&str` keys by index — zero per-key
+//! allocation however large the batch.  Value payloads are read once into
+//! a freshly allocated [`Value`] (`Arc<[u8]>`) that then flows through
+//! router, shard map and migration without ever being copied again; a GET
+//! answers with a refcount bump of the stored `Arc`.  The owned
+//! [`Request`] enum survives for admin paths, tests and client helpers
 //! ([`RequestRef::into_owned`] / [`Request::as_view`] convert).
 //!
 //! Parse failures come in two severities, which is what keeps a typo from
@@ -82,6 +119,150 @@ pub type Value = Arc<[u8]>;
 
 /// Hard cap on a single value payload (framing guard).
 pub const MAX_VALUE_LEN: usize = 64 << 20;
+
+/// Hard cap on the number of keys one batch frame may carry.  Doubles as
+/// the pre-allocation bound for client-supplied counts (`MULTI`, `KEYS`):
+/// a hostile count fails at the truncated stream, never by reserving
+/// memory up front.
+pub const MAX_BATCH: usize = 4096;
+
+/// The operation a batch applies to every key it carries.  `Get`, `Put`
+/// and `Del` are client-facing (`MGET`/`MPUT`/`MDEL`); `PutNx` and
+/// `DelTomb` are the shard-internal migration pair (`MPUTNX`/`MDELTOMB`),
+/// with exactly the singleton ops' semantics per key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchOp {
+    /// Batched `GET`.
+    Get,
+    /// Batched `PUT`.
+    Put,
+    /// Batched `PUTNX` (shard-internal; the rebalancer's copy step).
+    PutNx,
+    /// Batched `DEL`.
+    Del,
+    /// Batched `DELTOMB` (shard-internal; mid-migration deletes).
+    DelTomb,
+}
+
+impl BatchOp {
+    /// `true` for the put-type ops, whose frames carry a payload per key.
+    pub fn has_values(self) -> bool {
+        matches!(self, BatchOp::Put | BatchOp::PutNx)
+    }
+
+    /// The wire command this op frames as.
+    pub fn wire_name(self) -> &'static str {
+        match self {
+            BatchOp::Get => "MGET",
+            BatchOp::Put => "MPUT",
+            BatchOp::PutNx => "MPUTNX",
+            BatchOp::Del => "MDEL",
+            BatchOp::DelTomb => "MDELTOMB",
+        }
+    }
+}
+
+/// A batch of keys (plus, for put-type ops, parallel values) addressed by
+/// dense index — the shard fan-out's view of wherever the batch came
+/// from: a parsed wire frame ([`BatchRef`]), an owned request, or the
+/// rebalancer's move list.  Implementations must answer `key`/`value` for
+/// every `i < len()` in O(1) without allocating (`value` is a refcount
+/// bump of a shared buffer, never a byte copy).
+pub trait BatchSource {
+    /// Number of keys in the batch.
+    fn len(&self) -> usize;
+    /// `true` when the batch carries no keys.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Key `i`.
+    fn key(&self, i: usize) -> &str;
+    /// Value for key `i` (put-type batches only).
+    ///
+    /// # Panics
+    /// May panic for get/del-type batches, which carry no values.
+    fn value(&self, i: usize) -> Value;
+}
+
+/// A parsed batch borrowing its keys from a connection's [`RecvBuf`] (or
+/// from an owned [`Request`]'s vectors via [`Request::as_view`]) — the
+/// allocation-free view batch requests parse into.  Keys are resolved by
+/// index against a reused span table; values (put-type batches) are the
+/// `Arc` buffers the parser read, shared out by refcount bump.
+#[derive(Debug, Clone)]
+pub struct BatchRef<'a> {
+    repr: BatchRepr<'a>,
+}
+
+#[derive(Debug, Clone)]
+enum BatchRepr<'a> {
+    /// Keys are byte spans into the connection's reused line buffer.
+    Wire { line: &'a str, spans: &'a [(u32, u32)], values: &'a [Value] },
+    /// Keys and values borrowed from an owned [`Request`]'s vectors.
+    Owned { keys: &'a [String], values: &'a [Value] },
+}
+
+impl<'a> BatchRef<'a> {
+    /// View over parallel owned vectors (`values` empty for get/del-type
+    /// batches) — the bridge from owned requests and tests into the
+    /// batch path.
+    pub fn from_owned(keys: &'a [String], values: &'a [Value]) -> Self {
+        debug_assert!(values.is_empty() || values.len() == keys.len());
+        Self { repr: BatchRepr::Owned { keys, values } }
+    }
+
+    /// The parallel value slice (empty for get/del-type batches).
+    pub fn values(&self) -> &'a [Value] {
+        match self.repr {
+            BatchRepr::Wire { values, .. } | BatchRepr::Owned { values, .. } => values,
+        }
+    }
+
+    /// Key `i` with the view's full lifetime (the trait method narrows to
+    /// the borrow of `self`).
+    pub fn key_at(&self, i: usize) -> &'a str {
+        match self.repr {
+            BatchRepr::Wire { line, spans, .. } => {
+                let (s, e) = spans[i];
+                &line[s as usize..e as usize]
+            }
+            BatchRepr::Owned { keys, .. } => &keys[i],
+        }
+    }
+
+    fn keys_owned(&self) -> Vec<String> {
+        (0..self.len()).map(|i| self.key_at(i).to_string()).collect()
+    }
+}
+
+impl BatchSource for BatchRef<'_> {
+    fn len(&self) -> usize {
+        match self.repr {
+            BatchRepr::Wire { spans, .. } => spans.len(),
+            BatchRepr::Owned { keys, .. } => keys.len(),
+        }
+    }
+
+    fn key(&self, i: usize) -> &str {
+        self.key_at(i)
+    }
+
+    fn value(&self, i: usize) -> Value {
+        self.values()[i].clone()
+    }
+}
+
+// Wire- and owned-backed views of the same keys/values are equal: tests
+// and `into_owned` roundtrips compare across representations.
+impl PartialEq for BatchRef<'_> {
+    fn eq(&self, other: &Self) -> bool {
+        self.len() == other.len()
+            && (0..self.len()).all(|i| self.key_at(i) == other.key_at(i))
+            && self.values() == other.values()
+    }
+}
+
+impl Eq for BatchRef<'_> {}
 
 /// A parsed request (owned form — admin paths, tests, client helpers).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -136,6 +317,35 @@ pub enum Request {
     /// router before a failed shard rejoins, because the shard missed
     /// every write and delete while it was down).
     Wipe,
+    /// Fetch many values in one round-trip (`MGET`).
+    MGet {
+        /// Object keys, answered positionally.
+        keys: Vec<String>,
+    },
+    /// Store many values in one round-trip (`MPUT`).
+    MPut {
+        /// Object keys.
+        keys: Vec<String>,
+        /// Parallel payloads (`values.len() == keys.len()`).
+        values: Vec<Value>,
+    },
+    /// Batched `PUTNX` (shard-internal; the rebalancer's copy step).
+    MPutNx {
+        /// Object keys.
+        keys: Vec<String>,
+        /// Parallel payloads.
+        values: Vec<Value>,
+    },
+    /// Delete many keys in one round-trip (`MDEL`).
+    MDel {
+        /// Object keys, answered positionally.
+        keys: Vec<String>,
+    },
+    /// Batched `DELTOMB` (shard-internal; mid-migration deletes).
+    MDelTomb {
+        /// Object keys, answered positionally.
+        keys: Vec<String>,
+    },
 }
 
 /// A parsed request borrowing its key from a connection's [`RecvBuf`] —
@@ -202,6 +412,31 @@ pub enum RequestRef<'a> {
     },
     /// Drop every stored key and tombstone (shard-internal).
     Wipe,
+    /// Fetch many values in one round-trip (`MGET`).
+    MGet {
+        /// The keybatch, answered positionally.
+        batch: BatchRef<'a>,
+    },
+    /// Store many values in one round-trip (`MPUT`).
+    MPut {
+        /// The keybatch with parallel payloads.
+        batch: BatchRef<'a>,
+    },
+    /// Batched `PUTNX` (shard-internal; migration copy step).
+    MPutNx {
+        /// The keybatch with parallel payloads.
+        batch: BatchRef<'a>,
+    },
+    /// Delete many keys in one round-trip (`MDEL`).
+    MDel {
+        /// The keybatch, answered positionally.
+        batch: BatchRef<'a>,
+    },
+    /// Batched `DELTOMB` (shard-internal; mid-migration deletes).
+    MDelTomb {
+        /// The keybatch, answered positionally.
+        batch: BatchRef<'a>,
+    },
 }
 
 impl Request {
@@ -224,6 +459,21 @@ impl Request {
             Request::Fail { shard } => RequestRef::Fail { shard: *shard },
             Request::Restore { shard } => RequestRef::Restore { shard: *shard },
             Request::Wipe => RequestRef::Wipe,
+            Request::MGet { keys } => {
+                RequestRef::MGet { batch: BatchRef::from_owned(keys, &[]) }
+            }
+            Request::MPut { keys, values } => {
+                RequestRef::MPut { batch: BatchRef::from_owned(keys, values) }
+            }
+            Request::MPutNx { keys, values } => {
+                RequestRef::MPutNx { batch: BatchRef::from_owned(keys, values) }
+            }
+            Request::MDel { keys } => {
+                RequestRef::MDel { batch: BatchRef::from_owned(keys, &[]) }
+            }
+            Request::MDelTomb { keys } => {
+                RequestRef::MDelTomb { batch: BatchRef::from_owned(keys, &[]) }
+            }
         }
     }
 }
@@ -249,6 +499,31 @@ impl RequestRef<'_> {
             RequestRef::Fail { shard } => Request::Fail { shard },
             RequestRef::Restore { shard } => Request::Restore { shard },
             RequestRef::Wipe => Request::Wipe,
+            RequestRef::MGet { batch } => Request::MGet { keys: batch.keys_owned() },
+            RequestRef::MPut { batch } => {
+                Request::MPut { keys: batch.keys_owned(), values: batch.values().to_vec() }
+            }
+            RequestRef::MPutNx { batch } => {
+                Request::MPutNx { keys: batch.keys_owned(), values: batch.values().to_vec() }
+            }
+            RequestRef::MDel { batch } => Request::MDel { keys: batch.keys_owned() },
+            RequestRef::MDelTomb { batch } => Request::MDelTomb { keys: batch.keys_owned() },
+        }
+    }
+}
+
+impl<'a> RequestRef<'a> {
+    /// Split a batch request into its `(op, keybatch)` pair; non-batch
+    /// requests come back unchanged in `Err` — the servers' dispatch
+    /// point between the batch and singleton paths.
+    pub fn into_batch(self) -> Result<(BatchOp, BatchRef<'a>), Self> {
+        match self {
+            RequestRef::MGet { batch } => Ok((BatchOp::Get, batch)),
+            RequestRef::MPut { batch } => Ok((BatchOp::Put, batch)),
+            RequestRef::MPutNx { batch } => Ok((BatchOp::PutNx, batch)),
+            RequestRef::MDel { batch } => Ok((BatchOp::Del, batch)),
+            RequestRef::MDelTomb { batch } => Ok((BatchOp::DelTomb, batch)),
+            other => Err(other),
         }
     }
 }
@@ -271,14 +546,28 @@ pub enum Response {
     Info(String),
     /// Error with message.
     Err(String),
+    /// Positional sub-responses answering a batch request: the i-th entry
+    /// answers the i-th key of the `MGET`/`MPUT`/`MDEL` frame.  Never
+    /// nests.
+    Multi(Vec<Response>),
 }
 
-/// Per-connection reusable parse scratch: the command line lives here and
-/// [`RequestRef`] borrows from it, so a connection allocates its line
-/// buffer once, not once per request.
+/// Per-connection reusable parse scratch: the command line, the batch
+/// span table and the batch value list all live here and [`RequestRef`] /
+/// [`BatchRef`] borrow from them, so a connection allocates its buffers
+/// once, not once per request (and not once per batched key).
 #[derive(Debug, Default)]
 pub struct RecvBuf {
     line: String,
+    /// Byte spans of a batch frame's keys within `line`.
+    spans: Vec<(u32, u32)>,
+    /// Announced payload lengths of an `MPUT`/`MPUTNX` header, parsed
+    /// before any payload byte is read.
+    lens: Vec<u32>,
+    /// Parsed payloads of the current batch (each a freshly allocated
+    /// `Arc` that flows to storage without a re-copy; the vector itself
+    /// is reused).
+    values: Vec<Value>,
 }
 
 impl RecvBuf {
@@ -311,6 +600,29 @@ fn key_tok(tok: Option<&str>) -> Result<&str, String> {
     }
 }
 
+/// Parse and bound a batch count token.  Everything that can go wrong
+/// here is recoverable: the whole frame (for get/del-type batches) or at
+/// least the header line (put-type) was consumed with the line.
+fn batch_count(cmd: &str, tok: Option<&str>) -> Result<usize, String> {
+    let n: usize = tok
+        .ok_or_else(|| format!("{cmd} missing count"))?
+        .parse()
+        .map_err(|e| format!("bad {cmd} count: {e}"))?;
+    if n > MAX_BATCH {
+        return Err(format!("{cmd} count {n} exceeds the batch cap {MAX_BATCH}"));
+    }
+    Ok(n)
+}
+
+/// Byte span of `tok` within `line`.  `tok` must be a subslice of `line`
+/// (it comes from `line.split(' ')`), so the pointer difference is its
+/// offset — plain integer arithmetic on addresses, no unsafe.
+fn span_of(line: &str, tok: &str) -> (u32, u32) {
+    let off = tok.as_ptr() as usize - line.as_ptr() as usize;
+    debug_assert!(off + tok.len() <= line.len(), "token not borrowed from line");
+    (off as u32, (off + tok.len()) as u32)
+}
+
 /// Read a value payload into a freshly allocated [`Value`] — the single
 /// buffer that then travels to the shard map without being copied again.
 ///
@@ -340,11 +652,18 @@ pub fn read_request_ref<'a, R: Read>(
     r: &mut BufReader<R>,
     buf: &'a mut RecvBuf,
 ) -> Result<Option<Wire<'a>>> {
-    buf.line.clear();
-    if r.read_line(&mut buf.line)? == 0 {
+    // Split the scratch into disjoint field borrows: the returned view
+    // borrows `line`/`spans`/`values` simultaneously.
+    let RecvBuf { line, spans, lens, values } = buf;
+    line.clear();
+    spans.clear();
+    lens.clear();
+    values.clear();
+    if r.read_line(line)? == 0 {
         return Ok(None);
     }
-    let line = buf.line.trim_end();
+    let line: &'a str = line;
+    let line = line.trim_end();
     let mut parts = line.split(' ');
     let cmd = parts.next().unwrap_or("");
     macro_rules! try_bad {
@@ -408,6 +727,68 @@ pub fn read_request_ref<'a, R: Read>(
             }
         }
         "WIPE" => RequestRef::Wipe,
+        "MGET" | "MDEL" | "MDELTOMB" => {
+            // Key-list batch: `<CMD> <n> <k1> ... <kn>`.  Everything that
+            // can go wrong is recoverable — the whole frame is this line.
+            let n = try_bad!(batch_count(cmd, parts.next()));
+            for _ in 0..n {
+                let key = try_bad!(key_tok(parts.next()));
+                spans.push(span_of(line, key));
+            }
+            if parts.next().is_some() {
+                return Ok(Some(Wire::Bad(format!(
+                    "{cmd} count {n} shorter than its key list"
+                ))));
+            }
+            let batch = BatchRef { repr: BatchRepr::Wire { line, spans, values } };
+            match cmd {
+                "MGET" => RequestRef::MGet { batch },
+                "MDEL" => RequestRef::MDel { batch },
+                _ => RequestRef::MDelTomb { batch },
+            }
+        }
+        "MPUT" | "MPUTNX" => {
+            // Put batch: `<CMD> <n> <k1> <l1> ... <kn> <ln>` then the `n`
+            // payloads back to back.  Header mistakes are recoverable
+            // (nothing past the line was consumed; a client that already
+            // streamed payloads has desynced itself, as with a singleton
+            // PUT whose length token was bad); payload truncation and
+            // oversize are framing errors.
+            let n = try_bad!(batch_count(cmd, parts.next()));
+            let mut total = 0usize;
+            for _ in 0..n {
+                let key = try_bad!(key_tok(parts.next()));
+                let len: usize = try_bad!(parts
+                    .next()
+                    .ok_or_else(|| format!("{cmd} missing a length"))
+                    .and_then(|t| t
+                        .parse()
+                        .map_err(|e| format!("bad {cmd} length {t:?}: {e}"))));
+                if len > MAX_VALUE_LEN {
+                    bail!("value too large: {len}");
+                }
+                total += len;
+                if total > MAX_VALUE_LEN {
+                    bail!("batch payload too large: > {MAX_VALUE_LEN}");
+                }
+                spans.push(span_of(line, key));
+                lens.push(len as u32);
+            }
+            if parts.next().is_some() {
+                return Ok(Some(Wire::Bad(format!(
+                    "{cmd} count {n} shorter than its key list"
+                ))));
+            }
+            for &len in lens.iter() {
+                values.push(read_value(r, len as usize)?);
+            }
+            let batch = BatchRef { repr: BatchRepr::Wire { line, spans, values } };
+            if cmd == "MPUT" {
+                RequestRef::MPut { batch }
+            } else {
+                RequestRef::MPutNx { batch }
+            }
+        }
         other => return Ok(Some(Wire::Bad(format!("unknown command {other:?}")))),
     };
     Ok(Some(Wire::Req(req)))
@@ -449,7 +830,57 @@ pub fn write_request_ref<W: Write>(w: &mut W, req: &RequestRef<'_>) -> Result<()
         RequestRef::Fail { shard } => writeln!(w, "FAIL {shard}")?,
         RequestRef::Restore { shard } => writeln!(w, "RESTORE {shard}")?,
         RequestRef::Wipe => w.write_all(b"WIPE\n")?,
+        RequestRef::MGet { batch } => write_batch_frame(w, BatchOp::Get, 0..batch.len(), batch)?,
+        RequestRef::MPut { batch } => write_batch_frame(w, BatchOp::Put, 0..batch.len(), batch)?,
+        RequestRef::MPutNx { batch } => {
+            write_batch_frame(w, BatchOp::PutNx, 0..batch.len(), batch)?
+        }
+        RequestRef::MDel { batch } => write_batch_frame(w, BatchOp::Del, 0..batch.len(), batch)?,
+        RequestRef::MDelTomb { batch } => {
+            write_batch_frame(w, BatchOp::DelTomb, 0..batch.len(), batch)?
+        }
     }
+    w.flush()?;
+    Ok(())
+}
+
+/// Serialize one batch frame for the keys selected by `indices` (dense
+/// indices into `src`), without flushing.  The put-type frames take two
+/// passes over the selection (header line, then payloads), hence `Clone`.
+fn write_batch_frame<W: Write, S: BatchSource + ?Sized>(
+    w: &mut W,
+    op: BatchOp,
+    indices: impl Iterator<Item = usize> + Clone,
+    src: &S,
+) -> Result<()> {
+    write!(w, "{} {}", op.wire_name(), indices.clone().count())?;
+    if op.has_values() {
+        for i in indices.clone() {
+            write!(w, " {} {}", src.key(i), src.value(i).len())?;
+        }
+        w.write_all(b"\n")?;
+        for i in indices {
+            w.write_all(&src.value(i))?;
+        }
+    } else {
+        for i in indices {
+            write!(w, " {}", src.key(i))?;
+        }
+        w.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
+/// Write one batch request for the subset of `src` selected by `sel` and
+/// flush — the remote shard fan-out's serializer (one round-trip carries
+/// one shard's share of the batch).
+pub fn write_batch_request<W: Write, S: BatchSource + ?Sized>(
+    w: &mut W,
+    op: BatchOp,
+    sel: &[u32],
+    src: &S,
+) -> Result<()> {
+    write_batch_frame(w, op, sel.iter().map(|&i| i as usize), src)?;
     w.flush()?;
     Ok(())
 }
@@ -461,6 +892,13 @@ pub fn write_request<W: Write>(w: &mut W, req: &Request) -> Result<()> {
 
 /// Read one response.
 pub fn read_response<R: Read>(r: &mut BufReader<R>) -> Result<Response> {
+    read_response_at(r, 0)
+}
+
+/// `depth` guards against a hostile server nesting `MULTI` inside
+/// `MULTI` (the protocol never does) to recurse the client off its
+/// stack.
+fn read_response_at<R: Read>(r: &mut BufReader<R>, depth: u32) -> Result<Response> {
     let mut line = String::new();
     if r.read_line(&mut line)? == 0 {
         bail!("connection closed mid-response");
@@ -481,7 +919,7 @@ pub fn read_response<R: Read>(r: &mut BufReader<R>) -> Result<Response> {
             let count: usize = rest.parse()?;
             // Cap the pre-allocation: a hostile/oversized count must fail
             // at the truncated stream, not by reserving memory up front.
-            let mut keys = Vec::with_capacity(count.min(4096));
+            let mut keys = Vec::with_capacity(count.min(MAX_BATCH));
             for _ in 0..count {
                 let mut k = String::new();
                 if r.read_line(&mut k)? == 0 {
@@ -490,6 +928,19 @@ pub fn read_response<R: Read>(r: &mut BufReader<R>) -> Result<Response> {
                 keys.push(k.trim_end().to_string());
             }
             Response::Keys(keys)
+        }
+        "MULTI" => {
+            if depth > 0 {
+                bail!("nested MULTI response");
+            }
+            let count: usize = rest.parse()?;
+            // Same pre-allocation cap as KEYS: a hostile count fails at
+            // the truncated stream, not by reserving memory.
+            let mut subs = Vec::with_capacity(count.min(MAX_BATCH));
+            for _ in 0..count {
+                subs.push(read_response_at(r, depth + 1)?);
+            }
+            Response::Multi(subs)
         }
         "NUM" => Response::Num(rest.parse()?),
         "INFO" => Response::Info(rest.to_string()),
@@ -518,6 +969,23 @@ pub fn encode_response(out: &mut Vec<u8>, resp: &Response) -> Result<()> {
         Response::Num(x) => writeln!(out, "NUM {x}")?,
         Response::Info(s) => writeln!(out, "INFO {s}")?,
         Response::Err(m) => writeln!(out, "ERR {m}")?,
+        Response::Multi(subs) => {
+            writeln!(out, "MULTI {}", subs.len())?;
+            for s in subs {
+                encode_response(out, s)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Encode a batch's positional sub-responses (`MULTI <n>` + each
+/// sub-response) straight from a caller-reused buffer — the server path's
+/// alternative to materializing a [`Response::Multi`] vector per batch.
+pub fn encode_multi_response(out: &mut Vec<u8>, subs: &[Response]) -> Result<()> {
+    writeln!(out, "MULTI {}", subs.len())?;
+    for s in subs {
+        encode_response(out, s)?;
     }
     Ok(())
 }
@@ -546,20 +1014,25 @@ const FLUSH_HIGH_WATER: usize = 32 << 10;
 /// that could block).  A `PUT` whose header arrived but whose announced
 /// payload stalls can still block post-flush — framing obliges the
 /// client to send the payload without waiting on earlier responses.
+///
+/// The handler *encodes* its response into the connection's output
+/// buffer ([`encode_response`] / [`encode_multi_response`]) instead of
+/// returning a `Response` — that is what lets a server answer a batch
+/// from per-connection scratch without materializing a
+/// [`Response::Multi`] vector per frame.
 pub fn serve_framed<R: Read, W: Write>(
     rd: &mut BufReader<R>,
     wr: &mut W,
-    mut handle: impl FnMut(RequestRef<'_>) -> Response,
+    mut handle: impl FnMut(RequestRef<'_>, &mut Vec<u8>) -> Result<()>,
 ) -> Result<()> {
     let mut scratch = RecvBuf::new();
     let mut out = Vec::with_capacity(4 << 10);
     loop {
-        let resp = match read_request_ref(rd, &mut scratch)? {
+        match read_request_ref(rd, &mut scratch)? {
             None => break,
-            Some(Wire::Req(req)) => handle(req),
-            Some(Wire::Bad(msg)) => Response::Err(msg),
-        };
-        encode_response(&mut out, &resp)?;
+            Some(Wire::Req(req)) => handle(req, &mut out)?,
+            Some(Wire::Bad(msg)) => encode_response(&mut out, &Response::Err(msg))?,
+        }
         let next_is_buffered = rd.buffer().contains(&b'\n');
         if !next_is_buffered || out.len() >= FLUSH_HIGH_WATER {
             wr.write_all(&out)?;
@@ -793,5 +1266,212 @@ mod tests {
         assert!(!valid_key("has space"));
         assert!(!valid_key("has\nnewline"));
         assert!(!valid_key(&"x".repeat(600)));
+    }
+
+    #[test]
+    fn batch_requests_roundtrip() {
+        let values: Vec<Value> =
+            vec![b"v0".to_vec().into(), Vec::new().into(), b"\x00\xff\n".to_vec().into()];
+        let keys: Vec<String> = vec!["a".into(), "b/c".into(), "d-3".into()];
+        for req in [
+            Request::MGet { keys: keys.clone() },
+            Request::MDel { keys: keys.clone() },
+            Request::MDelTomb { keys: keys.clone() },
+            Request::MPut { keys: keys.clone(), values: values.clone() },
+            Request::MPutNx { keys, values },
+            Request::MGet { keys: Vec::new() },
+            Request::MPut { keys: Vec::new(), values: Vec::new() },
+        ] {
+            assert_eq!(roundtrip_req(req.clone()), req);
+        }
+    }
+
+    #[test]
+    fn batch_views_agree_across_representations() {
+        let req = Request::MPut {
+            keys: vec!["k1".into(), "k2".into()],
+            values: vec![b"x".to_vec().into(), b"yz".to_vec().into()],
+        };
+        // Owned -> wire -> borrowed-wire view must equal the owned view.
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req).unwrap();
+        let mut r = BufReader::new(&buf[..]);
+        let mut scratch = RecvBuf::new();
+        match read_request_ref(&mut r, &mut scratch).unwrap().unwrap() {
+            Wire::Req(RequestRef::MPut { batch }) => {
+                assert_eq!(RequestRef::MPut { batch }, req.as_view());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn batch_parse_is_allocation_light_and_borrowed() {
+        // Keys of a parsed MGET borrow from the connection scratch.
+        let mut r = BufReader::new(&b"MGET 3 k1 k22 k333\n"[..]);
+        let mut buf = RecvBuf::new();
+        match read_request_ref(&mut r, &mut buf).unwrap().unwrap() {
+            Wire::Req(RequestRef::MGet { batch }) => {
+                assert_eq!(batch.len(), 3);
+                assert_eq!(batch.key_at(0), "k1");
+                assert_eq!(batch.key_at(1), "k22");
+                assert_eq!(batch.key_at(2), "k333");
+                assert!(batch.values().is_empty());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn hostile_batch_counts_are_recoverable() {
+        // Oversized, non-numeric, mismatched and trailing-token counts
+        // all answer ERR and keep the stream framed; no pre-allocation is
+        // sized from the hostile count.
+        let input = format!(
+            "MGET 18446744073709551615 k\nMGET {} k\nMGET nope k\nMGET 3 k1 k2\n\
+             MGET 1 k1 k2\nMPUT 2 k1 1\nMDEL 1\nMGET 2 k1 k2\n",
+            MAX_BATCH + 1
+        );
+        let mut r = BufReader::new(input.as_bytes());
+        let mut buf = RecvBuf::new();
+        for _ in 0..7 {
+            match read_request_ref(&mut r, &mut buf).unwrap().unwrap() {
+                Wire::Bad(msg) => assert!(!msg.is_empty()),
+                Wire::Req(req) => panic!("expected Bad, got {req:?}"),
+            }
+        }
+        match read_request_ref(&mut r, &mut buf).unwrap().unwrap() {
+            Wire::Req(RequestRef::MGet { batch }) => assert_eq!(batch.len(), 2),
+            other => panic!("expected MGET, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_mput_payload_is_a_framing_error() {
+        // Header promises 4 + 6 bytes, stream ends early: drop the
+        // connection (as for a truncated singleton PUT).
+        let mut r = BufReader::new(&b"MPUT 2 k1 4 k2 6\nabcdde"[..]);
+        let mut buf = RecvBuf::new();
+        assert!(read_request_ref(&mut r, &mut buf).is_err());
+    }
+
+    #[test]
+    fn oversized_mput_lengths_are_framing_errors() {
+        // A single oversized length and an over-budget total both drop
+        // the connection before any payload allocation.
+        let mut r = BufReader::new(&b"MPUT 1 k 999999999999\n"[..]);
+        let mut buf = RecvBuf::new();
+        assert!(read_request_ref(&mut r, &mut buf).is_err());
+        let line = format!("MPUT 2 k1 {} k2 {}\n", MAX_VALUE_LEN, MAX_VALUE_LEN);
+        let mut r = BufReader::new(line.as_bytes());
+        assert!(read_request_ref(&mut r, &mut buf).is_err());
+    }
+
+    #[test]
+    fn bad_mput_length_token_is_recoverable() {
+        let mut r = BufReader::new(&b"MPUT 1 k notanint\nCOUNT\n"[..]);
+        let mut buf = RecvBuf::new();
+        assert!(matches!(
+            read_request_ref(&mut r, &mut buf).unwrap().unwrap(),
+            Wire::Bad(_)
+        ));
+        assert!(matches!(
+            read_request_ref(&mut r, &mut buf).unwrap().unwrap(),
+            Wire::Req(RequestRef::Count)
+        ));
+    }
+
+    #[test]
+    fn multi_responses_roundtrip() {
+        for resp in [
+            Response::Multi(vec![
+                Response::Val(b"a".to_vec().into()),
+                Response::Nil,
+                Response::Ok,
+                Response::Err("UNAVAILABLE: marooned".into()),
+            ]),
+            Response::Multi(Vec::new()),
+            Response::Multi(vec![Response::Val(Vec::new().into())]),
+        ] {
+            assert_eq!(roundtrip_resp(resp.clone()), resp);
+        }
+    }
+
+    #[test]
+    fn hostile_multi_count_errors_without_huge_alloc() {
+        let mut r = BufReader::new(&b"MULTI 18446744073709551615\nOK\n"[..]);
+        assert!(read_response(&mut r).is_err());
+    }
+
+    #[test]
+    fn nested_multi_is_rejected() {
+        // The protocol never nests MULTI; a server that does is hostile
+        // (unbounded recursion) and the client must drop it.
+        let mut r = BufReader::new(&b"MULTI 1\nMULTI 1\nOK\n"[..]);
+        assert!(read_response(&mut r).is_err());
+    }
+
+    #[test]
+    fn encode_multi_matches_response_multi() {
+        let subs = vec![Response::Ok, Response::Nil, Response::Val(b"q".to_vec().into())];
+        let mut a = Vec::new();
+        encode_multi_response(&mut a, &subs).unwrap();
+        let mut b = Vec::new();
+        encode_response(&mut b, &Response::Multi(subs)).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fuzzed_batch_frames_never_panic_or_desync() {
+        // Seeded mutation fuzz: corrupt one byte of a valid batch frame
+        // at every position, append a healthy COUNT, and drain the
+        // stream.  Every read must land in one of the three legal
+        // outcomes — a request, a recoverable Bad (stream stays framed
+        // and keeps draining), or a framing error (connection would
+        // drop) — and never panic, hang, or over-allocate.
+        let mut frames: Vec<Vec<u8>> = Vec::new();
+        let mut f = Vec::new();
+        write_request(&mut f, &Request::MGet { keys: vec!["ka".into(), "kb".into()] })
+            .unwrap();
+        frames.push(f);
+        let mut f = Vec::new();
+        write_request(
+            &mut f,
+            &Request::MPut {
+                keys: vec!["ka".into(), "kb".into()],
+                values: vec![b"1234".to_vec().into(), b"56".to_vec().into()],
+            },
+        )
+        .unwrap();
+        frames.push(f);
+        let mut f = Vec::new();
+        write_request(&mut f, &Request::MDelTomb { keys: vec!["ka".into()] }).unwrap();
+        frames.push(f);
+
+        let mut rng = crate::hashing::SplitMix64Rng::new(0xBA7C);
+        for frame in &frames {
+            for pos in 0..frame.len() {
+                let mut mutated = frame.clone();
+                // Random byte, plus the interesting edges.
+                let b = match rng.next_u64() % 4 {
+                    0 => b' ',
+                    1 => b'\n',
+                    2 => 0xFF,
+                    _ => (rng.next_u64() & 0x7F) as u8,
+                };
+                mutated[pos] = b;
+                mutated.extend_from_slice(b"COUNT\n");
+                let mut r = BufReader::new(&mutated[..]);
+                let mut buf = RecvBuf::new();
+                // Drain until EOF or framing error; no panic allowed.
+                loop {
+                    match read_request_ref(&mut r, &mut buf) {
+                        Ok(None) => break,
+                        Ok(Some(_)) => continue,
+                        Err(_) => break, // framing: connection would drop
+                    }
+                }
+            }
+        }
     }
 }

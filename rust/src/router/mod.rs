@@ -40,6 +40,42 @@
 //! backoff instead of a pure `yield_now` spin) before migration batches
 //! delete source copies.
 //!
+//! ## Batched data plane: one fan-out per shard, not one per key
+//!
+//! Placement costs nanoseconds; a shard round-trip costs micro- to
+//! milliseconds.  [`Router::handle_batch`] exploits that asymmetry for
+//! `MGET`/`MPUT`/`MDEL` frames: it computes **all placements up front**
+//! (cheap, O(1) each), groups the keys by owner bucket with one in-place
+//! sort of packed `(bucket, index)` words, and issues **one fan-out per
+//! owner shard** — a stripe-grouped in-process run for local shards, a
+//! single `MULTI` round-trip for remote ones.  A batch of `k` keys over
+//! `s` owners costs `s` round-trips instead of `k`.
+//!
+//! Ordering guarantees, in decreasing strength:
+//!
+//! * **Positional reassembly** — the i-th sub-response always answers
+//!   the i-th key, whatever order the fan-outs ran in (each fan-out
+//!   writes its answers through the original indices).
+//! * **In-batch order for duplicate keys** — duplicates share an owner
+//!   and a stripe, and every grouping stage preserves request order
+//!   within a group (the packed words sort by `(bucket, index)`, so a
+//!   group's indices stay ascending; each stripe pass walks them in that
+//!   order), so `MPUT [k=1, k=2]` always leaves `k=2`.
+//! * **No cross-key atomicity** — keys route and apply independently;
+//!   concurrent writers may interleave between a batch's keys.  The
+//!   contract is per-key linearizability, exactly as if the client had
+//!   pipelined singletons.
+//!
+//! Per-key failure isolation matches the singleton path: an invalid key,
+//! a marooned (failed-shard) read, or one shard's failed round-trip each
+//! answer `ERR` for their own keys only — the rest of the batch stands.
+//! Keys still mid-migration peel off to the singleton dual-read /
+//! dual-write path (same snapshot), so a batch never weakens the
+//! migration contract.  The rebalancer rides the same machinery
+//! (`rebalance::apply` batches its GET/PUTNX/DEL sweep per
+//! (source, destination) pair), cutting migration round-trips by the
+//! batch factor.
+//!
 //! ## Concurrency model: epoch snapshots + incremental migration
 //!
 //! Topology changes are serialized by an admin mutex and proceed in three
@@ -145,13 +181,39 @@ use crate::cluster::{
     TopologyEvent,
 };
 use crate::metrics::RouterMetrics;
-use crate::proto::{self, Request, RequestRef, Response, Value};
+use crate::proto::{self, BatchOp, BatchSource, Request, RequestRef, Response, Value};
 use crate::rebalance::{self, MigrationStats, PlanPath};
 use crate::runtime::PlacementRuntime;
 use crate::shard::{Shard, ShardClient};
 
 /// Shard factory used on scale-up.
 pub type ShardSpawner = Box<dyn Fn(u32) -> ShardClient + Send + Sync>;
+
+/// Reusable scratch for [`Router::handle_batch`]: the per-key digest
+/// table, the (bucket, index) grouping order, and the per-fan-out
+/// selection — allocated once per connection (or per caller), reused
+/// across batches, so a steady stream of batches allocates nothing here.
+#[derive(Debug, Default)]
+pub struct BatchScratch {
+    /// `digests[i]` = xxhash64 of key `i` (0 for invalid keys, which
+    /// never route).
+    digests: Vec<u64>,
+    /// Steady keys packed as `bucket << 32 | index`; sorted to group.
+    order: Vec<u64>,
+    /// The current fan-out's key indices (one owner shard's share).
+    sel: Vec<u32>,
+    /// Mid-migration keys deferred to the singleton dual-read/dual-write
+    /// path (run after the placement phase, so their shard round-trips
+    /// never pollute the placement-latency histogram).
+    defer: Vec<u32>,
+}
+
+impl BatchScratch {
+    /// New empty scratch.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
 
 /// Keys per migration batch: small enough that a batch is visible to
 /// readers almost immediately, large enough to amortize planning.
@@ -375,7 +437,19 @@ impl Router {
     /// of the key.  Steady-state GET/PUT/DEL through here is allocation-
     /// and lock-free (one atomic snapshot load, digest reuse in the local
     /// shard call, `Arc` value sharing).
+    ///
+    /// Batch frames answer [`Response::Multi`] through transient scratch;
+    /// callers with a request stream (the server loop, benches) use
+    /// [`handle_batch`](Self::handle_batch) with reused scratch instead.
     pub fn handle_ref(&self, req: RequestRef<'_>) -> Response {
+        let req = match req.into_batch() {
+            Ok((op, batch)) => {
+                let mut out = Vec::new();
+                self.handle_batch(op, &batch, &mut BatchScratch::new(), &mut out);
+                return Response::Multi(out);
+            }
+            Err(req) => req,
+        };
         let start = Instant::now();
         let resp = match req {
             RequestRef::Get { key } => self.data_get(key),
@@ -460,6 +534,11 @@ impl Router {
                 Ok(n) => Response::Num(n as u64),
                 Err(e) => Response::Err(e.to_string()),
             },
+            RequestRef::MGet { .. }
+            | RequestRef::MPut { .. }
+            | RequestRef::MPutNx { .. }
+            | RequestRef::MDel { .. }
+            | RequestRef::MDelTomb { .. } => unreachable!("batches split off above"),
         };
         if matches!(resp, Response::Err(_)) {
             self.metrics.errors.fetch_add(1, Ordering::Relaxed);
@@ -496,6 +575,19 @@ impl Router {
         let snap = self.snapshot();
         let (bucket, shard) = snap.route(digest);
         self.metrics.placement_latency.record(t0.elapsed());
+        self.get_routed(&snap, key, digest, bucket, shard)
+    }
+
+    /// The GET core after admission and routing — shared by the singleton
+    /// path and the batch path's mid-migration keys.
+    fn get_routed(
+        &self,
+        snap: &PlacementSnapshot,
+        key: &str,
+        digest: u64,
+        bucket: u32,
+        shard: &ShardClient,
+    ) -> Response {
         let resp = match snap.fallback_route(digest, bucket) {
             // Mid-migration, the key may not have reached its new owner
             // yet: dual-read, new owner then old owner — and if both miss,
@@ -552,6 +644,20 @@ impl Router {
         let snap = self.snapshot();
         let (bucket, shard) = snap.route(digest);
         self.metrics.placement_latency.record(t0.elapsed());
+        self.put_routed(&snap, key, value, digest, bucket, shard)
+    }
+
+    /// The PUT core after admission and routing — shared by the singleton
+    /// path and the batch path's mid-migration keys.
+    fn put_routed(
+        &self,
+        snap: &PlacementSnapshot,
+        key: &str,
+        value: Value,
+        digest: u64,
+        bucket: u32,
+        shard: &ShardClient,
+    ) -> Response {
         match snap.fallback_route(digest, bucket) {
             // Mid-migration: write the new owner, then retire the old copy
             // so neither the migration sweep nor a dual-read can resurface
@@ -588,6 +694,19 @@ impl Router {
         let snap = self.snapshot();
         let (bucket, shard) = snap.route(digest);
         self.metrics.placement_latency.record(t0.elapsed());
+        self.del_routed(&snap, key, digest, bucket, shard)
+    }
+
+    /// The DEL core after admission and routing — shared by the singleton
+    /// path and the batch path's mid-migration keys.
+    fn del_routed(
+        &self,
+        snap: &PlacementSnapshot,
+        key: &str,
+        digest: u64,
+        bucket: u32,
+        shard: &ShardClient,
+    ) -> Response {
         match snap.fallback_route(digest, bucket) {
             // Mid-migration: the key may live on either owner — delete
             // both; it existed if either copy did.  The new-owner delete
@@ -615,6 +734,158 @@ impl Router {
                 Err(e) => Response::Err(e.to_string()),
             },
         }
+    }
+
+    /// Handle one keybatch end to end with caller-reused scratch: compute
+    /// every placement up front, group the keys by owner bucket, issue
+    /// **one fan-out per owner shard** (a stripe-grouped in-process run
+    /// locally, a single `MULTI` round-trip remotely), and leave the
+    /// positional sub-responses in `out` — `out[i]` answers key `i`, in
+    /// request order, whatever the grouping did internally.
+    ///
+    /// Semantics per key are exactly the singleton ops':
+    ///
+    /// * a key still mid-migration leaves the fan-out and runs the
+    ///   singleton dual-read / dual-write path with this same snapshot;
+    /// * while degraded, a missing key marooned on a failed bucket
+    ///   answers its per-key `ERR UNAVAILABLE: …` without poisoning the
+    ///   rest of the batch;
+    /// * an invalid key answers its per-key `ERR`; a failed shard
+    ///   round-trip answers `ERR` for that shard's keys only.
+    ///
+    /// There is **no cross-key atomicity**: each key routes and applies
+    /// independently, and concurrent writers may interleave between a
+    /// batch's keys — the guarantee is per-key linearizability plus
+    /// in-batch order for duplicate keys (they share an owner and a
+    /// stripe, and every grouping stage is order-preserving within a
+    /// group).  Steady-state local batches through here are
+    /// allocation-free once `scratch`/`out` are warm (pinned by
+    /// `rust/tests/zero_alloc.rs`).
+    ///
+    /// The shard-internal ops (`PutNx`, `DelTomb`) are rejected per key,
+    /// like their singleton forms.
+    pub fn handle_batch<S: BatchSource + ?Sized>(
+        &self,
+        op: BatchOp,
+        src: &S,
+        scratch: &mut BatchScratch,
+        out: &mut Vec<Response>,
+    ) {
+        let start = Instant::now();
+        let n = src.len();
+        out.clear();
+        out.resize(n, Response::Nil);
+        if matches!(op, BatchOp::PutNx | BatchOp::DelTomb) {
+            for slot in out.iter_mut() {
+                *slot = Response::Err("shard-internal command".into());
+            }
+            self.metrics.errors.fetch_add(n as u64, Ordering::Relaxed);
+            self.metrics.latency.record(start.elapsed());
+            return;
+        }
+        // Phase 1 — place every key up front.  Each steady key packs as
+        // (bucket << 32 | index): one in-place sort then groups the batch
+        // by owner while keeping request order inside each group.
+        // Mid-migration keys are only *marked* here; their per-key shard
+        // round-trips run after the placement timer stops, so the
+        // placement histogram keeps measuring placement, not I/O.
+        let snap = self.snapshot();
+        let t0 = Instant::now();
+        scratch.digests.clear();
+        scratch.order.clear();
+        scratch.defer.clear();
+        let mut valid = 0u64;
+        for i in 0..n {
+            let key = src.key(i);
+            if !proto::valid_key(key) {
+                out[i] = Response::Err(format!("invalid key {key:?}"));
+                scratch.digests.push(0);
+                continue;
+            }
+            valid += 1;
+            let digest = crate::hashing::xxhash64(key.as_bytes(), 0);
+            scratch.digests.push(digest);
+            let bucket = snap.engine.bucket(digest);
+            if snap.fallback_route(digest, bucket).is_some() {
+                scratch.defer.push(i as u32);
+                continue;
+            }
+            scratch.order.push(((bucket as u64) << 32) | i as u64);
+        }
+        self.metrics.placement_latency.record(t0.elapsed());
+        // Only admitted (valid) keys count, exactly like singleton admit().
+        match op {
+            BatchOp::Get => {
+                self.metrics.gets.fetch_add(valid, Ordering::Relaxed);
+                self.metrics.mget_keys.fetch_add(valid, Ordering::Relaxed);
+            }
+            BatchOp::Put => {
+                self.metrics.puts.fetch_add(valid, Ordering::Relaxed);
+                self.metrics.mput_keys.fetch_add(valid, Ordering::Relaxed);
+            }
+            BatchOp::Del => {
+                self.metrics.dels.fetch_add(valid, Ordering::Relaxed);
+            }
+            BatchOp::PutNx | BatchOp::DelTomb => unreachable!("rejected above"),
+        }
+
+        // Mid-migration keys: exact singleton dual-read/dual-write
+        // semantics, with this same snapshot.
+        for &i in scratch.defer.iter() {
+            let i = i as usize;
+            let key = src.key(i);
+            let digest = scratch.digests[i];
+            let (bucket, shard) = snap.route(digest);
+            out[i] = match op {
+                BatchOp::Get => self.get_routed(&snap, key, digest, bucket, shard),
+                BatchOp::Put => {
+                    self.put_routed(&snap, key, src.value(i), digest, bucket, shard)
+                }
+                BatchOp::Del => self.del_routed(&snap, key, digest, bucket, shard),
+                BatchOp::PutNx | BatchOp::DelTomb => unreachable!(),
+            };
+        }
+
+        // Phase 2 — one fan-out per owner shard, ascending bucket order.
+        scratch.order.sort_unstable();
+        let mut g = 0usize;
+        while g < scratch.order.len() {
+            let bucket = (scratch.order[g] >> 32) as u32;
+            scratch.sel.clear();
+            while g < scratch.order.len() && (scratch.order[g] >> 32) as u32 == bucket {
+                scratch.sel.push(scratch.order[g] as u32);
+                g += 1;
+            }
+            self.metrics.batch_fanouts.fetch_add(1, Ordering::Relaxed);
+            let shard = &snap.shards[bucket as usize];
+            if let Err(e) = shard.call_batch(op, &scratch.sel, src, &scratch.digests, out) {
+                // One shard failing its round-trip poisons only its own
+                // keys; the other groups' answers stand.
+                let msg = e.to_string();
+                for &i in scratch.sel.iter() {
+                    out[i as usize] = Response::Err(msg.clone());
+                }
+            }
+        }
+
+        // Phase 3 — degraded read check: a miss whose pre-failure owner
+        // is dead is marooned, not absent (free on healthy snapshots;
+        // per-key slow-path answers already ran this check).
+        if op == BatchOp::Get && snap.is_degraded() {
+            for i in 0..n {
+                if matches!(out[i], Response::Nil) {
+                    if let Some(f) = snap.marooned(scratch.digests[i]) {
+                        out[i] = self.unavailable(src.key(i), f);
+                    }
+                }
+            }
+        }
+
+        let errors = out.iter().filter(|r| matches!(r, Response::Err(_))).count() as u64;
+        if errors > 0 {
+            self.metrics.errors.fetch_add(errors, Ordering::Relaxed);
+        }
+        self.metrics.latency.record(start.elapsed());
     }
 
     /// Clear migration tombstones on every *reachable* shard (idempotent;
@@ -1169,8 +1440,18 @@ impl Router {
         let mut wr = sock;
         // Borrowed parsing + coalesced responses; recoverable parse
         // failures answer ERR and keep the connection (see
-        // `proto::serve_framed`).
-        proto::serve_framed(&mut rd, &mut wr, |req| self.handle_ref(req))
+        // `proto::serve_framed`).  Batches run through per-connection
+        // scratch, so a steady stream of MGET/MPUT frames reuses its
+        // buffers instead of allocating per batch.
+        let mut scratch = BatchScratch::new();
+        let mut subs: Vec<Response> = Vec::new();
+        proto::serve_framed(&mut rd, &mut wr, |req, out| match req.into_batch() {
+            Ok((op, batch)) => {
+                self.handle_batch(op, &batch, &mut scratch, &mut subs);
+                proto::encode_multi_response(out, &subs)
+            }
+            Err(req) => proto::encode_response(out, &self.handle_ref(req)),
+        })
     }
 }
 
@@ -1534,6 +1815,197 @@ mod tests {
             router.handle(Request::Get { key: key.clone() }),
             Response::Nil,
             "DEL racing a migration copy resurrected the key"
+        );
+    }
+
+    #[test]
+    fn batched_ops_roundtrip_and_reassemble_in_order() {
+        let router = Router::new(local_cluster("binomial", 4).unwrap());
+        let keys: Vec<String> = (0..96).map(|i| format!("mb{i}")).collect();
+        let values: Vec<Value> = (0..96).map(|i| val(&[i as u8])).collect();
+        match router.handle(Request::MPut { keys: keys.clone(), values }) {
+            Response::Multi(subs) => {
+                assert_eq!(subs.len(), 96);
+                assert!(subs.iter().all(|r| *r == Response::Ok));
+            }
+            other => panic!("{other:?}"),
+        }
+        // Positional answers across every owner shard, misses included.
+        let mut probe = keys.clone();
+        probe.insert(40, "absent-a".into());
+        probe.push("absent-b".into());
+        match router.handle(Request::MGet { keys: probe.clone() }) {
+            Response::Multi(subs) => {
+                assert_eq!(subs.len(), 98);
+                for (i, (k, sub)) in probe.iter().zip(&subs).enumerate() {
+                    match k.strip_prefix("mb") {
+                        Some(num) => assert_eq!(
+                            *sub,
+                            Response::Val(val(&[num.parse::<u8>().unwrap()])),
+                            "position {i}"
+                        ),
+                        None => assert_eq!(*sub, Response::Nil, "position {i}"),
+                    }
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        // Per-key invalid keys answer ERR without poisoning the batch.
+        match router.handle(Request::MGet {
+            keys: vec!["mb0".into(), "bad key".into(), "mb1".into()],
+        }) {
+            Response::Multi(subs) => {
+                assert_eq!(subs[0], Response::Val(val(&[0])));
+                assert!(matches!(subs[1], Response::Err(_)));
+                assert_eq!(subs[2], Response::Val(val(&[1])));
+            }
+            other => panic!("{other:?}"),
+        }
+        // MDEL answers per key, and the batch path shows up in metrics.
+        match router.handle(Request::MDel { keys: vec!["mb0".into(), "ghost".into()] }) {
+            Response::Multi(subs) => assert_eq!(subs, vec![Response::Ok, Response::Nil]),
+            other => panic!("{other:?}"),
+        }
+        assert!(router.metrics.mget_keys.load(Ordering::Relaxed) >= 98);
+        assert!(router.metrics.mput_keys.load(Ordering::Relaxed) == 96);
+        // 4 shards, several batches: at least one fan-out per owner
+        // group, and never more than one per (batch, shard).
+        let fanouts = router.metrics.batch_fanouts.load(Ordering::Relaxed);
+        assert!((1..=12).contains(&fanouts), "fanouts={fanouts}");
+        match router.handle(Request::Stats) {
+            Response::Info(s) => {
+                assert!(s.contains("mget_keys="), "{s}");
+                assert!(s.contains("batch_fanouts="), "{s}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn batched_shard_internal_ops_rejected_per_key() {
+        let router = Router::new(local_cluster("binomial", 2).unwrap());
+        for req in [
+            Request::MPutNx { keys: vec!["k".into()], values: vec![val(&[1])] },
+            Request::MDelTomb { keys: vec!["k".into()] },
+        ] {
+            match router.handle(req) {
+                Response::Multi(subs) => {
+                    assert_eq!(subs.len(), 1);
+                    assert!(matches!(subs[0], Response::Err(_)));
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn batched_gets_dual_read_mid_migration_keys() {
+        // Freeze a mid-scale-up snapshot where nothing has migrated yet:
+        // every key still sits on its old owner.  A batched GET must
+        // dual-read exactly like singletons — every key readable.
+        let router = Router::new(local_cluster("binomial", 2).unwrap());
+        let keys: Vec<String> = (0..200).map(|i| format!("dm{i}")).collect();
+        for (i, k) in keys.iter().enumerate() {
+            assert_eq!(
+                router.handle(Request::Put { key: k.clone(), value: val(&[i as u8]) }),
+                Response::Ok
+            );
+        }
+        let base = router.snapshot();
+        let old_engine = crate::algorithms::by_name("binomial", 2).unwrap();
+        let new_engine = crate::algorithms::by_name("binomial", 3).unwrap();
+        let mut shards = base.shards.clone();
+        shards.push(ShardClient::Local(Shard::new(2)));
+        router.publish(PlacementSnapshot {
+            epoch: base.epoch + 1,
+            engine: new_engine,
+            shards,
+            origin: Some(MigrationOrigin {
+                engine: old_engine,
+                sources: vec![0, 1],
+                settle_len: 3,
+            }),
+            degraded: None,
+        });
+        match router.handle(Request::MGet { keys: keys.clone() }) {
+            Response::Multi(subs) => {
+                for (i, sub) in subs.iter().enumerate() {
+                    assert_eq!(*sub, Response::Val(val(&[i as u8])), "dm{i} mid-migration");
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(
+            router.metrics.dual_reads.load(Ordering::Relaxed) > 0,
+            "no key exercised the dual-read fallback"
+        );
+        // Batched writes land on the new owner and batched deletes
+        // tombstone it, so the migration sweep cannot resurrect them.
+        match router.handle(Request::MDel { keys: keys.clone() }) {
+            Response::Multi(subs) => {
+                assert!(subs.iter().all(|r| *r == Response::Ok), "a delete missed");
+            }
+            other => panic!("{other:?}"),
+        }
+        match router.handle(Request::MGet { keys }) {
+            Response::Multi(subs) => {
+                assert!(subs.iter().all(|r| *r == Response::Nil));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn batches_roundtrip_the_router_wire_mixed_with_singletons() {
+        let router = Router::new(local_cluster("binomial", 3).unwrap());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let _ = router.serve(listener);
+        });
+
+        let sock = TcpStream::connect(addr).unwrap();
+        let mut rd = BufReader::new(sock.try_clone().unwrap());
+        let mut wr = sock;
+        // Pipeline: MPUT, singleton GET, MGET, bad frame, MDEL — one
+        // burst, answered in order, connection kept alive throughout.
+        let mut burst = Vec::new();
+        proto::write_request(
+            &mut burst,
+            &Request::MPut {
+                keys: vec!["w0".into(), "w1".into(), "w2".into()],
+                values: vec![val(b"a"), val(b"b"), val(b"c")],
+            },
+        )
+        .unwrap();
+        proto::write_request(&mut burst, &Request::Get { key: "w1".into() }).unwrap();
+        proto::write_request(
+            &mut burst,
+            &Request::MGet { keys: vec!["w2".into(), "nope".into(), "w0".into()] },
+        )
+        .unwrap();
+        burst.extend_from_slice(b"MGET 99 onlyone\n");
+        proto::write_request(&mut burst, &Request::MDel { keys: vec!["w0".into()] }).unwrap();
+        wr.write_all(&burst).unwrap();
+        wr.flush().unwrap();
+
+        assert_eq!(
+            proto::read_response(&mut rd).unwrap(),
+            Response::Multi(vec![Response::Ok, Response::Ok, Response::Ok])
+        );
+        assert_eq!(proto::read_response(&mut rd).unwrap(), Response::Val(val(b"b")));
+        assert_eq!(
+            proto::read_response(&mut rd).unwrap(),
+            Response::Multi(vec![
+                Response::Val(val(b"c")),
+                Response::Nil,
+                Response::Val(val(b"a"))
+            ])
+        );
+        assert!(matches!(proto::read_response(&mut rd).unwrap(), Response::Err(_)));
+        assert_eq!(
+            proto::read_response(&mut rd).unwrap(),
+            Response::Multi(vec![Response::Ok])
         );
     }
 

@@ -19,6 +19,19 @@
 //! passes the digest it already computed for placement, so a local call
 //! hashes the key exactly once end to end (remote shards recompute it
 //! from the wire via [`key_digest`]).
+//!
+//! ## Batched execution
+//!
+//! [`Shard::run_batch`] executes one `MGET`/`MPUT`/`MPUTNX`/`MDEL`/
+//! `MDELTOMB` keybatch under **one lock acquisition per occupied
+//! stripe** instead of one per key: it builds a stripe-occupancy mask
+//! from the digests, then walks each occupied stripe once, applying that
+//! stripe's keys in request order under a single guard.  Results are
+//! positional (`out[i]` answers key `i`), which is what lets the router
+//! hand one response array to several shards' fan-outs and get the
+//! request-order reassembly for free.  [`ShardClient::call_batch`] is the
+//! transport-agnostic entry: in-process it is the stripe-grouped run,
+//! remote it is one `MULTI`-answered round-trip per shard.
 
 use std::collections::{HashMap, HashSet};
 use std::io::BufReader;
@@ -26,10 +39,10 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::hashing::XxBuildHasher;
-use crate::proto::{self, Request, RequestRef, Response, Value};
+use crate::proto::{self, BatchOp, BatchSource, Request, RequestRef, Response, Value, MAX_BATCH};
 
 /// Number of lock stripes (power of two). Public because the incremental
 /// rebalancer iterates stripes (`SCANSTRIPE <i>` for `i < STRIPES`); both
@@ -60,6 +73,65 @@ struct Stripe {
     tombs: HashSet<String, XxBuildHasher>,
 }
 
+// The per-key operations, factored onto the locked stripe so the
+// singleton path (one lock per op) and the batch path (one lock per
+// occupied stripe) share one implementation of the semantics.
+impl Stripe {
+    fn get(&self, key: &str) -> Option<Value> {
+        self.live.get(key).cloned()
+    }
+
+    fn put(&mut self, key: &str, value: Value) {
+        self.tombs.remove(key);
+        if let Some(slot) = self.live.get_mut(key) {
+            *slot = value;
+        } else {
+            self.live.insert(key.to_owned(), value);
+        }
+    }
+
+    fn put_nx(&mut self, key: &str, value: Value) -> bool {
+        if self.live.contains_key(key) || self.tombs.contains(key) {
+            false
+        } else {
+            self.live.insert(key.to_owned(), value);
+            true
+        }
+    }
+
+    fn del(&mut self, key: &str) -> bool {
+        self.live.remove(key).is_some()
+    }
+
+    fn del_tomb(&mut self, key: &str) -> bool {
+        self.tombs.insert(key.to_string());
+        self.live.remove(key).is_some()
+    }
+}
+
+/// Index of the lock stripe owning a key digest (`splitmix64`-mixed so it
+/// decorrelates from the placement engine's use of the same digest).
+#[inline]
+fn stripe_index(digest: u64) -> usize {
+    crate::hashing::splitmix64(digest ^ STRIPE_SEED) as usize & (STRIPES - 1)
+}
+
+/// Reusable scratch for [`Shard::handle_batch`]: the digest table and the
+/// identity selection, allocated once per connection (or per caller), not
+/// once per batch.
+#[derive(Debug, Default)]
+pub struct BatchScratch {
+    sel: Vec<u32>,
+    digests: Vec<u64>,
+}
+
+impl BatchScratch {
+    /// New empty scratch.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// An in-memory KV shard with striped locking.
 #[derive(Debug)]
 pub struct Shard {
@@ -80,15 +152,14 @@ impl Shard {
     }
 
     fn stripe(&self, digest: u64) -> &Mutex<Stripe> {
-        let h = crate::hashing::splitmix64(digest ^ STRIPE_SEED) as usize;
-        &self.stripes[h & (STRIPES - 1)]
+        &self.stripes[stripe_index(digest)]
     }
 
     /// Fetch a value (a refcount bump of the stored buffer, never a copy).
     /// `digest` must be [`key_digest`]`(key)`.
     pub fn get(&self, key: &str, digest: u64) -> Option<Value> {
         self.ops.fetch_add(1, Ordering::Relaxed);
-        self.stripe(digest).lock().unwrap().live.get(key).cloned()
+        self.stripe(digest).lock().unwrap().get(key)
     }
 
     /// Store a value, moving the buffer in (clears any tombstone: a client
@@ -97,13 +168,7 @@ impl Shard {
     /// allocation in steady state.
     pub fn put(&self, key: &str, value: Value, digest: u64) {
         self.ops.fetch_add(1, Ordering::Relaxed);
-        let mut s = self.stripe(digest).lock().unwrap();
-        s.tombs.remove(key);
-        if let Some(slot) = s.live.get_mut(key) {
-            *slot = value;
-        } else {
-            s.live.insert(key.to_owned(), value);
-        }
+        self.stripe(digest).lock().unwrap().put(key, value);
     }
 
     /// Store a value only if the key is absent *and* not tombstoned;
@@ -115,19 +180,13 @@ impl Shard {
     /// flight (the tombstone records that delete).
     pub fn put_nx(&self, key: &str, value: Value, digest: u64) -> bool {
         self.ops.fetch_add(1, Ordering::Relaxed);
-        let mut s = self.stripe(digest).lock().unwrap();
-        if s.live.contains_key(key) || s.tombs.contains(key) {
-            false
-        } else {
-            s.live.insert(key.to_owned(), value);
-            true
-        }
+        self.stripe(digest).lock().unwrap().put_nx(key, value)
     }
 
     /// Delete a key; `true` if it existed.
     pub fn del(&self, key: &str, digest: u64) -> bool {
         self.ops.fetch_add(1, Ordering::Relaxed);
-        self.stripe(digest).lock().unwrap().live.remove(key).is_some()
+        self.stripe(digest).lock().unwrap().del(key)
     }
 
     /// Delete a key and leave a tombstone; `true` if it existed.
@@ -137,9 +196,105 @@ impl Shard {
     /// the key back after this delete wins the race.
     pub fn del_tomb(&self, key: &str, digest: u64) -> bool {
         self.ops.fetch_add(1, Ordering::Relaxed);
-        let mut s = self.stripe(digest).lock().unwrap();
-        s.tombs.insert(key.to_string());
-        s.live.remove(key).is_some()
+        self.stripe(digest).lock().unwrap().del_tomb(key)
+    }
+
+    /// Execute one batch op for the keys selected by `sel` (dense indices
+    /// into `src`/`digests`/`out`), acquiring each *occupied* stripe's
+    /// lock once instead of once per key — the lock cost of a batch is
+    /// `min(batch, STRIPES)` acquisitions, not `batch`.
+    ///
+    /// Results land positionally: `out[i]` answers key `i` for each `i`
+    /// in `sel` (untouched slots keep their previous contents, which is
+    /// what lets the router fan one `out` across several shards).
+    /// `digests[i]` must be [`key_digest`]`(src.key(i))`.  Duplicate keys
+    /// within a batch apply in ascending-`sel` order (they share a
+    /// stripe, and each stripe pass walks `sel` in order).  Allocates
+    /// nothing beyond what the per-key ops themselves do.
+    pub fn run_batch<S: BatchSource + ?Sized>(
+        &self,
+        op: BatchOp,
+        sel: &[u32],
+        src: &S,
+        digests: &[u64],
+        out: &mut [Response],
+    ) {
+        self.ops.fetch_add(sel.len() as u64, Ordering::Relaxed);
+        // Grouping is a linear re-scan of `sel` per occupied stripe (one
+        // splitmix64 each) rather than a sort or per-stripe sublists: for
+        // the wire-capped batch sizes that is a handful of cache-friendly
+        // passes over a contiguous u32 slice — cheaper than the
+        // allocation or scratch plumbing an index would cost, and it
+        // keeps this entry allocation-free for any `BatchSource`.
+        let mut mask: u32 = 0;
+        for &i in sel {
+            mask |= 1 << stripe_index(digests[i as usize]);
+        }
+        for s in 0..STRIPES {
+            if mask & (1 << s) == 0 {
+                continue;
+            }
+            let mut stripe = self.stripes[s].lock().unwrap();
+            for &i in sel {
+                let i = i as usize;
+                if stripe_index(digests[i]) != s {
+                    continue;
+                }
+                let key = src.key(i);
+                out[i] = match op {
+                    BatchOp::Get => match stripe.get(key) {
+                        Some(v) => Response::Val(v),
+                        None => Response::Nil,
+                    },
+                    BatchOp::Put => {
+                        stripe.put(key, src.value(i));
+                        Response::Ok
+                    }
+                    BatchOp::PutNx => {
+                        if stripe.put_nx(key, src.value(i)) {
+                            Response::Ok
+                        } else {
+                            Response::Nil
+                        }
+                    }
+                    BatchOp::Del => {
+                        if stripe.del(key) {
+                            Response::Ok
+                        } else {
+                            Response::Nil
+                        }
+                    }
+                    BatchOp::DelTomb => {
+                        if stripe.del_tomb(key) {
+                            Response::Ok
+                        } else {
+                            Response::Nil
+                        }
+                    }
+                };
+            }
+        }
+    }
+
+    /// Handle one whole batch (identity selection) with caller-reused
+    /// scratch, leaving the positional sub-responses in `out` — the shard
+    /// server's per-connection batch path (zero allocation beyond the
+    /// per-key ops once the scratch is warm).
+    pub fn handle_batch<S: BatchSource + ?Sized>(
+        &self,
+        op: BatchOp,
+        src: &S,
+        scratch: &mut BatchScratch,
+        out: &mut Vec<Response>,
+    ) {
+        let n = src.len();
+        scratch.digests.clear();
+        scratch.digests.extend((0..n).map(|i| key_digest(src.key(i))));
+        scratch.sel.clear();
+        scratch.sel.extend(0..n as u32);
+        out.clear();
+        out.resize(n, Response::Nil);
+        self.run_batch(op, &scratch.sel, src, &scratch.digests, out);
     }
 
     /// Drop every tombstone (the migration they guarded has settled);
@@ -214,7 +369,19 @@ impl Shard {
     /// Handle one borrowed request.  `digest` is the key's [`key_digest`]
     /// when the caller already computed it (the router's local fast path);
     /// `None` makes the shard hash the key itself (the wire path).
+    ///
+    /// Batch requests answer [`Response::Multi`] through transient
+    /// scratch; the server loop instead calls
+    /// [`handle_batch`](Self::handle_batch) with per-connection scratch.
     pub fn handle_ref(&self, req: RequestRef<'_>, digest: Option<u64>) -> Response {
+        let req = match req.into_batch() {
+            Ok((op, batch)) => {
+                let mut out = Vec::new();
+                self.handle_batch(op, &batch, &mut BatchScratch::new(), &mut out);
+                return Response::Multi(out);
+            }
+            Err(req) => req,
+        };
         match req {
             RequestRef::Get { key } => {
                 let d = digest.unwrap_or_else(|| key_digest(key));
@@ -268,6 +435,11 @@ impl Shard {
             | RequestRef::ScaleDown
             | RequestRef::Fail { .. }
             | RequestRef::Restore { .. } => Response::Err("not a coordinator".into()),
+            RequestRef::MGet { .. }
+            | RequestRef::MPut { .. }
+            | RequestRef::MPutNx { .. }
+            | RequestRef::MDel { .. }
+            | RequestRef::MDelTomb { .. } => unreachable!("batches split off above"),
         }
     }
 
@@ -294,7 +466,18 @@ fn serve_conn(shard: Arc<Shard>, sock: TcpStream) -> Result<()> {
     let mut wr = sock;
     // Borrowed parsing + coalesced responses; recoverable parse failures
     // answer ERR and keep the connection (see `proto::serve_framed`).
-    proto::serve_framed(&mut rd, &mut wr, |req| shard.handle_ref(req, None))
+    // Batches run through per-connection scratch so a steady stream of
+    // MGET/MPUT frames reuses its buffers instead of allocating per
+    // batch.
+    let mut scratch = BatchScratch::new();
+    let mut subs: Vec<Response> = Vec::new();
+    proto::serve_framed(&mut rd, &mut wr, |req, out| match req.into_batch() {
+        Ok((op, batch)) => {
+            shard.handle_batch(op, &batch, &mut scratch, &mut subs);
+            proto::encode_multi_response(out, &subs)
+        }
+        Err(req) => proto::encode_response(out, &shard.handle_ref(req, None)),
+    })
 }
 
 /// Client handle to a shard: in-process or remote TCP (pooled connections).
@@ -328,7 +511,9 @@ impl RemotePool {
         })
     }
 
-    fn call(&self, req: &RequestRef<'_>) -> Result<Response> {
+    /// Run `f` on one pooled connection (lazily established), dropping
+    /// the connection on any error so the next call reconnects.
+    fn with_conn<T>(&self, f: impl FnOnce(&mut ShardConn) -> Result<T>) -> Result<T> {
         let i = self.next.fetch_add(1, Ordering::Relaxed) % self.conns.len();
         let mut slot = self.conns[i].lock().unwrap();
         if slot.is_none() {
@@ -337,15 +522,48 @@ impl RemotePool {
             let rd = BufReader::new(sock.try_clone()?);
             *slot = Some(ShardConn { rd, wr: sock });
         }
-        let conn = slot.as_mut().unwrap();
-        let result = (|| {
-            proto::write_request_ref(&mut conn.wr, req)?;
-            proto::read_response(&mut conn.rd)
-        })();
+        let result = f(slot.as_mut().unwrap());
         if result.is_err() {
             *slot = None; // drop broken connection; next call reconnects
         }
         result
+    }
+
+    fn call(&self, req: &RequestRef<'_>) -> Result<Response> {
+        self.with_conn(|conn| {
+            proto::write_request_ref(&mut conn.wr, req)?;
+            proto::read_response(&mut conn.rd)
+        })
+    }
+
+    /// One batch round-trip for the subset of `src` selected by `sel`;
+    /// the positional answers land in `out[sel[j]]`.
+    fn call_batch<S: BatchSource + ?Sized>(
+        &self,
+        op: BatchOp,
+        sel: &[u32],
+        src: &S,
+        out: &mut [Response],
+    ) -> Result<()> {
+        self.with_conn(|conn| {
+            proto::write_batch_request(&mut conn.wr, op, sel, src)?;
+            match proto::read_response(&mut conn.rd)? {
+                Response::Multi(subs) => {
+                    ensure!(
+                        subs.len() == sel.len(),
+                        "batch answered {} of {} keys",
+                        subs.len(),
+                        sel.len()
+                    );
+                    for (j, sub) in subs.into_iter().enumerate() {
+                        out[sel[j] as usize] = sub;
+                    }
+                    Ok(())
+                }
+                Response::Err(m) => bail!("shard refused batch: {m}"),
+                other => bail!("unexpected batch response {other:?}"),
+            }
+        })
     }
 }
 
@@ -363,6 +581,40 @@ impl ShardClient {
     /// Issue an owned request and await the response.
     pub fn call(&self, req: &Request) -> Result<Response> {
         self.call_ref(req.as_view(), None)
+    }
+
+    /// Issue one batch op for the keys selected by `sel` (dense indices
+    /// into `src`/`digests`/`out`); the positional answers land in
+    /// `out[sel[j]]`, untouched slots keep their contents.  A local shard
+    /// reuses `digests[i]` (= [`key_digest`]`(src.key(i))`, required to
+    /// cover every selected index) and executes under one lock
+    /// acquisition per occupied stripe; a remote shard serializes the
+    /// subset as **one round-trip** and re-derives digests from the wire.
+    pub fn call_batch<S: BatchSource + ?Sized>(
+        &self,
+        op: BatchOp,
+        sel: &[u32],
+        src: &S,
+        digests: &[u64],
+        out: &mut [Response],
+    ) -> Result<()> {
+        match self {
+            ShardClient::Local(shard) => {
+                shard.run_batch(op, sel, src, digests, out);
+                Ok(())
+            }
+            ShardClient::Remote(pool) => {
+                // The wire caps a frame at MAX_BATCH keys; a larger
+                // selection (owned-API batches and migration plans are
+                // not parser-bounded) degrades to more round-trips, never
+                // to a refused frame that would drop a healthy pooled
+                // connection.
+                for chunk in sel.chunks(MAX_BATCH) {
+                    pool.call_batch(op, chunk, src, out)?;
+                }
+                Ok(())
+            }
+        }
     }
 
     /// Typed GET.
@@ -766,6 +1018,129 @@ mod tests {
             s.handle(&Request::ScanStripe { stripe: STRIPES as u32 }),
             Response::Err(_)
         ));
+    }
+
+    #[test]
+    fn batch_ops_match_singleton_semantics() {
+        let s = Shard::new(20);
+        let keys: Vec<String> = (0..64).map(|i| format!("bk{i}")).collect();
+        let values: Vec<Value> = (0..64).map(|i| val(&[i as u8])).collect();
+        // MPUT stores everything...
+        match s.handle(&Request::MPut { keys: keys.clone(), values: values.clone() }) {
+            Response::Multi(subs) => {
+                assert_eq!(subs.len(), 64);
+                assert!(subs.iter().all(|r| *r == Response::Ok));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(s.count(), 64);
+        // ...MGET answers positionally, including misses...
+        let mut probe = keys.clone();
+        probe.push("absent".into());
+        match s.handle(&Request::MGet { keys: probe }) {
+            Response::Multi(subs) => {
+                for (i, sub) in subs.iter().take(64).enumerate() {
+                    assert_eq!(*sub, Response::Val(val(&[i as u8])), "key bk{i}");
+                }
+                assert_eq!(subs[64], Response::Nil);
+            }
+            other => panic!("{other:?}"),
+        }
+        // ...and MDEL reports existence per key, like singleton DEL.
+        match s.handle(&Request::MDel { keys: vec!["bk0".into(), "ghost".into()] }) {
+            Response::Multi(subs) => {
+                assert_eq!(subs, vec![Response::Ok, Response::Nil]);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(s.count(), 63);
+    }
+
+    #[test]
+    fn batch_duplicates_apply_in_request_order() {
+        // Two writes of one key in a single MPUT: the later one wins,
+        // exactly as if the client had pipelined two singleton PUTs.
+        let s = Shard::new(21);
+        match s.handle(&Request::MPut {
+            keys: vec!["dup".into(), "dup".into()],
+            values: vec![val(b"first"), val(b"second")],
+        }) {
+            Response::Multi(subs) => assert_eq!(subs, vec![Response::Ok, Response::Ok]),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(s.get("dup", kd("dup")).as_deref(), Some(&b"second"[..]));
+    }
+
+    #[test]
+    fn batch_putnx_and_deltomb_keep_migration_semantics() {
+        let s = Shard::new(22);
+        s.put("held", val(b"newer"), kd("held"));
+        s.put("doomed", val(b"x"), kd("doomed"));
+        // MDELTOMB removes and tombstones per key.
+        match s.handle(&Request::MDelTomb { keys: vec!["doomed".into(), "ghost".into()] }) {
+            Response::Multi(subs) => assert_eq!(subs, vec![Response::Ok, Response::Nil]),
+            other => panic!("{other:?}"),
+        }
+        // MPUTNX: refused where a value is held, refused where a
+        // tombstone bars it, stored where free.
+        match s.handle(&Request::MPutNx {
+            keys: vec!["held".into(), "doomed".into(), "free".into()],
+            values: vec![val(b"stale"), val(b"stale"), val(b"fresh")],
+        }) {
+            Response::Multi(subs) => {
+                assert_eq!(subs, vec![Response::Nil, Response::Nil, Response::Ok]);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(s.get("held", kd("held")).as_deref(), Some(&b"newer"[..]));
+        assert_eq!(s.get("doomed", kd("doomed")), None);
+        assert_eq!(s.get("free", kd("free")).as_deref(), Some(&b"fresh"[..]));
+    }
+
+    #[test]
+    fn batches_roundtrip_the_wire_with_subset_selection() {
+        let s = Shard::new(23);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let srv = s.clone();
+        std::thread::spawn(move || {
+            let _ = serve(srv, listener);
+        });
+        let c = ShardClient::Remote(RemotePool::new(addr, 2));
+
+        // Whole-batch MPUT over the wire.
+        let keys: Vec<String> = (0..10).map(|i| format!("wk{i}")).collect();
+        let values: Vec<Value> = (0..10).map(|i| val(&[i as u8, 0xAB])).collect();
+        match c.call(&Request::MPut { keys: keys.clone(), values }).unwrap() {
+            Response::Multi(subs) => assert!(subs.iter().all(|r| *r == Response::Ok)),
+            other => panic!("{other:?}"),
+        }
+
+        // Subset selection through call_batch: only indices 2, 5 and 7
+        // travel; their answers land back at those indices.
+        let probe = crate::proto::Request::MGet { keys };
+        let view = probe.as_view();
+        let (_, batch) = view.into_batch().unwrap();
+        let sel = [2u32, 5, 7];
+        let mut out = vec![Response::Err("untouched".into()); 10];
+        c.call_batch(BatchOp::Get, &sel, &batch, &[], &mut out).unwrap();
+        for i in 0..10u8 {
+            let idx = i as usize;
+            if sel.contains(&(i as u32)) {
+                assert_eq!(out[idx], Response::Val(val(&[i, 0xAB])), "index {i}");
+            } else {
+                assert_eq!(out[idx], Response::Err("untouched".into()), "index {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batches_answer_empty_multi() {
+        let s = Shard::new(24);
+        match s.handle(&Request::MGet { keys: Vec::new() }) {
+            Response::Multi(subs) => assert!(subs.is_empty()),
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

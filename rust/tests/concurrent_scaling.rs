@@ -97,6 +97,84 @@ fn gets_never_fail_during_scale_cycles() {
 }
 
 #[test]
+fn batched_gets_stay_consistent_during_scale_cycles() {
+    // Readers hammer MGET keybatches (through per-thread reused scratch,
+    // like a real connection) while the main thread cycles
+    // scale-up/scale-down.  Every sub-response must be the right value in
+    // the right position — keys mid-migration peel off to the dual-read
+    // path per key, and a batch must never observe a miss or a torn
+    // value.
+    use binhash::router::BatchScratch;
+    const BATCH: usize = 48;
+    let router = Router::new(local_cluster("binomial", 3).unwrap());
+    let keys: std::sync::Arc<Vec<String>> =
+        std::sync::Arc::new((0..KEYS).map(|i| format!("cb{i}")).collect());
+    {
+        let values: Vec<Value> = (0..KEYS).map(value_for).collect();
+        match router.handle(Request::MPut { keys: (*keys).clone(), values }) {
+            Response::Multi(subs) => assert!(subs.iter().all(|r| *r == Response::Ok)),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut readers = Vec::new();
+    for t in 0..READERS {
+        let router = router.clone();
+        let stop = stop.clone();
+        let keys = keys.clone();
+        readers.push(std::thread::spawn(move || -> u64 {
+            let mut scratch = BatchScratch::new();
+            let mut out = Vec::new();
+            let mut start = t * 13;
+            let mut batches = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                // A wrapping window over the keyset, different per round.
+                let lo = start % (KEYS - BATCH);
+                let probe = Request::MGet { keys: keys[lo..lo + BATCH].to_vec() };
+                let (op, batch) = probe.as_view().into_batch().unwrap();
+                router.handle_batch(op, &batch, &mut scratch, &mut out);
+                assert_eq!(out.len(), BATCH);
+                for (j, sub) in out.iter().enumerate() {
+                    let idx = lo + j;
+                    match sub {
+                        Response::Val(v) => {
+                            assert_eq!(*v, value_for(idx), "cb{idx} torn during scaling")
+                        }
+                        other => panic!("cb{idx} unreadable in a batch: {other:?}"),
+                    }
+                }
+                start += 31; // co-prime stride: windows sweep the keyset
+                batches += 1;
+            }
+            batches
+        }));
+    }
+
+    for _ in 0..CYCLES {
+        assert_eq!(router.handle(Request::ScaleUp), Response::Num(4));
+        assert_eq!(router.handle(Request::ScaleDown), Response::Num(3));
+    }
+    stop.store(true, Ordering::Relaxed);
+    let mut total = 0u64;
+    for h in readers {
+        total += h.join().expect("a batched reader panicked");
+    }
+    assert!(total > 0, "batched readers made no progress");
+
+    // Keyset exactly intact, and one clean batched sweep post-churn.
+    assert_eq!(router.handle(Request::Count), Response::Num(KEYS as u64));
+    match router.handle(Request::MGet { keys: (*keys).clone() }) {
+        Response::Multi(subs) => {
+            for (i, sub) in subs.iter().enumerate() {
+                assert_eq!(*sub, Response::Val(value_for(i)), "cb{i} lost after churn");
+            }
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
 fn overwrites_and_deletes_land_correctly_during_migration_window() {
     // PUTs issued while epochs churn must win over any in-flight migration
     // copy of the same key (the copy step is PUTNX and the mid-migration

@@ -170,6 +170,85 @@ fn every_fault_tolerant_engine_fails_over_and_restores_through_the_router() {
 }
 
 #[test]
+fn batched_ops_isolate_marooned_keys_while_degraded() {
+    // One MGET spanning survivors and marooned keys: the failed bucket's
+    // keys answer their per-key `ERR UNAVAILABLE`, every other
+    // sub-response stands — a dead shard never poisons the batch.
+    const KEYS: usize = 400;
+    const FAILED: u32 = 2;
+    let router = Router::new(local_cluster("memento", 5).unwrap());
+    let keys: Vec<String> = (0..KEYS).map(|i| format!("bf{i}")).collect();
+    let values: Vec<Value> = (0..KEYS).map(val).collect();
+    match router.handle(Request::MPut { keys: keys.clone(), values }) {
+        Response::Multi(subs) => assert!(subs.iter().all(|r| *r == Response::Ok)),
+        other => panic!("{other:?}"),
+    }
+    let pre_fail = by_name("memento", 5).unwrap();
+    let marooned: Vec<usize> = (0..KEYS)
+        .filter(|i| pre_fail.bucket(key_digest(&keys[*i])) == FAILED)
+        .collect();
+    assert!(!marooned.is_empty(), "keyset never hit bucket {FAILED}");
+    assert_eq!(router.handle(Request::Fail { shard: FAILED }), Response::Num(4));
+
+    match router.handle(Request::MGet { keys: keys.clone() }) {
+        Response::Multi(subs) => {
+            assert_eq!(subs.len(), KEYS);
+            for (i, sub) in subs.iter().enumerate() {
+                if marooned.contains(&i) {
+                    match sub {
+                        Response::Err(msg) => {
+                            assert!(msg.starts_with("UNAVAILABLE"), "bf{i}: {msg}")
+                        }
+                        other => panic!("marooned bf{i} answered {other:?}"),
+                    }
+                } else {
+                    assert_eq!(*sub, Response::Val(val(i)), "survivor bf{i} poisoned");
+                }
+            }
+        }
+        other => panic!("{other:?}"),
+    }
+    // A batched re-PUT makes marooned keys reachable again (each lands on
+    // its surviving owner), and the next MGET serves the whole batch.
+    let re_keys: Vec<String> = marooned.iter().map(|&i| keys[i].clone()).collect();
+    let re_values: Vec<Value> = marooned.iter().map(|&i| val(i)).collect();
+    match router.handle(Request::MPut { keys: re_keys, values: re_values }) {
+        Response::Multi(subs) => assert!(subs.iter().all(|r| *r == Response::Ok)),
+        other => panic!("{other:?}"),
+    }
+    match router.handle(Request::MGet { keys }) {
+        Response::Multi(subs) => {
+            for (i, sub) in subs.iter().enumerate() {
+                assert_eq!(*sub, Response::Val(val(i)), "bf{i} after batched re-PUT");
+            }
+        }
+        other => panic!("{other:?}"),
+    }
+    // The batch counters surfaced in STATS moved.
+    match router.handle(Request::Stats) {
+        Response::Info(s) => {
+            assert!(s.contains("state=degraded"), "{s}");
+            assert!(!s.contains("mget_keys=0"), "{s}");
+            assert!(!s.contains("mput_keys=0"), "{s}");
+            assert!(!s.contains("batch_fanouts=0"), "{s}");
+        }
+        other => panic!("{other:?}"),
+    }
+    // Restore converges with batched traffic having run throughout.
+    assert_eq!(router.handle(Request::Restore { shard: FAILED }), Response::Num(5));
+    match router.handle(Request::MGet {
+        keys: (0..KEYS).map(|i| format!("bf{i}")).collect(),
+    }) {
+        Response::Multi(subs) => {
+            for (i, sub) in subs.iter().enumerate() {
+                assert_eq!(*sub, Response::Val(val(i)), "bf{i} after restore");
+            }
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
 fn fail_never_dials_the_dead_shard_even_over_tcp() {
     // The failed shard here is a *dead TCP endpoint* — any code path
     // that dials it would error (or hang, with a black-holed address);

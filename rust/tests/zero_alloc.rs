@@ -16,7 +16,7 @@ use std::hint::black_box;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use binhash::proto::{Request, Response, Value};
-use binhash::router::{local_cluster, Router};
+use binhash::router::{local_cluster, BatchScratch, Router};
 
 struct CountingAlloc;
 
@@ -164,5 +164,80 @@ fn steady_state_data_path_allocates_nothing() {
             Response::Val(value_of(i, 1)),
             "overwrite of za{i} lost"
         );
+    }
+
+    // ---- Batch phase: steady-state MGET / MPUT-overwrite / MDEL through
+    // `Router::handle_batch` with caller-reused scratch must be
+    // allocation-free too (the per-connection contract: scratch batch
+    // buffers are reused, a batched GET bumps refcounts, a batched PUT
+    // moves pre-allocated Arcs, placement grouping sorts in place).
+    let live: Vec<String> = (KEYS / 4..KEYS).map(|i| format!("za{i}")).collect();
+    let batch_values: Vec<Value> =
+        (0..live.len()).map(|i| value_of(i, 3)).collect();
+    let mget = Request::MGet { keys: live.clone() };
+    let mput = Request::MPut { keys: live.clone(), values: batch_values.clone() };
+    let mdel = Request::MDel { keys: live[..32].to_vec() };
+    let mut scratch = BatchScratch::new();
+    let mut out: Vec<Response> = Vec::new();
+
+    // Warm-up batch sizes every scratch buffer outside the window.
+    {
+        let (op, batch) = mget.as_view().into_batch().unwrap();
+        router.handle_batch(op, &batch, &mut scratch, &mut out);
+    }
+
+    ALLOCS.store(0, Ordering::Relaxed);
+    arm(true);
+    let mut unexpected = 0u32;
+    for _ in 0..4 {
+        let (op, batch) = mget.as_view().into_batch().unwrap();
+        router.handle_batch(op, &batch, &mut scratch, &mut out);
+        for sub in black_box(&out).iter() {
+            if !matches!(sub, Response::Val(_)) {
+                unexpected += 1;
+            }
+        }
+        let (op, batch) = mput.as_view().into_batch().unwrap();
+        router.handle_batch(op, &batch, &mut scratch, &mut out);
+        for sub in black_box(&out).iter() {
+            if !matches!(sub, Response::Ok) {
+                unexpected += 1;
+            }
+        }
+    }
+    {
+        let (op, batch) = mdel.as_view().into_batch().unwrap();
+        router.handle_batch(op, &batch, &mut scratch, &mut out);
+        for sub in black_box(&out).iter() {
+            if !matches!(sub, Response::Ok) {
+                unexpected += 1;
+            }
+        }
+        // Batched misses ride the same budget.
+        let (op, batch) = mdel.as_view().into_batch().unwrap();
+        router.handle_batch(op, &batch, &mut scratch, &mut out);
+        for sub in black_box(&out).iter() {
+            if !matches!(sub, Response::Nil) {
+                unexpected += 1;
+            }
+        }
+    }
+    arm(false);
+    let allocs = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(unexpected, 0, "a steady-state batch sub-response was unexpected");
+    assert_eq!(
+        allocs, 0,
+        "steady-state batched MGET/MPUT/MDEL must be allocation-free, saw {allocs} allocations"
+    );
+
+    // Post-window correctness: batch overwrites landed, batch deletes
+    // stuck, the rest intact.
+    for (j, key) in live.iter().enumerate() {
+        let want = if j < 32 {
+            Response::Nil
+        } else {
+            Response::Val(batch_values[j].clone())
+        };
+        assert_eq!(router.handle(Request::Get { key: key.clone() }), want, "key {key}");
     }
 }

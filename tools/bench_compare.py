@@ -1,0 +1,79 @@
+#!/usr/bin/env python3
+"""Fail-soft comparison of two BENCH_router.json artifacts.
+
+Usage: bench_compare.py BASELINE.json CURRENT.json
+
+Prints a GitHub-flavored markdown table of per-phase ns deltas (negative
+= faster).  Tolerates a missing or schema-drifted baseline: any phase it
+cannot pair is reported as "new", and an unreadable baseline degrades to
+a note instead of a failure — CI must never go red because history is
+thin.
+"""
+
+import json
+import sys
+
+
+def dig(d, *path):
+    for k in path:
+        if not isinstance(d, dict):
+            return None
+        d = d.get(k)
+    return d
+
+
+def rows(doc):
+    """Yield (label, ns) pairs for every phase we know how to read."""
+    for c in doc.get("clusters", []):
+        n = c.get("n")
+        yield (f"n={n} steady put", dig(c, "steady", "put", "ns_op"))
+        yield (f"n={n} steady get", dig(c, "steady", "get", "ns_op"))
+        yield (f"n={n} churn get", dig(c, "churn", "get", "ns_op"))
+        yield (f"n={n} failover get", dig(c, "failover", "get", "ns_op"))
+        for b in dig(c, "batch", "sizes") or []:
+            bs = b.get("batch")
+            yield (f"n={n} mget@{bs}", dig(b, "mget", "ns_key"))
+            yield (f"n={n} mput@{bs}", dig(b, "mput", "ns_key"))
+        ratio = dig(c, "batch", "mget64_vs_get")
+        if ratio is not None:
+            yield (f"n={n} mget64-vs-get ratio", -ratio)  # sentinel: ratio row
+
+
+def main():
+    if len(sys.argv) != 3:
+        print("usage: bench_compare.py BASELINE.json CURRENT.json")
+        return
+    try:
+        with open(sys.argv[2]) as f:
+            new = dict(rows(json.load(f)))
+    except Exception as e:  # the fresh file should exist; still fail soft
+        print(f"bench-compare: current bench unreadable ({e}); skipping")
+        return
+    try:
+        with open(sys.argv[1]) as f:
+            old = dict(rows(json.load(f)))
+    except Exception as e:
+        print(f"bench-compare: no usable baseline ({e}); current run seeds it")
+        old = {}
+
+    print("| phase | baseline | current | delta |")
+    print("|---|---:|---:|---:|")
+    for label, cur in new.items():
+        if cur is None:
+            continue
+        base = old.get(label)
+        if label.endswith("ratio"):
+            # Stored negated so the generic pairing still works.
+            cur_s = f"{-cur:.2f}x"
+            base_s = f"{-base:.2f}x" if base is not None else "—"
+            print(f"| {label} | {base_s} | {cur_s} | |")
+            continue
+        if base is None or base == 0:
+            print(f"| {label} | — | {cur:.0f} ns | new |")
+            continue
+        delta = (cur - base) / base * 100.0
+        print(f"| {label} | {base:.0f} ns | {cur:.0f} ns | {delta:+.1f}% |")
+
+
+if __name__ == "__main__":
+    main()
