@@ -9,7 +9,8 @@
 //!   `rust/examples/failover_memento.rs`).
 //! * [`PlacementSnapshot`] — the *immutable*, epoch-stamped view the
 //!   router's data path routes with. The router consumes a `Cluster` into
-//!   its first snapshot and publishes a fresh `Arc<PlacementSnapshot>` on
+//!   its first snapshot and publishes a fresh `Arc<PlacementSnapshot>`
+//!   (through [`SnapshotCell`](crate::sync::cell::SnapshotCell)) on
 //!   every topology change — each epoch's engine is a
 //!   [`fork`](crate::algorithms::ConsistentHasher::fork) of the previous
 //!   epoch's, never a by-name rebuild — so GET/PUT/DEL never contend with

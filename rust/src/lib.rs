@@ -38,6 +38,20 @@
 //! assert!(bucket < 11);
 //! ch.add_bucket(); // scale up: only ~1/12 of keys move, all onto bucket 11
 //! ```
+//!
+//! ## Verification matrix
+//!
+//! The concurrent modules import all synchronization primitives from
+//! [`sync`] (boundary enforced by `tools/lint_sync.py`).  Normal builds
+//! compile the shim to zero-cost `std` re-exports; `--features model`
+//! swaps in instrumented primitives driven by a deterministic schedule
+//! explorer (`rust/tests/model.rs`), and CI additionally runs Miri and
+//! the thread/address sanitizers over the same code.  See the [`sync`]
+//! module docs for how to replay a failing schedule seed.
+
+// Every unsafe block must carry a `// SAFETY:` comment explaining why
+// its invariants hold (checked by clippy in the CI lint step).
+#![deny(clippy::undocumented_unsafe_blocks)]
 
 pub mod algorithms;
 pub mod cluster;
@@ -50,4 +64,5 @@ pub mod router;
 pub mod runtime;
 pub mod shard;
 pub mod stats;
+pub mod sync;
 pub mod workload;

@@ -3,7 +3,7 @@
 //! Hand-rolled (no external metrics crate) so the router's hot path costs
 //! exactly one relaxed atomic increment per event.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{AtomicU64, Ordering};
 use std::time::Duration;
 
 /// Log-spaced latency histogram: 64 buckets, ~2× resolution from 1µs.
@@ -34,14 +34,14 @@ impl LatencyHistogram {
     pub fn record(&self, d: Duration) {
         let ns = d.as_nanos().min(u64::MAX as u128) as u64;
         let idx = (63 - ns.max(1).leading_zeros()) as usize;
-        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
+        self.count.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
     }
 
     /// Number of observations.
     pub fn count(&self) -> u64 {
-        self.count.load(Ordering::Relaxed)
+        self.count.load(Ordering::Relaxed) // ord: Relaxed — independent telemetry counter
     }
 
     /// Mean latency in nanoseconds.
@@ -50,7 +50,7 @@ impl LatencyHistogram {
         if c == 0 {
             0.0
         } else {
-            self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
+            self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64 // ord: Relaxed — independent telemetry counter
         }
     }
 
@@ -63,7 +63,7 @@ impl LatencyHistogram {
         let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
         let mut acc = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
-            acc += b.load(Ordering::Relaxed);
+            acc += b.load(Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
             if acc >= target {
                 return 1u64 << (i + 1).min(63);
             }
@@ -132,20 +132,20 @@ impl RouterMetrics {
              dual_reads={} epochs={} failovers={} restores={} unavailable={} \
              mget_keys={} mput_keys={} batch_fanouts={} \
              p50={}ns p99={}ns mean={:.0}ns",
-            self.gets.load(Ordering::Relaxed),
-            self.puts.load(Ordering::Relaxed),
-            self.dels.load(Ordering::Relaxed),
-            self.errors.load(Ordering::Relaxed),
-            self.migrated_keys.load(Ordering::Relaxed),
-            self.migration_batches.load(Ordering::Relaxed),
-            self.dual_reads.load(Ordering::Relaxed),
-            self.epochs.load(Ordering::Relaxed),
-            self.failovers.load(Ordering::Relaxed),
-            self.restores.load(Ordering::Relaxed),
-            self.unavailable.load(Ordering::Relaxed),
-            self.mget_keys.load(Ordering::Relaxed),
-            self.mput_keys.load(Ordering::Relaxed),
-            self.batch_fanouts.load(Ordering::Relaxed),
+            self.gets.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
+            self.puts.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
+            self.dels.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
+            self.errors.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
+            self.migrated_keys.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
+            self.migration_batches.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
+            self.dual_reads.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
+            self.epochs.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
+            self.failovers.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
+            self.restores.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
+            self.unavailable.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
+            self.mget_keys.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
+            self.mput_keys.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
+            self.batch_fanouts.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
             self.latency.quantile_ns(0.5),
             self.latency.quantile_ns(0.99),
             self.latency.mean_ns(),
@@ -180,9 +180,9 @@ mod tests {
     #[test]
     fn metrics_summary_formats() {
         let m = RouterMetrics::new();
-        m.gets.fetch_add(3, Ordering::Relaxed);
-        m.mget_keys.fetch_add(2, Ordering::Relaxed);
-        m.batch_fanouts.fetch_add(1, Ordering::Relaxed);
+        m.gets.fetch_add(3, Ordering::Relaxed); // ord: test-only
+        m.mget_keys.fetch_add(2, Ordering::Relaxed); // ord: test-only
+        m.batch_fanouts.fetch_add(1, Ordering::Relaxed); // ord: test-only
         m.latency.record(Duration::from_micros(5));
         let s = m.summary();
         assert!(s.contains("gets=3"));

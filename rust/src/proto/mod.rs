@@ -108,9 +108,10 @@
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::mem::MaybeUninit;
-use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
+
+use crate::sync::Arc;
 
 /// A value payload: refcounted shared bytes.  GET answers clone the `Arc`
 /// (refcount bump), never the bytes; PUT moves the parsed buffer into the

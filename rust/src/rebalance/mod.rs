@@ -32,6 +32,11 @@
 //! locally each call runs under one stripe-lock acquisition per occupied
 //! stripe.  Per-key semantics are unchanged — `MPUTNX`/`MDELTOMB` refuse
 //! and tombstone exactly like their singleton forms.
+//!
+//! The tombstone/PUTNX no-resurrection contract and the migration purge
+//! ordering are model-checked under adversarial interleavings in
+//! `rust/tests/model.rs` (`--features model`); any synchronization this
+//! module needs flows through [`crate::sync`], never raw `std::sync`.
 
 use anyhow::{bail, Result};
 

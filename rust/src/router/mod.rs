@@ -12,20 +12,21 @@
 //! allocations** (pinned by `rust/tests/zero_alloc.rs`) and acquires **no
 //! lock** for snapshot access:
 //!
-//! * The current [`PlacementSnapshot`] is published through a hand-rolled
-//!   atomic `Arc` swap: an `AtomicPtr` whose pointer owns one strong
-//!   count.  [`Router::snapshot`] is one atomic pointer load plus a
-//!   refcount bump, guarded by a generation-validated reader gate: a
-//!   reader registers in the gate slot of the current generation's
-//!   parity, re-checks the generation, and only then touches the
-//!   pointer (retrying if a publish raced in).  A publisher swaps the
-//!   pointer, advances the generation, and drains the *superseded*
-//!   parity slot to zero before releasing the superseded snapshot's
-//!   stored count — that closes the classic load-then-bump race (a
-//!   reader holding the superseded raw pointer without having bumped its
-//!   count yet).  Readers arriving during the drain validate against the
-//!   new generation and land in the other slot, so publication cannot be
-//!   starved.
+//! * The current [`PlacementSnapshot`] is published through
+//!   [`SnapshotCell`](crate::sync::cell::SnapshotCell) — an atomic `Arc`
+//!   swap whose pointer owns one strong count.  [`Router::snapshot`] is
+//!   one atomic pointer load plus a refcount bump, guarded by a
+//!   generation-validated reader gate: a reader registers in the gate
+//!   slot of the current generation's parity, re-checks the generation,
+//!   and only then touches the pointer (retrying if a publish raced in).
+//!   A publisher swaps the pointer, advances the generation, and drains
+//!   the *superseded* parity slot to zero before releasing the
+//!   superseded snapshot's stored count — that closes the classic
+//!   load-then-bump race (a reader holding the superseded raw pointer
+//!   without having bumped its count yet).  Readers arriving during the
+//!   drain validate against the new generation and land in the other
+//!   slot, so publication cannot be starved.  The protocol is
+//!   model-checked under `--features model` (`rust/tests/model.rs`).
 //! * Requests are parsed into borrowed [`RequestRef`]s from a reusable
 //!   per-connection [`proto::RecvBuf`] — no per-line `String`, no key
 //!   copies — and responses are coalesced per pipelined burst (one flush
@@ -36,9 +37,30 @@
 //!   the stripe map never re-hashes the key.
 //!
 //! Reclamation keeps the pre-existing protocol: superseded snapshots are
-//! quiesced with `Arc::strong_count` (now with bounded exponential
-//! backoff instead of a pure `yield_now` spin) before migration batches
+//! quiesced with `Arc::strong_count` (bounded exponential backoff via
+//! [`sync::Backoff`](crate::sync::Backoff)) before migration batches
 //! delete source copies.
+//!
+//! ## Memory-ordering table
+//!
+//! Every atomic in the router's orbit, its ordering, and why (each use
+//! site also carries an inline `ord:` comment — `tools/lint_sync.py`
+//! rejects unannotated `Ordering::` uses):
+//!
+//! | Atomic | Ordering | Why |
+//! |---|---|---|
+//! | cell `ptr` load/swap | `SeqCst` | Must interleave in one total order with the generation bump and slot drain; the covered-reader proof is a single-total-order argument (see [`crate::sync::cell`]). |
+//! | cell `generation` load / `fetch_add` | `SeqCst` | Reader validation (`load — register — re-load`) pairs with the publisher's `swap — bump — drain`; weaker orders would let a validated reader's registration be missed by the drain. |
+//! | cell `gate[parity]` add/sub/load | `SeqCst` | The drain must observe every covered reader's registration; registration must not sink below validation. |
+//! | `quiesce` via `Arc::strong_count` | `Acquire` (inside `std::sync::Arc`) | Not a site we pick: `Arc`'s own refcount protocol guarantees the count read happens-after reader drops. |
+//! | `metrics.*` counters | `Relaxed` | Independent telemetry counters: each is an isolated monotone tally, read only by `summary()`/tests; no other memory is published through them. |
+//! | shard `ops`, `RemotePool.next` | `Relaxed` | Same: standalone counters / round-robin cursor, no release/acquire role. |
+//!
+//! The `SeqCst` sites are deliberately *not* downgraded to
+//! acquire/release: the gate's safety argument is stated in terms of the
+//! sequentially consistent total order (the model checker also only
+//! explores SC interleavings, so a weaker-order variant would be
+//! asserting more than it checks — see `sync`'s module docs).
 //!
 //! ## Batched data plane: one fan-out per shard, not one per key
 //!
@@ -169,9 +191,7 @@
 
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, ensure, Result};
 
@@ -185,6 +205,8 @@ use crate::proto::{self, BatchOp, BatchSource, Request, RequestRef, Response, Va
 use crate::rebalance::{self, MigrationStats, PlanPath};
 use crate::runtime::PlacementRuntime;
 use crate::shard::{Shard, ShardClient};
+use crate::sync::cell::SnapshotCell;
+use crate::sync::{Arc, AtomicU64, Backoff, Mutex, Ordering};
 
 /// Shard factory used on scale-up.
 pub type ShardSpawner = Box<dyn Fn(u32) -> ShardClient + Send + Sync>;
@@ -247,9 +269,10 @@ fn scale_rejection(engine: &dyn ConsistentHasher, slots: usize, reason: &str) ->
     }
 }
 
-// The atomic snapshot swap shares `PlacementSnapshot` across threads
-// through a raw pointer — outside the compiler's auto-trait reasoning —
-// so pin the bound it would otherwise infer from `Arc` alone.
+// The snapshot cell shares `PlacementSnapshot` across threads through a
+// raw pointer — outside the compiler's auto-trait reasoning for this
+// struct — so pin the bound the cell requires (`SnapshotCell<T>` is
+// `Send + Sync` iff `T` is, via its `PhantomData<Arc<T>>`).
 const _: () = {
     const fn assert_send_sync<T: Send + Sync>() {}
     assert_send_sync::<PlacementSnapshot>();
@@ -258,21 +281,11 @@ const _: () = {
 /// The router: published placement snapshot + metrics + optional XLA bulk
 /// runtime.
 pub struct Router {
-    /// Current snapshot, published as a raw `Arc` pointer that owns one
-    /// strong count; swapped atomically on each migration phase.  Never
-    /// mutated through — only loaded (data path) and swapped (publish).
-    current: AtomicPtr<PlacementSnapshot>,
-    /// Publication generation; bumped by `publish` after each swap.
-    /// Readers validate it between registering in a gate slot and
-    /// touching the pointer, so a reader that raced a publish retries
-    /// instead of bumping a possibly-reclaimed snapshot.
-    generation: AtomicU64,
-    /// Readers currently inside the load-and-bump window, slotted by
-    /// generation parity.  `publish` bumps `generation` and then drains
-    /// the *superseded* parity slot to zero; readers validated against
-    /// the new generation live in the other slot, so the drain waits only
-    /// for the finite set of pre-swap readers and cannot be starved.
-    gate: [AtomicU64; 2],
+    /// Current snapshot, published through the lock-free
+    /// [`SnapshotCell`] (atomic `Arc` swap with a generation-validated
+    /// reader gate — the protocol lives, documented and model-checked,
+    /// in [`crate::sync::cell`]).
+    current: SnapshotCell<PlacementSnapshot>,
     /// Serializes topology changes and owns the event log. The data path
     /// never touches this; `SCALEUP`/`SCALEDOWN` take it with `try_lock`
     /// and answer `ERR MIGRATING` when a change is already in flight.
@@ -300,9 +313,7 @@ impl Router {
     ) -> Arc<Self> {
         let (snapshot, events) = cluster.into_snapshot();
         Arc::new(Self {
-            current: AtomicPtr::new(Arc::into_raw(Arc::new(snapshot)).cast_mut()),
-            generation: AtomicU64::new(0),
-            gate: [AtomicU64::new(0), AtomicU64::new(0)],
+            current: SnapshotCell::new(snapshot),
             admin: Mutex::new(events),
             metrics: RouterMetrics::new(),
             bulk: bulk.map(Mutex::new),
@@ -319,86 +330,34 @@ impl Router {
     /// to drain before deleting migrated source copies, so a handle held
     /// across blocking work stalls — not corrupts — topology changes.
     pub fn snapshot(&self) -> Arc<PlacementSnapshot> {
-        // Generation-validated gate (SeqCst throughout): register in the
-        // current generation's slot, then re-check the generation.  If a
-        // publish raced in between, this slot may be (or already have
-        // been) drained — deregister and retry against the new
-        // generation.  A validated reader is provably covered: its slot
-        // increment is globally ordered before the publisher's generation
-        // bump (the validation load still saw the old generation), hence
-        // before the publisher's drain of that slot.
-        loop {
-            let gen = self.generation.load(Ordering::SeqCst);
-            let slot = &self.gate[(gen & 1) as usize];
-            slot.fetch_add(1, Ordering::SeqCst);
-            if self.generation.load(Ordering::SeqCst) == gen {
-                let ptr = self.current.load(Ordering::SeqCst);
-                // SAFETY: `ptr` came from `Arc::into_raw` and its strong
-                // count cannot reach zero here: the store itself owns one
-                // count, and `publish` releases it only after draining
-                // this generation's slot — which this reader occupies.
-                let snap = unsafe {
-                    Arc::increment_strong_count(ptr);
-                    Arc::from_raw(ptr.cast_const())
-                };
-                slot.fetch_sub(1, Ordering::SeqCst);
-                return snap;
-            }
-            slot.fetch_sub(1, Ordering::SeqCst);
-        }
+        // The generation-validated reader gate lives in
+        // `sync::cell::SnapshotCell` — see its docs for the covered-
+        // reader argument and `rust/tests/model.rs` for the schedules
+        // that check it.
+        self.current.load()
     }
 
-    /// Publish a new snapshot: swap the pointer, advance the generation,
-    /// drain the superseded generation's reader slot, then release the
-    /// superseded snapshot's stored count (in-flight readers keep it
-    /// alive via their own counts until they drop).
+    /// Publish a new snapshot: swap the cell's pointer, advance its
+    /// generation, drain the superseded generation's reader slot, then
+    /// release the superseded snapshot's stored count (in-flight readers
+    /// keep it alive via their own counts until they drop).
     ///
     /// Callers are serialized by the admin mutex, so at most one drain is
-    /// in flight and the two gate slots strictly alternate.
+    /// in flight and the cell's two gate slots strictly alternate.
     fn publish(&self, snapshot: PlacementSnapshot) {
-        let new_ptr = Arc::into_raw(Arc::new(snapshot)).cast_mut();
-        let old_ptr = self.current.swap(new_ptr, Ordering::SeqCst);
-        let gen = self.generation.fetch_add(1, Ordering::SeqCst);
-        // Drain readers validated against the superseded generation: a
-        // finite set (new readers land in the other slot; a reader that
-        // raced us blips this slot once, fails validation, and leaves),
-        // each inside a nanoseconds-long load-and-bump window.
-        let slot = &self.gate[(gen & 1) as usize];
-        let mut spins = 0u32;
-        while slot.load(Ordering::SeqCst) != 0 {
-            if spins < 64 {
-                std::hint::spin_loop();
-            } else {
-                std::thread::yield_now();
-            }
-            spins += 1;
-        }
-        // SAFETY: `old_ptr` came from `Arc::into_raw` in `with_options`
-        // or a previous `publish`; reclaiming the store's single count.
-        // Every reader that loaded `old_ptr` has already bumped its own
-        // strong count (it was validated, so the drain waited for it).
-        unsafe { drop(Arc::from_raw(old_ptr.cast_const())) };
+        drop(self.current.store(snapshot));
     }
 
     /// Wait until no in-flight request still routes with `snap` (all
     /// reader clones dropped). After a publish no new reader can acquire
     /// it, and readers hold a snapshot only for the duration of one shard
-    /// call, so this normally settles in microseconds; the backoff ramps
+    /// call, so this normally settles in microseconds; [`Backoff`] ramps
     /// from busy-spin through `yield_now` to bounded sleeps so a reader
     /// stuck behind a slow remote shard doesn't burn a core here.
     fn quiesce(snap: &Arc<PlacementSnapshot>) {
-        let mut round = 0u32;
+        let mut backoff = Backoff::new();
         while Arc::strong_count(snap) > 1 {
-            match round {
-                0..=15 => std::hint::spin_loop(),
-                16..=63 => std::thread::yield_now(),
-                _ => {
-                    // 50µs, 100µs, ... capped at 3.2ms per wait.
-                    let exp = (round - 64).min(6);
-                    std::thread::sleep(Duration::from_micros(50u64 << exp));
-                }
-            }
-            round = round.saturating_add(1);
+            backoff.snooze();
         }
     }
 
@@ -541,7 +500,7 @@ impl Router {
             | RequestRef::MDelTomb { .. } => unreachable!("batches split off above"),
         };
         if matches!(resp, Response::Err(_)) {
-            self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            self.metrics.errors.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
         }
         self.metrics.latency.record(start.elapsed());
         resp
@@ -552,14 +511,14 @@ impl Router {
         if !proto::valid_key(key) {
             return Err(Response::Err(format!("invalid key {key:?}")));
         }
-        counter.fetch_add(1, Ordering::Relaxed);
+        counter.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
         Ok(crate::hashing::xxhash64(key.as_bytes(), 0))
     }
 
     /// The distinguishable degraded-read answer: the key's data sits on a
     /// failed shard, so a miss on the surviving owner is *not* "absent".
     fn unavailable(&self, key: &str, failed: u32) -> Response {
-        self.metrics.unavailable.fetch_add(1, Ordering::Relaxed);
+        self.metrics.unavailable.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
         Response::Err(format!(
             "UNAVAILABLE: key {key} is marooned on failed shard {failed}; \
              RESTORE {failed} (it rejoins empty) or re-PUT the key"
@@ -604,7 +563,7 @@ impl Router {
                         return self.unavailable(key, old_bucket);
                     }
                     Ok(Response::Nil) => {
-                        self.metrics.dual_reads.fetch_add(1, Ordering::Relaxed);
+                        self.metrics.dual_reads.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
                         match old_shard.call_ref(RequestRef::Get { key }, Some(digest)) {
                             Ok(Response::Nil) => {
                                 match shard.call_ref(RequestRef::Get { key }, Some(digest)) {
@@ -779,7 +738,7 @@ impl Router {
             for slot in out.iter_mut() {
                 *slot = Response::Err("shard-internal command".into());
             }
-            self.metrics.errors.fetch_add(n as u64, Ordering::Relaxed);
+            self.metrics.errors.fetch_add(n as u64, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
             self.metrics.latency.record(start.elapsed());
             return;
         }
@@ -816,15 +775,15 @@ impl Router {
         // Only admitted (valid) keys count, exactly like singleton admit().
         match op {
             BatchOp::Get => {
-                self.metrics.gets.fetch_add(valid, Ordering::Relaxed);
-                self.metrics.mget_keys.fetch_add(valid, Ordering::Relaxed);
+                self.metrics.gets.fetch_add(valid, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
+                self.metrics.mget_keys.fetch_add(valid, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
             }
             BatchOp::Put => {
-                self.metrics.puts.fetch_add(valid, Ordering::Relaxed);
-                self.metrics.mput_keys.fetch_add(valid, Ordering::Relaxed);
+                self.metrics.puts.fetch_add(valid, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
+                self.metrics.mput_keys.fetch_add(valid, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
             }
             BatchOp::Del => {
-                self.metrics.dels.fetch_add(valid, Ordering::Relaxed);
+                self.metrics.dels.fetch_add(valid, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
             }
             BatchOp::PutNx | BatchOp::DelTomb => unreachable!("rejected above"),
         }
@@ -856,7 +815,7 @@ impl Router {
                 scratch.sel.push(scratch.order[g] as u32);
                 g += 1;
             }
-            self.metrics.batch_fanouts.fetch_add(1, Ordering::Relaxed);
+            self.metrics.batch_fanouts.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
             let shard = &snap.shards[bucket as usize];
             if let Err(e) = shard.call_batch(op, &scratch.sel, src, &scratch.digests, out) {
                 // One shard failing its round-trip poisons only its own
@@ -883,7 +842,7 @@ impl Router {
 
         let errors = out.iter().filter(|r| matches!(r, Response::Err(_))).count() as u64;
         if errors > 0 {
-            self.metrics.errors.fetch_add(errors, Ordering::Relaxed);
+            self.metrics.errors.fetch_add(errors, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
         }
         self.metrics.latency.record(start.elapsed());
     }
@@ -1016,7 +975,7 @@ impl Router {
         // re-purges (and fails fast there) before publishing anything.
         Self::quiesce(&migrating);
         let _ = Self::purge_tombstones(&migrating);
-        self.metrics.epochs.fetch_add(1, Ordering::Relaxed);
+        self.metrics.epochs.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
         Ok(n_work + 1)
     }
 
@@ -1117,7 +1076,7 @@ impl Router {
         // handle and could rejoin a later epoch carrying stale tombstones.
         Self::quiesce(&migrating);
         let _ = Self::purge_tombstones(&migrating);
-        self.metrics.epochs.fetch_add(1, Ordering::Relaxed);
+        self.metrics.epochs.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
         Ok(n_work - 1)
     }
 
@@ -1225,8 +1184,8 @@ impl Router {
             kind: EventKind::Failed(id),
             at: std::time::SystemTime::now(),
         });
-        self.metrics.failovers.fetch_add(1, Ordering::Relaxed);
-        self.metrics.epochs.fetch_add(1, Ordering::Relaxed);
+        self.metrics.failovers.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
+        self.metrics.epochs.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
         Ok(working)
     }
 
@@ -1335,8 +1294,8 @@ impl Router {
         });
         Self::quiesce(&migrating);
         let _ = Self::purge_tombstones(&migrating);
-        self.metrics.restores.fetch_add(1, Ordering::Relaxed);
-        self.metrics.epochs.fetch_add(1, Ordering::Relaxed);
+        self.metrics.restores.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
+        self.metrics.epochs.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
         Ok(working)
     }
 
@@ -1387,8 +1346,8 @@ impl Router {
     fn run_migration(&self, snap: &PlacementSnapshot) -> Result<MigrationStats> {
         let origin = snap.origin.as_ref().expect("run_migration needs a migrating snapshot");
         let stats = self.migrate_batches(snap, origin)?;
-        self.metrics.migrated_keys.fetch_add(stats.moved, Ordering::Relaxed);
-        self.metrics.migration_batches.fetch_add(stats.batches, Ordering::Relaxed);
+        self.metrics.migrated_keys.fetch_add(stats.moved, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
+        self.metrics.migration_batches.fetch_add(stats.batches, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
         Ok(stats)
     }
 
@@ -1452,14 +1411,6 @@ impl Router {
             }
             Err(req) => proto::encode_response(out, &self.handle_ref(req)),
         })
-    }
-}
-
-impl Drop for Router {
-    fn drop(&mut self) {
-        // SAFETY: reclaiming the stored pointer's strong count; no reader
-        // can race a `&mut self` drop.
-        unsafe { drop(Arc::from_raw(self.current.load(Ordering::SeqCst).cast_const())) };
     }
 }
 
@@ -1866,11 +1817,11 @@ mod tests {
             Response::Multi(subs) => assert_eq!(subs, vec![Response::Ok, Response::Nil]),
             other => panic!("{other:?}"),
         }
-        assert!(router.metrics.mget_keys.load(Ordering::Relaxed) >= 98);
-        assert!(router.metrics.mput_keys.load(Ordering::Relaxed) == 96);
+        assert!(router.metrics.mget_keys.load(Ordering::Relaxed) >= 98); // ord: test-only
+        assert!(router.metrics.mput_keys.load(Ordering::Relaxed) == 96); // ord: test-only
         // 4 shards, several batches: at least one fan-out per owner
         // group, and never more than one per (batch, shard).
-        let fanouts = router.metrics.batch_fanouts.load(Ordering::Relaxed);
+        let fanouts = router.metrics.batch_fanouts.load(Ordering::Relaxed); // ord: test-only
         assert!((1..=12).contains(&fanouts), "fanouts={fanouts}");
         match router.handle(Request::Stats) {
             Response::Info(s) => {
@@ -1936,7 +1887,7 @@ mod tests {
             other => panic!("{other:?}"),
         }
         assert!(
-            router.metrics.dual_reads.load(Ordering::Relaxed) > 0,
+            router.metrics.dual_reads.load(Ordering::Relaxed) > 0, // ord: test-only
             "no key exercised the dual-read fallback"
         );
         // Batched writes land on the new owner and batched deletes

@@ -36,13 +36,12 @@
 use std::collections::{HashMap, HashSet};
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::hashing::XxBuildHasher;
 use crate::proto::{self, BatchOp, BatchSource, Request, RequestRef, Response, Value, MAX_BATCH};
+use crate::sync::{Arc, AtomicU64, AtomicUsize, Mutex, Ordering};
 
 /// Number of lock stripes (power of two). Public because the incremental
 /// rebalancer iterates stripes (`SCANSTRIPE <i>` for `i < STRIPES`); both
@@ -158,7 +157,7 @@ impl Shard {
     /// Fetch a value (a refcount bump of the stored buffer, never a copy).
     /// `digest` must be [`key_digest`]`(key)`.
     pub fn get(&self, key: &str, digest: u64) -> Option<Value> {
-        self.ops.fetch_add(1, Ordering::Relaxed);
+        self.ops.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
         self.stripe(digest).lock().unwrap().get(key)
     }
 
@@ -167,7 +166,7 @@ impl Shard {
     /// Overwriting an existing key reuses its stored `String` — no
     /// allocation in steady state.
     pub fn put(&self, key: &str, value: Value, digest: u64) {
-        self.ops.fetch_add(1, Ordering::Relaxed);
+        self.ops.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
         self.stripe(digest).lock().unwrap().put(key, value);
     }
 
@@ -179,13 +178,13 @@ impl Shard {
     /// must never resurrect a key a client deleted while the copy was in
     /// flight (the tombstone records that delete).
     pub fn put_nx(&self, key: &str, value: Value, digest: u64) -> bool {
-        self.ops.fetch_add(1, Ordering::Relaxed);
+        self.ops.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
         self.stripe(digest).lock().unwrap().put_nx(key, value)
     }
 
     /// Delete a key; `true` if it existed.
     pub fn del(&self, key: &str, digest: u64) -> bool {
-        self.ops.fetch_add(1, Ordering::Relaxed);
+        self.ops.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
         self.stripe(digest).lock().unwrap().del(key)
     }
 
@@ -195,7 +194,7 @@ impl Shard {
     /// migration copy (`PUTNX`) holding the pre-delete value cannot bring
     /// the key back after this delete wins the race.
     pub fn del_tomb(&self, key: &str, digest: u64) -> bool {
-        self.ops.fetch_add(1, Ordering::Relaxed);
+        self.ops.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
         self.stripe(digest).lock().unwrap().del_tomb(key)
     }
 
@@ -219,7 +218,7 @@ impl Shard {
         digests: &[u64],
         out: &mut [Response],
     ) {
-        self.ops.fetch_add(sel.len() as u64, Ordering::Relaxed);
+        self.ops.fetch_add(sel.len() as u64, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
         // Grouping is a linear re-scan of `sel` per occupied stripe (one
         // splitmix64 each) rather than a sort or per-stripe sublists: for
         // the wire-capped batch sizes that is a handful of cache-friendly
@@ -362,7 +361,7 @@ impl Shard {
         format!(
             "shard={} keys={keys} tombs={tombs} ops={}",
             self.id,
-            self.ops.load(Ordering::Relaxed)
+            self.ops.load(Ordering::Relaxed) // ord: Relaxed — independent telemetry counter
         )
     }
 
@@ -514,7 +513,7 @@ impl RemotePool {
     /// Run `f` on one pooled connection (lazily established), dropping
     /// the connection on any error so the next call reconnects.
     fn with_conn<T>(&self, f: impl FnOnce(&mut ShardConn) -> Result<T>) -> Result<T> {
-        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.conns.len();
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.conns.len(); // ord: Relaxed — round-robin cursor; no memory is published through it
         let mut slot = self.conns[i].lock().unwrap();
         if slot.is_none() {
             let sock = TcpStream::connect(self.addr)?;

@@ -1,0 +1,274 @@
+//! [`SnapshotCell`]: lock-free atomic `Arc<T>` publication with a
+//! generation-validated reader gate.
+//!
+//! Extracted from the router's hand-rolled snapshot swap so the
+//! protocol exists exactly once, is unit-tested in isolation, and is
+//! model-checked under `--features model` (`rust/tests/model.rs` drives
+//! it through thousands of adversarial schedules; the PR 3 pre-swap
+//! reader ticket race is pinned there as a regression).
+//!
+//! ## Protocol
+//!
+//! The cell owns one strong count of the current `Arc<T>`, stored as a
+//! raw pointer.  [`SnapshotCell::load`] is one atomic pointer load plus
+//! a refcount bump, guarded by the gate; [`SnapshotCell::store`] swaps
+//! the pointer, advances the generation, and drains the *superseded*
+//! parity slot to zero before releasing the superseded value's stored
+//! count.  That drain closes the classic load-then-bump race: a reader
+//! holding the superseded raw pointer without having bumped its count
+//! yet is still registered in the superseded slot, so the publisher
+//! waits for it.  Readers arriving during the drain validate against
+//! the new generation and land in the *other* slot, so publication
+//! cannot be starved.
+//!
+//! All gate operations are `SeqCst`: the covered-reader argument is a
+//! single-total-order argument (a validated reader's slot increment is
+//! globally ordered before the publisher's generation bump, hence
+//! before the drain of that slot) — see the memory-ordering table in
+//! the [`crate::router`] module docs.
+//!
+//! Writers must be externally serialized (the router's admin mutex): at
+//! most one drain may be in flight so the two parity slots strictly
+//! alternate.
+
+use super::{model_yield, Arc, AtomicPtr, AtomicU64, Backoff, Ordering};
+use std::marker::PhantomData;
+
+/// Lock-free publication cell: readers get `Arc<T>` clones wait-free
+/// (modulo a bounded retry when a store races in); a store never blocks
+/// readers and reclaims the superseded value only after its pre-swap
+/// readers drained.
+#[derive(Debug)]
+pub struct SnapshotCell<T> {
+    /// Current value as a raw `Arc` pointer owning one strong count.
+    /// Never mutated through — only loaded (readers) and swapped
+    /// (writers).
+    ptr: AtomicPtr<T>,
+    /// Publication generation; bumped by `store` after each swap.
+    /// Readers validate it between registering in a gate slot and
+    /// touching the pointer, so a reader that raced a store retries
+    /// instead of bumping a possibly-reclaimed value.
+    generation: AtomicU64,
+    /// Readers currently inside the load-and-bump window, slotted by
+    /// generation parity.  `store` bumps `generation` then drains the
+    /// *superseded* parity slot to zero.
+    gate: [AtomicU64; 2],
+    /// The cell logically owns an `Arc<T>` through the raw pointer;
+    /// this gives it exactly `Arc<T>`'s auto traits (`Send`/`Sync` iff
+    /// `T: Send + Sync`) and correct drop-check behaviour.
+    _own: PhantomData<Arc<T>>,
+}
+
+impl<T> SnapshotCell<T> {
+    /// New cell holding `value`.
+    pub fn new(value: T) -> Self {
+        Self {
+            ptr: AtomicPtr::new(Arc::into_raw(Arc::new(value)).cast_mut()),
+            generation: AtomicU64::new(0),
+            gate: [AtomicU64::new(0), AtomicU64::new(0)],
+            _own: PhantomData,
+        }
+    }
+
+    /// Publication generation (number of `store`s so far).
+    pub fn generation(&self) -> u64 {
+        // ord: SeqCst — telemetry read of the gate's generation; keeps
+        // the cell's every-op-SC invariant (cheap, cold path).
+        self.generation.load(Ordering::SeqCst)
+    }
+
+    /// Current value: one atomic pointer load plus a refcount bump — no
+    /// lock, no allocation, never blocks on a concurrent `store`.
+    pub fn load(&self) -> Arc<T> {
+        // Generation-validated gate (SeqCst throughout): register in
+        // the current generation's slot, then re-check the generation.
+        // If a store raced in between, this slot may be (or already
+        // have been) drained — deregister and retry against the new
+        // generation.  A validated reader is provably covered: its slot
+        // increment is globally ordered before the publisher's
+        // generation bump (the validation load still saw the old
+        // generation), hence before the publisher's drain of that slot.
+        loop {
+            // ord: SeqCst — the validation argument needs the single
+            // total order: this load must be orderable against the
+            // publisher's swap/bump/drain sequence.
+            let gen = self.generation.load(Ordering::SeqCst);
+            let slot = &self.gate[(gen & 1) as usize];
+            // ord: SeqCst — the registration must be globally ordered
+            // before the re-validation load below; with Relaxed the
+            // publisher's drain could miss this reader.
+            slot.fetch_add(1, Ordering::SeqCst);
+            // ord: SeqCst — pairs with the publisher's generation bump.
+            if self.generation.load(Ordering::SeqCst) == gen {
+                // ord: SeqCst — must not be reordered before the
+                // registration/validation above.
+                let ptr = self.ptr.load(Ordering::SeqCst);
+                // The historical race window (PR 3): between loading
+                // the raw pointer and bumping its count, a publisher
+                // must not be able to reclaim it.  The gate guarantees
+                // that; the model checker interleaves here to prove it.
+                model_yield();
+                // SAFETY: `ptr` came from `Arc::into_raw` and its
+                // strong count cannot reach zero here: the cell itself
+                // owns one count, and `store` releases it only after
+                // draining this generation's slot — which this reader
+                // occupies.
+                let value = unsafe {
+                    Arc::increment_strong_count(ptr);
+                    Arc::from_raw(ptr.cast_const())
+                };
+                // ord: SeqCst — deregistration; the publisher's drain
+                // loop must observe it.
+                slot.fetch_sub(1, Ordering::SeqCst);
+                return value;
+            }
+            // ord: SeqCst — symmetric with the registration above.
+            slot.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Publish `value`: swap the pointer, advance the generation, drain
+    /// the superseded generation's reader slot, then release the
+    /// superseded value's stored count (in-flight readers keep it alive
+    /// via their own counts until they drop).  Returns the superseded
+    /// value.
+    ///
+    /// Callers must be serialized externally (at most one drain in
+    /// flight; the router's admin mutex provides this).
+    pub fn store(&self, value: T) -> Arc<T> {
+        let new_ptr = Arc::into_raw(Arc::new(value)).cast_mut();
+        // ord: SeqCst — the swap must be globally ordered before the
+        // generation bump: a reader that validates against the *old*
+        // generation after this swap would load the new pointer, which
+        // is safe; a reader that validated before it is covered by the
+        // drain below.
+        let old_ptr = self.ptr.swap(new_ptr, Ordering::SeqCst);
+        // ord: SeqCst — pairs with readers' validation loads; after
+        // this bump, new readers land in the other parity slot.
+        let gen = self.generation.fetch_add(1, Ordering::SeqCst);
+        // Drain readers validated against the superseded generation: a
+        // finite set (new readers land in the other slot; a reader that
+        // raced us blips this slot once, fails validation, and leaves),
+        // each inside a nanoseconds-long load-and-bump window.
+        let slot = &self.gate[(gen & 1) as usize];
+        let mut backoff = Backoff::new();
+        // ord: SeqCst — the drain must observe every covered reader's
+        // registration (see the covered-reader argument above).
+        while slot.load(Ordering::SeqCst) != 0 {
+            backoff.snooze();
+        }
+        // Reclamation point: the model checker interleaves here to
+        // prove no covered reader is still pre-bump.
+        model_yield();
+        // SAFETY: `old_ptr` came from `Arc::into_raw` in `new` or a
+        // previous `store`; we reclaim the cell's single stored count
+        // exactly once (the swap above made this call its unique
+        // owner).  Every reader that loaded `old_ptr` has already
+        // bumped its own strong count (it was validated, so the drain
+        // waited for it), so this cannot free a value still in use.
+        unsafe { Arc::from_raw(old_ptr.cast_const()) }
+    }
+}
+
+impl<T> Drop for SnapshotCell<T> {
+    fn drop(&mut self) {
+        // ord: Relaxed — `&mut self` proves no concurrent reader or
+        // writer exists; this is a plain load of the last pointer.
+        let ptr = self.ptr.load(Ordering::Relaxed);
+        // SAFETY: reclaiming the cell's single stored count; `&mut
+        // self` guarantees no reader is inside the load-and-bump
+        // window.
+        unsafe { drop(Arc::from_raw(ptr.cast_const())) };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64 as StdAtomicU64;
+
+    /// Payload whose integrity a torn read would break.
+    struct Versioned {
+        version: u64,
+        shadow: u64,
+        drops: Arc<StdAtomicU64>,
+    }
+
+    impl Versioned {
+        fn new(version: u64, drops: &Arc<StdAtomicU64>) -> Self {
+            Self { version, shadow: version.wrapping_mul(7).wrapping_add(13), drops: Arc::clone(drops) }
+        }
+    }
+
+    impl Drop for Versioned {
+        fn drop(&mut self) {
+            self.drops.fetch_add(1, Ordering::SeqCst); // ord: test-only
+        }
+    }
+
+    #[test]
+    fn load_store_roundtrip_and_generation() {
+        let drops = Arc::new(StdAtomicU64::new(0));
+        let cell = SnapshotCell::new(Versioned::new(0, &drops));
+        assert_eq!(cell.generation(), 0);
+        assert_eq!(cell.load().version, 0);
+        let old = cell.store(Versioned::new(1, &drops));
+        assert_eq!(old.version, 0);
+        assert_eq!(cell.generation(), 1);
+        assert_eq!(cell.load().version, 1);
+        drop(old);
+        assert_eq!(drops.load(Ordering::SeqCst), 1); // ord: test-only
+    }
+
+    #[test]
+    fn drop_reclaims_exactly_once() {
+        let drops = Arc::new(StdAtomicU64::new(0));
+        let outstanding = {
+            let cell = SnapshotCell::new(Versioned::new(0, &drops));
+            let held = cell.load();
+            drop(cell.store(Versioned::new(1, &drops)));
+            // v0 survives the store because `held` still references it.
+            assert_eq!(drops.load(Ordering::SeqCst), 0); // ord: test-only
+            held
+        };
+        // Cell dropped → v1 reclaimed; v0 still alive through `outstanding`.
+        assert_eq!(drops.load(Ordering::SeqCst), 1); // ord: test-only
+        assert_eq!(outstanding.version, 0);
+        drop(outstanding);
+        assert_eq!(drops.load(Ordering::SeqCst), 2); // ord: test-only
+    }
+
+    #[test]
+    fn concurrent_readers_never_see_torn_or_stale_regressing_values() {
+        // Bounded stress (the real adversarial coverage is the model
+        // suite): readers assert shadow integrity and per-thread
+        // monotone versions while a writer publishes continuously.
+        let (readers, stores, loads) = if cfg!(miri) { (2, 10, 25) } else { (4, 200, 2_000) };
+        let drops = Arc::new(StdAtomicU64::new(0));
+        let cell = Arc::new(SnapshotCell::new(Versioned::new(0, &drops)));
+        let mut handles = Vec::new();
+        for _ in 0..readers {
+            let cell = Arc::clone(&cell);
+            handles.push(std::thread::spawn(move || {
+                let mut last = 0u64;
+                for _ in 0..loads {
+                    let v = cell.load();
+                    assert_eq!(v.shadow, v.version.wrapping_mul(7).wrapping_add(13));
+                    assert!(v.version >= last, "version regressed: {} < {last}", v.version);
+                    last = v.version;
+                }
+            }));
+        }
+        for i in 1..=stores {
+            drop(cell.store(Versioned::new(i, &drops)));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(cell.load().version, stores);
+        drop(cell);
+        // Every published version was reclaimed exactly once: stores
+        // superseded (`stores`) plus the final value in the cell.
+        assert_eq!(drops.load(Ordering::SeqCst), stores + 1); // ord: test-only
+    }
+}

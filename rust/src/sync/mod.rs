@@ -1,0 +1,230 @@
+//! Synchronization shim: one import surface, two build personalities.
+//!
+//! Every concurrent module in this crate (`router`, `shard`, `metrics`,
+//! `rebalance`, `cluster`) imports its synchronization primitives from
+//! here instead of `std::sync`.  The boundary is enforced by
+//! `tools/lint_sync.py` (run in the CI lint step): a direct
+//! `std::sync::atomic` / `std::sync::Mutex` / `std::sync::Arc` import
+//! anywhere else in `rust/src/` fails the build.
+//!
+//! ## Normal builds (default)
+//!
+//! The shim is a set of zero-cost `pub use` re-exports of the exact
+//! `std` types the code always used — `AtomicU64` here *is*
+//! `std::sync::atomic::AtomicU64`, `Mutex` *is* `std::sync::Mutex`.
+//! There is no wrapper struct, no extra branch, no codegen difference:
+//! `zero_alloc.rs` and the `router_hotpath` bench measure the same
+//! machine code as before the shim existed.
+//!
+//! ## Model builds (`--features model`)
+//!
+//! With the `model` cargo feature the same names resolve to the
+//! instrumented primitives in [`model`]: atomics and mutexes that, when
+//! executed inside a [`model::run`] closure, hand control to a
+//! deterministic cooperative scheduler at every non-`Relaxed` atomic
+//! operation, every lock acquisition/release, and every explicit
+//! [`model_yield`] point.  The scheduler runs real OS threads but lets
+//! only one make progress at a time, so a *schedule* — the sequence of
+//! "which thread runs next" choices — fully determines the execution.
+//!
+//! Two explorers drive schedules over a test body:
+//!
+//! * [`model::explore`] — seeded PCT-style random schedules.  Each seed
+//!   deterministically produces one schedule; thousands of seeds explore
+//!   thousands of interleavings.
+//! * [`model::explore_exhaustive`] — bounded depth-first enumeration of
+//!   *every* schedule of a small test body.
+//!
+//! ### Replaying a failing seed
+//!
+//! A model-test failure prints the seed (and, for exhaustive search, the
+//! exact choice trace) that produced it.  To replay locally:
+//!
+//! ```text
+//! MODEL_SEED=4242 cargo test --features model --test model -- gate_
+//! # or, for an explicit choice trace:
+//! MODEL_TRACE=0,1,1,0,2 cargo test --features model --test model -- gate_
+//! ```
+//!
+//! `MODEL_SEED` pins [`model::explore`] to a single seed;
+//! `MODEL_TRACE` replays one exact schedule.  `MODEL_SCHEDULES` and
+//! `MODEL_MAX_STEPS` override the schedule count and per-run step
+//! budget.  The scheduler is deterministic by construction (no wall
+//! clock, no OS-scheduler dependence), so a replay reproduces the
+//! failure every time, on any machine.
+//!
+//! ### What the model checker does and does not see
+//!
+//! The scheduler serializes all instrumented operations, so every
+//! explored execution is *sequentially consistent*.  It therefore finds
+//! logic races (lost updates, torn publication protocols, ordering bugs
+//! between distinct atomics, use-after-reclaim in refcount protocols)
+//! but cannot observe weak-memory reorderings that a `Relaxed`/`Acquire`
+//! mismatch would permit on real hardware.  The CI matrix covers that
+//! axis separately: ThreadSanitizer (real weak-memory race detection)
+//! and Miri (UB detection, including some weak-memory modelling) run
+//! over the same code because normal builds use the untouched `std`
+//! primitives.
+//!
+//! ## Spin loops and `Backoff`
+//!
+//! The shim deliberately does *not* re-export `std::thread::sleep`,
+//! `std::thread::yield_now`, or `std::hint::spin_loop` — those are
+//! disallowed crate-wide via `clippy.toml` precisely because a raw spin
+//! loop is invisible to the model scheduler (and would livelock the
+//! exhaustive explorer, which always tries "keep running the current
+//! thread" first).  Product code that waits for another thread uses
+//! [`Backoff`], whose `snooze()` is a progressive spin→yield→sleep
+//! ladder in normal builds and a *polite* scheduler yield in model
+//! builds (the scheduler deprioritizes a polite thread so its victim
+//! gets scheduled, keeping exploration finite).
+
+#[cfg(feature = "model")]
+pub mod model;
+
+pub mod cell;
+
+// ---------------------------------------------------------------------
+// Normal builds: zero-cost re-exports of std.
+// ---------------------------------------------------------------------
+
+#[cfg(not(feature = "model"))]
+pub use std::sync::atomic::{
+    AtomicBool, AtomicI64, AtomicPtr, AtomicU64, AtomicUsize, Ordering,
+};
+
+#[cfg(not(feature = "model"))]
+pub use std::sync::{Arc, LockResult, Mutex, MutexGuard, TryLockResult, Weak};
+
+// ---------------------------------------------------------------------
+// Model builds: instrumented substitutes.  `Arc`/`Weak` stay std's —
+// refcount protocols are exercised through the atomics and explicit
+// model_yield points, and the scheduler serializes all of them.
+// ---------------------------------------------------------------------
+
+#[cfg(feature = "model")]
+pub use model::{AtomicBool, AtomicI64, AtomicPtr, AtomicU64, AtomicUsize, Mutex, MutexGuard};
+
+#[cfg(feature = "model")]
+pub use std::sync::atomic::Ordering;
+
+#[cfg(feature = "model")]
+pub use std::sync::{Arc, LockResult, TryLockResult, Weak};
+
+/// Hint to the model scheduler that this is an interesting interleaving
+/// point (e.g. between a raw-pointer load and the refcount increment
+/// that makes it safe).  Free in normal builds.
+#[inline(always)]
+pub fn model_yield() {
+    #[cfg(feature = "model")]
+    model::yield_point();
+}
+
+/// Polite yield for product-code spin loops (see [`Backoff`]).  In
+/// normal builds this is a plain OS-thread yield; in model builds it
+/// deprioritizes the current thread so the thread being waited on runs.
+#[inline]
+pub fn spin_yield() {
+    #[cfg(feature = "model")]
+    model::polite_yield();
+    #[cfg(not(feature = "model"))]
+    // lint_sync: allow — the shim is the one place allowed to touch the
+    // raw primitive; everyone else goes through Backoff/spin_yield.
+    #[allow(clippy::disallowed_methods)]
+    std::thread::yield_now();
+}
+
+/// Progressive backoff for bounded waits on another thread's progress.
+///
+/// Normal builds: spin (`spin_loop`) for the first few rounds, then
+/// OS-yield, then exponentially growing sleeps capped at 3.2 ms — the
+/// same ladder the router's quiesce loop always used.  Model builds:
+/// every `snooze()` is a polite scheduler yield, so waits cost one
+/// schedule step instead of wall-clock time.
+#[derive(Debug)]
+pub struct Backoff {
+    step: u32,
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backoff {
+    const SPIN_LIMIT: u32 = 6;
+    const YIELD_LIMIT: u32 = 10;
+
+    /// Fresh backoff (starts at the cheap end of the ladder).
+    pub const fn new() -> Self {
+        Self { step: 0 }
+    }
+
+    /// Wait a little, escalating on each call.
+    pub fn snooze(&mut self) {
+        #[cfg(feature = "model")]
+        {
+            model::polite_yield();
+        }
+        #[cfg(not(feature = "model"))]
+        {
+            if self.step < Self::SPIN_LIMIT {
+                for _ in 0..(1u32 << self.step) {
+                    // lint_sync: allow — Backoff is the sanctioned home
+                    // of the raw spin/yield/sleep primitives.
+                    #[allow(clippy::disallowed_methods)]
+                    std::hint::spin_loop();
+                }
+            } else if self.step < Self::YIELD_LIMIT {
+                #[allow(clippy::disallowed_methods)]
+                std::thread::yield_now();
+            } else {
+                // Exponential sleep: 50µs << n, capped at 3.2ms.
+                let exp = (self.step - Self::YIELD_LIMIT).min(6);
+                #[allow(clippy::disallowed_methods)]
+                std::thread::sleep(std::time::Duration::from_micros(50u64 << exp));
+            }
+        }
+        self.step = self.step.saturating_add(1);
+    }
+
+    /// Number of snoozes taken so far (for tests / diagnostics).
+    pub fn steps(&self) -> u32 {
+        self.step
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_escalates_and_counts() {
+        let mut b = Backoff::new();
+        assert_eq!(b.steps(), 0);
+        for _ in 0..8 {
+            b.snooze();
+        }
+        assert_eq!(b.steps(), 8);
+    }
+
+    #[test]
+    fn shim_atomics_are_usable() {
+        let x = AtomicU64::new(1);
+        x.fetch_add(2, Ordering::SeqCst); // ord: test-only, strongest is fine
+        assert_eq!(x.load(Ordering::SeqCst), 3); // ord: test-only
+        let m = Mutex::new(5u32);
+        *m.lock().unwrap() += 1;
+        assert_eq!(*m.lock().unwrap(), 6);
+    }
+
+    #[test]
+    fn model_yield_is_safe_outside_model_runs() {
+        // Outside a model::run closure (or in normal builds) these are
+        // no-ops; the whole normal test suite runs under
+        // `--features model` because of this.
+        model_yield();
+        spin_yield();
+    }
+}

@@ -1,0 +1,1114 @@
+//! Deterministic-schedule concurrency model checker ("loom-lite").
+//!
+//! Only compiled under `--features model`.  Real OS threads execute the
+//! test body, but a cooperative [`Scheduler`] lets exactly one thread
+//! make progress at a time: every non-`Relaxed` atomic operation, lock
+//! acquisition/release, spawn, join, and explicit yield is a *decision
+//! point* where the scheduler picks which runnable thread executes
+//! next.  A schedule is therefore a finite sequence of choices, and an
+//! execution is fully determined by that sequence — no wall clock, no
+//! OS-scheduler dependence.
+//!
+//! Two explorers drive schedules over a body:
+//!
+//! * [`explore`] — seeded random schedules (PCT-flavored: uniform
+//!   choice among runnable threads, with "polite" spin-waiters
+//!   deprioritized so waits can't starve their victims).  Each seed
+//!   deterministically yields one schedule.
+//! * [`explore_exhaustive`] — bounded DFS over *every* choice
+//!   sequence of a small body, using the classic stateless-search
+//!   prefix-stack: replay a forced prefix, default to choice 0 after
+//!   it, and push every unexplored sibling.
+//!
+//! Failures (assertion panics in any model thread, deadlocks, step
+//! budget exhaustion) abort the whole run and surface the seed or the
+//! exact choice trace plus a ready-to-paste replay command.  See the
+//! [`crate::sync`] module docs for the env-var replay protocol
+//! (`MODEL_SEED`, `MODEL_TRACE`, `MODEL_SCHEDULES`, `MODEL_MAX_STEPS`).
+
+use std::cell::RefCell;
+use std::collections::HashSet;
+use std::fmt;
+use std::hash::{Hash, Hasher};
+use std::ops::{Deref, DerefMut};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, LockResult, Mutex as StdMutex, MutexGuard as StdMutexGuard};
+use std::sync::{PoisonError, TryLockError, TryLockResult};
+
+/// Default per-schedule step budget (decision points before the run is
+/// declared livelocked).  Override with `MODEL_MAX_STEPS`.
+pub const DEFAULT_MAX_STEPS: u64 = 20_000;
+
+// ---------------------------------------------------------------------
+// Scheduler
+// ---------------------------------------------------------------------
+
+/// Sentinel panic payload used to unwind threads of an aborted run.
+/// Never escapes [`run_once`]: the runner maps it back to the primary
+/// failure recorded in the scheduler.
+struct ModelAbort;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Status {
+    Ready,
+    /// Waiting to acquire the model mutex with this id.
+    BlockedMutex(usize),
+    /// Waiting for the model thread with this id to finish.
+    BlockedJoin(usize),
+    Finished,
+}
+
+struct ThreadInfo {
+    status: Status,
+    /// A polite thread is spin-waiting on someone else's progress; the
+    /// scheduler prefers impolite (productive) threads when any exist.
+    polite: bool,
+}
+
+struct State {
+    threads: Vec<ThreadInfo>,
+    /// Logical owner of the execution token.
+    current: usize,
+    /// Decision points taken so far.
+    steps: u64,
+    max_steps: u64,
+    /// Chosen candidate index at each decision point.
+    trace: Vec<u32>,
+    /// Candidate count at each decision point (for sibling expansion).
+    branches: Vec<u32>,
+    /// Forced prefix of choices (replay / DFS prefix).
+    replay: Vec<u32>,
+    /// xorshift64* state; `None` = DFS mode (default choice 0).
+    rng: Option<u64>,
+    /// First failure wins; everything after unwinds via [`ModelAbort`].
+    abort: Option<String>,
+    /// OS handles of spawned model threads, joined by [`run_once`].
+    os_handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+struct Scheduler {
+    state: StdMutex<State>,
+    cv: Condvar,
+}
+
+thread_local! {
+    /// (scheduler, my thread id) while executing inside a model run.
+    static CURRENT: RefCell<Option<(Arc<Scheduler>, usize)>> = const { RefCell::new(None) };
+}
+
+fn current() -> Option<(Arc<Scheduler>, usize)> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+fn xorshift(x: &mut u64) -> u64 {
+    *x ^= *x >> 12;
+    *x ^= *x << 25;
+    *x ^= *x >> 27;
+    x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+}
+
+fn splitmix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+impl Scheduler {
+    fn new(replay: Vec<u32>, seed: Option<u64>, max_steps: u64) -> Arc<Self> {
+        Arc::new(Self {
+            state: StdMutex::new(State {
+                threads: vec![ThreadInfo { status: Status::Ready, polite: false }],
+                current: 0,
+                steps: 0,
+                max_steps,
+                trace: Vec::new(),
+                branches: Vec::new(),
+                replay,
+                rng: seed.map(|s| splitmix(s) | 1),
+                abort: None,
+                os_handles: Vec::new(),
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn panic_abort() -> ! {
+        std::panic::panic_any(ModelAbort)
+    }
+
+    /// Record the first failure and wake everyone so they can unwind.
+    fn set_abort(&self, msg: String) {
+        let mut st = self.state.lock().unwrap();
+        if st.abort.is_none() {
+            st.abort = Some(msg);
+        }
+        self.cv.notify_all();
+    }
+
+    /// The decision point: set my new status, pick who runs next, and
+    /// (if that isn't me, or I just blocked) wait for my turn.
+    fn switch(&self, me: usize, new_status: Status, polite: bool) {
+        let mut st = self.state.lock().unwrap();
+        if st.abort.is_some() {
+            drop(st);
+            Self::panic_abort();
+        }
+        st.threads[me].status = new_status;
+        st.threads[me].polite = polite;
+
+        st.steps += 1;
+        if st.steps > st.max_steps {
+            let steps = st.steps;
+            st.abort = Some(format!(
+                "step budget exceeded after {steps} decision points \
+                 (possible livelock; raise MODEL_MAX_STEPS if the body is \
+                 legitimately this long)"
+            ));
+            self.cv.notify_all();
+            drop(st);
+            Self::panic_abort();
+        }
+
+        let ready: Vec<usize> = st
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.status == Status::Ready)
+            .map(|(i, _)| i)
+            .collect();
+        if ready.is_empty() {
+            let detail: Vec<String> = st
+                .threads
+                .iter()
+                .enumerate()
+                .map(|(i, t)| format!("t{i}:{:?}", t.status))
+                .collect();
+            st.abort = Some(format!("deadlock: no runnable threads [{}]", detail.join(" ")));
+            self.cv.notify_all();
+            drop(st);
+            Self::panic_abort();
+        }
+        // Prefer impolite (productive) threads; a spin-waiter only runs
+        // when nothing productive is runnable.  This keeps waits finite
+        // under the DFS default-0 policy and starvation-free in random
+        // mode.
+        let impolite: Vec<usize> =
+            ready.iter().copied().filter(|&i| !st.threads[i].polite).collect();
+        let candidates = if impolite.is_empty() { ready } else { impolite };
+
+        let step_idx = st.trace.len();
+        let n = candidates.len() as u32;
+        let choice = if step_idx < st.replay.len() {
+            st.replay[step_idx].min(n - 1)
+        } else if let Some(ref mut rng) = st.rng {
+            (xorshift(rng) % n as u64) as u32
+        } else {
+            0
+        };
+        st.trace.push(choice);
+        st.branches.push(n);
+        st.current = candidates[choice as usize];
+        self.cv.notify_all();
+
+        while !(st.current == me && st.threads[me].status == Status::Ready) {
+            if st.abort.is_some() {
+                drop(st);
+                Self::panic_abort();
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+        if st.abort.is_some() {
+            drop(st);
+            Self::panic_abort();
+        }
+    }
+
+    /// A freshly spawned model thread parks here until first scheduled.
+    fn wait_first(&self, me: usize) {
+        let mut st = self.state.lock().unwrap();
+        while !(st.current == me && st.threads[me].status == Status::Ready) {
+            if st.abort.is_some() {
+                drop(st);
+                Self::panic_abort();
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Wake every thread blocked on mutex `mid` (they re-contend when
+    /// scheduled).  The releaser keeps the execution token.
+    fn mutex_released(&self, mid: usize) {
+        let mut st = self.state.lock().unwrap();
+        for t in st.threads.iter_mut() {
+            if t.status == Status::BlockedMutex(mid) {
+                t.status = Status::Ready;
+                t.polite = false;
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    /// Mark `me` finished, wake joiners, and hand the token onward.
+    /// Does not wait (the OS thread exits after this).
+    fn finish(&self, me: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.threads[me].status = Status::Finished;
+        for t in st.threads.iter_mut() {
+            if t.status == Status::BlockedJoin(me) {
+                t.status = Status::Ready;
+                t.polite = false;
+            }
+        }
+        if st.abort.is_some() {
+            self.cv.notify_all();
+            return;
+        }
+        let ready: Vec<usize> = st
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.status == Status::Ready)
+            .map(|(i, _)| i)
+            .collect();
+        if let Some(&next) = ready.first() {
+            // Handing off after a finish is not a recorded decision
+            // point: with the finisher gone there is no interleaving
+            // freedom to explore at this instant that the next regular
+            // decision point doesn't already cover.
+            st.current = next;
+        } else if st.threads.iter().any(|t| {
+            matches!(t.status, Status::BlockedMutex(_) | Status::BlockedJoin(_))
+        }) {
+            let detail: Vec<String> = st
+                .threads
+                .iter()
+                .enumerate()
+                .map(|(i, t)| format!("t{i}:{:?}", t.status))
+                .collect();
+            st.abort =
+                Some(format!("deadlock after t{me} finished [{}]", detail.join(" ")));
+        }
+        self.cv.notify_all();
+    }
+}
+
+/// Yield at a synchronization point.  No-op outside a model run, so the
+/// entire normal test suite also runs under `--features model`.
+pub fn yield_point() {
+    if let Some((sched, me)) = current() {
+        sched.switch(me, Status::Ready, false);
+    }
+}
+
+/// Polite yield: the current thread is spin-waiting on someone else and
+/// asks to be deprioritized.  Falls back to an OS yield outside a run.
+pub fn polite_yield() {
+    if let Some((sched, me)) = current() {
+        sched.switch(me, Status::Ready, true);
+    } else {
+        // lint_sync: allow — model-internal fallback outside a run.
+        #[allow(clippy::disallowed_methods)]
+        std::thread::yield_now();
+    }
+}
+
+// ---------------------------------------------------------------------
+// spawn / join
+// ---------------------------------------------------------------------
+
+type Slot<T> = Arc<StdMutex<Option<std::thread::Result<T>>>>;
+
+/// Handle to a model thread.  `join` blocks *logically* (the scheduler
+/// keeps exploring other threads) rather than on the OS.
+pub struct JoinHandle<T> {
+    id: usize,
+    slot: Slot<T>,
+    /// Set only when spawned outside a model run (plain passthrough).
+    os: Option<std::thread::JoinHandle<()>>,
+}
+
+impl<T> JoinHandle<T> {
+    /// Wait for the thread to finish and return its result, exactly
+    /// like `std::thread::JoinHandle::join`.
+    pub fn join(self) -> std::thread::Result<T> {
+        if let Some((sched, me)) = current() {
+            loop {
+                if let Some(r) = self.slot.lock().unwrap().take() {
+                    return r;
+                }
+                sched.switch(me, Status::BlockedJoin(self.id), false);
+            }
+        }
+        if let Some(os) = self.os {
+            let _ = os.join();
+        }
+        self.slot
+            .lock()
+            .unwrap()
+            .take()
+            .expect("model thread finished without storing a result")
+    }
+}
+
+/// Spawn a model thread.  Inside a run the new thread is registered
+/// with the scheduler and only executes when scheduled; outside a run
+/// this degrades to `std::thread::spawn`.
+pub fn spawn<T, F>(f: F) -> JoinHandle<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let slot: Slot<T> = Arc::new(StdMutex::new(None));
+    if let Some((sched, me)) = current() {
+        let id = {
+            let mut st = sched.state.lock().unwrap();
+            st.threads.push(ThreadInfo { status: Status::Ready, polite: false });
+            st.threads.len() - 1
+        };
+        let slot2 = Arc::clone(&slot);
+        let sched2 = Arc::clone(&sched);
+        let os = std::thread::spawn(move || {
+            CURRENT.with(|c| *c.borrow_mut() = Some((Arc::clone(&sched2), id)));
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                sched2.wait_first(id);
+                f()
+            }));
+            match result {
+                Ok(v) => *slot2.lock().unwrap() = Some(Ok(v)),
+                Err(payload) => {
+                    if payload.downcast_ref::<ModelAbort>().is_none() {
+                        sched2.set_abort(panic_message(&payload));
+                    }
+                    *slot2.lock().unwrap() = Some(Err(payload));
+                }
+            }
+            CURRENT.with(|c| *c.borrow_mut() = None);
+            sched2.finish(id);
+        });
+        sched.state.lock().unwrap().os_handles.push(os);
+        // Spawning is a synchronization point: give the explorer the
+        // chance to run the child before the parent's next step.
+        sched.switch(me, Status::Ready, false);
+        JoinHandle { id, slot, os: None }
+    } else {
+        let slot2 = Arc::clone(&slot);
+        let os = std::thread::spawn(move || {
+            let result = catch_unwind(AssertUnwindSafe(f));
+            *slot2.lock().unwrap() = Some(result);
+        });
+        JoinHandle { id: usize::MAX, slot, os: Some(os) }
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "model thread panicked (non-string payload)".to_string()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Single-run driver
+// ---------------------------------------------------------------------
+
+/// One failed schedule, with everything needed to replay it.
+#[derive(Debug)]
+pub struct Failure {
+    /// Primary failure (first panic / deadlock / budget message).
+    pub msg: String,
+    /// The exact choice trace of the failing run.
+    pub trace: Vec<u32>,
+    /// Seed, when the run was driven by one.
+    pub seed: Option<u64>,
+}
+
+impl Failure {
+    fn trace_csv(&self) -> String {
+        self.trace.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(",")
+    }
+}
+
+impl fmt::Display for Failure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "model check failed: {}", self.msg)?;
+        if let Some(seed) = self.seed {
+            writeln!(f, "  replay: MODEL_SEED={seed} cargo test --features model")?;
+        }
+        write!(
+            f,
+            "  replay: MODEL_TRACE={} cargo test --features model",
+            self.trace_csv()
+        )
+    }
+}
+
+/// Execute `body` once under a fixed schedule policy.  Returns the
+/// choice trace on success.
+fn run_once(
+    replay: Vec<u32>,
+    seed: Option<u64>,
+    max_steps: u64,
+    body: &dyn Fn(),
+) -> Result<(Vec<u32>, Vec<u32>), Failure> {
+    let sched = Scheduler::new(replay, seed, max_steps);
+    CURRENT.with(|c| *c.borrow_mut() = Some((Arc::clone(&sched), 0)));
+    let result = catch_unwind(AssertUnwindSafe(body));
+    CURRENT.with(|c| *c.borrow_mut() = None);
+    if let Err(payload) = result {
+        if payload.downcast_ref::<ModelAbort>().is_none() {
+            sched.set_abort(panic_message(&payload));
+        }
+    }
+    // Hand the token to any still-running children so they can drain
+    // (or unwind, if the run aborted), then reap the OS threads.
+    sched.finish(0);
+    loop {
+        let os = {
+            let mut st = sched.state.lock().unwrap();
+            std::mem::take(&mut st.os_handles)
+        };
+        if os.is_empty() {
+            break;
+        }
+        for h in os {
+            let _ = h.join();
+        }
+    }
+    let st = sched.state.lock().unwrap();
+    match &st.abort {
+        Some(msg) => {
+            Err(Failure { msg: msg.clone(), trace: st.trace.clone(), seed })
+        }
+        None => Ok((st.trace.clone(), st.branches.clone())),
+    }
+}
+
+/// Run `body` once under the schedule derived from `seed`.  Returns the
+/// trace on success; use this to *search* for a failing seed (regression
+/// tests pin historical races this way).
+pub fn try_seed(seed: u64, max_steps: u64, body: &dyn Fn()) -> Result<Vec<u32>, Failure> {
+    run_once(Vec::new(), Some(seed), max_steps, body).map(|(t, _)| t)
+}
+
+/// Replay one exact choice trace (choices past the end default to 0).
+pub fn replay_trace(trace: &[u32], max_steps: u64, body: &dyn Fn()) -> Result<Vec<u32>, Failure> {
+    run_once(trace.to_vec(), None, max_steps, body).map(|(t, _)| t)
+}
+
+fn env_u64(name: &str) -> Option<u64> {
+    std::env::var(name).ok().and_then(|v| v.trim().parse().ok())
+}
+
+fn env_trace() -> Option<Vec<u32>> {
+    let raw = std::env::var("MODEL_TRACE").ok()?;
+    Some(
+        raw.split(',')
+            .filter(|s| !s.trim().is_empty())
+            .filter_map(|s| s.trim().parse().ok())
+            .collect(),
+    )
+}
+
+fn hash_trace(trace: &[u32]) -> u64 {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    trace.hash(&mut h);
+    h.finish()
+}
+
+/// Explore `schedules` random seeds over `body`, panicking with replay
+/// instructions on the first failure.  Returns the number of *distinct*
+/// schedules (unique choice traces) observed.
+///
+/// Env overrides: `MODEL_SEED` pins a single seed, `MODEL_TRACE`
+/// replays one trace, `MODEL_SCHEDULES` overrides the count,
+/// `MODEL_MAX_STEPS` overrides the step budget.
+pub fn explore(name: &str, schedules: usize, body: impl Fn()) -> usize {
+    let max_steps = env_u64("MODEL_MAX_STEPS").unwrap_or(DEFAULT_MAX_STEPS);
+    if let Some(trace) = env_trace() {
+        match replay_trace(&trace, max_steps, &body) {
+            Ok(_) => return 1,
+            Err(f) => panic!("[{name}] {f}"),
+        }
+    }
+    if let Some(seed) = env_u64("MODEL_SEED") {
+        match try_seed(seed, max_steps, &body) {
+            Ok(_) => return 1,
+            Err(f) => panic!("[{name}] {f}"),
+        }
+    }
+    let schedules = env_u64("MODEL_SCHEDULES").map(|n| n as usize).unwrap_or(schedules);
+    // Fixed base so runs are reproducible without any env; per-name salt
+    // so different tests don't correlate their seed streams.
+    let base = splitmix(0xB1A0_0001 ^ hash_trace(&[name.len() as u32]));
+    let mut distinct = HashSet::new();
+    for i in 0..schedules {
+        let seed = base.wrapping_add(i as u64);
+        match try_seed(seed, max_steps, &body) {
+            Ok(trace) => {
+                distinct.insert(hash_trace(&trace));
+            }
+            Err(f) => panic!("[{name}] {f}"),
+        }
+    }
+    distinct.len()
+}
+
+/// Exhaustively enumerate every schedule of `body` (bounded by
+/// `max_schedules` runs), panicking with the exact failing trace on the
+/// first failure.  Returns the number of schedules executed; if the
+/// bound was hit before the space was exhausted, the count equals
+/// `max_schedules` and remaining prefixes were dropped.
+pub fn explore_exhaustive(name: &str, max_schedules: usize, body: impl Fn()) -> usize {
+    let max_steps = env_u64("MODEL_MAX_STEPS").unwrap_or(DEFAULT_MAX_STEPS);
+    if let Some(trace) = env_trace() {
+        match replay_trace(&trace, max_steps, &body) {
+            Ok(_) => return 1,
+            Err(f) => panic!("[{name}] {f}"),
+        }
+    }
+    let mut stack: Vec<Vec<u32>> = vec![Vec::new()];
+    let mut runs = 0usize;
+    while let Some(prefix) = stack.pop() {
+        if runs >= max_schedules {
+            break;
+        }
+        let plen = prefix.len();
+        match run_once(prefix, None, max_steps, &body) {
+            Ok((trace, branches)) => {
+                runs += 1;
+                // Push every unexplored sibling at or past the forced
+                // prefix (positions inside the prefix were expanded when
+                // the prefix itself was generated).
+                for i in plen..trace.len() {
+                    for alt in (trace[i] + 1)..branches[i] {
+                        let mut p = trace[..i].to_vec();
+                        p.push(alt);
+                        stack.push(p);
+                    }
+                }
+            }
+            Err(f) => panic!("[{name}] after {runs} schedules: {f}"),
+        }
+    }
+    runs
+}
+
+// ---------------------------------------------------------------------
+// Instrumented Mutex
+// ---------------------------------------------------------------------
+
+static NEXT_MUTEX_ID: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+/// Scheduler-aware mutex.  Inside a model run, contention parks the
+/// thread in the scheduler (`BlockedMutex`) instead of the OS, so the
+/// explorer controls who wins the lock; outside a run it behaves as a
+/// plain `std::sync::Mutex`.
+#[derive(Debug)]
+pub struct Mutex<T: ?Sized> {
+    id: usize,
+    /// Logical ownership inside a model run; the inner std mutex is
+    /// then always uncontended.
+    flag: std::sync::atomic::AtomicBool,
+    inner: StdMutex<T>,
+}
+
+impl<T> Mutex<T> {
+    /// New unlocked mutex.
+    pub fn new(value: T) -> Self {
+        Self {
+            id: NEXT_MUTEX_ID.fetch_add(1, Ordering::Relaxed), // ord: Relaxed — unique-id counter; nothing is published through it
+            flag: std::sync::atomic::AtomicBool::new(false),
+            inner: StdMutex::new(value),
+        }
+    }
+
+    /// Consume the mutex, returning the inner value.
+    pub fn into_inner(self) -> LockResult<T> {
+        self.inner.into_inner()
+    }
+}
+
+impl<T: ?Sized> Mutex<T> {
+    /// Acquire, blocking (logically, inside a run) until available.
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        if let Some((sched, me)) = current() {
+            sched.switch(me, Status::Ready, false);
+            while self.flag.swap(true, Ordering::SeqCst) { // ord: SeqCst — logical ownership flag; model-only code, strongest order by policy
+                sched.switch(me, Status::BlockedMutex(self.id), false);
+            }
+            let inner = self
+                .inner
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner);
+            Ok(MutexGuard { lock: self, inner: Some(inner), in_run: true })
+        } else {
+            match self.inner.lock() {
+                Ok(g) => Ok(MutexGuard { lock: self, inner: Some(g), in_run: false }),
+                Err(p) => Err(PoisonError::new(MutexGuard {
+                    lock: self,
+                    inner: Some(p.into_inner()),
+                    in_run: false,
+                })),
+            }
+        }
+    }
+
+    /// Non-blocking acquire.
+    pub fn try_lock(&self) -> TryLockResult<MutexGuard<'_, T>> {
+        if let Some((sched, me)) = current() {
+            sched.switch(me, Status::Ready, false);
+            if self.flag.swap(true, Ordering::SeqCst) { // ord: SeqCst — symmetric with `lock`
+                return Err(TryLockError::WouldBlock);
+            }
+            let inner = self
+                .inner
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner);
+            Ok(MutexGuard { lock: self, inner: Some(inner), in_run: true })
+        } else {
+            match self.inner.try_lock() {
+                Ok(g) => Ok(MutexGuard { lock: self, inner: Some(g), in_run: false }),
+                Err(TryLockError::WouldBlock) => Err(TryLockError::WouldBlock),
+                Err(TryLockError::Poisoned(p)) => {
+                    Err(TryLockError::Poisoned(PoisonError::new(MutexGuard {
+                        lock: self,
+                        inner: Some(p.into_inner()),
+                        in_run: false,
+                    })))
+                }
+            }
+        }
+    }
+
+    /// Mutable access without locking (requires `&mut self`).
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        self.inner.get_mut()
+    }
+}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Self {
+        Self::new(T::default())
+    }
+}
+
+/// Guard for [`Mutex`]; releasing wakes scheduler-blocked waiters.
+#[derive(Debug)]
+pub struct MutexGuard<'a, T: ?Sized> {
+    lock: &'a Mutex<T>,
+    inner: Option<StdMutexGuard<'a, T>>,
+    in_run: bool,
+}
+
+impl<T: ?Sized> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard accessed after drop")
+    }
+}
+
+impl<T: ?Sized> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard accessed after drop")
+    }
+}
+
+impl<T: ?Sized> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // Drop the std guard first so the data is consistent before any
+        // waiter can win the flag.
+        self.inner = None;
+        if self.in_run {
+            self.lock.flag.store(false, Ordering::SeqCst); // ord: SeqCst — release of the logical ownership flag
+            if let Some((sched, _)) = current() {
+                sched.mutex_released(self.lock.id);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Instrumented atomics
+// ---------------------------------------------------------------------
+
+#[inline]
+fn sync_hook(order: Ordering) {
+    // Relaxed ops (metric counters) are not decision points — they have
+    // no inter-thread ordering role, and instrumenting them would blow
+    // up the schedule space without adding coverage.
+    if !matches!(order, Ordering::Relaxed) { // ord: n/a — variant inspection, not an atomic operation
+        yield_point();
+    }
+}
+
+macro_rules! model_int_atomic {
+    ($name:ident, $std:ty, $ty:ty) => {
+        /// Instrumented atomic: every non-`Relaxed` operation is a
+        /// scheduler decision point inside a model run.
+        #[derive(Debug, Default)]
+        pub struct $name {
+            inner: $std,
+        }
+
+        impl $name {
+            /// New atomic with the given initial value.
+            pub const fn new(v: $ty) -> Self {
+                Self { inner: <$std>::new(v) }
+            }
+
+            /// See the `std` atomic of the same name.
+            pub fn load(&self, order: Ordering) -> $ty {
+                sync_hook(order);
+                self.inner.load(order)
+            }
+
+            /// See the `std` atomic of the same name.
+            pub fn store(&self, v: $ty, order: Ordering) {
+                sync_hook(order);
+                self.inner.store(v, order)
+            }
+
+            /// See the `std` atomic of the same name.
+            pub fn swap(&self, v: $ty, order: Ordering) -> $ty {
+                sync_hook(order);
+                self.inner.swap(v, order)
+            }
+
+            /// See the `std` atomic of the same name.
+            pub fn fetch_add(&self, v: $ty, order: Ordering) -> $ty {
+                sync_hook(order);
+                self.inner.fetch_add(v, order)
+            }
+
+            /// See the `std` atomic of the same name.
+            pub fn fetch_sub(&self, v: $ty, order: Ordering) -> $ty {
+                sync_hook(order);
+                self.inner.fetch_sub(v, order)
+            }
+
+            /// See the `std` atomic of the same name.
+            pub fn fetch_or(&self, v: $ty, order: Ordering) -> $ty {
+                sync_hook(order);
+                self.inner.fetch_or(v, order)
+            }
+
+            /// See the `std` atomic of the same name.
+            pub fn fetch_and(&self, v: $ty, order: Ordering) -> $ty {
+                sync_hook(order);
+                self.inner.fetch_and(v, order)
+            }
+
+            /// See the `std` atomic of the same name.
+            pub fn fetch_max(&self, v: $ty, order: Ordering) -> $ty {
+                sync_hook(order);
+                self.inner.fetch_max(v, order)
+            }
+
+            /// See the `std` atomic of the same name.
+            pub fn fetch_min(&self, v: $ty, order: Ordering) -> $ty {
+                sync_hook(order);
+                self.inner.fetch_min(v, order)
+            }
+
+            /// See the `std` atomic of the same name.
+            pub fn compare_exchange(
+                &self,
+                cur: $ty,
+                new: $ty,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$ty, $ty> {
+                sync_hook(success);
+                self.inner.compare_exchange(cur, new, success, failure)
+            }
+
+            /// See the `std` atomic of the same name.
+            pub fn compare_exchange_weak(
+                &self,
+                cur: $ty,
+                new: $ty,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$ty, $ty> {
+                sync_hook(success);
+                self.inner.compare_exchange_weak(cur, new, success, failure)
+            }
+
+            /// See the `std` atomic of the same name.
+            pub fn into_inner(self) -> $ty {
+                self.inner.into_inner()
+            }
+
+            /// See the `std` atomic of the same name.
+            pub fn get_mut(&mut self) -> &mut $ty {
+                self.inner.get_mut()
+            }
+        }
+    };
+}
+
+model_int_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+model_int_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+model_int_atomic!(AtomicI64, std::sync::atomic::AtomicI64, i64);
+
+/// Instrumented `AtomicBool`; see [`AtomicU64`].
+#[derive(Debug, Default)]
+pub struct AtomicBool {
+    inner: std::sync::atomic::AtomicBool,
+}
+
+impl AtomicBool {
+    /// New atomic with the given initial value.
+    pub const fn new(v: bool) -> Self {
+        Self { inner: std::sync::atomic::AtomicBool::new(v) }
+    }
+
+    /// See `std::sync::atomic::AtomicBool`.
+    pub fn load(&self, order: Ordering) -> bool {
+        sync_hook(order);
+        self.inner.load(order)
+    }
+
+    /// See `std::sync::atomic::AtomicBool`.
+    pub fn store(&self, v: bool, order: Ordering) {
+        sync_hook(order);
+        self.inner.store(v, order)
+    }
+
+    /// See `std::sync::atomic::AtomicBool`.
+    pub fn swap(&self, v: bool, order: Ordering) -> bool {
+        sync_hook(order);
+        self.inner.swap(v, order)
+    }
+
+    /// See `std::sync::atomic::AtomicBool`.
+    pub fn compare_exchange(
+        &self,
+        cur: bool,
+        new: bool,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<bool, bool> {
+        sync_hook(success);
+        self.inner.compare_exchange(cur, new, success, failure)
+    }
+}
+
+/// Instrumented `AtomicPtr`; see [`AtomicU64`].
+#[derive(Debug)]
+pub struct AtomicPtr<T> {
+    inner: std::sync::atomic::AtomicPtr<T>,
+}
+
+impl<T> AtomicPtr<T> {
+    /// New atomic with the given initial pointer.
+    pub const fn new(p: *mut T) -> Self {
+        Self { inner: std::sync::atomic::AtomicPtr::new(p) }
+    }
+
+    /// See `std::sync::atomic::AtomicPtr`.
+    pub fn load(&self, order: Ordering) -> *mut T {
+        sync_hook(order);
+        self.inner.load(order)
+    }
+
+    /// See `std::sync::atomic::AtomicPtr`.
+    pub fn store(&self, p: *mut T, order: Ordering) {
+        sync_hook(order);
+        self.inner.store(p, order)
+    }
+
+    /// See `std::sync::atomic::AtomicPtr`.
+    pub fn swap(&self, p: *mut T, order: Ordering) -> *mut T {
+        sync_hook(order);
+        self.inner.swap(p, order)
+    }
+
+    /// See `std::sync::atomic::AtomicPtr`.
+    pub fn compare_exchange(
+        &self,
+        cur: *mut T,
+        new: *mut T,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<*mut T, *mut T> {
+        sync_hook(success);
+        self.inner.compare_exchange(cur, new, success, failure)
+    }
+
+    /// See `std::sync::atomic::AtomicPtr`.
+    pub fn get_mut(&mut self) -> &mut *mut T {
+        self.inner.get_mut()
+    }
+}
+
+impl<T> Default for AtomicPtr<T> {
+    fn default() -> Self {
+        Self::new(std::ptr::null_mut())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The classic lost-update race: two threads do load-then-store
+    /// increments.  The explorer must find a schedule where an update
+    /// is lost — and that failing seed must replay deterministically.
+    fn lost_update_body() -> u64 {
+        let counter = Arc::new(AtomicU64::new(0));
+        let mut hs = Vec::new();
+        for _ in 0..2 {
+            let c = Arc::clone(&counter);
+            hs.push(spawn(move || {
+                let v = c.load(Ordering::SeqCst); // ord: test-only
+                c.store(v + 1, Ordering::SeqCst); // ord: test-only
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        counter.load(Ordering::SeqCst) // ord: test-only
+    }
+
+    #[test]
+    fn explorer_finds_lost_update() {
+        let mut failing_seed = None;
+        for seed in 0..256u64 {
+            let r = try_seed(seed, 1000, &|| {
+                assert_eq!(lost_update_body(), 2, "lost update");
+            });
+            if r.is_err() {
+                failing_seed = Some(seed);
+                break;
+            }
+        }
+        let seed = failing_seed.expect("random exploration should hit the lost update");
+        // Deterministic: the same seed fails again, twice.
+        for _ in 0..2 {
+            let err = try_seed(seed, 1000, &|| {
+                assert_eq!(lost_update_body(), 2, "lost update");
+            })
+            .expect_err("failing seed must replay deterministically");
+            assert!(err.msg.contains("lost update"), "got: {}", err.msg);
+            // And the printed trace replays to the same failure.
+            let err2 = replay_trace(&err.trace, 1000, &|| {
+                assert_eq!(lost_update_body(), 2, "lost update");
+            })
+            .expect_err("trace replay must reproduce the failure");
+            assert!(err2.msg.contains("lost update"));
+        }
+    }
+
+    #[test]
+    fn exhaustive_finds_lost_update_and_counts_atomic_commit() {
+        // The racy body must fail somewhere in the full schedule space.
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            explore_exhaustive("lost-update", 10_000, || {
+                assert_eq!(lost_update_body(), 2, "lost update");
+            })
+        }));
+        assert!(r.is_err(), "exhaustive search must find the lost update");
+
+        // The fetch_add version is correct under every schedule.
+        let runs = explore_exhaustive("fetch-add", 10_000, || {
+            let counter = Arc::new(AtomicU64::new(0));
+            let hs: Vec<_> = (0..2)
+                .map(|_| {
+                    let c = Arc::clone(&counter);
+                    spawn(move || {
+                        c.fetch_add(1, Ordering::SeqCst); // ord: test-only
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join().unwrap();
+            }
+            assert_eq!(counter.load(Ordering::SeqCst), 2); // ord: test-only
+        });
+        assert!(runs > 1, "expected multiple schedules, got {runs}");
+    }
+
+    #[test]
+    fn mutex_excludes_and_deadlock_is_detected() {
+        // Mutual exclusion: lock-protected read-modify-write never
+        // loses updates under any schedule.
+        let runs = explore_exhaustive("mutex-rmw", 10_000, || {
+            let m = Arc::new(Mutex::new(0u64));
+            let hs: Vec<_> = (0..2)
+                .map(|_| {
+                    let m = Arc::clone(&m);
+                    spawn(move || {
+                        let mut g = m.lock().unwrap();
+                        *g += 1;
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join().unwrap();
+            }
+            assert_eq!(*m.lock().unwrap(), 2);
+        });
+        assert!(runs > 1);
+
+        // A child that never finishes while holding the lock the root
+        // needs → deadlock, reported (not hung).
+        let err = try_seed(0, 1000, &|| {
+            let m = Arc::new(Mutex::new(()));
+            let m2 = Arc::clone(&m);
+            let g = m.lock().unwrap();
+            let h = spawn(move || {
+                let _g = m2.lock().unwrap();
+            });
+            // Root joins while holding the lock the child wants.
+            drop(h.join());
+            drop(g);
+        })
+        .expect_err("must detect deadlock");
+        assert!(err.msg.contains("deadlock"), "got: {}", err.msg);
+    }
+
+    #[test]
+    fn polite_yield_keeps_spin_waits_finite() {
+        // Waiter politely spins for a flag the child sets.  Under the
+        // DFS default-0 policy this terminates only because polite
+        // threads are deprioritized.
+        let runs = explore_exhaustive("polite-spin", 10_000, || {
+            let flag = Arc::new(AtomicBool::new(false));
+            let f = Arc::clone(&flag);
+            let h = spawn(move || {
+                f.store(true, Ordering::SeqCst); // ord: test-only
+            });
+            while !flag.load(Ordering::SeqCst) { // ord: test-only
+                polite_yield();
+            }
+            h.join().unwrap();
+        });
+        assert!(runs >= 1);
+    }
+
+    #[test]
+    fn explore_counts_distinct_schedules() {
+        let distinct = explore("distinct", 200, || {
+            let x = Arc::new(AtomicU64::new(0));
+            let hs: Vec<_> = (0..3)
+                .map(|i| {
+                    let x = Arc::clone(&x);
+                    spawn(move || {
+                        x.fetch_add(i + 1, Ordering::SeqCst); // ord: test-only
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join().unwrap();
+            }
+            assert_eq!(x.load(Ordering::SeqCst), 6); // ord: test-only
+        });
+        assert!(distinct > 10, "3 racing adders must yield many schedules, got {distinct}");
+    }
+}

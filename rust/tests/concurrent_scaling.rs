@@ -361,6 +361,9 @@ fn failover_under_concurrent_readers_writers_and_deleters() {
         // Let requests that raced the publish drain (FAIL deliberately
         // skips the quiesce), then pin the core claim: the failed
         // shard's op counter freezes — no request routes to it.
+        // lint_sync: allow — wall-clock settling in a stress test, not
+        // product code waiting on another thread.
+        #[allow(clippy::disallowed_methods)]
         std::thread::sleep(std::time::Duration::from_millis(60));
         let frozen = ops_of(&failed_shard);
         match router.handle(Request::Stats) {
@@ -373,6 +376,8 @@ fn failover_under_concurrent_readers_writers_and_deleters() {
         for i in (0..FKEYS).step_by(5) {
             let _ = router.handle(Request::Get { key: format!("fk{i}") });
         }
+        // lint_sync: allow — wall-clock settling, as above.
+        #[allow(clippy::disallowed_methods)]
         std::thread::sleep(std::time::Duration::from_millis(60));
         assert_eq!(
             ops_of(&failed_shard),

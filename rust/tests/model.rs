@@ -1,0 +1,433 @@
+//! Deterministic-schedule model checks over the lock-free data plane
+//! (`cargo test --release --features model --test model`).
+//!
+//! Each test drives real product code — `sync::cell::SnapshotCell`, the
+//! shard's striped tombstone semantics, the router's fail→scale→fail
+//! machinery — through adversarial thread interleavings chosen by the
+//! explorer in `sync::model`.  A failure prints the schedule seed (or
+//! the exact choice trace) and a ready-to-paste replay command; see the
+//! `binhash::sync` module docs for the `MODEL_SEED` / `MODEL_TRACE` /
+//! `MODEL_SCHEDULES` / `MODEL_MAX_STEPS` protocol.
+//!
+//! The two historical races are pinned as regressions:
+//!
+//! * **PR 3, pre-swap reader ticket race** — a snapshot reader that had
+//!   loaded the raw pointer but not yet bumped its strong count could be
+//!   raced by a publisher reclaiming the superseded snapshot.  Pinned
+//!   via a *simulated-reclamation twin* of the protocol (no real frees,
+//!   so the broken variant is UB-free and its use-after-reclaim is a
+//!   plain assertion) — the explorer must find the race in the ungated
+//!   twin and must never find it in the gated one.
+//! * **PR 4, fail→scale→fail marooned-record bug** — scaling while
+//!   degraded used to drop the maroon records of an earlier failure, so
+//!   reads of lost keys answered `NIL` (silent data loss) instead of
+//!   `UNAVAILABLE`.  Pinned by sweeping a named seed window over the
+//!   full fail→scale→fail sequence with a concurrent reader.
+#![cfg(feature = "model")]
+
+use binhash::proto::{Request, Response, Value};
+use binhash::router::{local_cluster, Router};
+use binhash::shard::{key_digest, Shard};
+use binhash::sync::cell::SnapshotCell;
+use binhash::sync::model::{self, spawn};
+use binhash::sync::{spin_yield, Arc, AtomicBool, AtomicI64, AtomicU64, Ordering};
+
+/// Payload whose integrity a torn or use-after-reclaim read would break.
+struct Versioned {
+    version: u64,
+    shadow: u64,
+}
+
+impl Versioned {
+    fn new(version: u64) -> Self {
+        Self { version, shadow: version.wrapping_mul(7).wrapping_add(13) }
+    }
+
+    fn check(&self) {
+        assert_eq!(
+            self.shadow,
+            self.version.wrapping_mul(7).wrapping_add(13),
+            "torn snapshot read: version {} with foreign shadow {}",
+            self.version,
+            self.shadow
+        );
+    }
+}
+
+fn val(bytes: &[u8]) -> Value {
+    bytes.to_vec().into()
+}
+
+// ---------------------------------------------------------------------
+// SnapshotCell: the publish/read gate
+// ---------------------------------------------------------------------
+
+/// Acceptance criterion: ≥ 10,000 *distinct* schedules of the
+/// publish/read gate, all upholding: no torn read across a publish, no
+/// stale regression within a reader, no use-after-reclaim (the drop
+/// ledger must balance exactly), and completion within the step budget
+/// (no starvation in the parity drain).
+#[test]
+fn gate_explores_10k_distinct_schedules() {
+    use std::sync::atomic::AtomicU64 as RawU64;
+    let distinct = model::explore("snapshot-gate", 12_000, || {
+        let drops = Arc::new(RawU64::new(0));
+        struct Tracked {
+            v: Versioned,
+            drops: Arc<RawU64>,
+        }
+        impl Drop for Tracked {
+            fn drop(&mut self) {
+                self.drops.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+        }
+        let cell = Arc::new(SnapshotCell::new(Tracked {
+            v: Versioned::new(0),
+            drops: Arc::clone(&drops),
+        }));
+        let writer = {
+            let cell = Arc::clone(&cell);
+            let drops = Arc::clone(&drops);
+            spawn(move || {
+                for ver in 1..=2 {
+                    drop(cell.store(Tracked { v: Versioned::new(ver), drops: Arc::clone(&drops) }));
+                }
+            })
+        };
+        let readers: Vec<_> = (0..2)
+            .map(|_| {
+                let cell = Arc::clone(&cell);
+                spawn(move || {
+                    let mut last = 0u64;
+                    for _ in 0..2 {
+                        let snap = cell.load();
+                        snap.v.check();
+                        assert!(
+                            snap.v.version >= last,
+                            "reader saw version {} after {last}",
+                            snap.v.version
+                        );
+                        last = snap.v.version;
+                    }
+                })
+            })
+            .collect();
+        writer.join().unwrap();
+        for r in readers {
+            r.join().unwrap();
+        }
+        assert_eq!(cell.load().v.version, 2, "final load must see the last store");
+        // Use-after-reclaim / leak ledger: with all reader handles
+        // dropped, exactly the two superseded versions are gone...
+        assert_eq!(drops.load(std::sync::atomic::Ordering::Relaxed), 2);
+        drop(cell);
+        // ...and dropping the cell reclaims the final one, exactly once.
+        assert_eq!(drops.load(std::sync::atomic::Ordering::Relaxed), 3);
+    });
+    assert!(
+        distinct >= 10_000,
+        "expected ≥ 10,000 distinct gate schedules, explored {distinct}"
+    );
+}
+
+/// Bounded-exhaustive sweep of the smallest interesting op count: one
+/// store racing one load.  Every schedule in the (capped) space must
+/// uphold the gate invariants.
+#[test]
+fn gate_exhaustive_one_store_one_load() {
+    let runs = model::explore_exhaustive("snapshot-gate-exhaustive", 20_000, || {
+        let cell = Arc::new(SnapshotCell::new(Versioned::new(0)));
+        let writer = {
+            let cell = Arc::clone(&cell);
+            spawn(move || {
+                drop(cell.store(Versioned::new(1)));
+            })
+        };
+        let snap = cell.load();
+        snap.check();
+        assert!(snap.version <= 1);
+        writer.join().unwrap();
+        assert_eq!(cell.load().version, 1);
+    });
+    assert!(runs > 10, "exhaustive search degenerated to {runs} schedules");
+}
+
+/// Parity-drain liveness: three readers hammer `load` while the writer
+/// publishes three generations.  Readers arriving during a drain land
+/// in the other parity slot, so neither side can starve the other —
+/// every explored schedule must complete within the step budget (the
+/// budget abort *is* the starvation detector).
+#[test]
+fn gate_parity_drain_starves_nobody() {
+    model::explore("gate-parity-drain", 2_000, || {
+        let cell = Arc::new(SnapshotCell::new(Versioned::new(0)));
+        let readers: Vec<_> = (0..3)
+            .map(|_| {
+                let cell = Arc::clone(&cell);
+                spawn(move || {
+                    let mut last = 0u64;
+                    for _ in 0..3 {
+                        let snap = cell.load();
+                        snap.check();
+                        assert!(snap.version >= last);
+                        last = snap.version;
+                    }
+                })
+            })
+            .collect();
+        for ver in 1..=3 {
+            drop(cell.store(Versioned::new(ver)));
+        }
+        for r in readers {
+            r.join().unwrap();
+        }
+        assert_eq!(cell.load().version, 3);
+    });
+}
+
+// ---------------------------------------------------------------------
+// Shard: tombstone vs. PUTNX resurrection, purge ordering
+// ---------------------------------------------------------------------
+
+/// A mid-migration `DELTOMB` must beat the migration's `PUTNX` copy in
+/// *every* interleaving: whichever order the stripe lock grants, the
+/// key stays dead until the tombstones are purged at settle — after
+/// which fresh writes are admitted again.
+#[test]
+fn tombstone_bars_putnx_resurrection_under_all_schedules() {
+    let runs = model::explore_exhaustive("deltomb-vs-putnx", 20_000, || {
+        let shard = Shard::new(0);
+        let digest = key_digest("k");
+        shard.put("k", val(b"old"), digest);
+        // The migration copier read "old" from the source and now races
+        // the client's delete to the destination stripe.
+        let copier = {
+            let shard = Arc::clone(&shard);
+            spawn(move || shard.put_nx("k", val(b"old"), key_digest("k")))
+        };
+        let existed = shard.del_tomb("k", digest);
+        let copied = copier.join().unwrap();
+        assert!(existed, "the client delete must observe the stored key");
+        assert!(!copied, "PUTNX must refuse: the key is live or tombstoned in every order");
+        assert_eq!(
+            shard.get("k", digest).map(|v| v.to_vec()),
+            None,
+            "DELTOMB'd key resurrected by a migration PUTNX"
+        );
+        // Purge ordering: only the settle-phase purge ends the
+        // tombstone's veto; a later (post-migration) write is admitted.
+        assert_eq!(shard.purge_tombstones(), 1);
+        assert!(shard.put_nx("k", val(b"new"), digest), "post-settle write must be admitted");
+    });
+    assert!(runs > 10, "exhaustive search degenerated to {runs} schedules");
+}
+
+// ---------------------------------------------------------------------
+// Regression: PR 3 pre-swap reader ticket race (simulated reclamation)
+// ---------------------------------------------------------------------
+
+/// Named seed window for the PR 3 regression: seeds are probed in fixed
+/// order from this base, so the first failing seed is stable across
+/// runs and machines — a *named* schedule without shipping a trace file.
+const PR3_SEED_BASE: u64 = 0xB1A0_0003;
+
+/// Simulated-reclamation twin of the snapshot gate.  Versions are small
+/// integers; a side table of reader refcounts and reclaimed flags
+/// stands in for `Arc` reclamation.  Because nothing is really freed,
+/// the *broken* (pre-PR 3, ungated) protocol is UB-free here and its
+/// use-after-reclaim shows up as a deterministic assertion instead of
+/// heap corruption.
+struct SimCell {
+    cur: AtomicU64,
+    generation: AtomicU64,
+    gate: [AtomicU64; 2],
+    rc: Vec<AtomicI64>,
+    reclaimed: Vec<AtomicBool>,
+    gated: bool,
+}
+
+impl SimCell {
+    fn new(gated: bool, versions: usize) -> Self {
+        Self {
+            cur: AtomicU64::new(0),
+            generation: AtomicU64::new(0),
+            gate: [AtomicU64::new(0), AtomicU64::new(0)],
+            rc: (0..versions).map(|_| AtomicI64::new(0)).collect(),
+            reclaimed: (0..versions).map(|_| AtomicBool::new(false)).collect(),
+            gated,
+        }
+    }
+
+    /// Reader: pin the current version (refcount bump), assert it was
+    /// not reclaimed in the load→bump window, unpin.
+    fn read(&self) {
+        if self.gated {
+            loop {
+                let gen = self.generation.load(Ordering::SeqCst);
+                let slot = &self.gate[(gen & 1) as usize];
+                slot.fetch_add(1, Ordering::SeqCst);
+                if self.generation.load(Ordering::SeqCst) == gen {
+                    let v = self.cur.load(Ordering::SeqCst) as usize;
+                    self.rc[v].fetch_add(1, Ordering::SeqCst);
+                    assert!(
+                        !self.reclaimed[v].load(Ordering::SeqCst),
+                        "use-after-reclaim: version {v} reclaimed inside the reader's \
+                         load-then-bump window"
+                    );
+                    slot.fetch_sub(1, Ordering::SeqCst);
+                    self.rc[v].fetch_sub(1, Ordering::SeqCst);
+                    return;
+                }
+                slot.fetch_sub(1, Ordering::SeqCst);
+            }
+        } else {
+            // The PR 3 bug: no reader gate — the publisher cannot see a
+            // reader that has loaded `cur` but not yet bumped `rc`.
+            let v = self.cur.load(Ordering::SeqCst) as usize;
+            self.rc[v].fetch_add(1, Ordering::SeqCst);
+            assert!(
+                !self.reclaimed[v].load(Ordering::SeqCst),
+                "use-after-reclaim: version {v} reclaimed inside the reader's \
+                 load-then-bump window"
+            );
+            self.rc[v].fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Publisher: swap to `new`, (if gated) drain the superseded parity
+    /// slot, wait for pinned readers, then reclaim the old version.
+    fn publish(&self, new: u64) {
+        let old = self.cur.swap(new, Ordering::SeqCst) as usize;
+        let gen = self.generation.fetch_add(1, Ordering::SeqCst);
+        if self.gated {
+            let slot = &self.gate[(gen & 1) as usize];
+            while slot.load(Ordering::SeqCst) != 0 {
+                spin_yield();
+            }
+        }
+        while self.rc[old].load(Ordering::SeqCst) != 0 {
+            spin_yield();
+        }
+        self.reclaimed[old].store(true, Ordering::SeqCst);
+    }
+}
+
+fn sim_body(gated: bool) {
+    let cell = Arc::new(SimCell::new(gated, 3));
+    let reader = {
+        let cell = Arc::clone(&cell);
+        spawn(move || {
+            cell.read();
+            cell.read();
+        })
+    };
+    cell.publish(1);
+    cell.publish(2);
+    reader.join().unwrap();
+}
+
+#[test]
+fn regression_pr3_preswap_reader_ticket_race() {
+    // 1. The ungated protocol must exhibit the race within the named
+    //    seed window (fixed probe order → the found seed is stable).
+    let mut named = None;
+    for i in 0..400 {
+        let seed = PR3_SEED_BASE + i;
+        if let Err(f) = model::try_seed(seed, 10_000, &|| sim_body(false)) {
+            assert!(f.msg.contains("use-after-reclaim"), "unexpected failure: {}", f.msg);
+            named = Some((seed, f.trace));
+            break;
+        }
+    }
+    let (seed, trace) =
+        named.expect("ungated twin must exhibit the PR 3 race within the seed window");
+
+    // 2. Deterministic replay: the named seed fails identically, and
+    //    the recorded choice trace reproduces it without the seed.
+    let f = model::try_seed(seed, 10_000, &|| sim_body(false))
+        .expect_err("named seed must replay deterministically");
+    assert!(f.msg.contains("use-after-reclaim"));
+    assert_eq!(f.trace, trace, "replayed schedule diverged from the recorded one");
+    let f = model::replay_trace(&trace, 10_000, &|| sim_body(false))
+        .expect_err("recorded trace must reproduce the failure");
+    assert!(f.msg.contains("use-after-reclaim"));
+
+    // 3. The gated (PR 3-fixed) protocol survives the named seed and
+    //    the entire window.
+    for i in 0..400 {
+        if let Err(f) = model::try_seed(PR3_SEED_BASE + i, 10_000, &|| sim_body(true)) {
+            panic!("gated protocol failed under seed {}: {f}", PR3_SEED_BASE + i);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Regression: PR 4 fail→scale→fail marooned-record bug (full router)
+// ---------------------------------------------------------------------
+
+/// Named seed window for the PR 4 regression sweep.
+const PR4_SEED_BASE: u64 = 0xB1A0_0004;
+
+/// Keys written before any failure.  Every read — concurrent with the
+/// fail→scale→fail sequence or after it — must answer either the
+/// correct value or a distinguishable `UNAVAILABLE`; `NIL` (the PR 4
+/// symptom: silent loss of the maroon record) and wrong values are
+/// schedule bugs.
+fn check_read(key: &str, expect: &[u8], resp: Response) {
+    match resp {
+        Response::Val(v) => {
+            assert_eq!(&v[..], expect, "misrouted read: key {key} answered a wrong value")
+        }
+        Response::Err(m) => {
+            assert!(m.contains("UNAVAILABLE"), "key {key}: unexpected error {m:?}")
+        }
+        Response::Nil => panic!(
+            "key {key} answered NIL: marooned record lost across fail→scale→fail (PR 4 bug)"
+        ),
+        other => panic!("key {key}: unexpected response {other:?}"),
+    }
+}
+
+fn fail_scale_fail_body() {
+    let router = Router::new(local_cluster("dx", 3).unwrap());
+    let keys: Vec<String> = (0..8).map(|i| format!("k{i}")).collect();
+    for (i, k) in keys.iter().enumerate() {
+        assert_eq!(
+            router.handle(Request::Put { key: k.clone(), value: val(&[i as u8]) }),
+            Response::Ok
+        );
+    }
+    // Concurrent reader races the whole admin sequence.
+    let reader = {
+        let router = Arc::clone(&router);
+        let keys = keys.clone();
+        spawn(move || {
+            for (i, k) in keys.iter().enumerate() {
+                check_read(k, &[i as u8], router.handle(Request::Get { key: k.clone() }));
+            }
+        })
+    };
+    router.fail_shard(0).expect("dx tolerates arbitrary failure");
+    router.scale_up().expect("dx grows at its frontier while degraded");
+    router.fail_shard(1).expect("dx tolerates a second failure");
+    reader.join().unwrap();
+    // Post-sequence sweep: the maroon records of *both* failures must
+    // have survived the interleaved scale.
+    for (i, k) in keys.iter().enumerate() {
+        check_read(k, &[i as u8], router.handle(Request::Get { key: k.clone() }));
+    }
+}
+
+#[test]
+fn regression_pr4_fail_scale_fail_keeps_maroon_records() {
+    // Full-router bodies are big (hundreds of decision points), so the
+    // sweep is a fixed named-seed window rather than explore()'s
+    // default volume; MODEL_SEED/MODEL_TRACE replay still applies via
+    // try_seed determinism.
+    for i in 0..150 {
+        let seed = PR4_SEED_BASE + i;
+        if let Err(f) = model::try_seed(seed, 200_000, &fail_scale_fail_body) {
+            panic!("fail→scale→fail violated the maroon contract under seed {seed}: {f}");
+        }
+    }
+}

@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Textual lint gates for the concurrency shim (rust/src/sync/).
+
+Run from the repo root (CI runs it in the lint step):
+
+    python3 tools/lint_sync.py
+
+Three rules, all scoped to `rust/src/**/*.rs`:
+
+1. **Shim boundary** — outside `rust/src/sync/`, no direct textual use
+   of `std::sync::atomic`, `std::sync::Mutex` / `RwLock` / `Condvar`,
+   or `std::sync::Arc` / `Weak`.  All synchronization imports go
+   through `crate::sync`, so that `--features model` substitutes the
+   instrumented primitives everywhere at once.  This must be a textual
+   check: clippy's `disallowed-types` resolves *through* re-exports,
+   so it would flag the shim's own zero-cost `pub use` surface.
+   Waive a deliberate exception with a `lint_sync: allow` comment on
+   the same line or the two lines above it (used inside the shim's
+   normal-build implementation and nowhere else today).
+
+2. **Ordering justification** — every `Ordering::` use must carry an
+   `ord:` comment on the same line or within the six lines above it,
+   stating the chosen ordering and why it suffices (`// ord: Relaxed —
+   independent telemetry counter`, `// ord: test-only`, ...).  The
+   memory-ordering table in `rust/src/router/mod.rs` is the index of
+   the load-bearing sites.
+
+3. **SAFETY comments** — every `unsafe` keyword must have a `SAFETY:`
+   comment on the same line or within the eight lines above it.  This
+   duplicates `#![deny(clippy::undocumented_unsafe_blocks)]` for the
+   cases that lint does not cover (`unsafe impl`, code behind
+   non-default cfg gates that a default clippy run never type-checks).
+
+Lines that are themselves comments never *trigger* a rule (prose may
+mention `std::sync::Arc` or `unsafe` freely) but do *satisfy* the
+annotation lookbacks.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+SRC = Path("rust/src")
+SYNC = SRC / "sync"
+
+BOUNDARY = re.compile(r"std::sync::(atomic|Mutex\b|RwLock\b|Condvar\b|Arc\b|Weak\b)")
+ORDERING = re.compile(r"Ordering::")
+UNSAFE = re.compile(r"\bunsafe\b")
+
+WAIVER = "lint_sync: allow"
+ORD_MARK = "ord:"
+SAFETY_MARK = "SAFETY:"
+
+BOUNDARY_LOOKBACK = 2
+ORD_LOOKBACK = 6
+SAFETY_LOOKBACK = 8
+
+
+def is_comment(line: str) -> bool:
+    return line.lstrip().startswith("//")
+
+
+def nearby(lines: list[str], idx: int, lookback: int, needle: str) -> bool:
+    """Is `needle` on line idx or within `lookback` lines above it?"""
+    return any(needle in lines[j] for j in range(max(0, idx - lookback), idx + 1))
+
+
+def check_file(path: Path) -> list[str]:
+    problems: list[str] = []
+    lines = path.read_text(encoding="utf-8").split("\n")
+    inside_shim = SYNC in path.parents or path.parent == SYNC
+    for idx, line in enumerate(lines):
+        if is_comment(line):
+            continue
+        loc = f"{path}:{idx + 1}"
+        if not inside_shim and BOUNDARY.search(line):
+            if not nearby(lines, idx, BOUNDARY_LOOKBACK, WAIVER):
+                problems.append(
+                    f"{loc}: direct std::sync use outside the shim — import it "
+                    f"from crate::sync instead (or add a `{WAIVER}` comment "
+                    f"explaining why the model scheduler must not see this "
+                    f"site)\n    {line.strip()}"
+                )
+        if ORDERING.search(line):
+            if not nearby(lines, idx, ORD_LOOKBACK, ORD_MARK):
+                problems.append(
+                    f"{loc}: Ordering:: use without an `ord:` justification "
+                    f"comment (same line or up to {ORD_LOOKBACK} lines above)"
+                    f"\n    {line.strip()}"
+                )
+        if UNSAFE.search(line):
+            if not nearby(lines, idx, SAFETY_LOOKBACK, SAFETY_MARK):
+                problems.append(
+                    f"{loc}: `unsafe` without a `SAFETY:` comment (same line "
+                    f"or up to {SAFETY_LOOKBACK} lines above)\n    {line.strip()}"
+                )
+    return problems
+
+
+def main() -> int:
+    if not SRC.is_dir():
+        print(f"lint_sync: {SRC} not found — run from the repo root", file=sys.stderr)
+        return 2
+    files = sorted(SRC.rglob("*.rs"))
+    if not files:
+        print(f"lint_sync: no Rust sources under {SRC}", file=sys.stderr)
+        return 2
+    problems: list[str] = []
+    for path in files:
+        problems.extend(check_file(path))
+    if problems:
+        print(f"lint_sync: {len(problems)} problem(s):\n", file=sys.stderr)
+        for p in problems:
+            print(p, file=sys.stderr)
+        return 1
+    print(f"lint_sync: OK ({len(files)} files checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
