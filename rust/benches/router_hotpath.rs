@@ -251,12 +251,105 @@ fn main() {
         clusters_json.push(c);
     }
 
+    let fanin = fanin_json();
     let json = format!(
         "{{\n  \"bench\": \"router_hotpath\",\n  \"ops_per_phase\": {OPS},\n  \
-         \"clusters\": [\n{}\n  ]\n}}\n",
+         \"clusters\": [\n{}\n  ],\n  \"fanin\": {fanin}\n}}\n",
         clusters_json.join(",\n")
     );
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_router.json".to_string());
     std::fs::write(&out, &json).expect("write bench JSON");
     println!("wrote {out}");
+}
+
+/// High-fan-in phase: an event-mode `net::Server` holding `FANIN_CONNS`
+/// idle connections while a hot connection drives request/response
+/// roundtrips through the same loops — prices what 10k parked sockets
+/// cost the data path (readiness bookkeeping, slab pressure) versus the
+/// in-process numbers above.  Returns the phase's JSON object (or
+/// `null` where the readiness server is unavailable).
+#[cfg(target_os = "linux")]
+fn fanin_json() -> String {
+    use std::io::BufReader;
+    use std::net::{TcpListener, TcpStream};
+
+    use binhash::net::ServerOpts;
+    use binhash::proto;
+
+    // Idle fleet held open while a hot connection keeps working through
+    // the same event loops.
+    const FANIN_CONNS: usize = 10_000;
+    const FANIN_HOT_OPS: usize = 50_000;
+    const FANIN_LOOPS: usize = 4;
+
+    // The fleet needs ~2 fds per connection (both ends live in this
+    // process); raise the limit before the first connect rather than
+    // racing the server thread's own raise.
+    let _ = binhash::net::sys::raise_nofile_limit();
+
+    let router = Router::new(local_cluster("binomial", 16).unwrap());
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind fanin listener");
+    let opts = ServerOpts {
+        loops: FANIN_LOOPS,
+        max_conns: FANIN_CONNS + 64,
+        ..ServerOpts::default()
+    };
+    let server = router.server(listener, opts).expect("fanin server");
+    let addr = server.local_addr();
+    let handle = server.handle();
+    let srv = std::thread::spawn(move || server.run());
+
+    // Connection-establishment rate: open the idle fleet.
+    let t0 = Instant::now();
+    let idle: Vec<TcpStream> = (0..FANIN_CONNS)
+        .map(|_| TcpStream::connect(addr).expect("fanin connect"))
+        .collect();
+    let connect_ns = ns_op(t0.elapsed(), FANIN_CONNS);
+
+    // Hot subset: pipeless request/response roundtrips riding above the
+    // idle fleet.
+    let sock = TcpStream::connect(addr).expect("hot connect");
+    sock.set_nodelay(true).expect("nodelay");
+    let mut rd = BufReader::new(sock.try_clone().expect("clone"));
+    let mut wr = sock;
+    let put = Request::Put { key: "hot".into(), value: vec![7u8; 64].into() };
+    proto::write_request(&mut wr, &put).expect("seed put");
+    assert!(matches!(proto::read_response(&mut rd).expect("seed resp"), Response::Ok));
+    let get = Request::Get { key: "hot".into() };
+    let hist = LatencyHistogram::new();
+    let t0 = Instant::now();
+    for _ in 0..FANIN_HOT_OPS {
+        let t1 = Instant::now();
+        proto::write_request(&mut wr, &get).expect("hot get");
+        let r = proto::read_response(&mut rd).expect("hot resp");
+        hist.record(t1.elapsed());
+        black_box(r);
+    }
+    let get_ns = ns_op(t0.elapsed(), FANIN_HOT_OPS);
+    let p50 = hist.quantile_ns(0.5);
+    let p99 = hist.quantile_ns(0.99);
+
+    drop(idle);
+    drop((rd, wr));
+    handle.stop();
+    srv.join().expect("server thread").expect("server run");
+
+    println!(
+        "fanin: {FANIN_CONNS} conns over {FANIN_LOOPS} loops  \
+         connect: {connect_ns:>8.0} ns/conn ({:>9.0} conn/s)   \
+         hot get: {get_ns:>8.0} ns/op ({:>9.0} op/s)  p50={p50}ns p99={p99}ns",
+        1e9 / connect_ns,
+        1e9 / get_ns,
+    );
+    format!(
+        "{{\"connections\": {FANIN_CONNS}, \"loops\": {FANIN_LOOPS}, \
+         \"connect\": {}, \"get\": {}, \"p50\": {p50}, \"p99\": {p99}}}",
+        op_json(connect_ns),
+        op_json(get_ns),
+    )
+}
+
+#[cfg(not(target_os = "linux"))]
+fn fanin_json() -> String {
+    "null".to_string()
 }

@@ -42,6 +42,14 @@ pub struct RouterConfig {
     pub pool: usize,
     /// Remote shard addresses (empty = spawn in-process shards).
     pub shard_addrs: Vec<String>,
+    /// Serving personality: `"event"` (epoll readiness loops; Linux) or
+    /// `"blocking"` (thread per connection).
+    pub serve: String,
+    /// Event-loop thread count; `0` = one per core, capped at 8.
+    pub event_loops: usize,
+    /// Accept cap: connections beyond this are dropped (and counted in
+    /// `STATS` as `conns_dropped`).
+    pub max_conns: usize,
 }
 
 /// Artifact settings.
@@ -61,7 +69,14 @@ impl Default for ClusterConfig {
 
 impl Default for RouterConfig {
     fn default() -> Self {
-        Self { listen: "127.0.0.1:7600".into(), pool: 4, shard_addrs: Vec::new() }
+        Self {
+            listen: "127.0.0.1:7600".into(),
+            pool: 4,
+            shard_addrs: Vec::new(),
+            serve: "event".into(),
+            event_loops: 0,
+            max_conns: 65_536,
+        }
     }
 }
 
@@ -187,6 +202,19 @@ impl Config {
             }
         }
         take!(map, "router.shard_addrs", StrArray, cfg.router.shard_addrs);
+        take!(map, "router.serve", Str, cfg.router.serve);
+        if let Some(v) = map.remove("router.event_loops") {
+            match v {
+                Value::Int(x) => cfg.router.event_loops = usize::try_from(x)?,
+                other => bail!("router.event_loops: wrong type {other:?}"),
+            }
+        }
+        if let Some(v) = map.remove("router.max_conns") {
+            match v {
+                Value::Int(x) => cfg.router.max_conns = usize::try_from(x)?,
+                other => bail!("router.max_conns: wrong type {other:?}"),
+            }
+        }
         take!(map, "artifacts.dir", Str, cfg.artifacts.dir);
         take!(map, "artifacts.enable_bulk", Bool, cfg.artifacts.enable_bulk);
         if let Some(k) = map.keys().next() {
@@ -214,7 +242,8 @@ impl Config {
             .join(", ");
         format!(
             "[cluster]\nalgorithm = \"{}\"\nomega = {}\ninitial_shards = {}\n\n\
-             [router]\nlisten = \"{}\"\npool = {}\nshard_addrs = [{}]\n\n\
+             [router]\nlisten = \"{}\"\npool = {}\nshard_addrs = [{}]\n\
+             serve = \"{}\"\nevent_loops = {}\nmax_conns = {}\n\n\
              [artifacts]\ndir = \"{}\"\nenable_bulk = {}\n",
             self.cluster.algorithm,
             self.cluster.omega,
@@ -222,6 +251,9 @@ impl Config {
             self.router.listen,
             self.router.pool,
             addrs,
+            self.router.serve,
+            self.router.event_loops,
+            self.router.max_conns,
             self.artifacts.dir,
             self.artifacts.enable_bulk,
         )
@@ -237,6 +269,12 @@ impl Config {
         );
         ensure!(self.cluster.omega >= 1, "omega must be >= 1");
         ensure!(self.cluster.initial_shards >= 1, "need at least one shard");
+        ensure!(
+            matches!(self.router.serve.as_str(), "event" | "blocking"),
+            "router.serve must be \"event\" or \"blocking\", got {:?}",
+            self.router.serve
+        );
+        ensure!(self.router.max_conns >= 1, "max_conns must be >= 1");
         if !self.router.shard_addrs.is_empty() {
             ensure!(
                 self.router.shard_addrs.len() == self.cluster.initial_shards as usize,
@@ -317,5 +355,26 @@ mod tests {
     fn empty_array() {
         let c = Config::parse("[router]\nshard_addrs = []\n").unwrap();
         assert!(c.router.shard_addrs.is_empty());
+    }
+
+    #[test]
+    fn serve_knobs_parse_and_validate() {
+        let c = Config::parse(
+            "[router]\nserve = \"blocking\"\nevent_loops = 2\nmax_conns = 100\n",
+        )
+        .unwrap();
+        assert_eq!(c.router.serve, "blocking");
+        assert_eq!(c.router.event_loops, 2);
+        assert_eq!(c.router.max_conns, 100);
+        c.validate().unwrap();
+
+        // Defaults: event personality, auto loop count.
+        let d = Config::default();
+        assert_eq!(d.router.serve, "event");
+        assert_eq!(d.router.event_loops, 0);
+
+        let mut bad = Config::default();
+        bad.router.serve = "fibers".into();
+        assert!(bad.validate().is_err());
     }
 }

@@ -14,14 +14,18 @@
 //! * [`hashing`] — the hash substrate (xxhash64, splitmix64 family),
 //!   bitwise-identical to the Python/Pallas build path.
 //! * [`cluster`] / [`router`] / [`shard`] / [`rebalance`] — the
-//!   coordinator: membership, epoch-snapshot request routing over std
-//!   thread-per-connection servers (the build is fully offline — no tokio
-//!   or async runtime), in-memory storage nodes, and incremental
-//!   migration. Topology changes publish immutable placement snapshots;
+//!   coordinator: membership, epoch-snapshot request routing, in-memory
+//!   storage nodes, and incremental migration. Topology changes publish
+//!   immutable placement snapshots;
 //!   the data path never blocks on a rebalance.  Failover (`FAIL` /
 //!   `RESTORE` wire ops) publishes *degraded* epochs that route around
 //!   dead shards through the fault-tolerant engines (anchor, dx,
 //!   memento) and migrates a restored shard's keyspace back to it.
+//! * [`net`] — connection serving behind one `Service` trait: a raw
+//!   `epoll` readiness event server for 10k+ concurrent connections
+//!   (std + declared syscalls — the build stays fully offline, no
+//!   tokio/mio/libc crate) with the historical blocking
+//!   thread-per-connection loop as the portable fallback.
 //! * [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas bulk
 //!   placement artifacts (`artifacts/*.hlo.txt`); compiled in only with
 //!   the `pjrt` cargo feature (a same-API stub otherwise).
@@ -58,6 +62,7 @@ pub mod cluster;
 pub mod config;
 pub mod hashing;
 pub mod metrics;
+pub mod net;
 pub mod proto;
 pub mod rebalance;
 pub mod router;

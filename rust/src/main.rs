@@ -2,10 +2,14 @@
 //!
 //! ```text
 //! binhashd router [--config <file>]        run the request router
-//! binhashd shard --id <n> [--listen <addr>] run a standalone shard
+//! binhashd shard --id <n> [--listen <addr>] [--serve event|blocking] [--loops <n>]
 //! binhashd lookup --key <k> --n <n> [--algorithm <name>]
 //! binhashd init-config                      print a default config
 //! ```
+//!
+//! Both servers default to the epoll readiness event loops on Linux
+//! (`binhash::net`); `--serve blocking` / `router.serve = "blocking"`
+//! selects the thread-per-connection fallback.
 //!
 //! Argument parsing is in-tree (`--flag value` pairs) — the build is fully
 //! offline, so no clap.
@@ -17,15 +21,25 @@ use anyhow::{anyhow, bail, Result};
 
 use binhash::algorithms;
 use binhash::config::Config;
+use binhash::net::{ServeMode, ServerOpts};
 use binhash::router::{local_cluster, Router};
 use binhash::runtime::PlacementRuntime;
 use binhash::shard::{RemotePool, Shard, ShardClient};
 
 const USAGE: &str = "usage:
   binhashd router [--config <file>]
-  binhashd shard --id <n> [--listen <addr>]
+  binhashd shard --id <n> [--listen <addr>] [--serve event|blocking] [--loops <n>]
   binhashd lookup --key <key> --n <n> [--algorithm <name>]
   binhashd init-config";
+
+/// `"event"`/`"blocking"` → [`ServeMode`].
+fn parse_serve_mode(s: &str) -> Result<ServeMode> {
+    match s {
+        "event" => Ok(ServeMode::Event),
+        "blocking" => Ok(ServeMode::Blocking),
+        other => bail!("serve mode must be \"event\" or \"blocking\", got {other:?}"),
+    }
+}
 
 /// Parse `--flag value` pairs into a map.
 fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
@@ -65,10 +79,13 @@ fn main() -> Result<()> {
                 .get("listen")
                 .cloned()
                 .unwrap_or_else(|| "127.0.0.1:7700".to_string());
+            let mode = parse_serve_mode(flags.get("serve").map_or("event", String::as_str))?;
+            let loops = flags.get("loops").map_or(Ok(0), |s| s.parse())?;
             let shard = Shard::new(id);
             let listener = TcpListener::bind(&listen)?;
-            eprintln!("shard {id} listening on {listen}");
-            binhash::shard::serve(shard, listener)
+            eprintln!("shard {id} listening on {listen} ({mode:?} mode)");
+            let opts = ServerOpts { mode, loops, ..ServerOpts::default() };
+            binhash::shard::server(shard, listener, opts)?.run()
         }
         "lookup" => {
             let key = flags.get("key").ok_or_else(|| anyhow!("--key required"))?;
@@ -117,9 +134,15 @@ fn run_router(cfg: Config) -> Result<()> {
         bulk,
     );
     let listener = TcpListener::bind(&cfg.router.listen)?;
+    let opts = ServerOpts {
+        mode: parse_serve_mode(&cfg.router.serve)?,
+        loops: cfg.router.event_loops,
+        max_conns: cfg.router.max_conns,
+        ..ServerOpts::default()
+    };
     eprintln!(
-        "router listening on {} (algo={}, n={})",
-        cfg.router.listen, cfg.cluster.algorithm, n
+        "router listening on {} (algo={}, n={}, serve={}, max_conns={})",
+        cfg.router.listen, cfg.cluster.algorithm, n, cfg.router.serve, cfg.router.max_conns
     );
-    router.serve(listener)
+    router.server(listener, opts)?.run()
 }

@@ -153,6 +153,50 @@ impl RouterMetrics {
     }
 }
 
+/// Connection-layer counters for the `net` servers (shared by the event
+/// and blocking personalities; surfaced through the router's `STATS`
+/// line).
+#[derive(Debug, Default)]
+pub struct ConnMetrics {
+    /// Connections accepted (including ones later dropped by the cap).
+    pub accepted: AtomicU64,
+    /// Currently open connections (gauge).
+    pub active: AtomicU64,
+    /// Connections dropped: over the `max_conns` cap, failed to
+    /// register, or discarded mid-shutdown.
+    pub dropped: AtomicU64,
+    /// Readiness wakeups (`epoll_wait` returns) across all event loops.
+    pub wakeups: AtomicU64,
+    /// Flushes cut short by `EWOULDBLOCK` (response parked until the
+    /// socket turns writable again).
+    pub partial_flushes: AtomicU64,
+    /// Read-interest withdrawals by the backpressure rule (pending
+    /// output crossed the high-water mark).
+    pub deferred_reads: AtomicU64,
+}
+
+impl ConnMetrics {
+    /// New zeroed metrics.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One-line summary, `conns_`-prefixed so it can be appended to the
+    /// router's `STATS` response unambiguously.
+    pub fn summary(&self) -> String {
+        format!(
+            "conns_accepted={} conns_active={} conns_dropped={} \
+             conns_wakeups={} conns_partial_flushes={} conns_deferred_reads={}",
+            self.accepted.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
+            self.active.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
+            self.dropped.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
+            self.wakeups.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
+            self.partial_flushes.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
+            self.deferred_reads.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,5 +233,19 @@ mod tests {
         assert!(s.contains("mget_keys=2"));
         assert!(s.contains("mput_keys=0"));
         assert!(s.contains("batch_fanouts=1"));
+    }
+
+    #[test]
+    fn conn_metrics_summary_formats() {
+        let c = ConnMetrics::new();
+        c.accepted.fetch_add(4, Ordering::Relaxed); // ord: test-only
+        c.active.fetch_add(2, Ordering::Relaxed); // ord: test-only
+        c.partial_flushes.fetch_add(1, Ordering::Relaxed); // ord: test-only
+        let s = c.summary();
+        assert!(s.contains("conns_accepted=4"));
+        assert!(s.contains("conns_active=2"));
+        assert!(s.contains("conns_dropped=0"));
+        assert!(s.contains("conns_partial_flushes=1"));
+        assert!(s.contains("conns_deferred_reads=0"));
     }
 }

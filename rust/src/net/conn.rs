@@ -1,0 +1,452 @@
+//! Per-connection state machine: the readiness-loop counterpart of
+//! `proto::serve_framed`, factored so it can be driven deterministically
+//! by tests (arbitrary read-chunk and write-chunk boundaries) without a
+//! socket in sight.
+//!
+//! ## How resumption works
+//!
+//! The blocking parser cannot be suspended mid-`read_line`, so the event
+//! path never hands it a partial frame.  [`ConnCore`] buffers raw bytes
+//! and uses [`proto::frame_payload_extent`] — which mirrors the parser's
+//! own header decisions token for token — to find each frame boundary.
+//! Only once a *complete* frame (header line + announced payload) is
+//! buffered does it run the unchanged `proto::read_request_ref` over
+//! that slice (`&[u8]` is a zero-copy `BufRead`).  Identical parsing by
+//! construction; a short read simply leaves the tail buffered until the
+//! next readiness wakeup.
+//!
+//! ```text
+//!            bytes in                     complete frame
+//!   socket ───────────▶ in_buf ──extent──▶ parse ──▶ handle ──▶ out
+//!                         ▲ partial line/payload: wait    │
+//!                         └────────── (resume later) ◀────┘ short write:
+//!                                                           out_pos marks
+//!                                                           resume point
+//! ```
+//!
+//! ## State and error model
+//!
+//! * Recoverable parse errors (`Wire::Bad`) answer `ERR …` and keep the
+//!   connection — same as the blocking loop.
+//! * Framing violations (oversized lengths, non-UTF-8 header bytes,
+//!   unterminated megabyte lines, payload truncated by EOF) mark the
+//!   connection **broken**: buffered responses still flush, then the
+//!   server closes — mirroring `serve_framed` returning `Err` after its
+//!   final flush.
+//! * A final unterminated line at EOF is *parsed*, not dropped, because
+//!   the blocking `read_line` returns it without the newline.
+//!
+//! ## Backpressure rule
+//!
+//! [`process`](ConnCore::process) refuses to start a new frame while
+//! `out_pending() >= OUT_HIGH_WATER`: a slow reader stops consuming our
+//! responses, so we stop parsing (and the server stops *reading*) until
+//! the flush drains below [`OUT_LOW_WATER`].  Memory per connection is
+//! thereby bounded by high-water + one frame's response.
+//!
+//! ## Memory bounds
+//!
+//! After every frame the parse scratch is recycled
+//! (`RecvBuf::recycle`), and [`compact`](ConnCore::process) both slides
+//! consumed bytes out of `in_buf` and shrinks either buffer back to its
+//! cap once its contents allow — a single 64 MiB-budget batch must not
+//! leave 10k connections holding grown buffers.
+
+use anyhow::Result;
+
+use crate::proto::{self, FrameExtent, RecvBuf, Response, Wire};
+
+use super::Service;
+
+/// Steady-state capacity cap for the input buffer; bigger frames grow it
+/// temporarily and `compact` shrinks it back once consumed.
+pub const IN_BUF_CAP: usize = 64 << 10;
+
+/// Steady-state capacity cap for the output buffer.
+pub const OUT_BUF_CAP: usize = 64 << 10;
+
+/// Stop parsing new frames (and defer read interest) while this many
+/// un-flushed response bytes are pending.
+pub const OUT_HIGH_WATER: usize = 256 << 10;
+
+/// Resume reads once a deferred connection's pending output drains below
+/// this (hysteresis so interest doesn't flap at the boundary).
+pub const OUT_LOW_WATER: usize = 64 << 10;
+
+/// Longest header line the event path accepts before declaring the
+/// stream unframed.  Must exceed the largest legal header: an `MPUT`
+/// line with `MAX_BATCH` maximal keys and lengths is ~2.2 MiB.
+pub const MAX_LINE_LEN: usize = 4 << 20;
+
+/// What [`ConnCore::process`] accomplished — drives the server's
+/// pump loop (re-process after a flush frees high-water space).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Processed {
+    /// No complete frame was consumable (need more input, or deferred by
+    /// backpressure, or the connection is broken).
+    Idle,
+    /// At least one frame was handled; `out` grew.
+    Frames,
+}
+
+/// Buffered-byte state machine for one framed connection.
+#[derive(Debug, Default)]
+pub struct ConnCore {
+    in_buf: Vec<u8>,
+    /// Bytes of `in_buf` before this offset are consumed (compacted lazily).
+    in_pos: usize,
+    out: Vec<u8>,
+    /// Bytes of `out` before this offset are already written to the peer.
+    out_pos: usize,
+    scratch: RecvBuf,
+    /// Framing violation observed: flush what's buffered, then close.
+    broken: bool,
+    /// EOF seen; an unterminated final line has already been parsed.
+    eof: bool,
+}
+
+impl ConnCore {
+    /// Fresh connection state.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Buffer bytes read from the peer.
+    pub fn push_input(&mut self, bytes: &[u8]) {
+        self.in_buf.extend_from_slice(bytes);
+    }
+
+    /// Unconsumed input bytes currently buffered.
+    pub fn in_pending(&self) -> usize {
+        self.in_buf.len() - self.in_pos
+    }
+
+    /// Response bytes not yet written to the peer.
+    pub fn out_pending(&self) -> usize {
+        self.out.len() - self.out_pos
+    }
+
+    /// The un-flushed response bytes (write from the front, then
+    /// [`consume_output`](Self::consume_output) what the socket took).
+    pub fn output(&self) -> &[u8] {
+        &self.out[self.out_pos..]
+    }
+
+    /// Record that `n` output bytes reached the peer.
+    pub fn consume_output(&mut self, n: usize) {
+        self.out_pos += n;
+        debug_assert!(self.out_pos <= self.out.len());
+        if self.out_pos == self.out.len() {
+            self.out.clear();
+            self.out_pos = 0;
+            if self.out.capacity() > OUT_BUF_CAP {
+                self.out.shrink_to(OUT_BUF_CAP);
+            }
+        }
+    }
+
+    /// `true` once a framing violation or handler error has condemned the
+    /// connection: flush [`output`](Self::output), then close.
+    pub fn is_broken(&self) -> bool {
+        self.broken
+    }
+
+    /// `true` when the connection has nothing left to do and can close:
+    /// broken or at EOF, with all output flushed.
+    pub fn is_drained(&self) -> bool {
+        (self.broken || self.eof) && self.out_pending() == 0
+    }
+
+    /// Reads must stay deferred while pending output sits above the
+    /// high-water mark (the server also checks [`OUT_LOW_WATER`] for the
+    /// re-enable edge; this is the raw threshold).
+    pub fn over_high_water(&self) -> bool {
+        self.out_pending() >= OUT_HIGH_WATER
+    }
+
+    /// Parse and handle every complete buffered frame, encoding responses
+    /// into the out buffer.  Stops early when pending output crosses
+    /// [`OUT_HIGH_WATER`] (backpressure) — call again after a flush.
+    pub fn process<S: Service>(&mut self, svc: &S, st: &mut S::ConnState) -> Processed {
+        let mut did = Processed::Idle;
+        while !self.broken {
+            if self.out_pending() >= OUT_HIGH_WATER {
+                break;
+            }
+            let avail = &self.in_buf[self.in_pos..];
+            if avail.is_empty() {
+                break;
+            }
+            let Some(nl) = avail.iter().position(|&b| b == b'\n') else {
+                if avail.len() > MAX_LINE_LEN {
+                    // A line this long can never be a legal header; the
+                    // blocking path would trip the same length checks.
+                    self.broken = true;
+                }
+                break;
+            };
+            let line_end = nl + 1;
+            let Ok(line) = std::str::from_utf8(&avail[..line_end]) else {
+                // read_line fails with InvalidData here: framing error.
+                self.broken = true;
+                break;
+            };
+            let total = match proto::frame_payload_extent(line) {
+                FrameExtent::LineOnly => line_end,
+                FrameExtent::Payload(p) => {
+                    let need = line_end + p;
+                    if avail.len() < need {
+                        break; // mid-payload: resume on the next read
+                    }
+                    need
+                }
+                FrameExtent::Oversized => {
+                    self.broken = true;
+                    break;
+                }
+            };
+            self.handle_frame(svc, st, total);
+            if !self.broken {
+                did = Processed::Frames;
+            }
+        }
+        self.compact();
+        did
+    }
+
+    /// Peer sent EOF.  Complete buffered frames were already handled by
+    /// [`process`](Self::process); this settles the tail exactly the way
+    /// the blocking loop would have:
+    ///
+    /// * partial payload (or oversized/garbled header) → `read_exact`
+    ///   /`read_line` would error → broken;
+    /// * an unterminated final line → `read_line` returns it without the
+    ///   newline and the parser runs → handle it;
+    /// * a *complete* frame still buffered means backpressure deferred it
+    ///   — not our call; the server pumps again after flushing.
+    pub fn finish_input<S: Service>(&mut self, svc: &S, st: &mut S::ConnState) {
+        self.eof = true;
+        if self.broken {
+            return;
+        }
+        self.process(svc, st);
+        if self.broken || self.in_pending() == 0 {
+            return;
+        }
+        let avail = &self.in_buf[self.in_pos..];
+        match avail.iter().position(|&b| b == b'\n') {
+            Some(nl) => {
+                // A full line is buffered but process() left it: either
+                // its payload is truncated by EOF (framing error) or
+                // backpressure deferred a complete frame (leave it).
+                let Ok(line) = std::str::from_utf8(&avail[..nl + 1]) else {
+                    self.broken = true;
+                    return;
+                };
+                match proto::frame_payload_extent(line) {
+                    FrameExtent::Payload(p) if avail.len() < nl + 1 + p => self.broken = true,
+                    FrameExtent::Oversized => self.broken = true,
+                    _ => {}
+                }
+            }
+            None => {
+                // Unterminated final line: blocking read_line returns it
+                // as-is and the parser runs.  A nonzero announced payload
+                // can't follow (EOF), which read_value turns into an
+                // error — same outcome, broken.
+                let Ok(line) = std::str::from_utf8(avail) else {
+                    self.broken = true;
+                    return;
+                };
+                match proto::frame_payload_extent(line) {
+                    FrameExtent::LineOnly | FrameExtent::Payload(0) => {
+                        let total = avail.len();
+                        self.handle_frame(svc, st, total);
+                    }
+                    FrameExtent::Payload(_) | FrameExtent::Oversized => self.broken = true,
+                }
+                self.compact();
+            }
+        }
+    }
+
+    /// Parse and dispatch one complete frame of `total` bytes starting at
+    /// `in_pos`.  Sets `broken` on parser or handler failure.
+    fn handle_frame<S: Service>(&mut self, svc: &S, st: &mut S::ConnState, total: usize) {
+        let frame = &self.in_buf[self.in_pos..self.in_pos + total];
+        let mut rd: &[u8] = frame;
+        let ok = match proto::read_request_ref(&mut rd, &mut self.scratch) {
+            Ok(Some(Wire::Req(req))) => svc.handle(st, req, &mut self.out).is_ok(),
+            Ok(Some(Wire::Bad(msg))) => {
+                proto::encode_response(&mut self.out, &Response::Err(msg)).is_ok()
+            }
+            // None (empty frame) is unreachable — a frame is ≥ 1 byte —
+            // and Err means the extent scan and parser disagreed; both
+            // condemn the connection rather than desync the stream.
+            Ok(None) | Err(_) => false,
+        };
+        self.in_pos += total;
+        self.scratch.recycle();
+        if !ok {
+            self.broken = true;
+        }
+    }
+
+    /// Slide consumed bytes out of `in_buf` and shrink oversized buffers
+    /// back toward [`IN_BUF_CAP`] once their contents allow.
+    fn compact(&mut self) {
+        if self.in_pos == self.in_buf.len() {
+            self.in_buf.clear();
+            self.in_pos = 0;
+        } else if self.in_pos >= IN_BUF_CAP {
+            let len = self.in_buf.len();
+            self.in_buf.copy_within(self.in_pos.., 0);
+            self.in_buf.truncate(len - self.in_pos);
+            self.in_pos = 0;
+        }
+        if self.in_buf.capacity() > IN_BUF_CAP && self.in_buf.len() <= IN_BUF_CAP {
+            self.in_buf.shrink_to(IN_BUF_CAP);
+        }
+    }
+
+    /// Buffer capacities `(in, out)` for tests asserting the
+    /// per-connection memory bound.
+    pub fn buffer_capacities(&self) -> (usize, usize) {
+        (self.in_buf.capacity(), self.out.capacity())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::RequestRef;
+    use crate::sync::Mutex;
+
+    /// Echo-ish test service: COUNT answers NUM 1, GET answers NIL,
+    /// PUT answers OK and records the value length.
+    #[derive(Debug, Default)]
+    struct EchoSvc {
+        puts: Mutex<Vec<usize>>,
+    }
+
+    impl Service for EchoSvc {
+        type ConnState = ();
+        fn handle(&self, _st: &mut (), req: RequestRef<'_>, out: &mut Vec<u8>) -> Result<()> {
+            let resp = match req {
+                RequestRef::Count => Response::Num(1),
+                RequestRef::Get { .. } => Response::Nil,
+                RequestRef::Put { value, .. } => {
+                    self.puts.lock().unwrap().push(value.len());
+                    Response::Ok
+                }
+                _ => Response::Ok,
+            };
+            proto::encode_response(out, &resp)
+        }
+    }
+
+    fn drive(core: &mut ConnCore, svc: &EchoSvc, bytes: &[u8], chunk: usize) -> Vec<u8> {
+        let mut st = ();
+        let mut replies = Vec::new();
+        for piece in bytes.chunks(chunk.max(1)) {
+            core.push_input(piece);
+            core.process(svc, &mut st);
+            replies.extend_from_slice(core.output());
+            let n = core.out_pending();
+            core.consume_output(n);
+        }
+        core.finish_input(svc, &mut st);
+        replies.extend_from_slice(core.output());
+        let n = core.out_pending();
+        core.consume_output(n);
+        replies
+    }
+
+    #[test]
+    fn resumes_across_any_read_boundary() {
+        let stream = b"COUNT\nPUT k 5\nhelloGET k\n";
+        let want = b"NUM 1\nOK\nNIL\n";
+        for chunk in 1..=stream.len() {
+            let svc = EchoSvc::default();
+            let mut core = ConnCore::new();
+            let got = drive(&mut core, &svc, stream, chunk);
+            assert_eq!(got, want, "chunk size {chunk}");
+            assert!(!core.is_broken());
+            assert_eq!(svc.puts.lock().unwrap().as_slice(), &[5]);
+        }
+    }
+
+    #[test]
+    fn truncated_payload_at_eof_breaks_connection() {
+        let svc = EchoSvc::default();
+        let mut core = ConnCore::new();
+        let got = drive(&mut core, &svc, b"COUNT\nPUT k 5\nhel", 3);
+        assert_eq!(got, b"NUM 1\n", "responses before the truncation still flush");
+        assert!(core.is_broken());
+    }
+
+    #[test]
+    fn unterminated_final_line_is_parsed_like_read_line() {
+        let svc = EchoSvc::default();
+        let mut core = ConnCore::new();
+        let got = drive(&mut core, &svc, b"GET k\nCOUNT", 4);
+        assert_eq!(got, b"NIL\nNUM 1\n");
+        assert!(!core.is_broken());
+        assert!(core.is_drained());
+    }
+
+    #[test]
+    fn backpressure_defers_parsing_until_output_drains() {
+        let svc = EchoSvc::default();
+        let mut core = ConnCore::new();
+        let mut st = ();
+        // A huge PUT value answered with OK won't cross the high-water
+        // mark; fake pressure by writing into out via a big frame burst
+        // instead: many COUNTs whose NUM replies accumulate unflushed.
+        let burst = "COUNT\n".repeat(OUT_HIGH_WATER / 2);
+        core.push_input(burst.as_bytes());
+        core.process(&svc, &mut st);
+        assert!(core.over_high_water(), "unflushed replies must trip the mark");
+        assert!(core.in_pending() > 0, "parsing must stop at the mark");
+        let deferred = core.in_pending();
+        // Nothing new parses while over the mark…
+        assert_eq!(core.process(&svc, &mut st), Processed::Idle);
+        assert_eq!(core.in_pending(), deferred);
+        // …and a flush releases the logjam.
+        while core.out_pending() > 0 || core.in_pending() > 0 {
+            let n = core.out_pending().min(8 << 10);
+            core.consume_output(n);
+            core.process(&svc, &mut st);
+        }
+        assert!(!core.is_broken());
+    }
+
+    #[test]
+    fn buffers_shrink_back_after_oversized_traffic() {
+        let svc = EchoSvc::default();
+        let mut core = ConnCore::new();
+        let mut st = ();
+        let big = 8 << 20; // 8 MiB value: grows in_buf far past its cap
+        let mut stream = format!("PUT big {big}\n").into_bytes();
+        stream.resize(stream.len() + big, b'x');
+        stream.extend_from_slice(b"GET big\n");
+        core.push_input(&stream);
+        core.process(&svc, &mut st);
+        let n = core.out_pending();
+        core.consume_output(n);
+        let (in_cap, out_cap) = core.buffer_capacities();
+        assert!(in_cap <= 2 * IN_BUF_CAP, "in_buf stuck at {in_cap}");
+        assert!(out_cap <= 2 * OUT_BUF_CAP, "out stuck at {out_cap}");
+        assert_eq!(svc.puts.lock().unwrap().as_slice(), &[big]);
+    }
+
+    #[test]
+    fn garbled_header_bytes_break_framing() {
+        let svc = EchoSvc::default();
+        let mut core = ConnCore::new();
+        let mut st = ();
+        core.push_input(b"GET \xff\xfe\n");
+        core.process(&svc, &mut st);
+        assert!(core.is_broken(), "non-UTF-8 header must condemn the stream");
+    }
+}

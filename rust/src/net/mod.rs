@@ -1,0 +1,654 @@
+//! Connection serving: one protocol, two server personalities.
+//!
+//! Router and shard expose the same framed wire protocol (`proto`), so
+//! the machinery that moves bytes between sockets and the parser lives
+//! here, behind one [`Service`] trait:
+//!
+//! * **Blocking fallback** — [`serve_blocking`]: thread-per-connection
+//!   around `proto::serve_framed`, exactly the pre-event-loop behavior.
+//!   Portable, simple, still the reference semantics the event path is
+//!   tested against.
+//! * **Readiness event server** — [`Server`] with
+//!   [`ServeMode::Event`] (Linux): a few shared-nothing event loops on
+//!   nonblocking sockets driven by raw `epoll` ([`sys`]), each wrapping
+//!   every connection in a [`ConnCore`] state machine.  No async
+//!   runtime, no `libc` crate — std plus six declared syscalls.
+//!
+//! ## Architecture (event mode)
+//!
+//! ```text
+//!   clients ──▶ accept() ──round-robin──▶ HandoffQueue[i] + eventfd[i]
+//!   (acceptor thread; max_conns cap)            │
+//!                                               ▼
+//!                     ┌───────── event loop i (one thread) ─────────┐
+//!                     │ epoll_wait ─▶ readable? read→ConnCore.process│
+//!                     │              writable/pending? flush partial │
+//!                     │ svc.handle() reads SnapshotCell directly —   │
+//!                     │ no cross-loop locks on the data path         │
+//!                     └─────────────────────────────────────────────┘
+//! ```
+//!
+//! Each loop owns its connections outright (slab of [`ConnCore`]s);
+//! the only cross-thread traffic is the accepted-socket handoff
+//! (`sync::handoff::HandoffQueue`, wake-suppressed eventfd) and the
+//! stop flag.  Request handling inside a loop reads the same lock-free
+//! snapshot (`SnapshotCell`) the blocking path reads — fan-in scales
+//! with loops, not locks.
+//!
+//! ## Connection state machine
+//!
+//! ```text
+//!                    ┌──────── READ (EPOLLIN) ────────┐
+//!                    ▼                                │
+//!   OPEN ──read──▶ buffer ──complete frame──▶ handle ─┴─▶ out-buffer
+//!    │                │ partial line/payload             │
+//!    │                └────── wait for next read ◀──flush┤ EWOULDBLOCK:
+//!    │ EOF/broken                                        │ keep remainder,
+//!    ▼                                                   ▼ add EPOLLOUT
+//!   DRAIN ──flush rest──▶ CLOSE                    resume on writable
+//! ```
+//!
+//! Interest transitions (level-triggered):
+//!
+//! | condition                            | EPOLLIN | EPOLLOUT |
+//! |--------------------------------------|---------|----------|
+//! | steady state                         | yes     | no       |
+//! | unflushed output pending             | yes     | yes      |
+//! | output ≥ `OUT_HIGH_WATER` (deferred) | **no**  | yes      |
+//! | drained below `OUT_LOW_WATER`        | yes     | as needed|
+//! | peer EOF / framing error             | no      | if output|
+//!
+//! **Backpressure rule:** while a connection's un-flushed output is at or
+//! above [`conn::OUT_HIGH_WATER`], the loop neither reads its socket nor
+//! parses frames it already buffered; both resume once a flush drains
+//! the output below [`conn::OUT_LOW_WATER`].  Per-connection memory is
+//! thus bounded by high-water + one frame, and
+//! [`ConnCore`] shrinks its buffers back to small caps after any
+//! oversized burst.
+//!
+//! ## Shutdown
+//!
+//! [`ServerHandle::stop`] sets the stop flag, wakes every loop's
+//! eventfd, and pokes the acceptor with a throwaway connection.  The
+//! acceptor exits immediately; loops stop reading, answer what is
+//! already buffered, flush, and close each connection as its output
+//! drains — with a bounded grace period before force-close.
+
+use std::io::{self, BufReader};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::thread;
+
+use anyhow::Result;
+
+use crate::metrics::ConnMetrics;
+use crate::proto::{self, RequestRef};
+use crate::sync::{Arc, AtomicBool, Ordering};
+
+pub mod conn;
+#[cfg(target_os = "linux")]
+pub mod sys;
+
+pub use conn::ConnCore;
+
+#[cfg(target_os = "linux")]
+use crate::sync::handoff::HandoffQueue;
+
+/// A request handler servable by either personality.  Implemented by
+/// `router::Router` and `shard::Shard`.
+pub trait Service: Send + Sync + 'static {
+    /// Per-connection handler scratch (batch digest/selector buffers,
+    /// sub-response vector) — state the handler reuses across requests
+    /// of one connection but never shares between connections.
+    type ConnState: Default + Send + 'static;
+
+    /// Handle one parsed request, encoding the response(s) into `out`.
+    /// An `Err` is a framing-level failure: the connection is condemned
+    /// (matching the blocking loop, where a handler error aborts
+    /// `serve_framed`).
+    fn handle(&self, st: &mut Self::ConnState, req: RequestRef<'_>, out: &mut Vec<u8>) -> Result<()>;
+}
+
+/// Which serving personality a [`Server`] runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeMode {
+    /// Readiness event loops (Linux; silently falls back to
+    /// [`ServeMode::Blocking`] elsewhere).
+    Event,
+    /// Thread-per-connection `serve_framed` fallback.
+    Blocking,
+}
+
+/// Server configuration (see `config::RouterConfig` for the file-level
+/// knobs that feed this).
+#[derive(Debug, Clone)]
+pub struct ServerOpts {
+    /// Serving personality.
+    pub mode: ServeMode,
+    /// Event-loop thread count; `0` = one per core, capped at 8.
+    pub loops: usize,
+    /// Accept cap: connections beyond this are dropped (and counted).
+    pub max_conns: usize,
+    /// Raise the soft `RLIMIT_NOFILE` to the hard limit at startup.
+    pub raise_nofile: bool,
+    /// Share an existing metrics block (e.g. the router's) instead of a
+    /// private one.
+    pub metrics: Option<Arc<ConnMetrics>>,
+}
+
+impl Default for ServerOpts {
+    fn default() -> Self {
+        Self { mode: ServeMode::Event, loops: 0, max_conns: 65_536, raise_nofile: true, metrics: None }
+    }
+}
+
+/// Shared stop/wake state between a running [`Server`] and its
+/// [`ServerHandle`]s.
+#[derive(Debug)]
+struct Ctl {
+    stop: AtomicBool,
+    addr: SocketAddr,
+    #[cfg(target_os = "linux")]
+    wakes: Vec<Arc<sys::WakeFd>>,
+}
+
+/// Clonable remote control for a running server (see
+/// [`ServerHandle::stop`]).
+#[derive(Debug, Clone)]
+pub struct ServerHandle {
+    ctl: Arc<Ctl>,
+}
+
+impl ServerHandle {
+    /// Request shutdown: the acceptor exits, event loops drain in-flight
+    /// connections (answer buffered requests, flush, close) and
+    /// [`Server::run`] returns.  Idempotent.
+    pub fn stop(&self) {
+        // ord: SeqCst — one cold flag checked at loop edges; strongest
+        // ordering keeps the shutdown reasoning trivial.
+        self.ctl.stop.store(true, Ordering::SeqCst);
+        #[cfg(target_os = "linux")]
+        for wake in &self.ctl.wakes {
+            wake.signal();
+        }
+        // Unblock a blocking accept() with a throwaway connection; if
+        // the listener is already gone there is nothing to unblock.
+        let _ = TcpStream::connect(self.ctl.addr);
+    }
+}
+
+/// A listener bound to a [`Service`], ready to [`run`](Self::run) in
+/// either personality.
+#[derive(Debug)]
+pub struct Server<S: Service> {
+    svc: Arc<S>,
+    listener: TcpListener,
+    opts: ServerOpts,
+    nloops: usize,
+    ctl: Arc<Ctl>,
+    metrics: Arc<ConnMetrics>,
+}
+
+impl<S: Service> Server<S> {
+    /// Bind `svc` to `listener` with `opts`.
+    pub fn new(svc: Arc<S>, listener: TcpListener, opts: ServerOpts) -> Result<Self> {
+        let addr = listener.local_addr()?;
+        let event = cfg!(target_os = "linux") && opts.mode == ServeMode::Event;
+        let nloops = if event {
+            match opts.loops {
+                0 => thread::available_parallelism().map_or(4, |n| n.get()).clamp(1, 8),
+                n => n,
+            }
+        } else {
+            0
+        };
+        #[cfg(target_os = "linux")]
+        let wakes = (0..nloops)
+            .map(|_| sys::WakeFd::new().map(Arc::new))
+            .collect::<io::Result<Vec<_>>>()?;
+        let ctl = Arc::new(Ctl {
+            stop: AtomicBool::new(false),
+            addr,
+            #[cfg(target_os = "linux")]
+            wakes,
+        });
+        let metrics = opts.metrics.clone().unwrap_or_default();
+        Ok(Self { svc, listener, opts, nloops, ctl, metrics })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.ctl.addr
+    }
+
+    /// A stop handle, clonable and usable from any thread.
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { ctl: Arc::clone(&self.ctl) }
+    }
+
+    /// Connection metrics (accepted/active/dropped, wakeups, partial
+    /// flushes, deferred reads).
+    pub fn metrics(&self) -> &Arc<ConnMetrics> {
+        &self.metrics
+    }
+
+    /// Serve until [`ServerHandle::stop`].  Consumes the server; run it
+    /// on a dedicated thread.
+    pub fn run(self) -> Result<()> {
+        if self.opts.raise_nofile {
+            #[cfg(target_os = "linux")]
+            let _ = sys::raise_nofile_limit();
+        }
+        #[cfg(target_os = "linux")]
+        if self.nloops > 0 {
+            return self.run_event();
+        }
+        self.run_blocking()
+    }
+
+    /// Thread-per-connection fallback with stop support.
+    fn run_blocking(self) -> Result<()> {
+        loop {
+            let sock = match self.listener.accept() {
+                Ok((sock, _)) => sock,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e.into()),
+            };
+            // ord: SeqCst — pairs with ServerHandle::stop, whose wake
+            // connection guarantees one more accept() returns.
+            if self.ctl.stop.load(Ordering::SeqCst) {
+                return Ok(());
+            }
+            // ord: Relaxed — independent telemetry counter.
+            self.metrics.accepted.fetch_add(1, Ordering::Relaxed);
+            // ord: Relaxed — the cap check is approximate by design; a
+            // race with a closing connection widens it by at most a few.
+            if self.metrics.active.load(Ordering::Relaxed) as usize >= self.opts.max_conns {
+                // ord: Relaxed — telemetry counter.
+                self.metrics.dropped.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            // ord: Relaxed — gauge; exactness is not load-bearing.
+            self.metrics.active.fetch_add(1, Ordering::Relaxed);
+            let svc = Arc::clone(&self.svc);
+            let metrics = Arc::clone(&self.metrics);
+            thread::spawn(move || {
+                let _ = serve_conn_blocking(&*svc, sock);
+                // ord: Relaxed — gauge decrement, telemetry only.
+                metrics.active.fetch_sub(1, Ordering::Relaxed);
+            });
+        }
+    }
+
+    /// Acceptor + N event loops; returns when stopped.
+    #[cfg(target_os = "linux")]
+    fn run_event(&self) -> Result<()> {
+        let queues: Vec<Arc<HandoffQueue<TcpStream>>> =
+            (0..self.nloops).map(|_| Arc::new(HandoffQueue::new())).collect();
+        thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::with_capacity(self.nloops);
+            for (i, queue) in queues.iter().enumerate() {
+                let queue = Arc::clone(queue);
+                let wake = Arc::clone(&self.ctl.wakes[i]);
+                let svc = Arc::clone(&self.svc);
+                let ctl = &self.ctl;
+                let metrics = &self.metrics;
+                handles.push(
+                    thread::Builder::new()
+                        .name(format!("net-loop-{i}"))
+                        .spawn_scoped(scope, move || {
+                            event_loop(&*svc, &queue, &wake, ctl, metrics)
+                        })?,
+                );
+            }
+            let accepted = self.run_acceptor(&queues);
+            // Acceptor exited (stop, or a fatal listener error): make
+            // sure every loop observes stop and drains out.
+            // ord: SeqCst — pairs with the loops' stop checks.
+            self.ctl.stop.store(true, Ordering::SeqCst);
+            for wake in &self.ctl.wakes {
+                wake.signal();
+            }
+            for h in handles {
+                h.join().expect("event loop panicked")?;
+            }
+            accepted
+        })
+    }
+
+    /// Accept and round-robin sockets onto the loops' handoff queues.
+    #[cfg(target_os = "linux")]
+    fn run_acceptor(&self, queues: &[Arc<HandoffQueue<TcpStream>>]) -> Result<()> {
+        let mut next = 0usize;
+        loop {
+            let sock = match self.listener.accept() {
+                Ok((sock, _)) => sock,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e.into()),
+            };
+            // ord: SeqCst — pairs with ServerHandle::stop, whose wake
+            // connection guarantees one more accept() returns.
+            if self.ctl.stop.load(Ordering::SeqCst) {
+                return Ok(());
+            }
+            // ord: Relaxed — telemetry counter.
+            self.metrics.accepted.fetch_add(1, Ordering::Relaxed);
+            // ord: Relaxed — cap check approximate by design (races with
+            // loop-side decrements shift it by at most a few conns).
+            if self.metrics.active.load(Ordering::Relaxed) as usize >= self.opts.max_conns {
+                // ord: Relaxed — telemetry counter.
+                self.metrics.dropped.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            // ord: Relaxed — gauge; the owning loop decrements on close.
+            self.metrics.active.fetch_add(1, Ordering::Relaxed);
+            let i = next % queues.len();
+            next = next.wrapping_add(1);
+            if queues[i].push(sock) {
+                self.ctl.wakes[i].signal();
+            }
+        }
+    }
+}
+
+/// Serve one already accepted connection with the blocking personality —
+/// the exact `serve_framed` semantics the event path mirrors.
+pub fn serve_conn_blocking<S: Service>(svc: &S, sock: TcpStream) -> Result<()> {
+    sock.set_nodelay(true)?;
+    let mut rd = BufReader::new(sock.try_clone()?);
+    let mut wr = sock;
+    let mut st = S::ConnState::default();
+    proto::serve_framed(&mut rd, &mut wr, |req, out| svc.handle(&mut st, req, out))
+}
+
+/// Thread-per-connection accept loop (no stop handle; runs until the
+/// listener errors).  The historical `Router::serve`/`shard::serve`
+/// behavior, shared here so both binaries keep one implementation.
+pub fn serve_blocking<S: Service>(svc: Arc<S>, listener: TcpListener) -> Result<()> {
+    loop {
+        let (sock, _) = listener.accept()?;
+        let svc = Arc::clone(&svc);
+        thread::spawn(move || {
+            let _ = serve_conn_blocking(&*svc, sock);
+        });
+    }
+}
+
+// ---------------------------------------------------------------------
+// Event loop internals (Linux).
+// ---------------------------------------------------------------------
+
+/// Token reserved for the loop's eventfd; connections use their slab
+/// index.
+#[cfg(target_os = "linux")]
+const WAKE_TOKEN: u64 = u64::MAX;
+
+/// Stop reading a socket once this much unprocessed input is buffered
+/// in one pass; level-triggered epoll resumes where we left off.
+#[cfg(target_os = "linux")]
+const READ_BURST: usize = 1 << 20;
+
+/// Grace period for draining in-flight connections after stop.
+#[cfg(target_os = "linux")]
+const DRAIN_GRACE: std::time::Duration = std::time::Duration::from_millis(1000);
+
+/// One event-loop-owned connection.
+#[cfg(target_os = "linux")]
+struct EConn<S: Service> {
+    sock: TcpStream,
+    core: ConnCore,
+    st: S::ConnState,
+    peer_closed: bool,
+    /// Read interest withdrawn by the backpressure rule.
+    reads_deferred: bool,
+    /// Interest currently registered with epoll (to elide no-op MODs).
+    reg_read: bool,
+    reg_write: bool,
+    token: u64,
+}
+
+#[cfg(target_os = "linux")]
+impl<S: Service> EConn<S> {
+    fn want_read(&self) -> bool {
+        !self.peer_closed && !self.core.is_broken() && !self.reads_deferred
+    }
+
+    /// Re-derive and (if changed) re-register epoll interest; applies
+    /// the backpressure hysteresis and counts deferral edges.
+    fn update_interest(&mut self, poller: &sys::Poller, metrics: &ConnMetrics) {
+        use std::os::fd::AsRawFd;
+        if !self.reads_deferred && self.core.over_high_water() {
+            self.reads_deferred = true;
+            // ord: Relaxed — telemetry counter.
+            metrics.deferred_reads.fetch_add(1, Ordering::Relaxed);
+        } else if self.reads_deferred && self.core.out_pending() <= conn::OUT_LOW_WATER {
+            self.reads_deferred = false;
+        }
+        let want_read = self.want_read();
+        let want_write = self.core.out_pending() > 0;
+        if want_read != self.reg_read || want_write != self.reg_write {
+            let _ = poller.modify(self.sock.as_raw_fd(), self.token, want_read, want_write);
+            self.reg_read = want_read;
+            self.reg_write = want_write;
+        }
+    }
+}
+
+/// Register a freshly handed-off socket in this loop's slab.
+#[cfg(target_os = "linux")]
+fn register_conn<S: Service>(
+    poller: &sys::Poller,
+    conns: &mut Vec<Option<EConn<S>>>,
+    free: &mut Vec<usize>,
+    sock: TcpStream,
+) -> io::Result<()> {
+    use std::os::fd::AsRawFd;
+    sock.set_nonblocking(true)?;
+    let _ = sock.set_nodelay(true);
+    let idx = free.pop().unwrap_or_else(|| {
+        conns.push(None);
+        conns.len() - 1
+    });
+    if let Err(e) = poller.add(sock.as_raw_fd(), idx as u64, true, false) {
+        free.push(idx);
+        return Err(e);
+    }
+    conns[idx] = Some(EConn {
+        sock,
+        core: ConnCore::new(),
+        st: S::ConnState::default(),
+        peer_closed: false,
+        reads_deferred: false,
+        reg_read: true,
+        reg_write: false,
+        token: idx as u64,
+    });
+    Ok(())
+}
+
+/// Flush as much pending output as the socket accepts right now.
+#[cfg(target_os = "linux")]
+fn flush_out<S: Service>(conn: &mut EConn<S>, metrics: &ConnMetrics) -> io::Result<()> {
+    use std::io::Write as _;
+    while conn.core.out_pending() > 0 {
+        match conn.sock.write(conn.core.output()) {
+            Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+            Ok(n) => conn.core.consume_output(n),
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                // ord: Relaxed — telemetry counter.
+                metrics.partial_flushes.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Advance one connection as far as readiness allows: read (unless
+/// deferred), pump process↔flush to a fixed point, settle EOF, update
+/// interest.  Returns `true` when the connection must be closed.
+#[cfg(target_os = "linux")]
+fn drive_conn<S: Service>(
+    conn: &mut EConn<S>,
+    svc: &S,
+    poller: &sys::Poller,
+    metrics: &ConnMetrics,
+    rbuf: &mut [u8],
+    readable: bool,
+) -> bool {
+    use std::io::Read as _;
+    if readable && conn.want_read() {
+        loop {
+            match conn.sock.read(rbuf) {
+                Ok(0) => {
+                    conn.peer_closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    conn.core.push_input(&rbuf[..n]);
+                    if conn.core.in_pending() >= READ_BURST {
+                        break; // fairness: level-triggered epoll re-fires
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => return true, // connection reset: close now
+            }
+        }
+    }
+    // Pump process↔flush until neither side makes progress: a flush that
+    // drains below the high-water mark re-enables parsing of frames that
+    // were already buffered, so one pass is not enough.
+    loop {
+        let before = (conn.core.in_pending(), conn.core.out_pending());
+        conn.core.process(svc, &mut conn.st);
+        if conn.peer_closed {
+            conn.core.finish_input(svc, &mut conn.st);
+        }
+        if flush_out(conn, metrics).is_err() {
+            return true;
+        }
+        let after = (conn.core.in_pending(), conn.core.out_pending());
+        if after == before {
+            break;
+        }
+    }
+    if conn.core.is_drained() || (conn.peer_closed && conn.core.out_pending() == 0) {
+        return true;
+    }
+    conn.update_interest(poller, metrics);
+    false
+}
+
+/// One shared-nothing event loop: owns a slab of connections, drains its
+/// handoff queue on eventfd wakes, and exits once stopped and drained.
+#[cfg(target_os = "linux")]
+fn event_loop<S: Service>(
+    svc: &S,
+    queue: &HandoffQueue<TcpStream>,
+    wake: &sys::WakeFd,
+    ctl: &Ctl,
+    metrics: &ConnMetrics,
+) -> Result<()> {
+    use std::time::Instant;
+
+    let poller = sys::Poller::new()?;
+    poller.add(wake.raw(), WAKE_TOKEN, true, false)?;
+
+    let mut conns: Vec<Option<EConn<S>>> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    let mut events: Vec<sys::PollEvent> = Vec::new();
+    let mut incoming: Vec<TcpStream> = Vec::new();
+    let mut rbuf = vec![0u8; 64 << 10];
+    let mut active = 0usize;
+    let mut drain_deadline: Option<Instant> = None;
+
+    loop {
+        // ord: SeqCst — pairs with ServerHandle::stop; the eventfd wake
+        // that accompanies the store bounds how long we can miss it.
+        let stopping = ctl.stop.load(Ordering::SeqCst);
+        if stopping {
+            if active == 0 {
+                return Ok(());
+            }
+            drain_deadline.get_or_insert_with(|| Instant::now() + DRAIN_GRACE);
+        }
+        let timeout_ms = if stopping { 10 } else { -1 };
+        poller.wait(&mut events, timeout_ms)?;
+        // ord: Relaxed — telemetry counter.
+        metrics.wakeups.fetch_add(1, Ordering::Relaxed);
+
+        let mut got_wake = false;
+        for ev in &events {
+            if ev.token == WAKE_TOKEN {
+                got_wake = true;
+                continue;
+            }
+            let idx = ev.token as usize;
+            let close = match conns.get_mut(idx).and_then(|slot| slot.as_mut()) {
+                Some(conn) => {
+                    drive_conn(conn, svc, &poller, metrics, &mut rbuf, ev.readable && !stopping)
+                }
+                None => false,
+            };
+            if close {
+                conns[idx] = None; // dropping the socket deregisters it
+                free.push(idx);
+                active -= 1;
+                // ord: Relaxed — gauge decrement, telemetry only.
+                metrics.active.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+
+        if got_wake {
+            wake.drain_counter();
+            queue.drain(&mut incoming);
+        }
+        for sock in incoming.drain(..) {
+            if stopping {
+                // Accepted but never served: account it back out.
+                // ord: Relaxed — gauge/telemetry adjustments.
+                metrics.active.fetch_sub(1, Ordering::Relaxed);
+                metrics.dropped.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            match register_conn(&poller, &mut conns, &mut free, sock) {
+                Ok(()) => active += 1,
+                Err(_) => {
+                    // ord: Relaxed — gauge/telemetry adjustments.
+                    metrics.active.fetch_sub(1, Ordering::Relaxed);
+                    metrics.dropped.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+
+        if stopping {
+            // Drain tick: answer whatever is already buffered, flush,
+            // and close each connection as its output empties — or
+            // unconditionally once the grace period lapses.
+            let force = drain_deadline.is_some_and(|d| Instant::now() >= d);
+            for (idx, slot) in conns.iter_mut().enumerate() {
+                let close = match slot.as_mut() {
+                    None => continue,
+                    Some(conn) if force => {
+                        let _ = flush_out(conn, metrics);
+                        true
+                    }
+                    Some(conn) => {
+                        conn.core.finish_input(svc, &mut conn.st);
+                        let _ = flush_out(conn, metrics);
+                        conn.core.out_pending() == 0
+                    }
+                };
+                if close {
+                    *slot = None;
+                    free.push(idx);
+                    active -= 1;
+                    // ord: Relaxed — gauge decrement, telemetry only.
+                    metrics.active.fetch_sub(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,297 @@
+//! Raw Linux readiness plumbing: `epoll`, `eventfd`, and `RLIMIT_NOFILE`.
+//!
+//! The crate's dependency discipline (std + `anyhow` only — see
+//! `Cargo.toml`) rules out the `libc` crate as much as tokio/mio, so the
+//! handful of syscalls the event server needs are declared here directly:
+//! std already links the platform C library, and on Linux these symbols
+//! and their ABI are stable.  Everything in this module is
+//! `#[cfg(target_os = "linux")]` (gated at the `mod` declaration in
+//! `net`); other platforms fall back to the blocking server.
+//!
+//! Wrappers own their fds ([`OwnedFd`]/[`File`]) so a dropped [`Poller`]
+//! or [`WakeFd`] closes cleanly, and every raw call checks the return
+//! value and converts `-1` into [`io::Error::last_os_error`].
+
+use std::fs::File;
+use std::io::{self, Read as _, Write as _};
+use std::os::fd::{AsRawFd, FromRawFd, OwnedFd, RawFd};
+
+// ---------------------------------------------------------------------
+// ABI constants (uapi values; stable on Linux).
+// ---------------------------------------------------------------------
+
+const EPOLLIN: u32 = 0x001;
+const EPOLLOUT: u32 = 0x004;
+const EPOLLERR: u32 = 0x008;
+const EPOLLHUP: u32 = 0x010;
+
+const EPOLL_CTL_ADD: i32 = 1;
+const EPOLL_CTL_DEL: i32 = 2;
+const EPOLL_CTL_MOD: i32 = 3;
+
+const EPOLL_CLOEXEC: i32 = 0o2000000;
+const EFD_CLOEXEC: i32 = 0o2000000;
+const EFD_NONBLOCK: i32 = 0o4000;
+
+const RLIMIT_NOFILE: i32 = 7;
+
+/// Kernel `struct epoll_event`: packed on x86-64 (the one architecture
+/// where the uapi header says so), naturally aligned elsewhere.
+#[repr(C)]
+#[cfg_attr(target_arch = "x86_64", repr(packed))]
+#[derive(Clone, Copy)]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+#[repr(C)]
+struct Rlimit {
+    cur: u64,
+    max: u64,
+}
+
+extern "C" {
+    fn epoll_create1(flags: i32) -> i32;
+    fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+    fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+    fn eventfd(initval: u32, flags: i32) -> i32;
+    fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
+    fn setrlimit(resource: i32, rlim: *const Rlimit) -> i32;
+}
+
+/// One readiness report from [`Poller::wait`], with the epoll flag salad
+/// already folded down to the two questions the event loop asks.
+/// `ERR`/`HUP` set both: the loop's next `read`/`write` surfaces the
+/// actual error, which is the one place connection teardown lives.
+#[derive(Debug, Clone, Copy)]
+pub struct PollEvent {
+    /// The `u64` token registered with the fd (slab index or wake token).
+    pub token: u64,
+    /// Readable (or error/hangup — reading reveals which).
+    pub readable: bool,
+    /// Writable (or error/hangup).
+    pub writable: bool,
+}
+
+/// Level-triggered epoll instance.
+#[derive(Debug)]
+pub struct Poller {
+    ep: OwnedFd,
+}
+
+impl Poller {
+    /// New epoll instance (`CLOEXEC`).
+    pub fn new() -> io::Result<Self> {
+        // SAFETY: epoll_create1 takes a plain flag word and returns a new
+        // fd or -1; no pointers are involved.
+        let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        // SAFETY: `fd` is a freshly created epoll fd that nothing else
+        // owns; OwnedFd takes over closing it.
+        Ok(Self { ep: unsafe { OwnedFd::from_raw_fd(fd) } })
+    }
+
+    fn ctl(&self, op: i32, fd: RawFd, interest: u32, token: u64) -> io::Result<()> {
+        let mut ev = EpollEvent { events: interest, data: token };
+        // SAFETY: `ev` is a live, properly laid out epoll_event for the
+        // duration of the call; the kernel only reads it.
+        let rc = unsafe { epoll_ctl(self.ep.as_raw_fd(), op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    fn interest_bits(read: bool, write: bool) -> u32 {
+        let mut bits = 0;
+        if read {
+            bits |= EPOLLIN;
+        }
+        if write {
+            bits |= EPOLLOUT;
+        }
+        bits
+    }
+
+    /// Register `fd` with the given interest, tagged with `token`.
+    pub fn add(&self, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, Self::interest_bits(read, write), token)
+    }
+
+    /// Change the interest set of an already registered `fd`.
+    pub fn modify(&self, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, Self::interest_bits(read, write), token)
+    }
+
+    /// Deregister `fd`.  (Closing the fd deregisters implicitly; this is
+    /// for fds that outlive their registration.)
+    pub fn delete(&self, fd: RawFd) -> io::Result<()> {
+        // Pre-2.6.9 kernels dereference the event pointer even for DEL,
+        // so pass a real (ignored) struct rather than null.
+        self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Wait for readiness; `timeout_ms < 0` blocks indefinitely.  Fills
+    /// `events` (cleared first) and retries transparently on `EINTR`.
+    pub fn wait(&self, events: &mut Vec<PollEvent>, timeout_ms: i32) -> io::Result<()> {
+        const CAP: usize = 512;
+        let mut raw = [EpollEvent { events: 0, data: 0 }; CAP];
+        loop {
+            // SAFETY: `raw` is a live array of CAP properly laid out
+            // epoll_events and maxevents matches its length, so the
+            // kernel writes only within bounds.
+            let n = unsafe { epoll_wait(self.ep.as_raw_fd(), raw.as_mut_ptr(), CAP as i32, timeout_ms) };
+            if n < 0 {
+                let err = io::Error::last_os_error();
+                if err.kind() == io::ErrorKind::Interrupted {
+                    continue;
+                }
+                return Err(err);
+            }
+            events.clear();
+            for ev in raw.iter().take(n as usize) {
+                // Copy out of the (possibly packed) struct by value.
+                let bits = ev.events;
+                let token = ev.data;
+                events.push(PollEvent {
+                    token,
+                    readable: bits & (EPOLLIN | EPOLLERR | EPOLLHUP) != 0,
+                    writable: bits & (EPOLLOUT | EPOLLERR | EPOLLHUP) != 0,
+                });
+            }
+            return Ok(());
+        }
+    }
+}
+
+/// Nonblocking `eventfd` used to kick an event loop out of `epoll_wait`
+/// (new handoff sockets, stop signal).
+#[derive(Debug)]
+pub struct WakeFd {
+    file: File,
+}
+
+impl WakeFd {
+    /// New nonblocking, CLOEXEC eventfd with a zero counter.
+    pub fn new() -> io::Result<Self> {
+        // SAFETY: eventfd takes plain integer arguments and returns a new
+        // fd or -1; no pointers are involved.
+        let fd = unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        // SAFETY: `fd` is a freshly created eventfd that nothing else
+        // owns; File takes over closing it.
+        Ok(Self { file: unsafe { File::from_raw_fd(fd) } })
+    }
+
+    /// The fd to register for read interest in a [`Poller`].
+    pub fn raw(&self) -> RawFd {
+        self.file.as_raw_fd()
+    }
+
+    /// Wake the poller.  Infallible by design: the only write failure on
+    /// a nonblocking eventfd is a saturated counter, and a saturated
+    /// counter is already a pending wake.
+    pub fn signal(&self) {
+        let one = 1u64.to_ne_bytes();
+        let _ = (&self.file).write(&one);
+    }
+
+    /// Consume the pending wake(s).  A single read returns-and-resets the
+    /// whole counter, so coalesced signals cost one syscall.
+    pub fn drain_counter(&self) {
+        let mut buf = [0u8; 8];
+        let _ = (&self.file).read(&mut buf);
+    }
+}
+
+/// Raise the soft `RLIMIT_NOFILE` to the hard limit and return the new
+/// soft limit.  10k+ connections exceed the common 1024 default; callers
+/// treat failure as advisory (the accept path degrades by dropping).
+pub fn raise_nofile_limit() -> io::Result<u64> {
+    let mut lim = Rlimit { cur: 0, max: 0 };
+    // SAFETY: `lim` is a live, properly laid out rlimit the kernel fills.
+    if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    if lim.cur < lim.max {
+        lim.cur = lim.max;
+        // SAFETY: `lim` is live and only read by the kernel.
+        if unsafe { setrlimit(RLIMIT_NOFILE, &lim) } < 0 {
+            return Err(io::Error::last_os_error());
+        }
+    }
+    Ok(lim.cur)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+
+    #[test]
+    fn poller_reports_readable_socket() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+
+        let poller = Poller::new().unwrap();
+        poller.add(server.as_raw_fd(), 7, true, false).unwrap();
+
+        let mut events = Vec::new();
+        poller.wait(&mut events, 0).unwrap();
+        assert!(events.is_empty(), "no data yet: poll must time out empty");
+
+        client.write_all(b"x").unwrap();
+        client.flush().unwrap();
+        poller.wait(&mut events, 1000).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 7);
+        assert!(events[0].readable);
+
+        // Interest change to write-only: a connected socket with room in
+        // its send buffer is immediately writable.
+        poller.modify(server.as_raw_fd(), 7, false, true).unwrap();
+        poller.wait(&mut events, 1000).unwrap();
+        assert_eq!(events.len(), 1);
+        assert!(events[0].writable);
+
+        poller.delete(server.as_raw_fd()).unwrap();
+        poller.wait(&mut events, 0).unwrap();
+        assert!(events.is_empty(), "deregistered fd must not report");
+    }
+
+    #[test]
+    fn wakefd_signals_and_coalesces() {
+        let poller = Poller::new().unwrap();
+        let wake = WakeFd::new().unwrap();
+        poller.add(wake.raw(), u64::MAX, true, false).unwrap();
+
+        let mut events = Vec::new();
+        poller.wait(&mut events, 0).unwrap();
+        assert!(events.is_empty());
+
+        wake.signal();
+        wake.signal(); // coalesces into the same counter
+        poller.wait(&mut events, 1000).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, u64::MAX);
+
+        wake.drain_counter();
+        poller.wait(&mut events, 0).unwrap();
+        assert!(events.is_empty(), "drained eventfd must be quiet");
+    }
+
+    #[test]
+    fn nofile_limit_reports_a_sane_value() {
+        let lim = raise_nofile_limit().unwrap();
+        assert!(lim >= 256, "soft nofile limit suspiciously low: {lim}");
+    }
+}

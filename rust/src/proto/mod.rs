@@ -103,8 +103,23 @@
 //! down never reached it, so its contents are stale) and migrates the
 //! keys written to survivors in the interim back onto it.
 //!
-//! Blocking I/O over `std::io` — the servers are thread-per-connection
-//! (see DESIGN.md: the build is fully offline, so the stack is std-only).
+//! ## Two server personalities over one parser
+//!
+//! Everything above is I/O-model agnostic; the servers bind it two ways
+//! (both std-only — the build is fully offline, see DESIGN.md):
+//!
+//! * **Blocking thread-per-connection** — [`serve_framed`] drives the
+//!   parser straight off a socket `BufReader`.  Simple, and the fallback
+//!   everywhere epoll is unavailable.
+//! * **Readiness event loop** (`crate::net`) — nonblocking sockets on
+//!   raw epoll.  A per-connection state machine buffers exactly one
+//!   frame's bytes (the header line plus the payload extent
+//!   [`frame_payload_extent`] computes from it) and then runs the *same*
+//!   [`read_request_ref`] over the in-memory slice, so a command split
+//!   across arbitrary read boundaries resumes mid-frame with byte-for-
+//!   byte identical behavior to the blocking path.  See `crate::net` for
+//!   the state-machine diagram, interest transitions and backpressure
+//!   rule.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::mem::MaybeUninit;
@@ -571,10 +586,54 @@ pub struct RecvBuf {
     values: Vec<Value>,
 }
 
+/// Steady-state capacity caps for a connection's reusable buffers
+/// ([`RecvBuf::recycle`] and the servers' in/out buffers shrink back to
+/// these).  One oversized batch may grow a buffer to the 64 MiB framing
+/// budget; *keeping* it grown costs that much per connection forever —
+/// fatal at 10k+ connections — so every server trims after each request.
+pub const RECV_LINE_CAP: usize = 16 << 10;
+/// Cap on the batch span/length tables kept across requests (entries).
+pub const RECV_SPAN_CAP: usize = 1024;
+/// Cap on the batch value `Arc` table kept across requests (entries).
+pub const RECV_VALUE_CAP: usize = 64;
+
 impl RecvBuf {
     /// New empty scratch buffer.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Release the previous request's payload refs and shrink any buffer
+    /// an oversized batch grew beyond its steady-state cap.  Servers call
+    /// this once per handled request: per-connection memory is then
+    /// bounded by the caps, not by the largest batch the connection ever
+    /// saw.  No-op (four capacity compares) in steady state.
+    pub fn recycle(&mut self) {
+        // Dropping the Arcs promptly also releases the payload bytes of
+        // the last batch (the stored copies live on in the shard map).
+        self.values.clear();
+        if self.line.capacity() > RECV_LINE_CAP {
+            self.line.clear();
+            self.line.shrink_to(RECV_LINE_CAP);
+        }
+        if self.spans.capacity() > RECV_SPAN_CAP {
+            self.spans.clear();
+            self.spans.shrink_to(RECV_SPAN_CAP);
+        }
+        if self.lens.capacity() > RECV_SPAN_CAP {
+            self.lens.clear();
+            self.lens.shrink_to(RECV_SPAN_CAP);
+        }
+        if self.values.capacity() > RECV_VALUE_CAP {
+            self.values.shrink_to(RECV_VALUE_CAP);
+        }
+    }
+
+    /// Current buffer capacities `(line, spans, lens, values)` — lets
+    /// tests pin the [`recycle`](Self::recycle) bound without exposing
+    /// the fields.
+    pub fn capacities(&self) -> (usize, usize, usize, usize) {
+        (self.line.capacity(), self.spans.capacity(), self.lens.capacity(), self.values.capacity())
     }
 }
 
@@ -649,8 +708,14 @@ fn read_value<R: Read>(r: &mut R, len: usize) -> Result<Value> {
 /// `Ok(None)` on clean EOF, [`Wire::Bad`] for recoverable parse failures
 /// (answer `ERR`, keep the connection), and `Err` only for framing/IO
 /// errors (drop the connection).
-pub fn read_request_ref<'a, R: Read>(
-    r: &mut BufReader<R>,
+///
+/// Generic over [`BufRead`] so the blocking servers pass their socket
+/// `BufReader` and the event loop passes `&mut &[u8]` over an in-memory
+/// frame it has already buffered to completion (see
+/// [`frame_payload_extent`] for how it knows the frame is complete) —
+/// both run the exact same parse.
+pub fn read_request_ref<'a, R: BufRead>(
+    r: &mut R,
     buf: &'a mut RecvBuf,
 ) -> Result<Option<Wire<'a>>> {
     // Split the scratch into disjoint field borrows: the returned view
@@ -795,10 +860,99 @@ pub fn read_request_ref<'a, R: Read>(
     Ok(Some(Wire::Req(req)))
 }
 
+/// How far past its header line a frame extends on the wire — computed
+/// from the header alone, *before* the payload arrives.  This is the
+/// event loop's frame detector: a readiness server must know how many
+/// bytes make the frame complete so it can buffer exactly that much and
+/// then hand [`read_request_ref`] an in-memory slice, resuming cleanly
+/// when a read ends mid-command.
+///
+/// The contract (differentially tested against the parser in
+/// `frame_extent_agrees_with_parser`): for any header line,
+///
+/// * [`FrameExtent::Payload`]`(p)` — the parser, given the line plus
+///   exactly `p` payload bytes, consumes all of them and yields a
+///   request;
+/// * [`FrameExtent::LineOnly`] — the parser consumes the line and *no*
+///   payload bytes (either the command carries none, or the header is
+///   recoverably bad and the parser answers [`Wire::Bad`] before its
+///   payload-read phase — mirroring the blocking path, where a client
+///   that streamed payloads after a bad header has desynced itself);
+/// * [`FrameExtent::Oversized`] — the header announces a payload beyond
+///   the [`MAX_VALUE_LEN`] budget; the parser would `bail!` and the
+///   connection must drop without buffering the payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameExtent {
+    /// The frame is the header line alone.
+    LineOnly,
+    /// The frame is the header line plus this many payload bytes.
+    Payload(usize),
+    /// The announced payload exceeds the framing budget — drop the
+    /// connection (never buffer toward an oversized frame).
+    Oversized,
+}
+
+/// Compute a frame's [`FrameExtent`] from its header line (trailing
+/// newline optional).  Mirrors [`read_request_ref`]'s token walk
+/// *exactly* — same token order, same first-failure-wins decisions — so
+/// the event loop's framing and the parser's consumption can never
+/// disagree (see `FrameExtent`'s contract and its differential test).
+pub fn frame_payload_extent(line: &str) -> FrameExtent {
+    let line = line.trim_end();
+    let mut parts = line.split(' ');
+    let cmd = parts.next().unwrap_or("");
+    match cmd {
+        "PUT" | "PUTNX" => {
+            // Parser order: key token first (bad key => Bad, no payload
+            // read), then the length token (unparseable => Bad, no
+            // payload; oversized => bail).
+            if key_tok(parts.next()).is_err() {
+                return FrameExtent::LineOnly;
+            }
+            match parts.next().and_then(|t| t.parse::<usize>().ok()) {
+                Some(len) if len > MAX_VALUE_LEN => FrameExtent::Oversized,
+                Some(len) => FrameExtent::Payload(len),
+                None => FrameExtent::LineOnly,
+            }
+        }
+        "MPUT" | "MPUTNX" => {
+            // Parser order: count, then (key, len) pairs left to right
+            // (each failure decided at its pair), then the trailing-token
+            // check — only after all of that does it read payloads.
+            let n = match batch_count(cmd, parts.next()) {
+                Ok(n) => n,
+                Err(_) => return FrameExtent::LineOnly,
+            };
+            let mut total = 0usize;
+            for _ in 0..n {
+                if key_tok(parts.next()).is_err() {
+                    return FrameExtent::LineOnly;
+                }
+                let len = match parts.next().and_then(|t| t.parse::<usize>().ok()) {
+                    Some(len) => len,
+                    None => return FrameExtent::LineOnly,
+                };
+                if len > MAX_VALUE_LEN {
+                    return FrameExtent::Oversized;
+                }
+                total += len;
+                if total > MAX_VALUE_LEN {
+                    return FrameExtent::Oversized;
+                }
+            }
+            if parts.next().is_some() {
+                return FrameExtent::LineOnly;
+            }
+            FrameExtent::Payload(total)
+        }
+        _ => FrameExtent::LineOnly,
+    }
+}
+
 /// Read one request in owned form. Returns `None` on clean EOF and `Err`
 /// on *any* parse failure (legacy strict behavior — clients and tests;
 /// servers use [`read_request_ref`] and stay alive on recoverable ones).
-pub fn read_request<R: Read>(r: &mut BufReader<R>) -> Result<Option<Request>> {
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<Option<Request>> {
     let mut buf = RecvBuf::new();
     match read_request_ref(r, &mut buf)? {
         None => Ok(None),
@@ -1034,11 +1188,19 @@ pub fn serve_framed<R: Read, W: Write>(
             Some(Wire::Req(req)) => handle(req, &mut out)?,
             Some(Wire::Bad(msg)) => encode_response(&mut out, &Response::Err(msg))?,
         }
+        // Bound per-connection memory: drop the request's payload refs
+        // and shrink scratch an oversized batch grew (no-op otherwise).
+        scratch.recycle();
         let next_is_buffered = rd.buffer().contains(&b'\n');
         if !next_is_buffered || out.len() >= FLUSH_HIGH_WATER {
             wr.write_all(&out)?;
             wr.flush()?;
             out.clear();
+            // Same bound for the response side: a single huge VAL may
+            // blow past the high-water mark; don't keep that capacity.
+            if out.capacity() > 2 * FLUSH_HIGH_WATER {
+                out.shrink_to(FLUSH_HIGH_WATER);
+            }
         }
     }
     if !out.is_empty() {
@@ -1420,6 +1582,145 @@ mod tests {
         let mut b = Vec::new();
         encode_response(&mut b, &Response::Multi(subs)).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn frame_extent_known_cases() {
+        use FrameExtent::*;
+        for (line, want) in [
+            ("GET k\n", LineOnly),
+            ("COUNT\n", LineOnly),
+            ("BOGUS x y\n", LineOnly),
+            ("PUT k 5\n", Payload(5)),
+            ("PUTNX k 0\n", Payload(0)),
+            ("PUT k notanint\n", LineOnly),
+            ("PUT\n", LineOnly),
+            ("PUT k 999999999999\n", Oversized),
+            ("MGET 2 k1 k2\n", LineOnly),
+            ("MPUT 0\n", Payload(0)),
+            ("MPUT 2 k1 3 k2 4\n", Payload(7)),
+            ("MPUT 2 k1 3 k2\n", LineOnly),
+            ("MPUT 2 k1 3 k2 4 extra\n", LineOnly),
+            ("MPUT nope k 3\n", LineOnly),
+            ("MPUT 1 k 999999999999\n", Oversized),
+            ("MPUT 2 k1 50000000 k2 50000000\n", Oversized),
+        ] {
+            assert_eq!(frame_payload_extent(line), want, "line {line:?}");
+        }
+        // Exactly at the budget is still a legal (if huge) frame.
+        let line = format!("PUT k {MAX_VALUE_LEN}\n");
+        assert_eq!(frame_payload_extent(&line), Payload(MAX_VALUE_LEN));
+    }
+
+    /// The [`FrameExtent`] contract, checked differentially: for every
+    /// corpus line (valid frames plus single-byte mutations), the parser
+    /// given `line + extent` payload bytes + `COUNT\n` must consume
+    /// exactly the frame — the follow-up parse must see COUNT.
+    #[test]
+    fn frame_extent_agrees_with_parser() {
+        let mut corpus: Vec<Vec<u8>> = [
+            "GET k\n",
+            "PUT k 5\n",
+            "PUT k notanint\n",
+            "PUT toolong 99999999999999999999\n",
+            "MGET 2 k1 k2\n",
+            "MPUT 2 k1 3 k2 4\n",
+            "MPUT 2 k1 3 k2 4 extra\n",
+            "MPUT 1 k 12\n",
+            "MDEL 1 k\n",
+            "COUNT\n",
+        ]
+        .iter()
+        .map(|s| s.as_bytes().to_vec())
+        .collect();
+        // Single-byte mutations of every corpus line (keeping the
+        // terminator) — bad keys, bad counts, bad lengths, bad commands.
+        let mut rng = crate::hashing::SplitMix64Rng::new(0xF7A3E);
+        let seeds = corpus.clone();
+        for line in &seeds {
+            for pos in 0..line.len().saturating_sub(1) {
+                let mut m = line.clone();
+                m[pos] = match rng.next_u64() % 4 {
+                    0 => b' ',
+                    1 => b'0',
+                    2 => b'?',
+                    _ => (rng.next_u64() % 26) as u8 + b'a',
+                };
+                corpus.push(m);
+            }
+        }
+        for line_bytes in &corpus {
+            let line = std::str::from_utf8(line_bytes).expect("corpus is ASCII");
+            let extent = frame_payload_extent(line);
+            let payload = match extent {
+                FrameExtent::Payload(p) if p <= 1 << 20 => p,
+                FrameExtent::Payload(_) => continue, // don't materialize huge frames
+                FrameExtent::LineOnly => 0,
+                FrameExtent::Oversized => {
+                    // The parser must refuse the frame outright.
+                    let mut stream = line_bytes.clone();
+                    stream.extend_from_slice(b"COUNT\n");
+                    let mut r = BufReader::new(&stream[..]);
+                    let mut buf = RecvBuf::new();
+                    assert!(
+                        read_request_ref(&mut r, &mut buf).is_err(),
+                        "line {line:?}: extent says Oversized but the parser accepted it"
+                    );
+                    continue;
+                }
+            };
+            let mut stream = line_bytes.clone();
+            stream.extend(std::iter::repeat(0xAB).take(payload));
+            stream.extend_from_slice(b"COUNT\n");
+            let mut r = BufReader::new(&stream[..]);
+            let mut buf = RecvBuf::new();
+            match read_request_ref(&mut r, &mut buf) {
+                Ok(Some(_)) => {}
+                other => panic!("line {line:?}: first parse failed: {other:?}"),
+            }
+            match read_request_ref(&mut r, &mut buf) {
+                Ok(Some(Wire::Req(RequestRef::Count))) => {}
+                other => panic!(
+                    "line {line:?} (extent {extent:?}): parser consumption disagrees \
+                     with the extent — next parse saw {other:?} instead of COUNT"
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn recycle_bounds_scratch_and_releases_payload_refs() {
+        // A big batch grows every scratch field past its cap...
+        let keys: Vec<String> = (0..2000).map(|i| format!("key-{i:04}")).collect();
+        let values: Vec<Value> = (0..2000).map(|_| vec![7u8; 64].into()).collect();
+        let mut frame = Vec::new();
+        write_request(&mut frame, &Request::MPut { keys, values }).unwrap();
+        let mut r = BufReader::new(&frame[..]);
+        let mut buf = RecvBuf::new();
+        let weak = match read_request_ref(&mut r, &mut buf).unwrap().unwrap() {
+            Wire::Req(RequestRef::MPut { batch }) => {
+                assert_eq!(batch.len(), 2000);
+                Arc::downgrade(&batch.values()[0])
+            }
+            other => panic!("{other:?}"),
+        };
+        let (l, s, le, v) = buf.capacities();
+        assert!(l > RECV_LINE_CAP && s > RECV_SPAN_CAP && le > RECV_SPAN_CAP);
+        assert!(v > RECV_VALUE_CAP);
+        // ...and recycle trims it all back and drops the payload Arcs.
+        buf.recycle();
+        assert!(weak.upgrade().is_none(), "recycle must release payload refs");
+        let (l, s, le, v) = buf.capacities();
+        assert!(l <= 2 * RECV_LINE_CAP, "line capacity {l} not trimmed");
+        assert!(s <= 2 * RECV_SPAN_CAP, "span capacity {s} not trimmed");
+        assert!(le <= 2 * RECV_SPAN_CAP, "lens capacity {le} not trimmed");
+        assert!(v <= 2 * RECV_VALUE_CAP, "value capacity {v} not trimmed");
+        // A recycled buffer still parses.
+        let mut r = BufReader::new(&b"GET ok\n"[..]);
+        assert!(matches!(
+            read_request_ref(&mut r, &mut buf).unwrap().unwrap(),
+            Wire::Req(RequestRef::Get { key: "ok" })
+        ));
     }
 
     #[test]

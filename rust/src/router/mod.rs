@@ -62,6 +62,22 @@
 //! explores SC interleavings, so a weaker-order variant would be
 //! asserting more than it checks — see `sync`'s module docs).
 //!
+//! ## Serving: readiness event loops over the same data path
+//!
+//! The router implements [`net::Service`](crate::net::Service), so both
+//! server personalities drive the identical handler code:
+//! [`Router::serve`] is the portable blocking thread-per-connection
+//! fallback, and [`Router::server`] builds the Linux epoll event server
+//! ([`crate::net`]) — a few shared-nothing event loops, each calling
+//! `Service::handle` → `snapshot()` directly.  Because snapshot access
+//! is the lock-free cell above, event loops share **no router-side locks
+//! on the data path**; fan-in scales with loops.  The state-machine
+//! diagram, interest-transition table, and backpressure rule live in the
+//! [`crate::net`] module docs; connection counters surface in `STATS`
+//! via [`ConnMetrics`] (`conns_*` fields).  New cross-thread state this
+//! introduces (the accepted-socket handoff queue) is model-checked like
+//! the cell — see `sync::handoff` and `rust/tests/model.rs`.
+//!
 //! ## Batched data plane: one fan-out per shard, not one per key
 //!
 //! Placement costs nanoseconds; a shard round-trip costs micro- to
@@ -200,7 +216,8 @@ use crate::cluster::{
     bucket_csv as csv, Cluster, DegradedState, EventKind, MigrationOrigin, PlacementSnapshot,
     TopologyEvent,
 };
-use crate::metrics::RouterMetrics;
+use crate::metrics::{ConnMetrics, RouterMetrics};
+use crate::net::{self, Server, ServerOpts, Service};
 use crate::proto::{self, BatchOp, BatchSource, Request, RequestRef, Response, Value};
 use crate::rebalance::{self, MigrationStats, PlanPath};
 use crate::runtime::PlacementRuntime;
@@ -292,6 +309,11 @@ pub struct Router {
     admin: Mutex<Vec<TopologyEvent>>,
     /// Request/latency counters.
     pub metrics: RouterMetrics,
+    /// Connection-layer counters, shared with the serving
+    /// [`net::Server`] so `STATS` reports accepted/active/dropped
+    /// connections, readiness wakeups, partial flushes, and
+    /// backpressure-deferred reads.
+    pub conns: Arc<ConnMetrics>,
     /// Bulk placement runtime for rebalance planning (None = Rust path).
     /// Serialized behind a mutex — see the Send safety note in `runtime`.
     bulk: Option<Mutex<PlacementRuntime>>,
@@ -316,6 +338,7 @@ impl Router {
             current: SnapshotCell::new(snapshot),
             admin: Mutex::new(events),
             metrics: RouterMetrics::new(),
+            conns: Arc::new(ConnMetrics::new()),
             bulk: bulk.map(Mutex::new),
             spawn_shard,
         })
@@ -458,7 +481,7 @@ impl Router {
                     "steady"
                 };
                 Response::Info(format!(
-                    "epoch={} n={} shards={} algo={} state={} failed={} {}",
+                    "epoch={} n={} shards={} algo={} state={} failed={} {} {}",
                     snap.epoch,
                     snap.engine.len(),
                     snap.shards.len(),
@@ -468,7 +491,8 @@ impl Router {
                         Some(d) => d.failed_csv(),
                         None => "-".to_string(),
                     },
-                    self.metrics.summary()
+                    self.metrics.summary(),
+                    self.conns.summary()
                 ))
             }
             RequestRef::Scan
@@ -1382,35 +1406,49 @@ impl Router {
         )
     }
 
-    /// Serve the router protocol on a TCP listener (thread per connection).
+    /// Serve the router protocol on a TCP listener with the blocking
+    /// personality (thread per connection) — the portable fallback; see
+    /// [`Router::server`] for the epoll event server.
     pub fn serve(self: Arc<Self>, listener: TcpListener) -> Result<()> {
-        loop {
-            let (sock, _) = listener.accept()?;
-            let router = self.clone();
-            std::thread::spawn(move || {
-                let _ = router.serve_conn(sock);
-            });
-        }
+        net::serve_blocking(self, listener)
     }
 
-    fn serve_conn(self: Arc<Self>, sock: TcpStream) -> Result<()> {
-        sock.set_nodelay(true)?;
-        let mut rd = BufReader::new(sock.try_clone()?);
-        let mut wr = sock;
-        // Borrowed parsing + coalesced responses; recoverable parse
-        // failures answer ERR and keep the connection (see
-        // `proto::serve_framed`).  Batches run through per-connection
-        // scratch, so a steady stream of MGET/MPUT frames reuses its
-        // buffers instead of allocating per batch.
-        let mut scratch = BatchScratch::new();
-        let mut subs: Vec<Response> = Vec::new();
-        proto::serve_framed(&mut rd, &mut wr, |req, out| match req.into_batch() {
+    /// Build a [`net::Server`] over this router: the readiness event
+    /// server by default ([`ServerOpts::default`]), with the router's
+    /// [`ConnMetrics`] attached so `STATS` reports connection counters.
+    /// Call `.handle()` for graceful stop, then `.run()` (blocking) on a
+    /// dedicated thread.
+    pub fn server(self: Arc<Self>, listener: TcpListener, mut opts: ServerOpts) -> Result<Server<Router>> {
+        opts.metrics = Some(Arc::clone(&self.conns));
+        Server::new(self, listener, opts)
+    }
+}
+
+/// Per-connection handler state for the router as a [`net::Service`]:
+/// batch scratch plus the positional sub-response buffer — reused across
+/// every request of one connection, never shared between connections.
+#[derive(Debug, Default)]
+pub struct RouterConnState {
+    scratch: BatchScratch,
+    subs: Vec<Response>,
+}
+
+impl Service for Router {
+    type ConnState = RouterConnState;
+
+    /// Borrowed parsing + coalesced responses; recoverable parse
+    /// failures already answered `ERR` upstream (see `proto`).  Batches
+    /// run through per-connection scratch, so a steady stream of
+    /// MGET/MPUT frames reuses its buffers instead of allocating per
+    /// batch.
+    fn handle(&self, st: &mut RouterConnState, req: RequestRef<'_>, out: &mut Vec<u8>) -> Result<()> {
+        match req.into_batch() {
             Ok((op, batch)) => {
-                self.handle_batch(op, &batch, &mut scratch, &mut subs);
-                proto::encode_multi_response(out, &subs)
+                self.handle_batch(op, &batch, &mut st.scratch, &mut st.subs);
+                proto::encode_multi_response(out, &st.subs)
             }
             Err(req) => proto::encode_response(out, &self.handle_ref(req)),
-        })
+        }
     }
 }
 

@@ -448,35 +448,50 @@ impl Shard {
     }
 }
 
-/// Serve a shard over TCP (thread per connection) until the listener errors.
+/// Serve a shard over TCP with the blocking personality (thread per
+/// connection) until the listener errors — the portable fallback; see
+/// [`server`] for the epoll event server.
 pub fn serve(shard: Arc<Shard>, listener: TcpListener) -> Result<()> {
-    loop {
-        let (sock, _) = listener.accept()?;
-        let shard = shard.clone();
-        std::thread::spawn(move || {
-            let _ = serve_conn(shard, sock);
-        });
-    }
+    crate::net::serve_blocking(shard, listener)
 }
 
-fn serve_conn(shard: Arc<Shard>, sock: TcpStream) -> Result<()> {
-    sock.set_nodelay(true)?;
-    let mut rd = BufReader::new(sock.try_clone()?);
-    let mut wr = sock;
-    // Borrowed parsing + coalesced responses; recoverable parse failures
-    // answer ERR and keep the connection (see `proto::serve_framed`).
-    // Batches run through per-connection scratch so a steady stream of
-    // MGET/MPUT frames reuses its buffers instead of allocating per
-    // batch.
-    let mut scratch = BatchScratch::new();
-    let mut subs: Vec<Response> = Vec::new();
-    proto::serve_framed(&mut rd, &mut wr, |req, out| match req.into_batch() {
-        Ok((op, batch)) => {
-            shard.handle_batch(op, &batch, &mut scratch, &mut subs);
-            proto::encode_multi_response(out, &subs)
+/// Build a [`crate::net::Server`] over this shard: the readiness event
+/// server by default.  Call `.handle()` for graceful stop, then `.run()`
+/// (blocking) on a dedicated thread.
+pub fn server(
+    shard: Arc<Shard>,
+    listener: TcpListener,
+    opts: crate::net::ServerOpts,
+) -> Result<crate::net::Server<Shard>> {
+    crate::net::Server::new(shard, listener, opts)
+}
+
+/// Per-connection handler state for the shard as a
+/// [`Service`](crate::net::Service): batch scratch plus the positional
+/// sub-response buffer — reused across every request of one connection.
+#[derive(Debug, Default)]
+pub struct ShardConnState {
+    scratch: BatchScratch,
+    subs: Vec<Response>,
+}
+
+impl crate::net::Service for Shard {
+    type ConnState = ShardConnState;
+
+    /// Borrowed parsing + coalesced responses; recoverable parse
+    /// failures already answered `ERR` upstream (see `proto`).  Batches
+    /// run through per-connection scratch so a steady stream of
+    /// MGET/MPUT frames reuses its buffers instead of allocating per
+    /// batch.
+    fn handle(&self, st: &mut ShardConnState, req: RequestRef<'_>, out: &mut Vec<u8>) -> Result<()> {
+        match req.into_batch() {
+            Ok((op, batch)) => {
+                self.handle_batch(op, &batch, &mut st.scratch, &mut st.subs);
+                proto::encode_multi_response(out, &st.subs)
+            }
+            Err(req) => proto::encode_response(out, &self.handle_ref(req, None)),
         }
-        Err(req) => proto::encode_response(out, &shard.handle_ref(req, None)),
-    })
+    }
 }
 
 /// Client handle to a shard: in-process or remote TCP (pooled connections).

@@ -1,0 +1,118 @@
+//! Wake-suppressed handoff queue: the acceptor → event-loop fd channel.
+//!
+//! The event server's acceptor thread pushes accepted sockets to one
+//! queue per event loop; the loop drains its queue when its `eventfd`
+//! wakes it.  A naive design signals the eventfd on *every* push — one
+//! syscall per accepted connection even when the loop is already awake
+//! and about to drain.  [`HandoffQueue`] suppresses redundant wakes with
+//! a single flag while keeping the one property the server depends on:
+//!
+//! > **No lost handoff:** whenever the queue is non-empty, either a wake
+//! > is in flight or the consumer is already past its flag-clear and
+//! > will take the queue lock (and therefore see the item).
+//!
+//! Protocol (all flag operations `SeqCst`, so the argument below is a
+//! single-total-order argument, checkable by the model scheduler):
+//!
+//! * **Producer** — enqueue under the lock, then `swap(true)` the flag.
+//!   Signal the consumer only if the swap returned `false`.
+//! * **Consumer** — on wake: `store(false)` the flag *first*, then take
+//!   the lock and drain.  (Clearing before draining is what makes the
+//!   suppressed-wake case safe — see below.)
+//!
+//! Why no handoff is lost when the producer suppresses its wake: the
+//! producer's swap returned `true`, so in the SC total order the swap
+//! landed between some earlier `swap(true)` (whose wake is in flight or
+//! being processed) and the consumer's next `store(false)`.  The
+//! producer's enqueue precedes its swap (program order), the swap
+//! precedes that `store(false)` (total order), and the store precedes
+//! the consumer's drain lock (program order) — so the drain's lock
+//! acquisition happens-after the enqueue's lock release and the drain
+//! sees the item.  If instead the consumer's `store(false)` came first,
+//! the swap returns `false` and the producer sends a fresh wake.
+//! Exercised across schedules by `rust/tests/model.rs`
+//! (`handoff_queue_*`), which fails on starvation if a wake is ever
+//! lost.
+
+use std::collections::VecDeque;
+
+use crate::sync::{AtomicBool, Mutex, Ordering};
+
+/// Multi-producer, single-consumer queue with wake-suppression — the
+/// consumer is notified out of band (an `eventfd` in the event server,
+/// a spin-wait in the model tests), and [`push`](Self::push) reports
+/// whether that notification must actually be sent.
+#[derive(Debug, Default)]
+pub struct HandoffQueue<T> {
+    items: Mutex<VecDeque<T>>,
+    /// `true` while a wake is in flight (or being processed) that the
+    /// consumer has not yet acknowledged with its pre-drain clear.
+    wake_pending: AtomicBool,
+}
+
+impl<T> HandoffQueue<T> {
+    /// New empty queue.
+    pub fn new() -> Self {
+        Self { items: Mutex::new(VecDeque::new()), wake_pending: AtomicBool::new(false) }
+    }
+
+    /// Enqueue `item`.  Returns `true` when the caller must wake the
+    /// consumer (no wake already in flight); `false` when an
+    /// outstanding wake is guaranteed to cover this item.
+    pub fn push(&self, item: T) -> bool {
+        self.items.lock().unwrap().push_back(item);
+        // ord: SeqCst — the no-lost-handoff proof is a single-total-order
+        // argument over this swap and the consumer's pre-drain store
+        // (see module docs); model-checked in rust/tests/model.rs.
+        !self.wake_pending.swap(true, Ordering::SeqCst)
+    }
+
+    /// Consumer side: acknowledge the wake, then move every queued item
+    /// into `into` (appended; `into` is not cleared).  Must be called on
+    /// *every* wake, before the consumer goes back to sleep.
+    pub fn drain(&self, into: &mut Vec<T>) {
+        // ord: SeqCst — must precede the lock acquisition below in the
+        // total order; a producer that observes `true` from its swap is
+        // thereby ordered before this store, so its item is in the queue
+        // by the time we drain (see module docs).
+        self.wake_pending.store(false, Ordering::SeqCst);
+        let mut q = self.items.lock().unwrap();
+        into.extend(q.drain(..));
+    }
+
+    /// Queued item count (diagnostics/tests; racy by nature).
+    pub fn len(&self) -> usize {
+        self.items.lock().unwrap().len()
+    }
+
+    /// `true` when no items are queued (diagnostics/tests; racy).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_drain_roundtrip() {
+        let q = HandoffQueue::new();
+        assert!(q.push(1), "first push must request a wake");
+        assert!(!q.push(2), "second push rides the outstanding wake");
+        let mut got = Vec::new();
+        q.drain(&mut got);
+        assert_eq!(got, vec![1, 2]);
+        assert!(q.is_empty());
+        assert!(q.push(3), "after a drain the next push wakes again");
+    }
+
+    #[test]
+    fn drain_appends_without_clearing() {
+        let q = HandoffQueue::new();
+        q.push("a");
+        let mut got = vec!["seed"];
+        q.drain(&mut got);
+        assert_eq!(got, vec!["seed", "a"]);
+    }
+}

@@ -83,6 +83,7 @@
 pub mod model;
 
 pub mod cell;
+pub mod handoff;
 
 // ---------------------------------------------------------------------
 // Normal builds: zero-cost re-exports of std.

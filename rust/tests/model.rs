@@ -431,3 +431,109 @@ fn regression_pr4_fail_scale_fail_keeps_maroon_records() {
         }
     }
 }
+
+// ---------------------------------------------------------------------
+// HandoffQueue: the acceptor → event-loop wake-suppression protocol
+// ---------------------------------------------------------------------
+
+/// No-lost-handoff for `sync::handoff::HandoffQueue` (the event server's
+/// acceptor → loop socket channel): producers enqueue and signal a
+/// modeled eventfd only when `push` says so; the consumer sleeps until
+/// the eventfd counter moves, takes the counter (read-and-reset, like a
+/// real eventfd), and drains.  A lost wake — an item enqueued with no
+/// wake in flight and no drain to cover it — strands the consumer in
+/// its sleep loop on a non-empty queue, which the explorer reports as a
+/// step-budget starvation failure.
+#[test]
+fn handoff_queue_never_loses_a_wake() {
+    use binhash::sync::handoff::HandoffQueue;
+    model::explore("handoff-wake-suppression", 4_000, || {
+        let q = Arc::new(HandoffQueue::new());
+        let eventfd = Arc::new(AtomicU64::new(0));
+
+        let producers: Vec<_> = (0..2)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                let eventfd = Arc::clone(&eventfd);
+                spawn(move || {
+                    for i in 0..2u64 {
+                        if q.push(p * 10 + i) {
+                            // ord: SeqCst — models the eventfd signal
+                            // write; pairs with the consumer's swap.
+                            eventfd.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                })
+            })
+            .collect();
+
+        let consumer = {
+            let q = Arc::clone(&q);
+            let eventfd = Arc::clone(&eventfd);
+            spawn(move || {
+                let mut got = Vec::new();
+                while got.len() < 4 {
+                    // epoll_wait on the eventfd: a lost wake starves
+                    // this loop with items still queued.
+                    // ord: SeqCst — models the readiness poll.
+                    while eventfd.load(Ordering::SeqCst) == 0 {
+                        spin_yield();
+                    }
+                    // eventfd read: returns and resets the whole counter.
+                    // ord: SeqCst — models the atomic eventfd read.
+                    eventfd.swap(0, Ordering::SeqCst);
+                    q.drain(&mut got);
+                }
+                got
+            })
+        };
+
+        for p in producers {
+            p.join().unwrap();
+        }
+        let mut got = consumer.join().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 10, 11], "handoff dropped or duplicated an item");
+        assert!(q.is_empty());
+    });
+}
+
+/// Bounded exhaustive pass over the smallest interesting shape (one
+/// producer, two pushes, one consumer): *every* interleaving of the
+/// swap/store/lock protocol delivers both items and leaves the queue
+/// empty.
+#[test]
+fn handoff_queue_exhaustive_single_producer() {
+    use binhash::sync::handoff::HandoffQueue;
+    let runs = model::explore_exhaustive("handoff-exhaustive", 20_000, || {
+        let q = Arc::new(HandoffQueue::new());
+        let eventfd = Arc::new(AtomicU64::new(0));
+
+        let producer = {
+            let q = Arc::clone(&q);
+            let eventfd = Arc::clone(&eventfd);
+            spawn(move || {
+                for i in 1..=2u64 {
+                    if q.push(i) {
+                        // ord: SeqCst — models the eventfd signal write.
+                        eventfd.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            })
+        };
+
+        let mut got = Vec::new();
+        while got.len() < 2 {
+            // ord: SeqCst — models the readiness poll.
+            while eventfd.load(Ordering::SeqCst) == 0 {
+                spin_yield();
+            }
+            // ord: SeqCst — models the atomic eventfd read-and-reset.
+            eventfd.swap(0, Ordering::SeqCst);
+            q.drain(&mut got);
+        }
+        producer.join().unwrap();
+        assert_eq!(got, vec![1, 2], "handoff reordered, dropped, or duplicated");
+    });
+    assert!(runs > 0, "exhaustive explorer enumerated no schedules");
+}

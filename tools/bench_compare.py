@@ -37,6 +37,12 @@ def rows(doc):
         ratio = dig(c, "batch", "mget64_vs_get")
         if ratio is not None:
             yield (f"n={n} mget64-vs-get ratio", -ratio)  # sentinel: ratio row
+    fan = doc.get("fanin")
+    if isinstance(fan, dict):  # null on platforms without the event server
+        conns = fan.get("connections")
+        yield (f"fanin@{conns} connect", dig(fan, "connect", "ns_op"))
+        yield (f"fanin@{conns} hot get", dig(fan, "get", "ns_op"))
+        yield (f"fanin@{conns} hot get p99", fan.get("p99"))
 
 
 def main():
