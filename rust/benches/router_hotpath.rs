@@ -18,6 +18,14 @@
 //! `Router::handle_ref` with borrowed keys and `Arc` values — the same
 //! allocation-free path the servers use.
 //!
+//! A standalone replication phase (memento, n = 16, `factor = 2`)
+//! prices what a second copy costs each op: PUT with its replica
+//! fan-out, steady GET (unchanged path — replicas cost writes, not
+//! healthy reads), degraded GET served via surviving replicas
+//! (p50/p99, zero UNAVAILABLE expected), and the anti-entropy RESTORE
+//! (digest round-trips + skipped stripe scans from the router's
+//! metrics).
+//!
 //! Custom harness (`harness = false`): ops/s + ns/op over seeded key sets,
 //! printed human-readably *and* written as `BENCH_router.json` (override
 //! the path with `BENCH_OUT`) — CI uploads the JSON so the perf
@@ -251,15 +259,113 @@ fn main() {
         clusters_json.push(c);
     }
 
+    let replication = replication_json();
     let fanin = fanin_json();
     let json = format!(
         "{{\n  \"bench\": \"router_hotpath\",\n  \"ops_per_phase\": {OPS},\n  \
-         \"clusters\": [\n{}\n  ],\n  \"fanin\": {fanin}\n}}\n",
+         \"clusters\": [\n{}\n  ],\n  \"replication\": {replication},\n  \"fanin\": {fanin}\n}}\n",
         clusters_json.join(",\n")
     );
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_router.json".to_string());
     std::fs::write(&out, &json).expect("write bench JSON");
     println!("wrote {out}");
+}
+
+/// Replication phase: memento n = 16 with `factor = 2` (primary-ack
+/// writes).  Prices the replica fan-out per PUT, confirms steady GETs
+/// are unchanged, serves a degraded sweep entirely from surviving
+/// replicas, and reports the anti-entropy RESTORE's round-trip and
+/// skipped-stripe counts.  Returns the phase's JSON object.
+fn replication_json() -> String {
+    use binhash::shard::{Shard, ShardClient};
+    const N: u32 = 16;
+    let router = Router::with_replication(
+        local_cluster("memento", N).unwrap(),
+        Box::new(|id| ShardClient::Local(Shard::new(id))),
+        None,
+        2,
+        false,
+    );
+    let mut gen = StringKeys::new(9, 8, 32);
+    let keys: Vec<String> = (0..OPS).map(|_| gen.next_key()).collect();
+    let values: Vec<Value> = (0..256).map(|i| vec![i as u8; 32].into()).collect();
+
+    // PUT at factor 2: primary write + one replica write per op.
+    let t0 = Instant::now();
+    for (i, k) in keys.iter().enumerate() {
+        let r =
+            router.handle_ref(RequestRef::Put { key: k, value: values[i & 0xFF].clone() });
+        black_box(r);
+    }
+    let put_ns = ns_op(t0.elapsed(), OPS);
+
+    // Steady GET at factor 2: identical to the factor-1 path (replicas
+    // cost writes, not healthy reads) — the JSON pairs it with the
+    // steady phases above to prove exactly that.
+    let t0 = Instant::now();
+    for k in &keys {
+        black_box(router.handle_ref(RequestRef::Get { key: k }));
+    }
+    let get_ns = ns_op(t0.elapsed(), OPS);
+
+    // Degraded GET via replicas: with one shard down the marooned slice
+    // is served by the surviving copies — zero UNAVAILABLE expected.
+    router.fail_shard(N / 2).expect("fail_shard");
+    let t0 = Instant::now();
+    for k in &keys {
+        black_box(router.handle_ref(RequestRef::Get { key: k }));
+    }
+    let deg_ns = ns_op(t0.elapsed(), OPS);
+    // Separate instrumented pass for the tail percentiles.
+    let hist = LatencyHistogram::new();
+    let mut unavailable = 0u64;
+    for k in &keys {
+        let t1 = Instant::now();
+        let r = router.handle_ref(RequestRef::Get { key: k });
+        hist.record(t1.elapsed());
+        if matches!(r, Response::Err(_)) {
+            unavailable += 1;
+        }
+        black_box(r);
+    }
+    let p50 = hist.quantile_ns(0.5);
+    let p99 = hist.quantile_ns(0.99);
+
+    // Anti-entropy RESTORE: round-trips spent vs stripe scans skipped
+    // by the digest exchange (the full re-stream would have paid
+    // `round_trips + skipped - digest prologue`).
+    let rt0 = router.metrics.migration_round_trips.load(Ordering::Relaxed);
+    let sk0 = router.metrics.ae_stripes_skipped.load(Ordering::Relaxed);
+    router.restore_shard(N / 2).expect("restore_shard");
+    let round_trips = router.metrics.migration_round_trips.load(Ordering::Relaxed) - rt0;
+    let skipped = router.metrics.ae_stripes_skipped.load(Ordering::Relaxed) - sk0;
+
+    println!(
+        "replication (memento n={N}, factor=2): put: {put_ns:>8.0} ns/op ({:>9.0} op/s)   \
+         get: {get_ns:>8.0} ns/op ({:>9.0} op/s)",
+        1e9 / put_ns,
+        1e9 / get_ns,
+    );
+    println!(
+        "      degraded get via replicas: {deg_ns:>8.0} ns/op ({:>9.0} op/s)  \
+         p50={p50}ns p99={p99}ns  {unavailable} UNAVAILABLE (0 expected)",
+        1e9 / deg_ns,
+    );
+    println!(
+        "      anti-entropy restore: {round_trips} round-trips, \
+         {skipped} stripe scans skipped by digests"
+    );
+    format!(
+        "{{\"engine\": \"memento\", \"n\": {N}, \"factor\": 2, \
+         \"put\": {}, \"get\": {}, \"degraded_get\": {}, \
+         \"degraded_p50\": {p50}, \"degraded_p99\": {p99}, \
+         \"unavailable\": {unavailable}, \
+         \"restore_round_trips\": {round_trips}, \
+         \"restore_stripes_skipped\": {skipped}}}",
+        op_json(put_ns),
+        op_json(get_ns),
+        op_json(deg_ns),
+    )
 }
 
 /// High-fan-in phase: an event-mode `net::Server` holding `FANIN_CONNS`

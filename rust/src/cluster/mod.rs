@@ -29,11 +29,33 @@
 //! pre-failure placement, so a miss on a key whose data is marooned on a
 //! dead shard answers a distinguishable `UNAVAILABLE` error instead of
 //! `NIL` — or worse, a hang on a dead connection.
+//!
+//! With `replication.factor` R > 1 a snapshot also carries a
+//! [`ReplicaMap`]: the derived *secondary* placements that put every key
+//! on its top-R buckets.  For fault-tolerant engines the rank-1 replica
+//! of a key with primary `p` is `(engine − p).bucket(digest)` — the same
+//! fork + `remove_arbitrary` construction the failover path uses to
+//! build a degraded engine, which is exactly what makes a failed
+//! primary's keys land *on* their replica after `FAIL`.  The per-bucket
+//! "minus" forks are precomputed once per publication (topology changes
+//! are rare), so the hot path derives a replica with one engine lookup
+//! and zero allocation.  Rank-1-only engines without a fault-tolerant
+//! surface (binomial, jump, …) fall back to a deterministic re-hash
+//! probe with exclusion; both schemes are pure functions of
+//! `(engine, digest, rank)`, so writer, reader, and anti-entropy sweep
+//! always agree on the replica set.
 
 use std::time::SystemTime;
 
 use crate::algorithms::ConsistentHasher;
+use crate::hashing::splitmix64;
 use crate::shard::ShardClient;
+
+/// Seed folded into the digest for the re-hash replica probe of engines
+/// without a fault-tolerant surface.  Any fixed odd-ish constant works;
+/// it only has to differ per probe attempt and stay stable forever
+/// (replica placement is part of the data layout).
+const REPLICA_PROBE_SEED: u64 = 0x9E37_79B9_5EED_0008;
 
 /// A topology change.
 #[derive(Debug, Clone)]
@@ -82,6 +104,166 @@ pub struct MigrationOrigin {
     /// breaks down on degraded topologies, where the engine's working
     /// count is always below the slot count.
     pub settle_len: usize,
+    /// `Some(bucket)` when this migration is an anti-entropy restore
+    /// *into* that bucket: the sweep fetches the destination's
+    /// per-stripe digests once up front and skips every `(source,
+    /// stripe)` scan whose digest already matches, so a restore streams
+    /// only divergent stripes instead of every survivor's full
+    /// keyspace.  `None` on scale-up/scale-down migrations, which fan
+    /// out to many destinations and always scan.
+    pub ae_dest: Option<u32>,
+}
+
+/// Derived secondary placements for `replication.factor` R > 1: maps a
+/// key's `(digest, primary)` to its replica buckets.  Immutable once
+/// built (snapshots never mutate after publication), so the data path
+/// reads it lock-free exactly like the engine itself.
+pub struct ReplicaMap {
+    /// Configured replication factor (≥ 2 when a map exists at all; a
+    /// factor-1 snapshot carries `None` and pays nothing).
+    factor: u32,
+    /// For fault-tolerant engines: `minus[b]` is a fork of the snapshot
+    /// engine with working bucket `b` removed, so the rank-1 replica of
+    /// a key whose primary is `b` is one O(1) lookup.  `None` entries
+    /// are non-working (failed) buckets.  Empty for engines without a
+    /// fault-tolerant surface, which use the re-hash probe instead.
+    minus: Vec<Option<Box<dyn ConsistentHasher>>>,
+}
+
+impl ReplicaMap {
+    /// Build the replica map for one published snapshot, or `None` when
+    /// replication is off (`factor <= 1`) or impossible (fewer than two
+    /// working buckets).  `slots` is the snapshot's shard-list length —
+    /// on a degraded topology it exceeds the engine's working count.
+    pub fn build(
+        engine: &dyn ConsistentHasher,
+        slots: usize,
+        factor: u32,
+    ) -> Option<Self> {
+        if factor <= 1 || engine.len() < 2 {
+            return None;
+        }
+        let minus = if engine.as_fault_tolerant().is_some() {
+            (0..slots as u32)
+                .map(|b| {
+                    let working = match engine.as_fault_tolerant() {
+                        Some(ft) => ft.is_working(b),
+                        None => true,
+                    };
+                    if !working {
+                        return None;
+                    }
+                    let mut fork = engine.fork();
+                    let ft = fork.as_fault_tolerant_mut()?;
+                    ft.remove_arbitrary(b);
+                    Some(fork)
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        Some(Self { factor, minus })
+    }
+
+    /// Configured replication factor.
+    pub fn factor(&self) -> u32 {
+        self.factor
+    }
+
+    /// The rank-1 replica of a key: one engine lookup, no allocation.
+    /// `None` when the primary has no live replica (e.g. the minus fork
+    /// could not be built).
+    #[inline]
+    pub fn first_replica(
+        &self,
+        engine: &dyn ConsistentHasher,
+        digest: u64,
+        primary: u32,
+    ) -> Option<u32> {
+        if !self.minus.is_empty() {
+            let m = self.minus.get(primary as usize)?.as_ref()?;
+            return Some(m.bucket(digest));
+        }
+        self.probe_replica(engine, digest, primary, &[])
+    }
+
+    /// Append the key's replica buckets (up to `factor − 1`, primary
+    /// excluded, in rank order) to `out`.  Rank 1 reads the precomputed
+    /// minus fork; deeper ranks fork on demand — acceptable because
+    /// they only run on R > 2 configurations or slow fallback paths.
+    pub fn replicas_into(
+        &self,
+        engine: &dyn ConsistentHasher,
+        digest: u64,
+        primary: u32,
+        out: &mut Vec<u32>,
+    ) {
+        let base = out.len();
+        let want = (self.factor.saturating_sub(1)) as usize;
+        if want == 0 {
+            return;
+        }
+        if !self.minus.is_empty() {
+            let Some(m1) = self.minus.get(primary as usize).and_then(|o| o.as_ref())
+            else {
+                return;
+            };
+            out.push(m1.bucket(digest));
+            if want >= 2 {
+                let mut cur = m1.fork();
+                while out.len() - base < want && cur.len() > 1 {
+                    let last = *out.last().expect("pushed above");
+                    match cur.as_fault_tolerant_mut() {
+                        Some(ft) => ft.remove_arbitrary(last),
+                        None => break,
+                    }
+                    out.push(cur.bucket(digest));
+                }
+            }
+            return;
+        }
+        // Re-hash probe for rank-1-only engines (never degraded: only
+        // fault-tolerant engines can hold failures).
+        let n = engine.len() as usize;
+        let want = want.min(n.saturating_sub(1));
+        while out.len() - base < want {
+            match self.probe_replica(engine, digest, primary, &out[base..]) {
+                Some(b) => out.push(b),
+                None => break,
+            }
+        }
+    }
+
+    /// One probe round: the lowest-rank replica not yet in `chosen`.
+    /// Bounded re-hash attempts, then a deterministic linear fallback so
+    /// the answer is total whenever a distinct bucket exists.
+    fn probe_replica(
+        &self,
+        engine: &dyn ConsistentHasher,
+        digest: u64,
+        primary: u32,
+        chosen: &[u32],
+    ) -> Option<u32> {
+        let n = engine.len();
+        if n < 2 {
+            return None;
+        }
+        let attempts = 8 * (chosen.len() as u64 + 2);
+        for j in 0..attempts {
+            let salted = splitmix64(digest ^ REPLICA_PROBE_SEED.wrapping_add(j));
+            let cand = engine.bucket(salted);
+            if cand != primary && !chosen.contains(&cand) {
+                return Some(cand);
+            }
+        }
+        for k in 1..=n {
+            let cand = (primary + k) % n;
+            if cand != primary && !chosen.contains(&cand) {
+                return Some(cand);
+            }
+        }
+        None
+    }
 }
 
 /// An immutable, epoch-stamped placement view: frozen engine + shard
@@ -108,6 +290,11 @@ pub struct PlacementSnapshot {
     pub origin: Option<MigrationOrigin>,
     /// `Some` while one or more shards are failed.
     pub degraded: Option<DegradedState>,
+    /// Derived replica placements when `replication.factor` > 1; `None`
+    /// on factor-1 clusters, which pay nothing for replication support.
+    /// Attached centrally by the router's publish path so every epoch's
+    /// map matches that epoch's engine.
+    pub replicas: Option<ReplicaMap>,
 }
 
 /// Failed-shard bookkeeping carried by a degraded [`PlacementSnapshot`].
@@ -197,6 +384,26 @@ impl PlacementSnapshot {
         d.maroons
             .iter()
             .find_map(|(engine, b)| (engine.bucket(digest) == *b).then_some(*b))
+    }
+
+    /// The key's rank-1 replica bucket under this snapshot's engine, if
+    /// replication is on and one exists.  O(1): one lookup in the
+    /// precomputed minus fork (or a bounded probe on rank-1-only
+    /// engines).
+    #[inline]
+    pub fn first_replica(&self, digest: u64, primary: u32) -> Option<u32> {
+        self.replicas
+            .as_ref()?
+            .first_replica(self.engine.as_ref(), digest, primary)
+    }
+
+    /// Append the key's full replica set (rank order, primary excluded)
+    /// to `out`.  No-op on factor-1 snapshots.
+    #[inline]
+    pub fn replicas_into(&self, digest: u64, primary: u32, out: &mut Vec<u32>) {
+        if let Some(map) = &self.replicas {
+            map.replicas_into(self.engine.as_ref(), digest, primary, out);
+        }
     }
 
     /// The *previous* topology's owner of `digest`, when a migration is in
@@ -300,6 +507,7 @@ impl Cluster {
                 shards: self.shards,
                 origin: None,
                 degraded: None,
+                replicas: None,
             },
             self.events,
         )
@@ -399,8 +607,10 @@ mod tests {
                 engine: Box::new(BinomialHash::new(3)),
                 sources: vec![0, 1, 2],
                 settle_len: 4,
+                ae_dest: None,
             }),
             degraded: None,
+            replicas: None,
         };
         assert!(snap.is_migrating());
         let mut rng = crate::hashing::SplitMix64Rng::new(3);
@@ -432,6 +642,7 @@ mod tests {
             shards,
             origin: None,
             degraded: Some(DegradedState { failed: vec![2], maroons: vec![(pre_fail, 2)] }),
+            replicas: None,
         };
         assert!(snap.is_degraded());
         assert!(snap.is_failed(2));
@@ -464,9 +675,89 @@ mod tests {
             shards: (0..4).map(|i| ShardClient::Local(Shard::new(i))).collect(),
             origin: None,
             degraded: None,
+            replicas: None,
         };
         assert!(!healthy.is_degraded());
         assert!(!healthy.is_failed(2));
         assert_eq!(healthy.marooned(12345), None);
+    }
+
+    #[test]
+    fn replica_map_off_below_factor_two_or_two_buckets() {
+        let e = BinomialHash::new(4);
+        assert!(ReplicaMap::build(&e, 4, 1).is_none());
+        let tiny = BinomialHash::new(1);
+        assert!(ReplicaMap::build(&tiny, 1, 2).is_none());
+    }
+
+    #[test]
+    fn ft_replica_matches_degraded_engine_construction() {
+        // The load-bearing identity behind FAIL→GET-via-replica: for a
+        // fault-tolerant engine the rank-1 replica of a key with
+        // primary p is (engine − p).bucket(d) — exactly the placement
+        // the failover path publishes after p fails.  So a key's
+        // post-FAIL primary IS its pre-FAIL replica.
+        use crate::algorithms::memento::MementoHash;
+        let engine = MementoHash::new(4);
+        let map = ReplicaMap::build(&engine, 4, 2).expect("factor 2 on 4 buckets");
+        assert_eq!(map.factor(), 2);
+        let mut rng = crate::hashing::SplitMix64Rng::new(21);
+        for _ in 0..2_000 {
+            let d = rng.next_u64();
+            let p = engine.bucket(d);
+            let r = map.first_replica(&engine, d, p).expect("replica exists");
+            assert_ne!(r, p);
+            let mut degraded = engine.fork();
+            degraded
+                .as_fault_tolerant_mut()
+                .expect("memento is fault-tolerant")
+                .remove_arbitrary(p);
+            assert_eq!(r, degraded.bucket(d), "replica ≠ post-failure owner");
+        }
+    }
+
+    #[test]
+    fn probe_replicas_are_distinct_and_deterministic() {
+        // Rank-1-only engines (no fault-tolerant surface) use the
+        // re-hash probe: still a pure function of (engine, digest,
+        // rank), still distinct from the primary and from each other.
+        let engine = BinomialHash::new(5);
+        let map = ReplicaMap::build(&engine, 5, 3).expect("factor 3 on 5 buckets");
+        let mut rng = crate::hashing::SplitMix64Rng::new(22);
+        for _ in 0..1_000 {
+            let d = rng.next_u64();
+            let p = engine.bucket(d);
+            let mut set = Vec::new();
+            map.replicas_into(&engine, d, p, &mut set);
+            assert_eq!(set.len(), 2);
+            assert!(!set.contains(&p));
+            assert_ne!(set[0], set[1]);
+            assert!(set.iter().all(|b| *b < 5));
+            let mut again = Vec::new();
+            map.replicas_into(&engine, d, p, &mut again);
+            assert_eq!(set, again, "replica derivation must be deterministic");
+            assert_eq!(map.first_replica(&engine, d, p), Some(set[0]));
+        }
+    }
+
+    #[test]
+    fn degraded_engine_replicas_avoid_failed_buckets() {
+        use crate::algorithms::{memento::MementoHash, FaultTolerant};
+        let mut engine = MementoHash::new(5);
+        engine.remove_arbitrary(2);
+        let map = ReplicaMap::build(&engine, 5, 3).expect("3 of 4 working");
+        let mut rng = crate::hashing::SplitMix64Rng::new(23);
+        for _ in 0..1_000 {
+            let d = rng.next_u64();
+            let p = engine.bucket(d);
+            let mut set = Vec::new();
+            map.replicas_into(&engine, d, p, &mut set);
+            assert!(!set.is_empty());
+            assert!(!set.contains(&p));
+            assert!(!set.contains(&2), "replica landed on the failed bucket");
+        }
+        // The failed bucket has no minus fork — asking for its replica
+        // (it can't be a primary while failed) answers None, not junk.
+        assert_eq!(map.first_replica(&engine, 7, 2), None);
     }
 }

@@ -18,6 +18,8 @@ pub struct Config {
     pub cluster: ClusterConfig,
     /// Router front-end settings.
     pub router: RouterConfig,
+    /// Replication settings.
+    pub replication: ReplicationConfig,
     /// AOT artifact settings.
     pub artifacts: ArtifactsConfig,
 }
@@ -52,6 +54,17 @@ pub struct RouterConfig {
     pub max_conns: usize,
 }
 
+/// Replication settings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplicationConfig {
+    /// Copies per key (1 = replication off; primary only).
+    pub factor: u32,
+    /// Write acknowledgement mode: `"primary"` (ack once the primary
+    /// write lands; replica failures are counted, not surfaced) or
+    /// `"all"` (any replica failure fails the write).
+    pub write_mode: String,
+}
+
 /// Artifact settings.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArtifactsConfig {
@@ -80,6 +93,12 @@ impl Default for RouterConfig {
     }
 }
 
+impl Default for ReplicationConfig {
+    fn default() -> Self {
+        Self { factor: 1, write_mode: "primary".into() }
+    }
+}
+
 impl Default for ArtifactsConfig {
     fn default() -> Self {
         Self { dir: "artifacts".into(), enable_bulk: false }
@@ -91,6 +110,7 @@ impl Default for Config {
         Self {
             cluster: ClusterConfig::default(),
             router: RouterConfig::default(),
+            replication: ReplicationConfig::default(),
             artifacts: ArtifactsConfig::default(),
         }
     }
@@ -215,6 +235,13 @@ impl Config {
                 other => bail!("router.max_conns: wrong type {other:?}"),
             }
         }
+        if let Some(v) = map.remove("replication.factor") {
+            match v {
+                Value::Int(x) => cfg.replication.factor = u32::try_from(x)?,
+                other => bail!("replication.factor: wrong type {other:?}"),
+            }
+        }
+        take!(map, "replication.write_mode", Str, cfg.replication.write_mode);
         take!(map, "artifacts.dir", Str, cfg.artifacts.dir);
         take!(map, "artifacts.enable_bulk", Bool, cfg.artifacts.enable_bulk);
         if let Some(k) = map.keys().next() {
@@ -244,6 +271,7 @@ impl Config {
             "[cluster]\nalgorithm = \"{}\"\nomega = {}\ninitial_shards = {}\n\n\
              [router]\nlisten = \"{}\"\npool = {}\nshard_addrs = [{}]\n\
              serve = \"{}\"\nevent_loops = {}\nmax_conns = {}\n\n\
+             [replication]\nfactor = {}\nwrite_mode = \"{}\"\n\n\
              [artifacts]\ndir = \"{}\"\nenable_bulk = {}\n",
             self.cluster.algorithm,
             self.cluster.omega,
@@ -254,6 +282,8 @@ impl Config {
             self.router.serve,
             self.router.event_loops,
             self.router.max_conns,
+            self.replication.factor,
+            self.replication.write_mode,
             self.artifacts.dir,
             self.artifacts.enable_bulk,
         )
@@ -275,6 +305,17 @@ impl Config {
             self.router.serve
         );
         ensure!(self.router.max_conns >= 1, "max_conns must be >= 1");
+        ensure!(self.replication.factor >= 1, "replication.factor must be >= 1");
+        ensure!(
+            self.replication.factor <= 8,
+            "replication.factor must be <= 8 (got {})",
+            self.replication.factor
+        );
+        ensure!(
+            matches!(self.replication.write_mode.as_str(), "primary" | "all"),
+            "replication.write_mode must be \"primary\" or \"all\", got {:?}",
+            self.replication.write_mode
+        );
         if !self.router.shard_addrs.is_empty() {
             ensure!(
                 self.router.shard_addrs.len() == self.cluster.initial_shards as usize,
@@ -376,5 +417,31 @@ mod tests {
         let mut bad = Config::default();
         bad.router.serve = "fibers".into();
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn replication_knobs_parse_and_validate() {
+        let c = Config::parse("[replication]\nfactor = 2\nwrite_mode = \"all\"\n")
+            .unwrap();
+        assert_eq!(c.replication.factor, 2);
+        assert_eq!(c.replication.write_mode, "all");
+        c.validate().unwrap();
+
+        // Defaults: replication off, primary-ack.
+        let d = Config::default();
+        assert_eq!(d.replication.factor, 1);
+        assert_eq!(d.replication.write_mode, "primary");
+        d.validate().unwrap();
+
+        let mut bad = Config::default();
+        bad.replication.factor = 0;
+        assert!(bad.validate().is_err());
+        bad.replication.factor = 9;
+        assert!(bad.validate().is_err());
+        bad.replication.factor = 2;
+        bad.replication.write_mode = "quorum".into();
+        assert!(bad.validate().is_err());
+
+        assert!(Config::parse("[replication]\nfactor = \"two\"\n").is_err());
     }
 }

@@ -128,10 +128,12 @@ fn run_router(cfg: Config) -> Result<()> {
         None
     };
 
-    let router = Router::with_options(
+    let router = Router::with_replication(
         cluster,
         Box::new(|id| ShardClient::Local(Shard::new(id))),
         bulk,
+        cfg.replication.factor,
+        cfg.replication.write_mode == "all",
     );
     let listener = TcpListener::bind(&cfg.router.listen)?;
     let opts = ServerOpts {
@@ -141,8 +143,14 @@ fn run_router(cfg: Config) -> Result<()> {
         ..ServerOpts::default()
     };
     eprintln!(
-        "router listening on {} (algo={}, n={}, serve={}, max_conns={})",
-        cfg.router.listen, cfg.cluster.algorithm, n, cfg.router.serve, cfg.router.max_conns
+        "router listening on {} (algo={}, n={}, serve={}, max_conns={}, replication={}x/{})",
+        cfg.router.listen,
+        cfg.cluster.algorithm,
+        n,
+        cfg.router.serve,
+        cfg.router.max_conns,
+        cfg.replication.factor,
+        cfg.replication.write_mode
     );
     router.server(listener, opts)?.run()
 }

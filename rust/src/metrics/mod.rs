@@ -113,6 +113,25 @@ pub struct RouterMetrics {
     /// is the realized batching factor — how many keys each shard
     /// round-trip amortized.
     pub batch_fanouts: AtomicU64,
+    /// Replica writes fanned out behind primaries (`replication.factor`
+    /// − 1 per accepted PUT/DEL when the factor is > 1).
+    pub replica_writes: AtomicU64,
+    /// Replica writes that errored.  Under `write_mode = "primary"`
+    /// these are absorbed (the client saw the primary's ack) and left
+    /// for anti-entropy; under `"all"` the request also failed.
+    pub replica_write_failures: AtomicU64,
+    /// GETs answered from a replica after the primary missed (degraded
+    /// fallback reads).
+    pub replica_reads: AtomicU64,
+    /// Replica-served GETs whose value was written back to the current
+    /// primary (read repair).
+    pub read_repairs: AtomicU64,
+    /// Shard round-trips issued by migrations (scans, batched moves,
+    /// and anti-entropy `DIGEST` exchanges).
+    pub migration_round_trips: AtomicU64,
+    /// `(source, stripe)` scans skipped by anti-entropy digest
+    /// comparison during restores.
+    pub ae_stripes_skipped: AtomicU64,
     /// End-to-end request latency.
     pub latency: LatencyHistogram,
     /// Placement (hash lookup) latency.
@@ -131,6 +150,8 @@ impl RouterMetrics {
             "gets={} puts={} dels={} errors={} migrated={} batches={} \
              dual_reads={} epochs={} failovers={} restores={} unavailable={} \
              mget_keys={} mput_keys={} batch_fanouts={} \
+             replica_writes={} replica_write_failures={} replica_reads={} \
+             read_repairs={} migration_round_trips={} ae_stripes_skipped={} \
              p50={}ns p99={}ns mean={:.0}ns",
             self.gets.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
             self.puts.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
@@ -146,6 +167,12 @@ impl RouterMetrics {
             self.mget_keys.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
             self.mput_keys.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
             self.batch_fanouts.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
+            self.replica_writes.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
+            self.replica_write_failures.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
+            self.replica_reads.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
+            self.read_repairs.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
+            self.migration_round_trips.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
+            self.ae_stripes_skipped.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
             self.latency.quantile_ns(0.5),
             self.latency.quantile_ns(0.99),
             self.latency.mean_ns(),
@@ -227,12 +254,20 @@ mod tests {
         m.gets.fetch_add(3, Ordering::Relaxed); // ord: test-only
         m.mget_keys.fetch_add(2, Ordering::Relaxed); // ord: test-only
         m.batch_fanouts.fetch_add(1, Ordering::Relaxed); // ord: test-only
+        m.replica_writes.fetch_add(5, Ordering::Relaxed); // ord: test-only
+        m.replica_reads.fetch_add(4, Ordering::Relaxed); // ord: test-only
         m.latency.record(Duration::from_micros(5));
         let s = m.summary();
         assert!(s.contains("gets=3"));
         assert!(s.contains("mget_keys=2"));
         assert!(s.contains("mput_keys=0"));
         assert!(s.contains("batch_fanouts=1"));
+        assert!(s.contains("replica_writes=5"));
+        assert!(s.contains("replica_write_failures=0"));
+        assert!(s.contains("replica_reads=4"));
+        assert!(s.contains("read_repairs=0"));
+        assert!(s.contains("migration_round_trips=0"));
+        assert!(s.contains("ae_stripes_skipped=0"));
     }
 
     #[test]

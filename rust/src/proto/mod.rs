@@ -12,6 +12,7 @@
 //! SCANSTRIPE <i>\n            -> KEYS <count>\n(<key>\n)*  (shard only)
 //! PURGETOMBS\n                -> NUM <count>\n       (shard only)
 //! WIPE\n                      -> NUM <count>\n       (shard only)
+//! DIGEST\n                    -> NUMS <n>( <x>)*\n   (shard only)
 //! COUNT\n                     -> NUM <count>\n
 //! STATS\n                     -> INFO <line>\n
 //! SCALEUP\n                   -> NUM <new-n>\n        (router only)
@@ -333,6 +334,10 @@ pub enum Request {
     /// router before a failed shard rejoins, because the shard missed
     /// every write and delete while it was down).
     Wipe,
+    /// Per-stripe content digests (shard-internal; drives the restore
+    /// anti-entropy sweep, which skips stripes whose digests already
+    /// match between source and destination).
+    Digest,
     /// Fetch many values in one round-trip (`MGET`).
     MGet {
         /// Object keys, answered positionally.
@@ -428,6 +433,8 @@ pub enum RequestRef<'a> {
     },
     /// Drop every stored key and tombstone (shard-internal).
     Wipe,
+    /// Per-stripe content digests (shard-internal).
+    Digest,
     /// Fetch many values in one round-trip (`MGET`).
     MGet {
         /// The keybatch, answered positionally.
@@ -475,6 +482,7 @@ impl Request {
             Request::Fail { shard } => RequestRef::Fail { shard: *shard },
             Request::Restore { shard } => RequestRef::Restore { shard: *shard },
             Request::Wipe => RequestRef::Wipe,
+            Request::Digest => RequestRef::Digest,
             Request::MGet { keys } => {
                 RequestRef::MGet { batch: BatchRef::from_owned(keys, &[]) }
             }
@@ -515,6 +523,7 @@ impl RequestRef<'_> {
             RequestRef::Fail { shard } => Request::Fail { shard },
             RequestRef::Restore { shard } => Request::Restore { shard },
             RequestRef::Wipe => Request::Wipe,
+            RequestRef::Digest => Request::Digest,
             RequestRef::MGet { batch } => Request::MGet { keys: batch.keys_owned() },
             RequestRef::MPut { batch } => {
                 Request::MPut { keys: batch.keys_owned(), values: batch.values().to_vec() }
@@ -558,6 +567,9 @@ pub enum Response {
     Keys(Vec<String>),
     /// Numeric result.
     Num(u64),
+    /// Fixed-size numeric vector (one line; answers `DIGEST` with the
+    /// per-stripe content digests).
+    Nums(Vec<u64>),
     /// Informational line.
     Info(String),
     /// Error with message.
@@ -793,6 +805,7 @@ pub fn read_request_ref<'a, R: BufRead>(
             }
         }
         "WIPE" => RequestRef::Wipe,
+        "DIGEST" => RequestRef::Digest,
         "MGET" | "MDEL" | "MDELTOMB" => {
             // Key-list batch: `<CMD> <n> <k1> ... <kn>`.  Everything that
             // can go wrong is recoverable — the whole frame is this line.
@@ -985,6 +998,7 @@ pub fn write_request_ref<W: Write>(w: &mut W, req: &RequestRef<'_>) -> Result<()
         RequestRef::Fail { shard } => writeln!(w, "FAIL {shard}")?,
         RequestRef::Restore { shard } => writeln!(w, "RESTORE {shard}")?,
         RequestRef::Wipe => w.write_all(b"WIPE\n")?,
+        RequestRef::Digest => w.write_all(b"DIGEST\n")?,
         RequestRef::MGet { batch } => write_batch_frame(w, BatchOp::Get, 0..batch.len(), batch)?,
         RequestRef::MPut { batch } => write_batch_frame(w, BatchOp::Put, 0..batch.len(), batch)?,
         RequestRef::MPutNx { batch } => {
@@ -1098,6 +1112,26 @@ fn read_response_at<R: Read>(r: &mut BufReader<R>, depth: u32) -> Result<Respons
             Response::Multi(subs)
         }
         "NUM" => Response::Num(rest.parse()?),
+        "NUMS" => {
+            let mut toks = rest.split_ascii_whitespace();
+            let count: usize = match toks.next() {
+                Some(t) => t.parse()?,
+                None => bail!("NUMS missing count"),
+            };
+            // Same pre-allocation cap as KEYS: a hostile count fails at
+            // the truncated line, not by reserving memory.
+            let mut nums = Vec::with_capacity(count.min(MAX_BATCH));
+            for _ in 0..count {
+                match toks.next() {
+                    Some(t) => nums.push(t.parse::<u64>()?),
+                    None => bail!("NUMS truncated: expected {count} values"),
+                }
+            }
+            if toks.next().is_some() {
+                bail!("NUMS frame has trailing tokens");
+            }
+            Response::Nums(nums)
+        }
         "INFO" => Response::Info(rest.to_string()),
         "ERR" => Response::Err(rest.to_string()),
         other => bail!("bad response tag {other:?}"),
@@ -1122,6 +1156,13 @@ pub fn encode_response(out: &mut Vec<u8>, resp: &Response) -> Result<()> {
             }
         }
         Response::Num(x) => writeln!(out, "NUM {x}")?,
+        Response::Nums(xs) => {
+            write!(out, "NUMS {}", xs.len())?;
+            for x in xs {
+                write!(out, " {x}")?;
+            }
+            out.push(b'\n');
+        }
         Response::Info(s) => writeln!(out, "INFO {s}")?,
         Response::Err(m) => writeln!(out, "ERR {m}")?,
         Response::Multi(subs) => {
@@ -1246,6 +1287,7 @@ mod tests {
             Request::Fail { shard: 3 },
             Request::Restore { shard: 3 },
             Request::Wipe,
+            Request::Digest,
         ] {
             assert_eq!(roundtrip_req(req.clone()), req);
         }
@@ -1302,6 +1344,8 @@ mod tests {
             Response::Keys(vec!["a".into(), "b/c".into()]),
             Response::Keys(Vec::new()),
             Response::Num(42),
+            Response::Nums(vec![0, 1, u64::MAX, 0x517]),
+            Response::Nums(Vec::new()),
             Response::Info("epoch=3 n=8".into()),
             Response::Err("nope".into()),
         ] {

@@ -57,6 +57,12 @@ pub struct Move {
     pub from: u32,
     /// Destination bucket.
     pub to: u32,
+    /// Copy without retiring the source: the source bucket remains a
+    /// legitimate holder (it is in the key's replica set under the
+    /// destination topology), so the move is a *replication* copy, not a
+    /// relocation.  The planner emits `false`; the router's restore path
+    /// flips it per key when `replication.factor` > 1.
+    pub keep_source: bool,
 }
 
 /// A computed migration plan.
@@ -111,17 +117,32 @@ pub struct MigrationStats {
     pub moved: u64,
     /// Bounded batches planned and applied.
     pub batches: u64,
-    /// Shard calls issued by the sweep: one `SCANSTRIPE` per stripe plus
-    /// at most four batched calls (`MGET`/`MPUTNX`/refused-`MGET`/`MDEL`)
-    /// per (batch, source→destination) pair — each is one wire round-trip
-    /// against a remote shard, so this is the number the batch factor
-    /// divides (the per-key sweep paid ~3 calls *per moved key*).
+    /// Shard calls issued by the sweep: one `SCANSTRIPE` per *scanned*
+    /// stripe plus at most four batched calls (`MGET`/`MPUTNX`/
+    /// refused-`MGET`/`MDEL`) per (batch, source→destination) pair, plus
+    /// one `DIGEST` per shard consulted by an anti-entropy sweep — each
+    /// is one wire round-trip against a remote shard, so this is the
+    /// number the batch factor divides (the per-key sweep paid ~3 calls
+    /// *per moved key*).
     pub round_trips: u64,
+    /// `(source, stripe)` scans skipped by the anti-entropy digest
+    /// comparison (source and destination already agree on the stripe's
+    /// content — streaming it would move nothing).
+    pub stripes_skipped: u64,
 }
 
 /// Incremental migration driver: stream the `sources` shards
 /// stripe-by-stripe, plan each chunk of at most `batch_size` keys with
 /// `plan_batch`, and apply it immediately.
+///
+/// `ae_dest` turns the sweep into **anti-entropy**: when the migration
+/// converges on a single destination (a failed-shard restore), the
+/// driver fetches that destination's per-stripe content digests once,
+/// each source's digests once, and skips every `(source, stripe)` whose
+/// digests already match — equal digests mean equal content (up to a
+/// 64-bit collision), so streaming the stripe would move nothing.  The
+/// skip rule is what turns RESTORE's full survivor re-stream into
+/// round-trips proportional to the *divergent* stripes.
 ///
 /// `shards` must cover the union of the old and new topologies (every
 /// `Move::to` destination must be indexable); only the `sources` shards
@@ -137,13 +158,36 @@ pub struct MigrationStats {
 pub fn migrate_streaming(
     shards: &[ShardClient],
     sources: &[u32],
+    ae_dest: Option<u32>,
     batch_size: usize,
     mut plan_batch: impl FnMut(&[(String, u64)]) -> Result<MigrationPlan>,
 ) -> Result<MigrationStats> {
     let batch_size = batch_size.max(1);
     let mut stats = MigrationStats::default();
+    let dest_digests = match ae_dest {
+        Some(d) => {
+            let digests = shards[d as usize].stripe_digests()?;
+            stats.round_trips += 1; // the destination DIGEST call
+            Some(digests)
+        }
+        None => None,
+    };
     for shard in sources.iter().map(|&b| &shards[b as usize]) {
+        let src_digests = match &dest_digests {
+            Some(_) => {
+                let digests = shard.stripe_digests()?;
+                stats.round_trips += 1; // one DIGEST call per source
+                Some(digests)
+            }
+            None => None,
+        };
         for stripe in 0..crate::shard::STRIPES as u32 {
+            if let (Some(dst), Some(src)) = (&dest_digests, &src_digests) {
+                if dst[stripe as usize] == src[stripe as usize] {
+                    stats.stripes_skipped += 1;
+                    continue;
+                }
+            }
             let digested: Vec<(String, u64)> = shard
                 .scan_stripe(stripe)?
                 .into_iter()
@@ -175,7 +219,13 @@ pub fn plan(keys: &[(String, u64)], path: PlanPath<'_>) -> Result<MigrationPlan>
                 let from = old.bucket(*digest);
                 let to = new.bucket(*digest);
                 if from != to {
-                    plan.moves.push(Move { key: key.clone(), digest: *digest, from, to });
+                    plan.moves.push(Move {
+                        key: key.clone(),
+                        digest: *digest,
+                        from,
+                        to,
+                        keep_source: false,
+                    });
                 }
             }
         }
@@ -189,6 +239,7 @@ pub fn plan(keys: &[(String, u64)], path: PlanPath<'_>) -> Result<MigrationPlan>
                         digest: *digest,
                         from: outcome.old[i],
                         to: outcome.new[i],
+                        keep_source: false,
                     });
                 }
             }
@@ -342,21 +393,31 @@ fn apply_group(
     s.refused.clear();
     for &i in &s.put_sel {
         match s.out[i as usize] {
-            Response::Ok => s.del_sel.push(i),
+            Response::Ok => {
+                *moved += 1;
+                // A keep_source move is a replication copy: the source
+                // stays a legitimate holder, so nothing is retired.
+                if !moves[i as usize].keep_source {
+                    s.del_sel.push(i);
+                }
+            }
             Response::Nil => s.refused.push(i),
             ref other => bail!("unexpected PUTNX response {other:?}"),
         }
     }
-    *moved += s.del_sel.len() as u64;
 
     // 3. Tell the refused copies apart in one destination read.
     if !s.refused.is_empty() {
         dst_shard.call_batch(BatchOp::Get, &s.refused, &copy, &s.digests, &mut s.out)?;
         rts += 1;
         for &i in &s.refused {
-            if matches!(s.out[i as usize], Response::Val(_)) {
+            if matches!(s.out[i as usize], Response::Val(_))
+                && !moves[i as usize].keep_source
+            {
                 // A client write raced ahead: retire the stale source
-                // copy (not counted as a migrated key).
+                // copy (not counted as a migrated key).  keep_source
+                // moves retain it — the destination holding a newer
+                // value does not make the source any less a replica.
                 s.del_sel.push(i);
             }
         }
@@ -425,7 +486,7 @@ mod tests {
         }
         const BATCH: usize = 64;
         let (old, new) = (BinomialHash::new(2), BinomialHash::new(3));
-        let stats = migrate_streaming(&shards, &[0, 1], BATCH, |chunk| {
+        let stats = migrate_streaming(&shards, &[0, 1], None, BATCH, |chunk| {
             assert!(chunk.len() <= BATCH, "batch bound violated: {}", chunk.len());
             plan(chunk, PlanPath::Engines { old: &old, new: &new })
         })
@@ -460,7 +521,7 @@ mod tests {
         }
         const BATCH: usize = 64;
         let (old, new) = (BinomialHash::new(2), BinomialHash::new(3));
-        let stats = migrate_streaming(&shards, &[0, 1], BATCH, |chunk| {
+        let stats = migrate_streaming(&shards, &[0, 1], None, BATCH, |chunk| {
             plan(chunk, PlanPath::Engines { old: &old, new: &new })
         })
         .unwrap();
@@ -506,7 +567,7 @@ mod tests {
         }
         let (raced_key, raced_to) = raced.expect("keyset contains a moving key");
         let (old, new) = (BinomialHash::new(2), BinomialHash::new(3));
-        migrate_streaming(&shards, &[0, 1], 128, |chunk| {
+        migrate_streaming(&shards, &[0, 1], None, 128, |chunk| {
             plan(chunk, PlanPath::Engines { old: &old, new: &new })
         })
         .unwrap();
@@ -515,6 +576,92 @@ mod tests {
             Some(&b"fresh"[..]),
             "migration clobbered a newer destination write"
         );
+    }
+
+    #[test]
+    fn keep_source_moves_copy_without_retiring() {
+        // A keep_source move is a replication copy: after apply, BOTH
+        // shards hold the key.
+        let shards: Vec<ShardClient> =
+            (0..2).map(|i| ShardClient::Local(Shard::new(i))).collect();
+        let digest = crate::hashing::xxhash64(b"rep", 0);
+        if let ShardClient::Local(s) = &shards[0] {
+            s.put("rep", b"v".to_vec().into(), digest);
+        }
+        let plan = MigrationPlan {
+            moves: vec![Move {
+                key: "rep".into(),
+                digest,
+                from: 0,
+                to: 1,
+                keep_source: true,
+            }],
+            scanned: 1,
+        };
+        let (moved, _) = apply(&plan, &shards).unwrap();
+        assert_eq!(moved, 1);
+        assert!(shards[0].get("rep").unwrap().is_some(), "source copy retired");
+        assert!(shards[1].get("rep").unwrap().is_some(), "destination copy missing");
+
+        // And when the destination already holds a newer value, the
+        // refused keep_source copy still leaves the source intact.
+        if let ShardClient::Local(s) = &shards[1] {
+            s.put("rep", b"newer".to_vec().into(), digest);
+        }
+        let (moved, _) = apply(&plan, &shards).unwrap();
+        assert_eq!(moved, 0);
+        assert!(shards[0].get("rep").unwrap().is_some());
+        assert_eq!(
+            shards[1].get("rep").unwrap().as_deref(),
+            Some(&b"newer"[..]),
+            "keep_source copy clobbered a newer destination value"
+        );
+    }
+
+    #[test]
+    fn anti_entropy_digests_skip_converged_stripes() {
+        // Restore shape: one destination (2, wiped/empty), two survivor
+        // sources holding a handful of keys.  The digest comparison must
+        // skip every stripe the sources have empty (they match the empty
+        // destination) and scan only the occupied ones — strictly fewer
+        // round-trips than the full re-stream.
+        let shards: Vec<ShardClient> =
+            (0..3).map(|i| ShardClient::Local(Shard::new(i))).collect();
+        let keys = keyset(24);
+        for (key, digest) in &keys {
+            let b = binomial::lookup(*digest, 2, 6);
+            if let ShardClient::Local(s) = &shards[b as usize] {
+                s.put(key, b"x".to_vec().into(), *digest);
+            }
+        }
+        let occupied: u64 = (0..2)
+            .map(|b| {
+                let ShardClient::Local(s) = &shards[b as usize] else { unreachable!() };
+                s.stripe_digests().iter().filter(|d| **d != 0).count() as u64
+            })
+            .sum();
+        let total = 2 * crate::shard::STRIPES as u64;
+        assert!(occupied < total, "keyset too dense for the skip to show");
+        let (old, new) = (BinomialHash::new(2), BinomialHash::new(3));
+        let stats = migrate_streaming(&shards, &[0, 1], Some(2), 128, |chunk| {
+            plan(chunk, PlanPath::Engines { old: &old, new: &new })
+        })
+        .unwrap();
+        assert_eq!(stats.stripes_skipped, total - occupied);
+        // Round-trip accounting: 1 dest DIGEST + 2 source DIGESTs +
+        // `occupied` scans + 4×batches at most; the full re-stream costs
+        // `total` scans + the same batch calls.
+        let full = total + 4 * stats.batches;
+        assert!(
+            stats.round_trips < full,
+            "anti-entropy ({}) not below full re-stream ({full})",
+            stats.round_trips
+        );
+        // Correctness unchanged: every key reachable at its n=3 owner.
+        for (key, digest) in &keys {
+            let b = binomial::lookup(*digest, 3, 6);
+            assert!(shards[b as usize].get(key).unwrap().is_some(), "key {key} not on {b}");
+        }
     }
 
     #[test]

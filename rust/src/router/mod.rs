@@ -174,23 +174,38 @@
 //!   the origin engine gets the same arbitrary removal (so dual-read
 //!   keeps working) and the dead shard is dropped from the remaining
 //!   migration sources.
-//! * **Degraded serving**: keys whose pre-failure owner was the dead
-//!   shard are *marooned* — there is no replica to fail over to (yet;
-//!   see ROADMAP).  A GET that misses and maps to a dead pre-failure
-//!   owner answers a distinguishable `ERR UNAVAILABLE: …` instead of a
-//!   silent `NIL` or a hang on a dead connection; a PUT makes the key
-//!   immediately reachable again on its surviving owner.  The check is
-//!   conservative: a key PUT-then-DELeted *while* degraded also reads
-//!   `UNAVAILABLE` until the shard is restored (the router cannot tell
-//!   it from a never-rewritten marooned key without tombstoning every
-//!   degraded delete).
+//! * **Degraded serving**: at `replication.factor` 1, keys whose
+//!   pre-failure owner was the dead shard are *marooned* — there is no
+//!   replica to fail over to.  A GET that misses and maps to a dead
+//!   pre-failure owner answers a distinguishable `ERR UNAVAILABLE: …`
+//!   instead of a silent `NIL` or a hang on a dead connection; a PUT
+//!   makes the key immediately reachable again on its surviving owner.
+//!   The factor-1 check is conservative: a key PUT-then-DELeted *while*
+//!   degraded also reads `UNAVAILABLE` until the shard is restored.
+//!   With factor R > 1 a degraded miss instead probes the key's live
+//!   replicas — the current map first, then each failure's pre-removal
+//!   engine — serves (and read-repairs) the surviving copy, and
+//!   reserves `UNAVAILABLE` for the pigeonhole case: outstanding
+//!   failures ≥ R, so every copy-holder may be dead.  That also
+//!   un-falses the conservatism above — a key PUT-then-DELeted while
+//!   degraded reads `NIL` (its live replicas agree it is gone).
 //! * **RESTORE** wipes the rejoining shard (`WIPE` — it missed every
 //!   write and delete while it was down, so its contents are
 //!   unreconcilable), forks-and-`restore(id)`s the engine, and publishes
 //!   the restored epoch *with a migration origin* (the degraded engine):
 //!   keys written to survivors during the outage stream back to the
 //!   restored shard in bounded batches while dual-read serves them, then
-//!   the epoch settles.  Engines constrain restore order through
+//!   the epoch settles.  The sweep is **anti-entropy**, not a blind
+//!   re-stream: the restored shard's per-stripe content digests
+//!   (`DIGEST`) are compared with each survivor's up front, and every
+//!   already-converged `(source, stripe)` pair — including the common
+//!   empty-stripe case — is skipped without a scan, so round-trips
+//!   scale with the *divergent* stripes, not the survivor keyset.  With
+//!   factor R > 1 the sweep also leaves the source copy in place
+//!   whenever the source is one of the key's replicas under the
+//!   restored engine (`Move::keep_source`), so a restore re-establishes
+//!   replica coverage instead of thinning it.  Engines constrain
+//!   restore order through
 //!   [`restore_blocked`](crate::algorithms::FaultTolerant::restore_blocked)
 //!   (anchor: reverse removal order) — violations answer `ERR`, never
 //!   panic under the admin lock.
@@ -202,8 +217,45 @@
 //!   and memento fail fast with the engine's own reason *and* the failed
 //!   bucket list, so the operator knows exactly what to `RESTORE` first.
 //!
-//! Data on a failed shard is lost unless it comes back before anyone
-//! needed it — replication is the named follow-up in ROADMAP.md.
+//! ## Replication: top-R placement from the same engine
+//!
+//! With `replication.factor = R` (> 1), every key lives on its top-R
+//! buckets — there is no separate replica ring.  Replica rank r is
+//! derived by forking the engine with the primary (and prior replicas)
+//! removed: for the fault-tolerant engines that is the *same*
+//! per-failure fork the degraded path keeps, so after a FAIL a key's
+//! new primary **is** its rank-1 replica and plain routing already
+//! serves the surviving copy (pinned by
+//! `ft_replica_matches_degraded_engine_construction` in
+//! `cluster`).  The per-primary minus forks are precomputed at publish
+//! time into a [`ReplicaMap`] carried by the snapshot, so the hot path
+//! pays one extra engine lookup per replica and allocates nothing at
+//! factor 1.
+//!
+//! Consistency contract (deliberately primary-ack, not quorum-commit):
+//!
+//! * **Writes ack on the primary.**  PUT/DEL apply to the primary
+//!   exactly as at factor 1 (including the mid-migration dual-write),
+//!   then fan out to the R−1 replicas — batched frames re-group the
+//!   replica writes per shard like the primary fan-out.  Under the
+//!   default `write_mode = "primary"` a replica failure is counted
+//!   (`replica_write_failures`) and left for read repair or the next
+//!   restore sweep; under `"all"` it fails the request (the primary
+//!   copy still landed).
+//! * **Reads are primary-first**: one probe in steady state, identical
+//!   to factor 1.  Only a degraded miss fans out to replicas, and a
+//!   replica hit is written back to the current primary
+//!   (`read_repairs`) so the next read is one probe again.
+//! * **No cross-key or cross-copy atomicity.**  Each copy applies
+//!   independently; a degraded reader racing a write may observe a
+//!   replica's older value until the fan-out lands.  Replica sets are
+//!   maintained by writes, read repair, and the restore sweep — scale
+//!   migrations relocate primaries only, so a topology change thins
+//!   replica coverage until subsequent writes restore it.  Orphaned
+//!   copies left by a topology change are inert (readers derive
+//!   copy-holders from engines, never from scans) but count in
+//!   `COUNT`, which reports reachable *copies*, not unique keys, when
+//!   R > 1.
 
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
@@ -214,7 +266,7 @@ use anyhow::{anyhow, bail, ensure, Result};
 use crate::algorithms::ConsistentHasher;
 use crate::cluster::{
     bucket_csv as csv, Cluster, DegradedState, EventKind, MigrationOrigin, PlacementSnapshot,
-    TopologyEvent,
+    ReplicaMap, TopologyEvent,
 };
 use crate::metrics::{ConnMetrics, RouterMetrics};
 use crate::net::{self, Server, ServerOpts, Service};
@@ -245,6 +297,13 @@ pub struct BatchScratch {
     /// path (run after the placement phase, so their shard round-trips
     /// never pollute the placement-latency histogram).
     defer: Vec<u32>,
+    /// Replica-write grouping for factor > 1 batches, packed like
+    /// `order` (`bucket << 32 | index`, one word per replica copy).
+    rep_order: Vec<u64>,
+    /// Replica fan-out responses — positional like `out`, but kept
+    /// separate so replica answers are only error-accounted and never
+    /// clobber the client's sub-responses.
+    rep_out: Vec<Response>,
 }
 
 impl BatchScratch {
@@ -266,6 +325,33 @@ fn failed_buckets(engine: &dyn ConsistentHasher, slots: usize) -> Vec<u32> {
     match engine.as_fault_tolerant() {
         None => Vec::new(),
         Some(ft) => (0..slots as u32).filter(|&b| !ft.is_working(b)).collect(),
+    }
+}
+
+/// Append the top-`factor` copy-holders of `digest` under `engine`
+/// (primary first, then replicas) — the same minus-fork construction
+/// [`ReplicaMap`] precomputes, run on demand against a *historic*
+/// engine.  Slow path only (forks per call): degraded misses probing a
+/// failure's pre-removal topology.
+fn holders_under(
+    engine: &dyn ConsistentHasher,
+    digest: u64,
+    factor: u32,
+    out: &mut Vec<u32>,
+) {
+    let mut cur = engine.fork();
+    let mut b = cur.bucket(digest);
+    out.push(b);
+    for _ in 1..factor {
+        if cur.len() <= 1 {
+            break;
+        }
+        let Some(ft) = cur.as_fault_tolerant_mut() else {
+            break;
+        };
+        ft.remove_arbitrary(b);
+        b = cur.bucket(digest);
+        out.push(b);
     }
 }
 
@@ -318,6 +404,11 @@ pub struct Router {
     /// Serialized behind a mutex — see the Send safety note in `runtime`.
     bulk: Option<Mutex<PlacementRuntime>>,
     spawn_shard: ShardSpawner,
+    /// Copies per key (`replication.factor`); 1 = replication off.
+    factor: u32,
+    /// `write_mode = "all"`: a replica write error fails the request
+    /// instead of being absorbed into `replica_write_failures`.
+    write_all: bool,
 }
 
 impl Router {
@@ -327,13 +418,32 @@ impl Router {
         Self::with_options(cluster, Box::new(|id| ShardClient::Local(Shard::new(id))), None)
     }
 
-    /// Router with a custom shard factory and/or bulk runtime.
+    /// Router with a custom shard factory and/or bulk runtime
+    /// (replication off).
     pub fn with_options(
         cluster: Cluster,
         spawn_shard: ShardSpawner,
         bulk: Option<PlacementRuntime>,
     ) -> Arc<Self> {
-        let (snapshot, events) = cluster.into_snapshot();
+        Self::with_replication(cluster, spawn_shard, bulk, 1, false)
+    }
+
+    /// Router with replication: every key lives on its top-`factor`
+    /// buckets (see the module docs' replication section).  `write_all`
+    /// maps the config's `write_mode = "all"` — replica write errors
+    /// fail the request instead of being absorbed into
+    /// `replica_write_failures`.
+    pub fn with_replication(
+        cluster: Cluster,
+        spawn_shard: ShardSpawner,
+        bulk: Option<PlacementRuntime>,
+        factor: u32,
+        write_all: bool,
+    ) -> Arc<Self> {
+        let factor = factor.max(1);
+        let (mut snapshot, events) = cluster.into_snapshot();
+        snapshot.replicas =
+            ReplicaMap::build(snapshot.engine.as_ref(), snapshot.shards.len(), factor);
         Arc::new(Self {
             current: SnapshotCell::new(snapshot),
             admin: Mutex::new(events),
@@ -341,6 +451,8 @@ impl Router {
             conns: Arc::new(ConnMetrics::new()),
             bulk: bulk.map(Mutex::new),
             spawn_shard,
+            factor,
+            write_all,
         })
     }
 
@@ -367,7 +479,12 @@ impl Router {
     ///
     /// Callers are serialized by the admin mutex, so at most one drain is
     /// in flight and the cell's two gate slots strictly alternate.
-    fn publish(&self, snapshot: PlacementSnapshot) {
+    fn publish(&self, mut snapshot: PlacementSnapshot) {
+        // Every published topology derives its replica map here,
+        // centrally, from the engine it routes with — construction
+        // sites leave `replicas: None`.
+        snapshot.replicas =
+            ReplicaMap::build(snapshot.engine.as_ref(), snapshot.shards.len(), self.factor);
         drop(self.current.store(snapshot));
     }
 
@@ -480,8 +597,19 @@ impl Router {
                 } else {
                     "steady"
                 };
+                // Remote-pool timeout tallies live on the pools, not in
+                // RouterMetrics (a pool outlives snapshots and is shared
+                // by clones); sum them over the current shard set.
+                let remote_timeouts: u64 = snap
+                    .shards
+                    .iter()
+                    .map(|s| match s {
+                        ShardClient::Remote(pool) => pool.timeouts(),
+                        _ => 0,
+                    })
+                    .sum();
                 Response::Info(format!(
-                    "epoch={} n={} shards={} algo={} state={} failed={} {} {}",
+                    "epoch={} n={} shards={} algo={} state={} failed={} {} {} remote_timeouts={}",
                     snap.epoch,
                     snap.engine.len(),
                     snap.shards.len(),
@@ -492,7 +620,8 @@ impl Router {
                         None => "-".to_string(),
                     },
                     self.metrics.summary(),
-                    self.conns.summary()
+                    self.conns.summary(),
+                    remote_timeouts
                 ))
             }
             RequestRef::Scan
@@ -500,7 +629,8 @@ impl Router {
             | RequestRef::PutNx { .. }
             | RequestRef::DelTomb { .. }
             | RequestRef::PurgeTombs
-            | RequestRef::Wipe => Response::Err("shard-internal command".into()),
+            | RequestRef::Wipe
+            | RequestRef::Digest => Response::Err("shard-internal command".into()),
             RequestRef::ScaleUp => match self.scale_up() {
                 Ok(n) => Response::Num(n as u64),
                 Err(e) => Response::Err(e.to_string()),
@@ -547,6 +677,111 @@ impl Router {
             "UNAVAILABLE: key {key} is marooned on failed shard {failed}; \
              RESTORE {failed} (it rejoins empty) or re-PUT the key"
         ))
+    }
+
+    /// Fan an accepted write out to the key's replica buckets (no-op at
+    /// factor 1).  Replica errors are counted and the first is returned
+    /// so `write_mode = "all"` can surface it; under the default
+    /// primary-ack mode the caller drops it — a degraded read falls
+    /// back to whichever copies did land, and the next restore sweep
+    /// repairs the rest.
+    fn replicate(
+        &self,
+        snap: &PlacementSnapshot,
+        key: &str,
+        value: Option<&Value>,
+        digest: u64,
+        primary: u32,
+    ) -> Option<String> {
+        snap.replicas.as_ref()?;
+        let mut replicas = Vec::new();
+        snap.replicas_into(digest, primary, &mut replicas);
+        let mut first_err = None;
+        for &b in &replicas {
+            let r = match value {
+                Some(v) => snap.shards[b as usize]
+                    .call_ref(RequestRef::Put { key, value: v.clone() }, Some(digest)),
+                None => {
+                    snap.shards[b as usize].call_ref(RequestRef::Del { key }, Some(digest))
+                }
+            };
+            self.metrics.replica_writes.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
+            let err = match r {
+                Ok(Response::Err(e)) => Some(e),
+                Err(e) => Some(e.to_string()),
+                Ok(_) => None,
+            };
+            if let Some(e) = err {
+                self.metrics.replica_write_failures.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
+                if first_err.is_none() {
+                    first_err = Some(format!("replica {b}: {e}"));
+                }
+            }
+        }
+        first_err
+    }
+
+    /// A degraded GET that missed its primary: probe the key's surviving
+    /// replica copies before deciding between `NIL` and `UNAVAILABLE`.
+    ///
+    /// Probe order: the current replica map first (O(1) engine
+    /// lookups), then — because a copy written under an older topology
+    /// may sit on a bucket the current map no longer names — the
+    /// replica set under each failure's pre-removal engine (on-demand
+    /// forks; this path only runs on a degraded miss, never in steady
+    /// state).  A hit is served and written back to the current primary
+    /// (read repair), so the next read for the key is one probe again.
+    ///
+    /// The all-miss verdict: `UNAVAILABLE` only when the outstanding
+    /// failures could have swallowed every copy (failed count ≥ factor,
+    /// the pigeonhole bound — factor 1 keeps the original behavior of
+    /// treating any marooned miss as unavailable); otherwise a live
+    /// member of every copy-holder set was consulted and the key is
+    /// genuinely absent: `NIL`.  That retires the factor-1 false
+    /// `UNAVAILABLE` for a key PUT-then-DELeted while degraded (pinned
+    /// in `rust/tests/failover.rs`).
+    fn degraded_miss(&self, snap: &PlacementSnapshot, key: &str, digest: u64) -> Response {
+        if snap.replicas.is_some() {
+            let primary = snap.engine.bucket(digest);
+            let mut holders: Vec<u32> = Vec::new();
+            snap.replicas_into(digest, primary, &mut holders);
+            if let Some(deg) = &snap.degraded {
+                for (engine, _) in &deg.maroons {
+                    holders_under(engine.as_ref(), digest, self.factor, &mut holders);
+                }
+            }
+            let mut probed: Vec<u32> = Vec::new();
+            for &b in &holders {
+                if b == primary
+                    || b as usize >= snap.shards.len()
+                    || snap.is_failed(b)
+                    || probed.contains(&b)
+                {
+                    continue;
+                }
+                probed.push(b);
+                if let Ok(Response::Val(v)) =
+                    snap.shards[b as usize].call_ref(RequestRef::Get { key }, Some(digest))
+                {
+                    self.metrics.replica_reads.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
+                    let repaired = snap.shards[primary as usize]
+                        .call_ref(RequestRef::Put { key, value: v.clone() }, Some(digest));
+                    if matches!(repaired, Ok(Response::Ok)) {
+                        self.metrics.read_repairs.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
+                    }
+                    return Response::Val(v);
+                }
+            }
+        }
+        match snap.marooned(digest) {
+            Some(f)
+                if snap.degraded.as_ref().map_or(0, |d| d.failed.len()) as u32
+                    >= self.factor =>
+            {
+                self.unavailable(key, f)
+            }
+            _ => Response::Nil,
+        }
     }
 
     fn data_get(&self, key: &str) -> Response {
@@ -609,11 +844,10 @@ impl Router {
             },
         };
         // A miss while degraded may be a marooned key (its pre-failure
-        // owner is dead), not an absent one — free on healthy snapshots.
-        if matches!(resp, Response::Nil) {
-            if let Some(f) = snap.marooned(digest) {
-                return self.unavailable(key, f);
-            }
+        // owner is dead) or one whose surviving copy sits on a replica
+        // — free on healthy snapshots.
+        if matches!(resp, Response::Nil) && snap.is_degraded() {
+            return self.degraded_miss(snap, key, digest);
         }
         resp
     }
@@ -641,7 +875,7 @@ impl Router {
         bucket: u32,
         shard: &ShardClient,
     ) -> Response {
-        match snap.fallback_route(digest, bucket) {
+        let resp = match snap.fallback_route(digest, bucket) {
             // Mid-migration: write the new owner, then retire the old copy
             // so neither the migration sweep nor a dual-read can resurface
             // a stale value.  The old-copy delete is best-effort: once the
@@ -652,7 +886,9 @@ impl Router {
             // shard (its copy is unreachable either way, and it rejoins
             // only after a WIPE).
             Some((old_bucket, old_shard)) => {
-                let resp = match shard.call_ref(RequestRef::Put { key, value }, Some(digest)) {
+                let resp = match shard
+                    .call_ref(RequestRef::Put { key, value: value.clone() }, Some(digest))
+                {
                     Ok(resp) => resp,
                     Err(e) => return Response::Err(e.to_string()),
                 };
@@ -661,10 +897,19 @@ impl Router {
                 }
                 resp
             }
-            None => match shard.call_ref(RequestRef::Put { key, value }, Some(digest)) {
+            None => match shard
+                .call_ref(RequestRef::Put { key, value: value.clone() }, Some(digest))
+            {
                 Ok(resp) => resp,
-                Err(e) => Response::Err(e.to_string()),
+                Err(e) => return Response::Err(e.to_string()),
             },
+        };
+        // The primary copy landed; fan out to the replicas (no-op at
+        // factor 1 — the `Value` clone above is an `Arc` refcount bump,
+        // not an allocation).
+        match self.replicate(snap, key, Some(&value), digest, bucket) {
+            Some(err) if self.write_all => Response::Err(err),
+            _ => resp,
         }
     }
 
@@ -690,7 +935,7 @@ impl Router {
         bucket: u32,
         shard: &ShardClient,
     ) -> Response {
-        match snap.fallback_route(digest, bucket) {
+        let resp = match snap.fallback_route(digest, bucket) {
             // Mid-migration: the key may live on either owner — delete
             // both; it existed if either copy did.  The new-owner delete
             // leaves a tombstone so an in-flight migration copy (PUTNX)
@@ -716,6 +961,14 @@ impl Router {
                 Ok(resp) => resp,
                 Err(e) => Response::Err(e.to_string()),
             },
+        };
+        // Deletes always fan out, whatever the primary answered — a
+        // replica may hold a copy the primary never saw (e.g. written
+        // before a failover moved the primary), and a surviving stale
+        // copy would resurface through a later degraded read.
+        match self.replicate(snap, key, None, digest, bucket) {
+            Some(err) if self.write_all => Response::Err(err),
+            _ => resp,
         }
     }
 
@@ -851,15 +1104,82 @@ impl Router {
             }
         }
 
+        // Phase 2b — replica fan-out for writes (factor > 1): every key
+        // whose primary write was accepted is packed again by *replica*
+        // bucket and fanned out with the same per-shard grouping.  The
+        // replica answers land in `rep_out` — error-accounted, never
+        // clobbering the client's positional sub-responses (except
+        // under `write_mode = "all"`, where a replica failure fails its
+        // key).
+        if matches!(op, BatchOp::Put | BatchOp::Del) && snap.replicas.is_some() {
+            scratch.rep_order.clear();
+            let mut reps: Vec<u32> = Vec::new();
+            for &w in scratch.order.iter() {
+                let (bucket, i) = ((w >> 32) as u32, w as u32);
+                if matches!(out[i as usize], Response::Err(_)) {
+                    continue; // the primary write failed — nothing to replicate
+                }
+                reps.clear();
+                snap.replicas_into(scratch.digests[i as usize], bucket, &mut reps);
+                for &rb in &reps {
+                    scratch.rep_order.push(((rb as u64) << 32) | i as u64);
+                }
+            }
+            scratch.rep_order.sort_unstable();
+            scratch.rep_out.clear();
+            scratch.rep_out.resize(n, Response::Nil);
+            let mut g = 0usize;
+            while g < scratch.rep_order.len() {
+                let bucket = (scratch.rep_order[g] >> 32) as u32;
+                scratch.sel.clear();
+                while g < scratch.rep_order.len()
+                    && (scratch.rep_order[g] >> 32) as u32 == bucket
+                {
+                    scratch.sel.push(scratch.rep_order[g] as u32);
+                    g += 1;
+                }
+                self.metrics
+                    .replica_writes
+                    .fetch_add(scratch.sel.len() as u64, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
+                let shard = &snap.shards[bucket as usize];
+                match shard.call_batch(op, &scratch.sel, src, &scratch.digests, &mut scratch.rep_out)
+                {
+                    Ok(()) => {
+                        for &i in scratch.sel.iter() {
+                            if let Response::Err(e) = &scratch.rep_out[i as usize] {
+                                self.metrics
+                                    .replica_write_failures
+                                    .fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
+                                if self.write_all {
+                                    out[i as usize] =
+                                        Response::Err(format!("replica {bucket}: {e}"));
+                                }
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        self.metrics
+                            .replica_write_failures
+                            .fetch_add(scratch.sel.len() as u64, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
+                        if self.write_all {
+                            let msg = format!("replica {bucket}: {e}");
+                            for &i in scratch.sel.iter() {
+                                out[i as usize] = Response::Err(msg.clone());
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
         // Phase 3 — degraded read check: a miss whose pre-failure owner
-        // is dead is marooned, not absent (free on healthy snapshots;
-        // per-key slow-path answers already ran this check).
+        // is dead is marooned or replica-served, not absent (free on
+        // healthy snapshots; per-key slow-path answers already ran this
+        // check, and re-running `degraded_miss` on them is idempotent).
         if op == BatchOp::Get && snap.is_degraded() {
             for i in 0..n {
                 if matches!(out[i], Response::Nil) {
-                    if let Some(f) = snap.marooned(scratch.digests[i]) {
-                        out[i] = self.unavailable(src.key(i), f);
-                    }
+                    out[i] = self.degraded_miss(&snap, src.key(i), scratch.digests[i]);
                 }
             }
         }
@@ -967,8 +1287,10 @@ impl Router {
                 engine: old_engine,
                 sources,
                 settle_len: shards.len(),
+                ae_dest: None,
             }),
             degraded: base.degraded.as_ref().map(|d| d.fork()),
+            replicas: None,
         });
         events.push(TopologyEvent {
             epoch,
@@ -988,6 +1310,7 @@ impl Router {
             shards,
             origin: None,
             degraded: migrating.degraded.as_ref().map(|d| d.fork()),
+            replicas: None,
         });
         // Drain dual-read holders of the migrating snapshot before
         // returning, so every future topology change only ever has one
@@ -1069,8 +1392,10 @@ impl Router {
                 engine: old_engine,
                 sources,
                 settle_len: retiring as usize,
+                ae_dest: None,
             }),
             degraded: base.degraded.as_ref().map(|d| d.fork()),
+            replicas: None,
         });
         events.push(TopologyEvent {
             epoch,
@@ -1092,6 +1417,7 @@ impl Router {
             shards,
             origin: None,
             degraded: migrating.degraded.as_ref().map(|d| d.fork()),
+            replicas: None,
         });
         // As in scale_up: drain dual-read holders, then purge the
         // tombstones their DELs may have written (best-effort — the op
@@ -1175,6 +1501,10 @@ impl Router {
                 engine: old,
                 sources: o.sources.iter().copied().filter(|&b| b != id).collect(),
                 settle_len: o.settle_len,
+                // An anti-entropy destination that died again cannot be
+                // digest-polled; the resumed sweep falls back to full
+                // streaming.
+                ae_dest: o.ae_dest.filter(|&b| b != id),
             }
         });
         // The marooned record pairs this failure with the live engine as
@@ -1202,6 +1532,7 @@ impl Router {
             shards: base.shards.clone(),
             origin,
             degraded,
+            replicas: None,
         });
         events.push(TopologyEvent {
             epoch,
@@ -1294,8 +1625,14 @@ impl Router {
                 engine: base.engine.fork(),
                 sources,
                 settle_len: base.shards.len(),
+                // The restore sweep converges on one wiped destination:
+                // exactly the shape the per-stripe digest comparison
+                // turns from a full survivor re-stream into round-trips
+                // proportional to the divergent stripes.
+                ae_dest: Some(id),
             }),
             degraded,
+            replicas: None,
         });
         events.push(TopologyEvent {
             epoch,
@@ -1315,6 +1652,7 @@ impl Router {
             shards: migrating.shards.clone(),
             origin: None,
             degraded: migrating.degraded.as_ref().map(|d| d.fork()),
+            replicas: None,
         });
         Self::quiesce(&migrating);
         let _ = Self::purge_tombstones(&migrating);
@@ -1359,6 +1697,7 @@ impl Router {
             shards,
             origin: None,
             degraded: base.degraded.as_ref().map(|d| d.fork()),
+            replicas: None,
         });
         Self::quiesce(&base);
         drop(base);
@@ -1372,6 +1711,8 @@ impl Router {
         let stats = self.migrate_batches(snap, origin)?;
         self.metrics.migrated_keys.fetch_add(stats.moved, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
         self.metrics.migration_batches.fetch_add(stats.batches, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
+        self.metrics.migration_round_trips.fetch_add(stats.round_trips, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
+        self.metrics.ae_stripes_skipped.fetch_add(stats.stripes_skipped, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
         Ok(stats)
     }
 
@@ -1380,6 +1721,23 @@ impl Router {
         snap: &PlacementSnapshot,
         origin: &MigrationOrigin,
     ) -> Result<MigrationStats> {
+        // With replication on, a source that is itself one of the key's
+        // replica holders under the *new* engine keeps its copy — the
+        // move is a replication copy, not a relocation (the restore
+        // sweep re-establishing coverage is the main beneficiary).
+        let mark_replica_keeps = |plan: &mut rebalance::MigrationPlan| {
+            if snap.replicas.is_none() {
+                return;
+            }
+            let mut reps: Vec<u32> = Vec::new();
+            for m in plan.moves.iter_mut() {
+                reps.clear();
+                snap.replicas_into(m.digest, m.to, &mut reps);
+                if reps.contains(&m.from) {
+                    m.keep_source = true;
+                }
+            }
+        };
         // The XLA bulk path computes BinomialHash placement; use it only
         // when that is the active engine.
         if let (Some(bulk), "binomial") = (&self.bulk, snap.engine.name()) {
@@ -1389,19 +1747,28 @@ impl Router {
             return rebalance::migrate_streaming(
                 &snap.shards,
                 &origin.sources,
+                origin.ae_dest,
                 MIGRATION_BATCH,
-                |chunk| rebalance::plan(chunk, PlanPath::Xla { runtime: &runtime, n_old, n_new }),
+                |chunk| {
+                    let mut plan =
+                        rebalance::plan(chunk, PlanPath::Xla { runtime: &runtime, n_old, n_new })?;
+                    mark_replica_keeps(&mut plan);
+                    Ok(plan)
+                },
             );
         }
         rebalance::migrate_streaming(
             &snap.shards,
             &origin.sources,
+            origin.ae_dest,
             MIGRATION_BATCH,
             |chunk| {
-                rebalance::plan(
+                let mut plan = rebalance::plan(
                     chunk,
                     PlanPath::Engines { old: &*origin.engine, new: &*snap.engine },
-                )
+                )?;
+                mark_replica_keeps(&mut plan);
+                Ok(plan)
             },
         )
     }
@@ -1510,6 +1877,7 @@ mod tests {
             shards: before.shards.clone(),
             origin: None,
             degraded: None,
+            replicas: None,
         });
         // The superseded handle stays valid after the swap...
         assert_eq!(before.epoch, 0);
@@ -1730,8 +2098,10 @@ mod tests {
                 engine: old_engine,
                 sources: vec![0, 2],
                 settle_len: 4,
+                ae_dest: None,
             }),
             degraded: base.degraded.as_ref().map(|d| d.fork()),
+            replicas: None,
         });
 
         // The next admin op resumes the sweep, settles at 4 slots, then
@@ -1792,8 +2162,10 @@ mod tests {
                 engine: old_engine,
                 sources: vec![0, 1],
                 settle_len: 3,
+                ae_dest: None,
             }),
             degraded: None,
+            replicas: None,
         });
 
         // The client DEL lands while the copy is in flight...
@@ -1913,8 +2285,10 @@ mod tests {
                 engine: old_engine,
                 sources: vec![0, 1],
                 settle_len: 3,
+                ae_dest: None,
             }),
             degraded: None,
+            replicas: None,
         });
         match router.handle(Request::MGet { keys: keys.clone() }) {
             Response::Multi(subs) => {
@@ -2051,6 +2425,104 @@ mod tests {
         ));
         assert!(matches!(router.handle(Request::PurgeTombs), Response::Err(_)));
         assert!(matches!(router.handle(Request::Wipe), Response::Err(_)));
+        assert!(matches!(router.handle(Request::Digest), Response::Err(_)));
+    }
+
+    fn replicated_router(algorithm: &str, n: u32, factor: u32, write_all: bool) -> Arc<Router> {
+        Router::with_replication(
+            local_cluster(algorithm, n).unwrap(),
+            Box::new(|id| ShardClient::Local(Shard::new(id))),
+            None,
+            factor,
+            write_all,
+        )
+    }
+
+    #[test]
+    fn replicated_writes_fan_out_and_deletes_clear_replicas() {
+        let router = replicated_router("memento", 4, 2, false);
+        for i in 0..64 {
+            assert_eq!(
+                router.handle(Request::Put { key: format!("rw{i}"), value: val(&[i as u8]) }),
+                Response::Ok
+            );
+        }
+        // Every key is on exactly two shards — COUNT reports copies.
+        assert_eq!(router.handle(Request::Count), Response::Num(128));
+        assert_eq!(router.metrics.replica_writes.load(Ordering::Relaxed), 64); // ord: test-only
+        assert_eq!(router.metrics.replica_write_failures.load(Ordering::Relaxed), 0); // ord: test-only
+        // The copy sits exactly where the snapshot's replica map says.
+        let snap = router.snapshot();
+        for i in 0..64 {
+            let key = format!("rw{i}");
+            let d = crate::hashing::xxhash64(key.as_bytes(), 0);
+            let p = snap.engine.bucket(d);
+            let r = snap.first_replica(d, p).unwrap();
+            assert_ne!(p, r, "{key}: replica collides with primary");
+            assert!(
+                snap.shards[r as usize].get(&key).unwrap().is_some(),
+                "{key}: replica copy missing on {r}"
+            );
+        }
+        drop(snap);
+        // DEL fans out too: no stale replica copies survive.
+        for i in 0..64 {
+            assert_eq!(router.handle(Request::Del { key: format!("rw{i}") }), Response::Ok);
+        }
+        assert_eq!(router.handle(Request::Count), Response::Num(0));
+        match router.handle(Request::Stats) {
+            Response::Info(s) => assert!(s.contains("replica_writes="), "{s}"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn batched_replicated_writes_group_per_replica_shard() {
+        let router = replicated_router("memento", 4, 2, false);
+        let keys: Vec<String> = (0..80).map(|i| format!("br{i}")).collect();
+        let values: Vec<Value> = (0..80).map(|i| val(&[i as u8])).collect();
+        match router.handle(Request::MPut { keys: keys.clone(), values }) {
+            Response::Multi(subs) => assert!(subs.iter().all(|r| *r == Response::Ok)),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(router.handle(Request::Count), Response::Num(160));
+        assert_eq!(router.metrics.replica_writes.load(Ordering::Relaxed), 80); // ord: test-only
+        match router.handle(Request::MDel { keys }) {
+            Response::Multi(subs) => assert!(subs.iter().all(|r| *r == Response::Ok)),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(router.handle(Request::Count), Response::Num(0));
+    }
+
+    #[test]
+    fn factor_one_routers_never_build_a_replica_map() {
+        let router = Router::new(local_cluster("memento", 3).unwrap());
+        assert!(router.snapshot().replicas.is_none());
+        router.handle(Request::Put { key: "solo".into(), value: val(b"1") });
+        assert_eq!(router.metrics.replica_writes.load(Ordering::Relaxed), 0); // ord: test-only
+        assert_eq!(router.handle(Request::Count), Response::Num(1));
+        // Topology changes keep it off.
+        router.scale_up().unwrap();
+        assert!(router.snapshot().replicas.is_none());
+    }
+
+    #[test]
+    fn replica_map_tracks_topology_changes() {
+        let router = replicated_router("memento", 3, 2, false);
+        assert_eq!(router.snapshot().replicas.as_ref().map(ReplicaMap::factor), Some(2));
+        router.scale_up().unwrap();
+        let snap = router.snapshot();
+        let map = snap.replicas.as_ref().expect("replica map after scale");
+        assert_eq!(map.factor(), 2);
+        // The rebuilt map derives from the scaled engine: replicas can
+        // name the new bucket.
+        let named: std::collections::BTreeSet<u32> = (0..512)
+            .filter_map(|i| {
+                let d = crate::hashing::splitmix64(i);
+                snap.first_replica(d, snap.engine.bucket(d))
+            })
+            .collect();
+        assert!(named.contains(&3), "new bucket never chosen as a replica: {named:?}");
     }
 
     #[test]

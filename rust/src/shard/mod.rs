@@ -36,12 +36,13 @@
 use std::collections::{HashMap, HashSet};
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::hashing::XxBuildHasher;
 use crate::proto::{self, BatchOp, BatchSource, Request, RequestRef, Response, Value, MAX_BATCH};
-use crate::sync::{Arc, AtomicU64, AtomicUsize, Mutex, Ordering};
+use crate::sync::{Arc, AtomicU64, AtomicUsize, Backoff, Mutex, Ordering};
 
 /// Number of lock stripes (power of two). Public because the incremental
 /// rebalancer iterates stripes (`SCANSTRIPE <i>` for `i < STRIPES`); both
@@ -51,6 +52,20 @@ pub const STRIPES: usize = 16;
 /// Decorrelates stripe selection from the placement engine's use of the
 /// same digest (otherwise low digest bits could bias both).
 const STRIPE_SEED: u64 = 0x517;
+
+/// Seed for hashing stored *values* into the per-stripe content digest
+/// (`DIGEST`), distinct from the key-digest seed so `entry(k, v)` never
+/// degenerates when a value happens to equal its key's bytes.
+const DIGEST_VALUE_SEED: u64 = 0xD16E_5701;
+
+/// Default remote-call deadline (connect, read, and write) for
+/// [`RemotePool`].  Generous — it exists to bound a *hung* peer, not to
+/// race healthy ones.
+pub const DEFAULT_REMOTE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Default bounded retry count for [`RemotePool`] calls (fresh pooled
+/// connection per attempt).
+pub const DEFAULT_REMOTE_RETRIES: u32 = 2;
 
 /// The canonical key → digest map (xxhash64, seed 0).  Placement, stripe
 /// selection and migration planning all derive from this one digest, so
@@ -327,6 +342,30 @@ impl Shard {
         cleared
     }
 
+    /// Per-stripe content digests: an order-independent XOR fold of
+    /// `splitmix64(key_digest ^ xxhash64(value))` over each stripe's live
+    /// entries (an empty stripe digests to 0; tombstones are transient
+    /// migration state and excluded).  Because stripe membership is a
+    /// pure function of the key digest, the *same* key set with the same
+    /// values digests identically on any shard — which is what lets the
+    /// anti-entropy restore sweep compare a survivor's stripe against
+    /// the restored shard's and skip streaming it when they already
+    /// agree.
+    pub fn stripe_digests(&self) -> [u64; STRIPES] {
+        let mut out = [0u64; STRIPES];
+        for (i, s) in self.stripes.iter().enumerate() {
+            let s = s.lock().unwrap();
+            let mut acc = 0u64;
+            for (k, v) in &s.live {
+                acc ^= crate::hashing::splitmix64(
+                    key_digest(k) ^ crate::hashing::xxhash64(v, DIGEST_VALUE_SEED),
+                );
+            }
+            out[i] = acc;
+        }
+        out
+    }
+
     /// All keys currently stored (rebalancer input).
     pub fn scan(&self) -> Vec<String> {
         let mut keys = Vec::new();
@@ -420,6 +459,7 @@ impl Shard {
             }
             RequestRef::PurgeTombs => Response::Num(self.purge_tombstones()),
             RequestRef::Wipe => Response::Num(self.wipe()),
+            RequestRef::Digest => Response::Nums(self.stripe_digests().to_vec()),
             RequestRef::Scan => Response::Keys(self.scan()),
             RequestRef::ScanStripe { stripe } => {
                 if (stripe as usize) < STRIPES {
@@ -501,13 +541,138 @@ pub enum ShardClient {
     Local(Arc<Shard>),
     /// Remote shard over TCP.
     Remote(Arc<RemotePool>),
+    /// Fault-injecting wrapper around another client (test harness for
+    /// partial-write and torn-fan-out schedules; never constructed by
+    /// production wiring).
+    Flaky(Arc<FlakyShard>),
 }
 
-/// Fixed-size connection pool to a remote shard.
+/// What a [`FlakyShard`] does to a call selected for fault injection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlakyMode {
+    /// Drop the request before it reaches the shard and answer `Err` —
+    /// the write never happened anywhere.
+    Drop,
+    /// Forward the request, then lose the acknowledgement — the write
+    /// *landed* but the caller sees `Err` (the classic torn fan-out:
+    /// state diverges from what the writer believes).
+    AckLost,
+    /// Forward the request after a bounded busy-wait — exercises slow
+    /// peers without failing anything.
+    Delay,
+}
+
+/// Deterministic fault injector around a [`ShardClient`].
+///
+/// Selection is a pure function of a seed and a relaxed call counter
+/// (`splitmix64(seed ^ call#) % 100 < percent`), so a schedule is
+/// reproducible run to run without wall-clock or RNG state, and a test
+/// can compute exactly which calls will fault.
+pub struct FlakyShard {
+    inner: ShardClient,
+    mode: FlakyMode,
+    /// Percentage of calls faulted (0–100).
+    percent: u64,
+    seed: u64,
+    calls: AtomicU64,
+    injected: AtomicU64,
+}
+
+impl FlakyShard {
+    /// Wrap `inner`, faulting `percent`% of calls with `mode`.
+    pub fn wrap(inner: ShardClient, mode: FlakyMode, percent: u64, seed: u64) -> Arc<Self> {
+        Arc::new(Self {
+            inner,
+            mode,
+            percent: percent.min(100),
+            seed,
+            calls: AtomicU64::new(0),
+            injected: AtomicU64::new(0),
+        })
+    }
+
+    /// Calls seen so far.
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed) // ord: Relaxed — independent telemetry counter
+    }
+
+    /// Faults injected so far.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed) // ord: Relaxed — independent telemetry counter
+    }
+
+    /// The wrapped client (tests reach through to assert shard state).
+    pub fn inner(&self) -> &ShardClient {
+        &self.inner
+    }
+
+    fn fault_now(&self) -> bool {
+        let n = self.calls.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — deterministic schedule counter, no memory published through it
+        let hit = crate::hashing::splitmix64(self.seed ^ n) % 100 < self.percent;
+        if hit {
+            self.injected.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
+        }
+        hit
+    }
+
+    fn delay(&self) {
+        let mut backoff = Backoff::new();
+        for _ in 0..16 {
+            backoff.snooze();
+        }
+    }
+
+    fn call_ref(&self, req: RequestRef<'_>, digest: Option<u64>) -> Result<Response> {
+        if self.fault_now() {
+            match self.mode {
+                FlakyMode::Drop => bail!("injected fault: request dropped"),
+                FlakyMode::AckLost => {
+                    let _ = self.inner.call_ref(req, digest);
+                    bail!("injected fault: ack lost");
+                }
+                FlakyMode::Delay => self.delay(),
+            }
+        }
+        self.inner.call_ref(req, digest)
+    }
+
+    fn call_batch<S: BatchSource + ?Sized>(
+        &self,
+        op: BatchOp,
+        sel: &[u32],
+        src: &S,
+        digests: &[u64],
+        out: &mut [Response],
+    ) -> Result<()> {
+        if self.fault_now() {
+            match self.mode {
+                FlakyMode::Drop => bail!("injected fault: batch dropped"),
+                FlakyMode::AckLost => {
+                    let _ = self.inner.call_batch(op, sel, src, digests, out);
+                    bail!("injected fault: batch ack lost");
+                }
+                FlakyMode::Delay => self.delay(),
+            }
+        }
+        self.inner.call_batch(op, sel, src, digests, out)
+    }
+}
+
+/// Fixed-size connection pool to a remote shard, with per-call connect/
+/// read/write deadlines and bounded retry — one hung peer stalls a call
+/// for at most `(retries + 1) × timeout`, never indefinitely.
+///
+/// Retries re-issue the *whole* request on a fresh pooled connection,
+/// so a write whose acknowledgement was lost may apply twice
+/// (at-least-once semantics — PUT/DEL are idempotent per key, and the
+/// refused-`PUTNX` migration machinery tolerates replay).
 pub struct RemotePool {
     addr: SocketAddr,
     conns: Vec<Mutex<Option<ShardConn>>>,
     next: AtomicUsize,
+    timeout: Duration,
+    retries: u32,
+    timeouts: AtomicU64,
 }
 
 struct ShardConn {
@@ -516,13 +681,35 @@ struct ShardConn {
 }
 
 impl RemotePool {
-    /// Pool with `size` lazily-established connections.
+    /// Pool with `size` lazily-established connections and the default
+    /// deadline/retry limits.
     pub fn new(addr: SocketAddr, size: usize) -> Arc<Self> {
+        Self::with_limits(addr, size, DEFAULT_REMOTE_TIMEOUT, DEFAULT_REMOTE_RETRIES)
+    }
+
+    /// Pool with explicit per-call deadline and retry budget.  A zero
+    /// `timeout` disables deadlines (blocking calls, as before the
+    /// limits existed).
+    pub fn with_limits(
+        addr: SocketAddr,
+        size: usize,
+        timeout: Duration,
+        retries: u32,
+    ) -> Arc<Self> {
         Arc::new(Self {
             addr,
             conns: (0..size.max(1)).map(|_| Mutex::new(None)).collect(),
             next: AtomicUsize::new(0),
+            timeout,
+            retries,
+            timeouts: AtomicU64::new(0),
         })
+    }
+
+    /// Calls that hit the connect/read/write deadline so far (surfaced
+    /// as `remote_timeouts=` in the router's STATS).
+    pub fn timeouts(&self) -> u64 {
+        self.timeouts.load(Ordering::Relaxed) // ord: Relaxed — independent telemetry counter
     }
 
     /// Run `f` on one pooled connection (lazily established), dropping
@@ -531,8 +718,16 @@ impl RemotePool {
         let i = self.next.fetch_add(1, Ordering::Relaxed) % self.conns.len(); // ord: Relaxed — round-robin cursor; no memory is published through it
         let mut slot = self.conns[i].lock().unwrap();
         if slot.is_none() {
-            let sock = TcpStream::connect(self.addr)?;
+            let sock = if self.timeout.is_zero() {
+                TcpStream::connect(self.addr)?
+            } else {
+                TcpStream::connect_timeout(&self.addr, self.timeout)?
+            };
             sock.set_nodelay(true)?;
+            if !self.timeout.is_zero() {
+                sock.set_read_timeout(Some(self.timeout))?;
+                sock.set_write_timeout(Some(self.timeout))?;
+            }
             let rd = BufReader::new(sock.try_clone()?);
             *slot = Some(ShardConn { rd, wr: sock });
         }
@@ -543,10 +738,50 @@ impl RemotePool {
         result
     }
 
+    /// `true` when `e` is an I/O deadline expiry (`TimedOut` from
+    /// `connect_timeout`, `WouldBlock` from `set_read_timeout`-style
+    /// deadlines — platform-dependent which one a blocked socket op
+    /// reports).
+    fn is_timeout(e: &anyhow::Error) -> bool {
+        e.chain().any(|cause| {
+            cause.downcast_ref::<std::io::Error>().is_some_and(|io| {
+                matches!(
+                    io.kind(),
+                    std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+                )
+            })
+        })
+    }
+
+    /// Bounded retry: re-run `attempt` up to `retries` extra times with
+    /// `Backoff` between attempts (each on a fresh connection — the
+    /// failed one was dropped), counting deadline expiries.
+    fn retrying<T>(&self, mut attempt: impl FnMut() -> Result<T>) -> Result<T> {
+        let mut backoff = Backoff::new();
+        let mut tries = 0u32;
+        loop {
+            match attempt() {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    if Self::is_timeout(&e) {
+                        self.timeouts.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
+                    }
+                    tries += 1;
+                    if tries > self.retries {
+                        return Err(e);
+                    }
+                    backoff.snooze();
+                }
+            }
+        }
+    }
+
     fn call(&self, req: &RequestRef<'_>) -> Result<Response> {
-        self.with_conn(|conn| {
-            proto::write_request_ref(&mut conn.wr, req)?;
-            proto::read_response(&mut conn.rd)
+        self.retrying(|| {
+            self.with_conn(|conn| {
+                proto::write_request_ref(&mut conn.wr, req)?;
+                proto::read_response(&mut conn.rd)
+            })
         })
     }
 
@@ -559,24 +794,26 @@ impl RemotePool {
         src: &S,
         out: &mut [Response],
     ) -> Result<()> {
-        self.with_conn(|conn| {
-            proto::write_batch_request(&mut conn.wr, op, sel, src)?;
-            match proto::read_response(&mut conn.rd)? {
-                Response::Multi(subs) => {
-                    ensure!(
-                        subs.len() == sel.len(),
-                        "batch answered {} of {} keys",
-                        subs.len(),
-                        sel.len()
-                    );
-                    for (j, sub) in subs.into_iter().enumerate() {
-                        out[sel[j] as usize] = sub;
+        self.retrying(|| {
+            self.with_conn(|conn| {
+                proto::write_batch_request(&mut conn.wr, op, sel, src)?;
+                match proto::read_response(&mut conn.rd)? {
+                    Response::Multi(subs) => {
+                        ensure!(
+                            subs.len() == sel.len(),
+                            "batch answered {} of {} keys",
+                            subs.len(),
+                            sel.len()
+                        );
+                        for (j, sub) in subs.into_iter().enumerate() {
+                            out[sel[j] as usize] = sub;
+                        }
+                        Ok(())
                     }
-                    Ok(())
+                    Response::Err(m) => bail!("shard refused batch: {m}"),
+                    other => bail!("unexpected batch response {other:?}"),
                 }
-                Response::Err(m) => bail!("shard refused batch: {m}"),
-                other => bail!("unexpected batch response {other:?}"),
-            }
+            })
         })
     }
 }
@@ -589,6 +826,7 @@ impl ShardClient {
         match self {
             ShardClient::Local(shard) => Ok(shard.handle_ref(req, digest)),
             ShardClient::Remote(pool) => pool.call(&req),
+            ShardClient::Flaky(flaky) => flaky.call_ref(req, digest),
         }
     }
 
@@ -628,6 +866,7 @@ impl ShardClient {
                 }
                 Ok(())
             }
+            ShardClient::Flaky(flaky) => flaky.call_batch(op, sel, src, digests, out),
         }
     }
 
@@ -689,6 +928,22 @@ impl ShardClient {
     pub fn wipe(&self) -> Result<u64> {
         match self.call_ref(RequestRef::Wipe, None)? {
             Response::Num(x) => Ok(x),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Typed DIGEST: the shard's per-stripe content digests (anti-
+    /// entropy input).
+    pub fn stripe_digests(&self) -> Result<Vec<u64>> {
+        match self.call_ref(RequestRef::Digest, None)? {
+            Response::Nums(xs) => {
+                ensure!(
+                    xs.len() == STRIPES,
+                    "DIGEST answered {} stripes (want {STRIPES})",
+                    xs.len()
+                );
+                Ok(xs)
+            }
             other => Err(anyhow!("unexpected response {other:?}")),
         }
     }
@@ -1155,6 +1410,116 @@ mod tests {
             Response::Multi(subs) => assert!(subs.is_empty()),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn stripe_digests_track_content_not_history() {
+        let a = Shard::new(30);
+        let b = Shard::new(31);
+        assert_eq!(a.stripe_digests(), [0u64; STRIPES], "empty shard digests to zero");
+        // Same (key, value) set inserted in different orders, with
+        // detours, digests identically — the fold is order-independent
+        // and content-addressed.
+        for i in 0..64 {
+            let k = format!("dg{i}");
+            a.put(&k, val(&[i as u8]), kd(&k));
+        }
+        b.put("detour", val(b"x"), kd("detour"));
+        for i in (0..64).rev() {
+            let k = format!("dg{i}");
+            b.put(&k, val(&[i as u8]), kd(&k));
+        }
+        assert!(b.del("detour", kd("detour")));
+        assert_eq!(a.stripe_digests(), b.stripe_digests());
+        // A differing value shows up in exactly its key's stripe.
+        b.put("dg0", val(b"changed"), kd("dg0"));
+        let (da, db) = (a.stripe_digests(), b.stripe_digests());
+        let diverged: Vec<usize> = (0..STRIPES).filter(|&i| da[i] != db[i]).collect();
+        assert_eq!(diverged, vec![stripe_index(kd("dg0"))]);
+        // Tombstones are invisible to the digest (transient state).
+        let before = a.stripe_digests();
+        a.del_tomb("ghost-key", kd("ghost-key"));
+        assert_eq!(a.stripe_digests(), before);
+    }
+
+    #[test]
+    fn digest_roundtrips_the_wire() {
+        let s = Shard::new(32);
+        s.put("wired", val(b"v"), kd("wired"));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let srv = s.clone();
+        std::thread::spawn(move || {
+            let _ = serve(srv, listener);
+        });
+        let c = ShardClient::Remote(RemotePool::new(addr, 1));
+        assert_eq!(c.stripe_digests().unwrap(), s.stripe_digests().to_vec());
+        assert_eq!(
+            ShardClient::Local(s.clone()).stripe_digests().unwrap(),
+            s.stripe_digests().to_vec()
+        );
+    }
+
+    #[test]
+    fn remote_pool_counts_timeouts_on_a_hung_peer() {
+        // A listener that accepts and never answers: the read deadline
+        // must fire (bounded stall), be counted, and surface an error
+        // after the bounded retries — not hang the caller forever.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let mut held = Vec::new();
+            while let Ok((sock, _)) = listener.accept() {
+                held.push(sock); // hold open, never respond
+            }
+        });
+        let pool = RemotePool::with_limits(addr, 1, Duration::from_millis(50), 1);
+        let c = ShardClient::Remote(pool.clone());
+        assert!(c.get("k").is_err());
+        assert!(
+            pool.timeouts() >= 1,
+            "deadline expiries must be counted (got {})",
+            pool.timeouts()
+        );
+    }
+
+    #[test]
+    fn flaky_shard_injects_deterministically() {
+        let inner = Shard::new(33);
+        // Drop mode: the faulted call never reaches the shard.
+        let flaky = FlakyShard::wrap(
+            ShardClient::Local(inner.clone()),
+            FlakyMode::Drop,
+            100,
+            7,
+        );
+        let c = ShardClient::Flaky(flaky.clone());
+        assert!(c.put("k", val(b"v")).is_err());
+        assert_eq!(inner.count(), 0);
+        assert_eq!((flaky.calls(), flaky.injected()), (1, 1));
+
+        // AckLost mode: the write lands but the caller sees an error —
+        // the torn-fan-out primitive.
+        let torn = FlakyShard::wrap(
+            ShardClient::Local(inner.clone()),
+            FlakyMode::AckLost,
+            100,
+            7,
+        );
+        let c = ShardClient::Flaky(torn.clone());
+        assert!(c.put("k", val(b"v")).is_err());
+        assert_eq!(inner.count(), 1, "AckLost must apply the write");
+
+        // 0% never faults; Delay always forwards.
+        let clean =
+            FlakyShard::wrap(ShardClient::Local(inner.clone()), FlakyMode::Drop, 0, 7);
+        let c = ShardClient::Flaky(clean.clone());
+        assert_eq!(c.get("k").unwrap().as_deref(), Some(&b"v"[..]));
+        assert_eq!((clean.calls(), clean.injected()), (1, 0));
+        let slow =
+            FlakyShard::wrap(ShardClient::Local(inner), FlakyMode::Delay, 100, 7);
+        let c = ShardClient::Flaky(slow);
+        assert_eq!(c.get("k").unwrap().as_deref(), Some(&b"v"[..]));
     }
 
     #[test]

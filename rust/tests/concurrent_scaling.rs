@@ -11,10 +11,17 @@
 //! * no request ever routes to a failed shard (its op counter freezes);
 //! * epochs only move forward, by exactly one per topology change;
 //! * the keyset is fully intact (count + per-key values) after the churn,
-//!   and nothing deleted while degraded resurrects after a restore.
+//!   and nothing deleted while degraded resurrects after a restore;
+//! * replication's write fan-out survives fault injection: a
+//!   [`binhash::shard::FlakyShard`] replica drives partial-write (Drop)
+//!   and torn-fan-out (AckLost) schedules, and the router's counters,
+//!   degraded reads, and delete fan-out stay honest about exactly which
+//!   copies exist.
 //!
 //! Loom-free by design: real threads over the real router, seeded data,
-//! bounded cycles.
+//! bounded cycles.  The flaky schedules are deterministic
+//! (`splitmix64(seed ^ call#)`), so the replication fault tests assert
+//! per-call outcomes, not statistics.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -425,8 +432,9 @@ fn failover_under_concurrent_readers_writers_and_deleters() {
         );
     }
     // ...and slice C never reads a value nobody wrote (a marooned key
-    // wiped by a restore is absent, not corrupted — replication is the
-    // ROADMAP follow-up for surviving that loss).
+    // wiped by a restore is absent, not corrupted — this router runs
+    // factor 1; `replication.factor` ≥ 2 is what survives that loss, see
+    // the flaky-replica tests below and tests/failover.rs).
     for i in A_END..B_START {
         match router.handle(Request::Get { key: format!("fk{i}") }) {
             Response::Val(v) => assert_eq!(v, value_for(i), "fk{i} corrupted"),
@@ -438,5 +446,178 @@ fn failover_under_concurrent_readers_writers_and_deleters() {
     assert!(
         router.shard_count(FAILED).unwrap() > 0,
         "restored shard {FAILED} never received keys back"
+    );
+}
+
+/// Replicated router (`factor = 2`, `write_mode = "primary"`) over a
+/// memento/4 cluster whose bucket 3 is the given flaky wrapper and
+/// buckets 0–2 are clean locals — the fixture for the fault-injection
+/// schedules below.
+fn flaky_replica_router(flaky: &Arc<binhash::shard::FlakyShard>) -> Arc<Router> {
+    use binhash::shard::{Shard, ShardClient};
+    let engine = binhash::algorithms::by_name("memento", 4).unwrap();
+    let shards = vec![
+        ShardClient::Local(Shard::new(0)),
+        ShardClient::Local(Shard::new(1)),
+        ShardClient::Local(Shard::new(2)),
+        ShardClient::Flaky(flaky.clone()),
+    ];
+    Router::with_replication(
+        binhash::cluster::Cluster::new(engine, shards),
+        Box::new(|id| ShardClient::Local(Shard::new(id))),
+        None,
+        2,
+        false,
+    )
+}
+
+/// Keys whose primary is bucket 1 and whose rank-1 replica is the flaky
+/// bucket 3 — each PUT/DEL sends *exactly one* call to the flaky shard,
+/// so flaky call slot `n` belongs to the `n`-th operation.
+fn keys_with_flaky_replica(router: &Router, want: usize) -> Vec<String> {
+    use binhash::shard::key_digest;
+    let healthy = binhash::algorithms::by_name("memento", 4).unwrap();
+    let snap = router.snapshot();
+    let keys: Vec<String> = (0..100_000)
+        .map(|i| format!("tz{i}"))
+        .filter(|k| {
+            let d = key_digest(k);
+            healthy.bucket(d) == 1 && snap.first_replica(d, 1) == Some(3)
+        })
+        .take(want)
+        .collect();
+    assert_eq!(keys.len(), want, "keyset never pairs primary 1 with replica 3");
+    keys
+}
+
+#[test]
+fn partial_replica_writes_follow_the_deterministic_drop_schedule() {
+    // Drop schedule at 50%: some replica writes vanish before reaching
+    // the shard, the rest land.  The router must (a) keep acking the
+    // primary-mode PUTs, (b) count exactly the dropped calls as
+    // `replica_write_failures`, and (c) after the primary fails, answer
+    // each key per its *actual* copy state — value if the copy landed,
+    // honest NIL if the torn write lost it (never a false UNAVAILABLE:
+    // one failure at factor 2 cannot maroon a key).
+    use binhash::hashing::splitmix64;
+    use binhash::shard::{FlakyMode, FlakyShard, Shard, ShardClient};
+    const SEED: u64 = 0xF1A6;
+    const PCT: u64 = 50;
+    const N: usize = 40;
+    let flaky = FlakyShard::wrap(ShardClient::Local(Shard::new(3)), FlakyMode::Drop, PCT, SEED);
+    let router = flaky_replica_router(&flaky);
+    let keys = keys_with_flaky_replica(&router, N);
+    // The wrapper's schedule is pure: call `n` faults iff
+    // `splitmix64(seed ^ n) % 100 < percent` — compute it up front.
+    let dropped: Vec<bool> =
+        (0..N as u64).map(|n| splitmix64(SEED ^ n) % 100 < PCT).collect();
+    assert!(
+        dropped.iter().any(|&b| b) && !dropped.iter().all(|&b| b),
+        "degenerate schedule: change the seed"
+    );
+
+    for (i, k) in keys.iter().enumerate() {
+        assert_eq!(
+            router.handle(Request::Put { key: k.clone(), value: value_for(i) }),
+            Response::Ok,
+            "a dropped replica write must not fail the primary-acked PUT ({k})"
+        );
+    }
+    let torn = dropped.iter().filter(|&&b| b).count() as u64;
+    assert_eq!((flaky.calls(), flaky.injected()), (N as u64, torn));
+    assert_eq!(
+        router.metrics.replica_write_failures.load(Ordering::Relaxed), // ord: Relaxed — test-side telemetry read
+        torn,
+        "failures must count exactly the dropped schedule slots"
+    );
+    // Replica state diverged exactly per schedule: only the landed
+    // copies exist on the flaky shard's inner map.
+    match flaky.inner() {
+        ShardClient::Local(s) => assert_eq!(s.count(), N as u64 - torn),
+        _ => unreachable!(),
+    }
+
+    // Fail the primary: the degraded owner is the flaky replica.  Each
+    // GET consumes one flaky slot (the fallback probe only touches the
+    // clean shards), so the per-key outcome is still fully determined.
+    assert_eq!(router.handle(Request::Fail { shard: 1 }), Response::Num(3));
+    let base = flaky.calls();
+    for (j, k) in keys.iter().enumerate() {
+        let read_faults = splitmix64(SEED ^ (base + j as u64)) % 100 < PCT;
+        let got = router.handle(Request::Get { key: k.clone() });
+        if read_faults {
+            match got {
+                Response::Err(msg) => assert!(msg.contains("injected fault"), "{k}: {msg}"),
+                other => panic!("{k}: faulted read answered {other:?}"),
+            }
+        } else if dropped[j] {
+            assert_eq!(got, Response::Nil, "{k}: torn-lost key must read honest NIL");
+        } else {
+            assert_eq!(got, Response::Val(value_for(j)), "{k}: landed copy lost");
+        }
+    }
+    assert_eq!(
+        router.metrics.unavailable.load(Ordering::Relaxed), // ord: Relaxed — test-side telemetry read
+        0,
+        "no UNAVAILABLE below `factor` concurrent failures"
+    );
+}
+
+#[test]
+fn ack_lost_fan_out_diverges_then_delete_fan_out_reconverges() {
+    // AckLost at 100%: every replica write LANDS but its ack is lost —
+    // the counters say failure while the state says success (the classic
+    // torn fan-out).  The divergence must be bounded by the delete
+    // fan-out: DELs go to every replica regardless of the primary's
+    // answer, so diverged copies cannot outlive their key.
+    use binhash::shard::{FlakyMode, FlakyShard, Shard, ShardClient};
+    const SEED: u64 = 0xACC;
+    const N: usize = 24;
+    let flaky =
+        FlakyShard::wrap(ShardClient::Local(Shard::new(3)), FlakyMode::AckLost, 100, SEED);
+    let router = flaky_replica_router(&flaky);
+    let keys = keys_with_flaky_replica(&router, N);
+
+    for (i, k) in keys.iter().enumerate() {
+        assert_eq!(
+            router.handle(Request::Put { key: k.clone(), value: value_for(i) }),
+            Response::Ok,
+            "{k}: lost ack must not fail the primary-acked PUT"
+        );
+    }
+    assert_eq!(
+        router.metrics.replica_write_failures.load(Ordering::Relaxed), // ord: Relaxed — test-side telemetry read
+        N as u64,
+        "every lost ack counts as a replica write failure"
+    );
+    // ...yet every write physically landed: counters and state diverge,
+    // which is exactly what the wrapper is built to produce.
+    match flaky.inner() {
+        ShardClient::Local(s) => assert_eq!(s.count(), N as u64, "AckLost must apply writes"),
+        _ => unreachable!(),
+    }
+
+    // Deletes fan out unconditionally and reconverge the replica even
+    // though every delete ack is lost too.
+    for k in &keys {
+        assert_eq!(router.handle(Request::Del { key: k.clone() }), Response::Ok, "{k}");
+    }
+    match flaky.inner() {
+        ShardClient::Local(s) => {
+            assert_eq!(s.count(), 0, "diverged replica copies outlived their keys")
+        }
+        _ => unreachable!(),
+    }
+    // Healthy-path reads (primary bucket 1 is alive) confirm NIL without
+    // touching the flaky shard.
+    let before = flaky.calls();
+    for k in &keys {
+        assert_eq!(router.handle(Request::Get { key: k.clone() }), Response::Nil, "{k}");
+    }
+    assert_eq!(flaky.calls(), before, "a healthy-primary read dialed the replica");
+    assert_eq!(
+        router.metrics.replica_write_failures.load(Ordering::Relaxed), // ord: Relaxed — test-side telemetry read
+        2 * N as u64,
+        "PUT and DEL fan-outs each counted their lost acks"
     );
 }

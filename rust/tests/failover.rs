@@ -14,9 +14,16 @@
 //!   stay dead, and engines with restore-order constraints (anchor)
 //!   reject out-of-order restores cleanly;
 //! * scaling while degraded composes for dx (frontier growth) and fails
-//!   fast with the engine's reason for anchor and memento.
+//!   fast with the engine's reason for anchor and memento;
+//! * with `replication.factor` ≥ 2 a failure loses nothing: every key
+//!   written before the FAIL still answers (zero `UNAVAILABLE`), a
+//!   degraded DEL reads back `NIL` instead of a false `UNAVAILABLE`,
+//!   fallback reads repair the owner, and RESTORE converges by digest
+//!   anti-entropy in strictly fewer round-trips than a full re-stream.
 
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
 
 use binhash::algorithms::{by_name, ConsistentHasher};
 use binhash::cluster::Cluster;
@@ -138,9 +145,11 @@ fn every_fault_tolerant_engine_fails_over_and_restores_through_the_router() {
             other => panic!("{name}: {other:?}"),
         }
         // Post-restore: survivors intact, the rewritten key migrated
-        // back, never-rewritten marooned keys are lost (their only copy
-        // died with the shard — replication is the ROADMAP follow-up),
-        // and nothing answers UNAVAILABLE anymore.
+        // back, never-rewritten marooned keys are lost (this router runs
+        // factor 1, so their only copy died with the shard —
+        // `replication_factor_two_serves_every_key_through_a_failure`
+        // pins the factor-2 contract where nothing is lost), and nothing
+        // answers UNAVAILABLE anymore.
         for i in 0..KEYS {
             match classify(&router, &format!("f{i}")) {
                 Read::Hit(v) => {
@@ -585,6 +594,235 @@ fn restored_shard_is_isolated_from_its_stale_past() {
             "{k} resurrected stale data through the restore"
         );
     }
+}
+
+/// Router with `replication.factor = factor` over in-process shards
+/// (`write_mode = "primary"`).
+fn replicated_router(name: &str, n: u32, factor: u32) -> Arc<Router> {
+    Router::with_replication(
+        local_cluster(name, n).unwrap(),
+        Box::new(|id| ShardClient::Local(Shard::new(id))),
+        None,
+        factor,
+        false,
+    )
+}
+
+#[test]
+fn replication_factor_two_serves_every_key_through_a_failure() {
+    // THE replication acceptance test: with `replication.factor = 2`, a
+    // shard failure loses no data — every key written before the FAIL
+    // still answers its value.  Zero UNAVAILABLE, zero silent misses.
+    // The identity that makes it cheap: a key's rank-1 replica is
+    // derived from the same per-failure engine fork the degraded path
+    // routes with, so after FAIL the key's *new* primary already holds
+    // the surviving copy and plain routing serves it.
+    const KEYS: usize = 500;
+    const FAILED: u32 = 2;
+    for name in FT_ENGINES {
+        let router = replicated_router(name, 5, 2);
+        for i in 0..KEYS {
+            assert_eq!(
+                router.handle(Request::Put { key: format!("r{i}"), value: val(i) }),
+                Response::Ok,
+                "{name}"
+            );
+        }
+        assert_eq!(
+            router.metrics.replica_writes.load(Ordering::Relaxed), // ord: Relaxed — test-side telemetry read
+            KEYS as u64,
+            "{name}: every PUT fans out exactly one replica write"
+        );
+        assert_eq!(
+            router.metrics.replica_write_failures.load(Ordering::Relaxed), // ord: Relaxed — test-side telemetry read
+            0,
+            "{name}"
+        );
+        // Sanity: the keyset exercises the bucket we are about to fail.
+        let pre_fail = by_name(name, 5).unwrap();
+        let marooned: Vec<usize> = (0..KEYS)
+            .filter(|i| pre_fail.bucket(key_digest(&format!("r{i}"))) == FAILED)
+            .collect();
+        assert!(!marooned.is_empty(), "{name}: keyset never hit bucket {FAILED}");
+
+        assert_eq!(router.handle(Request::Fail { shard: FAILED }), Response::Num(4), "{name}");
+        for i in 0..KEYS {
+            match classify(&router, &format!("r{i}")) {
+                Read::Hit(v) => assert_eq!(v, val(i), "{name}: r{i} corrupted"),
+                Read::Miss => panic!("{name}: r{i} lost despite replication"),
+                Read::Unavailable => panic!("{name}: r{i} UNAVAILABLE despite replication"),
+            }
+        }
+        assert_eq!(
+            router.metrics.unavailable.load(Ordering::Relaxed), // ord: Relaxed — test-side telemetry read
+            0,
+            "{name}: a single failure at factor 2 can never maroon a key"
+        );
+        // Batched reads honor the same contract.
+        match router.handle(Request::MGet { keys: (0..KEYS).map(|i| format!("r{i}")).collect() })
+        {
+            Response::Multi(subs) => {
+                for (i, sub) in subs.iter().enumerate() {
+                    assert_eq!(*sub, Response::Val(val(i)), "{name}: batched r{i}");
+                }
+            }
+            other => panic!("{name}: {other:?}"),
+        }
+        // Restore converges, re-fills the shard, and keeps every answer.
+        assert_eq!(
+            router.handle(Request::Restore { shard: FAILED }),
+            Response::Num(5),
+            "{name}"
+        );
+        assert!(!router.snapshot().is_degraded(), "{name}: restore did not settle");
+        assert!(router.shard_count(FAILED).unwrap() > 0, "{name}: restored shard left empty");
+        for i in 0..KEYS {
+            match classify(&router, &format!("r{i}")) {
+                Read::Hit(v) => assert_eq!(v, val(i), "{name}: r{i} after restore"),
+                Read::Miss => panic!("{name}: r{i} lost by the restore"),
+                Read::Unavailable => panic!("{name}: r{i} unavailable after restore"),
+            }
+        }
+    }
+}
+
+#[test]
+fn put_then_del_while_degraded_answers_nil_not_unavailable() {
+    // Regression for the factor-1 degraded-read hole: PUT a key, fail
+    // its primary, DEL it while degraded, GET it back.  A factor-1
+    // router cannot distinguish "deleted" from "marooned on the dead
+    // shard" and answers UNAVAILABLE; with a live replica the router
+    // *knows* — the delete reached every surviving copy, so the honest
+    // answer is NIL.
+    const FAILED: u32 = 1;
+    for name in FT_ENGINES {
+        let router = replicated_router(name, 4, 2);
+        let healthy = by_name(name, 4).unwrap();
+        let key = (0..)
+            .map(|i| format!("pd{i}"))
+            .find(|k| healthy.bucket(key_digest(k)) == FAILED)
+            .unwrap();
+        assert_eq!(
+            router.handle(Request::Put { key: key.clone(), value: val(7) }),
+            Response::Ok,
+            "{name}"
+        );
+        assert_eq!(router.handle(Request::Fail { shard: FAILED }), Response::Num(3), "{name}");
+        // Still served, from the surviving copy...
+        assert_eq!(
+            router.handle(Request::Get { key: key.clone() }),
+            Response::Val(val(7)),
+            "{name}"
+        );
+        // ...deleted while degraded (the delete fans out to replicas)...
+        assert_eq!(router.handle(Request::Del { key: key.clone() }), Response::Ok, "{name}");
+        // ...and the post-delete read is NIL, not a false UNAVAILABLE.
+        assert_eq!(router.handle(Request::Get { key: key.clone() }), Response::Nil, "{name}");
+        // A key that never existed answers NIL too: one failure cannot
+        // have taken both copies of a factor-2 key (pigeonhole).
+        assert_eq!(
+            router.handle(Request::Get { key: "pd-never-written".into() }),
+            Response::Nil,
+            "{name}"
+        );
+    }
+}
+
+#[test]
+fn factor_three_reads_fall_back_past_a_torn_copy_and_repair() {
+    // factor = 3: copies on the primary and two ranked replicas.  Fail
+    // the primary, then simulate a torn fan-out by deleting the rank-1
+    // copy straight out of the owning shard's map (the copy a flaky
+    // network write never landed).  The degraded read misses its owner,
+    // probes the remaining holders, serves the rank-2 copy, and
+    // read-repairs it back onto the owner so the next read is direct.
+    let router = replicated_router("memento", 5, 3);
+    let key = "torn0".to_string();
+    let d = key_digest(&key);
+    let (p, r1, r2) = {
+        let snap = router.snapshot();
+        let p = snap.route(d).0;
+        let mut reps = Vec::new();
+        snap.replicas_into(d, p, &mut reps);
+        assert_eq!(reps.len(), 2, "factor 3 must yield two replicas");
+        (p, reps[0], reps[1])
+    };
+    assert_eq!(router.handle(Request::Put { key: key.clone(), value: val(9) }), Response::Ok);
+    assert_eq!(router.handle(Request::Fail { shard: p }), Response::Num(4));
+    // The degraded owner is the rank-1 replica (the fork identity).
+    assert_eq!(router.snapshot().route(d).0, r1, "degraded owner must be the rank-1 replica");
+    let owner_shard = match &router.snapshot().shards[r1 as usize] {
+        ShardClient::Local(s) => s.clone(),
+        _ => unreachable!(),
+    };
+    assert!(owner_shard.del(&key, d), "rank-1 copy missing before the torn-write simulation");
+    // Owner misses → fallback probe finds the rank-2 copy.
+    assert_eq!(
+        router.handle(Request::Get { key: key.clone() }),
+        Response::Val(val(9)),
+        "fallback read failed (p={p} r1={r1} r2={r2})"
+    );
+    assert!(router.metrics.replica_reads.load(Ordering::Relaxed) >= 1); // ord: Relaxed — test-side telemetry read
+    assert!(router.metrics.read_repairs.load(Ordering::Relaxed) >= 1); // ord: Relaxed — test-side telemetry read
+    // Read repair restored the owner's copy: the next read is a direct
+    // hit and the fallback counter stands still.
+    assert!(owner_shard.get(&key, d).is_some(), "read repair left the owner empty");
+    let before = router.metrics.replica_reads.load(Ordering::Relaxed); // ord: Relaxed — test-side telemetry read
+    assert_eq!(router.handle(Request::Get { key: key.clone() }), Response::Val(val(9)));
+    assert_eq!(
+        router.metrics.replica_reads.load(Ordering::Relaxed), // ord: Relaxed — test-side telemetry read
+        before,
+        "repaired key still reading through the fallback"
+    );
+}
+
+#[test]
+fn restore_converges_by_digest_anti_entropy_below_full_restream() {
+    // RESTORE wipes the rejoining shard and re-streams its keyspace from
+    // the survivors.  The anti-entropy streams open with one DIGEST
+    // exchange per side and skip every (source, stripe) whose digest
+    // already matches the wiped destination — for a sparse keyspace most
+    // stripes are empty on both sides, so the digest prologue must pay
+    // for itself: strictly fewer round-trips than the full re-stream
+    // (every stripe of every source scanned).
+    const KEYS: usize = 20;
+    const FAILED: u32 = 2;
+    let router = replicated_router("memento", 5, 2);
+    for i in 0..KEYS {
+        assert_eq!(
+            router.handle(Request::Put { key: format!("ae{i}"), value: val(i) }),
+            Response::Ok
+        );
+    }
+    assert_eq!(router.handle(Request::Fail { shard: FAILED }), Response::Num(4));
+    let rt0 = router.metrics.migration_round_trips.load(Ordering::Relaxed); // ord: Relaxed — test-side telemetry read
+    let sk0 = router.metrics.ae_stripes_skipped.load(Ordering::Relaxed); // ord: Relaxed — test-side telemetry read
+    assert_eq!(router.handle(Request::Restore { shard: FAILED }), Response::Num(5));
+    let rt = router.metrics.migration_round_trips.load(Ordering::Relaxed) - rt0; // ord: Relaxed — test-side telemetry read
+    let skipped = router.metrics.ae_stripes_skipped.load(Ordering::Relaxed) - sk0; // ord: Relaxed — test-side telemetry read
+    assert!(skipped > 0, "anti-entropy skipped nothing");
+    // The digest prologue cost 1 (destination) + `sources` round-trips
+    // and saved `skipped` stripe scans, so the full re-stream would have
+    // spent `rt - (1 + sources) + skipped`.  `sources` is at most the 4
+    // survivors — using the upper bound only strengthens the assertion.
+    let sources = 4u64;
+    let full_restream = rt - (1 + sources) + skipped;
+    assert!(
+        rt < full_restream,
+        "anti-entropy restore must beat the full re-stream: \
+         rt={rt} full={full_restream} skipped={skipped}"
+    );
+    // And it actually converged: steady state, every key answers, the
+    // restored shard holds its keyspace again.
+    assert!(!router.snapshot().is_degraded());
+    for i in 0..KEYS {
+        assert_eq!(
+            router.handle(Request::Get { key: format!("ae{i}") }),
+            Response::Val(val(i)),
+            "ae{i} after anti-entropy restore"
+        );
+    }
+    assert!(router.shard_count(FAILED).unwrap() > 0, "restored shard left empty");
 }
 
 #[test]

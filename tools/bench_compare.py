@@ -37,6 +37,16 @@ def rows(doc):
         ratio = dig(c, "batch", "mget64_vs_get")
         if ratio is not None:
             yield (f"n={n} mget64-vs-get ratio", -ratio)  # sentinel: ratio row
+    rep = doc.get("replication")
+    if isinstance(rep, dict):  # absent in pre-replication artifacts
+        n = rep.get("n")
+        f = rep.get("factor")
+        tag = f"replication n={n} R={f}"
+        yield (f"{tag} put", dig(rep, "put", "ns_op"))
+        yield (f"{tag} get", dig(rep, "get", "ns_op"))
+        yield (f"{tag} degraded get", dig(rep, "degraded_get", "ns_op"))
+        yield (f"{tag} degraded get p99", rep.get("degraded_p99"))
+        yield (f"{tag} restore round-trips", rep.get("restore_round_trips"))
     fan = doc.get("fanin")
     if isinstance(fan, dict):  # null on platforms without the event server
         conns = fan.get("connections")
@@ -74,11 +84,12 @@ def main():
             base_s = f"{-base:.2f}x" if base is not None else "—"
             print(f"| {label} | {base_s} | {cur_s} | |")
             continue
+        unit = "" if label.endswith("round-trips") else " ns"
         if base is None or base == 0:
-            print(f"| {label} | — | {cur:.0f} ns | new |")
+            print(f"| {label} | — | {cur:.0f}{unit} | new |")
             continue
         delta = (cur - base) / base * 100.0
-        print(f"| {label} | {base:.0f} ns | {cur:.0f} ns | {delta:+.1f}% |")
+        print(f"| {label} | {base:.0f}{unit} | {cur:.0f}{unit} | {delta:+.1f}% |")
 
 
 if __name__ == "__main__":
