@@ -1,6 +1,7 @@
-//! §Perf harness: isolates the L3 hot-path costs and candidate
-//! optimizations, one variable at a time (EXPERIMENTS.md §Perf records the
-//! before/after of each accepted/rejected change).
+//! Perf-variant harness: isolates the L3 hot-path costs and candidate
+//! optimizations, one variable at a time (ROADMAP.md tracks which
+//! candidates were accepted or rejected; `BENCH_router.json` carries the
+//! release-over-release trajectory).
 //!
 //! Variants measured:
 //!  * `free fn`        — `binomial::lookup` direct call (the router's path)

@@ -26,6 +26,12 @@
 //! (digest round-trips + skipped stripe scans from the router's
 //! metrics).
 //!
+//! A Zipfian hot-key phase (theta 0.99) prices the router's hot-key
+//! cache: GET ns/op with the cache on vs off over the same skewed key
+//! stream, plus a 2:1 heterogeneous-weight `Weighted` cluster whose
+//! measured per-shard load factor is reported beside the paper's
+//! Eq. (3) relative-imbalance bound.
+//!
 //! Custom harness (`harness = false`): ops/s + ns/op over seeded key sets,
 //! printed human-readably *and* written as `BENCH_router.json` (override
 //! the path with `BENCH_OUT`) — CI uploads the JSON so the perf
@@ -260,10 +266,12 @@ fn main() {
     }
 
     let replication = replication_json();
+    let zipf = zipf_json();
     let fanin = fanin_json();
     let json = format!(
         "{{\n  \"bench\": \"router_hotpath\",\n  \"ops_per_phase\": {OPS},\n  \
-         \"clusters\": [\n{}\n  ],\n  \"replication\": {replication},\n  \"fanin\": {fanin}\n}}\n",
+         \"clusters\": [\n{}\n  ],\n  \"replication\": {replication},\n  \
+         \"zipf\": {zipf},\n  \"fanin\": {fanin}\n}}\n",
         clusters_json.join(",\n")
     );
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_router.json".to_string());
@@ -365,6 +373,146 @@ fn replication_json() -> String {
         op_json(put_ns),
         op_json(get_ns),
         op_json(deg_ns),
+    )
+}
+
+/// Zipfian hot-key phase: the same skewed key stream (theta 0.99 over
+/// a 100k-id universe) driven through two identical binomial routers,
+/// one with the hot-key cache off and one with it on — the delta is
+/// what a refcount-bump hit saves over the shard round-trip.  Then a
+/// 2:1 heterogeneous-weight `Weighted` cluster (four weight-2 shards,
+/// four weight-1) serves a uniform key set and the measured per-shard
+/// load factor — raw max/mean and weight-normalized — is reported
+/// beside the paper's Eq. (3) relative-imbalance bound `2^-ω`.
+/// Returns the phase's JSON object.
+fn zipf_json() -> String {
+    use binhash::algorithms::binomial::DEFAULT_OMEGA;
+    use binhash::algorithms::weighted::Weighted;
+    use binhash::cluster::Cluster;
+    use binhash::shard::{Shard, ShardClient};
+    use binhash::stats::theory;
+    use binhash::workload::ZipfKeys;
+
+    const N: u32 = 16;
+    const UNIVERSE: usize = 100_000;
+    const THETA: f64 = 0.99;
+    const HOT_KEYS: usize = 4096;
+
+    let mut z = ZipfKeys::new(11, UNIVERSE, THETA);
+    let keys: Vec<String> = (0..OPS).map(|_| z.next_key().0).collect();
+    let values: Vec<Value> = (0..256).map(|i| vec![i as u8; 32].into()).collect();
+
+    let off = Router::new(local_cluster("binomial", N).unwrap());
+    let on = Router::with_placement(
+        local_cluster("binomial", N).unwrap(),
+        Box::new(|id| ShardClient::Local(Shard::new(id))),
+        None,
+        1,
+        false,
+        HOT_KEYS,
+    );
+    // Load the full id universe into both routers.
+    for id in 0..UNIVERSE {
+        let key = format!("obj-{id}");
+        let value = values[id & 0xFF].clone();
+        black_box(off.handle_ref(RequestRef::Put { key: &key, value: value.clone() }));
+        black_box(on.handle_ref(RequestRef::Put { key: &key, value }));
+    }
+
+    // Cache off: every GET pays placement + shard dispatch.
+    let t0 = Instant::now();
+    for k in &keys {
+        black_box(off.handle_ref(RequestRef::Get { key: k }));
+    }
+    let off_ns = ns_op(t0.elapsed(), OPS);
+
+    // Cache on: one warm pass fills the hot set, then the measured pass
+    // serves the head of the distribution from the cache.
+    for k in &keys {
+        black_box(on.handle_ref(RequestRef::Get { key: k }));
+    }
+    let hits0 = on.metrics.hot_hits.load(Ordering::Relaxed);
+    let t0 = Instant::now();
+    for k in &keys {
+        black_box(on.handle_ref(RequestRef::Get { key: k }));
+    }
+    let on_ns = ns_op(t0.elapsed(), OPS);
+    let hits = on.metrics.hot_hits.load(Ordering::Relaxed) - hits0;
+    let evictions = on.metrics.hot_evictions.load(Ordering::Relaxed);
+    let hit_rate = hits as f64 / OPS as f64;
+
+    // 2:1 heterogeneous weights over a binomial vbucket space: the
+    // weight-2 shards own two virtual buckets each, so W = 12.
+    let weights: Vec<u32> = vec![2, 2, 2, 2, 1, 1, 1, 1];
+    let shards_n = weights.len() as u32;
+    let total_w: u32 = weights.iter().sum();
+    let weighted = Weighted::new("binomial", &weights, 1).expect("weighted binomial");
+    let vbuckets = weighted.virtual_buckets();
+    let shards = (0..shards_n).map(|i| ShardClient::Local(Shard::new(i))).collect();
+    let wrouter = Router::with_placement(
+        Cluster::new(Box::new(weighted), shards),
+        Box::new(|id| ShardClient::Local(Shard::new(id))),
+        None,
+        1,
+        false,
+        0,
+    );
+    let mut gen = StringKeys::new(13, 8, 32);
+    let wkeys: Vec<String> = (0..UNIVERSE).map(|_| gen.next_key()).collect();
+    for (i, k) in wkeys.iter().enumerate() {
+        let r = wrouter
+            .handle_ref(RequestRef::Put { key: k, value: values[i & 0xFF].clone() });
+        black_box(r);
+    }
+    // Measure the per-shard load over the uniform GET sweep only (the
+    // theory bound models uniform keys).
+    wrouter.metrics.routed.reset();
+    let t0 = Instant::now();
+    for k in &wkeys {
+        black_box(wrouter.handle_ref(RequestRef::Get { key: k }));
+    }
+    let wget_ns = ns_op(t0.elapsed(), wkeys.len());
+    let raw_lf = wrouter.metrics.routed.load_factor(shards_n);
+    // Weight-normalized load factor: observed share over the w_b/W fair
+    // share — 1.0 is perfectly weight-proportional.
+    let counts: Vec<u64> = (0..shards_n).map(|b| wrouter.metrics.routed.count(b)).collect();
+    let total: u64 = counts.iter().sum();
+    let weighted_lf = counts
+        .iter()
+        .zip(&weights)
+        .map(|(&c, &w)| c as f64 * total_w as f64 / (total as f64 * w as f64))
+        .fold(0.0f64, f64::max);
+    let bound = theory::relative_imbalance_bound(DEFAULT_OMEGA);
+
+    println!(
+        "zipf (binomial n={N}, theta={THETA}, universe={UNIVERSE}): \
+         get cache-off: {off_ns:>8.0} ns/op ({:>9.0} op/s)   \
+         cache-on ({HOT_KEYS} keys): {on_ns:>8.0} ns/op ({:>9.0} op/s)  \
+         hit-rate {hit_rate:.2}, {evictions} evictions",
+        1e9 / off_ns,
+        1e9 / on_ns,
+    );
+    println!(
+        "      weighted 2:1 ({shards_n} shards, W={vbuckets}): get: {wget_ns:>8.0} ns/op  \
+         load_factor={raw_lf:.3} weight-normalized={weighted_lf:.4} \
+         (theory imbalance bound 2^-{DEFAULT_OMEGA} = {bound:.4})"
+    );
+    format!(
+        "{{\"engine\": \"binomial\", \"n\": {N}, \"theta\": {THETA}, \
+         \"universe\": {UNIVERSE}, \"hot_cache_keys\": {HOT_KEYS}, \
+         \"get_cache_off\": {}, \"get_cache_on\": {}, \
+         \"hit_rate\": {hit_rate:.3}, \"hot_evictions\": {evictions}, \
+         \"cache_speedup\": {:.2}, \
+         \"weighted\": {{\"shards\": {shards_n}, \"virtual_buckets\": {vbuckets}, \
+         \"weights\": \"4x2+4x1\", \"get\": {}, \
+         \"load_factor\": {raw_lf:.4}, \"weighted_load_factor\": {weighted_lf:.4}, \
+         \"measured_imbalance\": {:.4}, \
+         \"theory_imbalance_bound\": {bound:.6}, \"omega\": {DEFAULT_OMEGA}}}}}",
+        op_json(off_ns),
+        op_json(on_ns),
+        off_ns / on_ns,
+        op_json(wget_ns),
+        weighted_lf - 1.0,
     )
 }
 

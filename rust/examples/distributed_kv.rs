@@ -11,7 +11,8 @@
 //! placement latency (constant-time), balance (relative stddev), and
 //! movement fraction vs the consistent-hashing ideal.
 //!
-//! This is the EXPERIMENTS.md E2E run (see §E2E there for recorded output).
+//! This is the repo's end-to-end smoke run; the per-phase perf numbers
+//! that CI tracks live in `BENCH_router.json` (see `benches/router_hotpath.rs`).
 
 use std::net::TcpListener;
 use std::sync::Arc;

@@ -5,7 +5,8 @@
 //! per lookup (the paper's reference implementation re-keys XXH3 per
 //! attempt).
 //!
-//! Reconstruction strategy (DESIGN.md §3): the provably-consistent core is
+//! Reconstruction strategy (see the module docs in `algorithms`): the
+//! provably-consistent core is
 //! shared with the other constant-time algorithms (enclosing power-of-two
 //! range, retry, boundary-size fallback); FlipHash's distinguishing trait
 //! here is that every retry draw **re-keys a full 8-byte hash of the

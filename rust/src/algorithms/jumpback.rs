@@ -3,7 +3,8 @@
 //! Published profile: expected-constant time, *integer arithmetic only*,
 //! no modulo/division, minimal memory, a drop-in replacement for JumpHash.
 //!
-//! Reconstruction strategy (DESIGN.md §3): the four 2023/24 constant-time
+//! Reconstruction strategy (see the module docs in `algorithms`): the
+//! four 2023/24 constant-time
 //! algorithms share one provably-consistent core — map into the enclosing
 //! power-of-two range, retry invalid candidates with fresh hashes, fall
 //! back to a minor-range remap that is *identical* to the lookup at the

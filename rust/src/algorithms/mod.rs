@@ -10,7 +10,7 @@
 //! * **minimal disruption** — removing a bucket relocates only its keys;
 //! * **monotonicity** — adding a bucket only moves keys onto it.
 //!
-//! Fidelity levels (see DESIGN.md §3): `binomial` is an exact
+//! Fidelity levels: `binomial` is an exact
 //! implementation of the paper (golden-pinned against the Python spec);
 //! `jump`, `anchor`, `ring`, `rendezvous`, `maglev`, `multiprobe`, `dx`
 //! follow their published pseudocode; `powerch`, `fliphash`, `jumpback`
@@ -69,6 +69,7 @@ pub mod multiprobe;
 pub mod powerch;
 pub mod rendezvous;
 pub mod ring;
+pub mod weighted;
 
 use crate::hashing::xxhash64;
 
@@ -203,6 +204,25 @@ pub trait ConsistentHasher: Send + Sync {
     /// has one (`remove_arbitrary` / `restore` on a forked engine — the
     /// router's failover publish path).
     fn as_fault_tolerant_mut(&mut self) -> Option<&mut dyn FaultTolerant> {
+        None
+    }
+
+    /// This engine's weight surface, if it is a [`weighted::Weighted`]
+    /// adapter (read-only view: the weight table, virtual-bucket count).
+    ///
+    /// Default `None`: bare engines have no weights.  Like
+    /// [`as_fault_tolerant`](Self::as_fault_tolerant), the hook is what
+    /// lets a type-erased [`fork`](Self::fork) keep the surface — the
+    /// router's reweight path forks the live engine and downcasts the
+    /// fork.
+    fn as_weighted(&self) -> Option<&weighted::Weighted> {
+        None
+    }
+
+    /// Mutable access to the weight surface, if any
+    /// ([`weighted::Weighted::set_weight`] on a forked engine — the
+    /// router's reweight publish path).
+    fn as_weighted_mut(&mut self) -> Option<&mut weighted::Weighted> {
         None
     }
 

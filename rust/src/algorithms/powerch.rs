@@ -6,7 +6,8 @@
 //! BinomialHash paper singles out to explain why PowerCH and FlipHash
 //! trail the integer-only algorithms in Fig. 5.
 //!
-//! Reconstruction strategy (DESIGN.md §3): the provably-consistent core
+//! Reconstruction strategy (see the module docs in `algorithms`): the
+//! provably-consistent core
 //! (enclosing power-of-two range, congruent masks, retry, boundary-size
 //! fallback) is shared — it is the only part of these algorithms whose
 //! structure the consistency proofs pin down, and the congruent bit-mask

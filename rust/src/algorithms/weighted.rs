@@ -1,0 +1,474 @@
+//! `Weighted` — per-shard weights over any engine via virtual buckets.
+//!
+//! The classic answer to heterogeneous machines: run the wrapped engine
+//! over `W = Σ weights` *virtual* buckets and map each virtual bucket to
+//! the physical shard that owns it, so a shard with weight 2 owns twice
+//! the virtual buckets — and twice the keyspace — of a weight-1 shard.
+//! The adapter is itself a [`ConsistentHasher`], so everything layered on
+//! placement (epoch snapshots, incremental migration, replication,
+//! failover) composes unchanged, over all 13 engines.
+//!
+//! ## The LIFO bridge
+//!
+//! The wrapped engine only resizes at its LIFO tail, but weights must
+//! change for *any* shard.  The bridge is the tail-reassignment trick in
+//! [`Weighted::set_weight`]: to take a virtual bucket away from shard `s`
+//! when the engine's tail virtual bucket `t` belongs to some other shard
+//! `o`, remove `t` (legal: it is the tail) and hand one of `s`'s virtual
+//! buckets to `o` — `o`'s count is unchanged, `s` is down one, and the
+//! engine only ever saw a LIFO removal.  Keys move from at most two
+//! virtual buckets per step, and the epoch-snapshot migration planner
+//! picks the moves up exactly like a scale event — **weight changes are
+//! incremental migrations for free**.
+//!
+//! ## Failover
+//!
+//! When the wrapped engine is [`FaultTolerant`], so is the adapter: a
+//! physical failure removes every virtual bucket of the dead shard (in
+//! recorded order), a restore brings them back in reverse, and ordering
+//! constraints of the inner engine (anchor's reverse-removal rule)
+//! surface through [`FaultTolerant::restore_blocked`] at shard
+//! granularity.
+//!
+//! Uniform weight 1 is the identity layout (`owner[v] == v`), so a
+//! `Weighted` wrapper at weight 1 everywhere is placement-identical to
+//! the bare engine — pinned by `rust/tests/engine_fork.rs`.
+
+use super::{by_name, ConsistentHasher, FaultTolerant};
+
+/// Virtual-bucket weight adapter; see the module docs.
+pub struct Weighted {
+    /// Wrapped engine, running over virtual buckets.
+    inner: Box<dyn ConsistentHasher>,
+    /// Virtual bucket id → physical shard id.  Index space is the
+    /// engine's full assignment range; entries for failed shards stay in
+    /// place (their virtual buckets are removed from the engine, not
+    /// from the map) so a restore can re-own them.
+    owner: Vec<u32>,
+    /// Physical shard id → its virtual-bucket count (the weight).
+    weights: Vec<u32>,
+    /// Weight assigned to shards joining via `add_bucket`.
+    default_weight: u32,
+    /// Failure log: `(shard, its virtual buckets in removal order)`,
+    /// in failure order.  Restores replay each entry in reverse.
+    failed: Vec<(u32, Vec<u32>)>,
+}
+
+impl Weighted {
+    /// Wrap engine `engine` with one physical shard per entry of
+    /// `weights`, each owning `weights[s]` virtual buckets.  New shards
+    /// joining later via `add_bucket` get weight `default_weight`.
+    ///
+    /// Returns `None` for an unknown engine name; panics on an empty
+    /// weight table or a zero weight (a weight-0 shard would own no
+    /// keyspace — remove it instead).
+    pub fn new(engine: &str, weights: &[u32], default_weight: u32) -> Option<Weighted> {
+        assert!(!weights.is_empty(), "weighted: at least one shard required");
+        assert!(weights.iter().all(|&w| w >= 1), "weighted: weights must be >= 1");
+        assert!(default_weight >= 1, "weighted: default_weight must be >= 1");
+        let total: u32 = weights.iter().sum();
+        let inner = by_name(engine, total)?;
+        let mut owner = Vec::with_capacity(total as usize);
+        for (s, &w) in weights.iter().enumerate() {
+            owner.extend(std::iter::repeat(s as u32).take(w as usize));
+        }
+        Some(Weighted { inner, owner, weights: weights.to_vec(), default_weight, failed: Vec::new() })
+    }
+
+    /// Uniform weight-1 wrapper over `n` shards — placement-identical to
+    /// the bare engine.
+    pub fn uniform(engine: &str, n: u32) -> Option<Weighted> {
+        Self::new(engine, &vec![1; n as usize], 1)
+    }
+
+    /// The per-shard weight table (index = physical shard id).
+    pub fn weights(&self) -> &[u32] {
+        &self.weights
+    }
+
+    /// Total virtual buckets currently assigned.
+    pub fn virtual_buckets(&self) -> u32 {
+        self.owner.len() as u32
+    }
+
+    /// Change shard `shard`'s weight to `w` (≥ 1), growing or shrinking
+    /// its virtual-bucket share at the wrapped engine's LIFO tail (see
+    /// the module docs for the tail-reassignment trick).  Keys move
+    /// incrementally — the caller publishes the new epoch and lets the
+    /// migration planner compute the delta, exactly like a scale event.
+    pub fn set_weight(&mut self, shard: u32, w: u32) -> Result<(), String> {
+        let s = shard as usize;
+        if s >= self.weights.len() {
+            return Err(format!("shard {shard} out of range (n={})", self.weights.len()));
+        }
+        if w == 0 {
+            return Err("weight must be >= 1 (remove the shard instead)".to_string());
+        }
+        if !self.failed.is_empty() {
+            return Err("cluster is degraded; restore failed shards before reweighting".to_string());
+        }
+        if !self.inner.lifo_ready() {
+            return Err("wrapped engine is not LIFO-ready".to_string());
+        }
+        let cur = self.weights[s];
+        if w > cur {
+            for _ in cur..w {
+                self.grow_vbucket(shard);
+            }
+        } else {
+            for _ in w..cur {
+                self.shed_vbucket(shard);
+            }
+        }
+        self.weights[s] = w;
+        Ok(())
+    }
+
+    /// Append one virtual bucket at the engine tail, owned by `shard`.
+    fn grow_vbucket(&mut self, shard: u32) {
+        let v = self.inner.add_bucket();
+        assert_eq!(v as usize, self.owner.len(), "inner engine must grow at the tail");
+        self.owner.push(shard);
+    }
+
+    /// Remove one of `shard`'s virtual buckets via the engine tail: if
+    /// the tail belongs to another shard, remove it anyway and hand one
+    /// of `shard`'s virtual buckets over in exchange (net counts: the
+    /// other shard unchanged, `shard` down one).
+    fn shed_vbucket(&mut self, shard: u32) {
+        let tail = (self.owner.len() - 1) as u32;
+        let tail_owner = self.owner[tail as usize];
+        let removed = self.inner.remove_bucket();
+        assert_eq!(removed, tail, "inner engine must shrink at the tail");
+        self.owner.pop();
+        if tail_owner != shard {
+            // Highest-id virtual bucket of `shard` changes hands, so
+            // repeated sheds keep the survivor's holdings tail-dense.
+            let v = self
+                .owner
+                .iter()
+                .rposition(|&o| o == shard)
+                .expect("shard with positive weight owns a virtual bucket");
+            self.owner[v] = tail_owner;
+        }
+    }
+
+    /// `true` when the last shard's virtual buckets are exactly the
+    /// engine tail — i.e. `remove_bucket` needs no reassignment and
+    /// relocates only the retiring shard's keys.
+    fn tail_aligned(&self) -> bool {
+        let Some(&w) = self.weights.last() else { return true };
+        let s = (self.weights.len() - 1) as u32;
+        self.owner[self.owner.len() - w as usize..].iter().all(|&o| o == s)
+    }
+}
+
+impl ConsistentHasher for Weighted {
+    fn name(&self) -> &'static str {
+        "weighted"
+    }
+
+    fn len(&self) -> u32 {
+        (self.weights.len() - self.failed.len()) as u32
+    }
+
+    fn bucket(&self, digest: u64) -> u32 {
+        self.owner[self.inner.bucket(digest) as usize]
+    }
+
+    fn add_bucket(&mut self) -> u32 {
+        let s = self.weights.len() as u32;
+        for _ in 0..self.default_weight {
+            self.grow_vbucket(s);
+        }
+        self.weights.push(self.default_weight);
+        s
+    }
+
+    fn remove_bucket(&mut self) -> u32 {
+        assert!(self.weights.len() > 1, "weighted: cluster would become empty");
+        assert!(self.failed.is_empty(), "weighted: cannot shrink while degraded");
+        let s = (self.weights.len() - 1) as u32;
+        for _ in 0..self.weights[s as usize] {
+            self.shed_vbucket(s);
+        }
+        self.weights.pop();
+        s
+    }
+
+    fn fork(&self) -> Box<dyn ConsistentHasher> {
+        Box::new(Weighted {
+            inner: self.inner.fork(),
+            owner: self.owner.clone(),
+            weights: self.weights.clone(),
+            default_weight: self.default_weight,
+            failed: self.failed.clone(),
+        })
+    }
+
+    fn minimal_disruption(&self) -> bool {
+        // A shrink relocates only the retiring shard's keys iff the
+        // engine does AND no reassignment is needed (the retiring
+        // shard's virtual buckets sit exactly at the engine tail).
+        self.inner.minimal_disruption() && self.tail_aligned()
+    }
+
+    fn max_buckets(&self) -> Option<u32> {
+        // Engine headroom in virtual buckets, divided by the join weight.
+        self.inner.max_buckets().map(|cap| {
+            let headroom = cap.saturating_sub(self.owner.len() as u32) / self.default_weight;
+            self.weights.len() as u32 + headroom
+        })
+    }
+
+    fn lifo_ready(&self) -> bool {
+        self.failed.is_empty() && self.inner.lifo_ready()
+    }
+
+    fn grow_ready(&self) -> Result<(), String> {
+        if !self.failed.is_empty() {
+            return Err("weighted: restore failed shards before scaling".to_string());
+        }
+        self.inner.grow_ready()
+    }
+
+    fn shrink_ready(&self) -> Result<(), String> {
+        if !self.failed.is_empty() {
+            return Err("weighted: restore failed shards before scaling".to_string());
+        }
+        self.inner.shrink_ready()
+    }
+
+    fn as_fault_tolerant(&self) -> Option<&dyn FaultTolerant> {
+        self.inner.as_fault_tolerant().map(|_| self as &dyn FaultTolerant)
+    }
+
+    fn as_fault_tolerant_mut(&mut self) -> Option<&mut dyn FaultTolerant> {
+        if self.inner.as_fault_tolerant().is_some() {
+            Some(self as &mut dyn FaultTolerant)
+        } else {
+            None
+        }
+    }
+
+    fn as_weighted(&self) -> Option<&Weighted> {
+        Some(self)
+    }
+
+    fn as_weighted_mut(&mut self) -> Option<&mut Weighted> {
+        Some(self)
+    }
+}
+
+impl FaultTolerant for Weighted {
+    fn remove_arbitrary(&mut self, b: u32) {
+        assert!((b as usize) < self.weights.len(), "weighted: shard {b} out of range");
+        assert!(self.is_working(b), "weighted: shard {b} already failed");
+        let vbs: Vec<u32> = (0..self.owner.len() as u32)
+            .filter(|&v| self.owner[v as usize] == b)
+            .collect();
+        let ft = self
+            .inner
+            .as_fault_tolerant_mut()
+            .expect("as_fault_tolerant gated on the inner engine");
+        for &v in &vbs {
+            ft.remove_arbitrary(v);
+        }
+        self.failed.push((b, vbs));
+    }
+
+    fn restore(&mut self, b: u32) {
+        let idx = self
+            .failed
+            .iter()
+            .rposition(|(s, _)| *s == b)
+            .expect("weighted: restore of a working shard");
+        let (_, vbs) = self.failed.remove(idx);
+        let ft = self
+            .inner
+            .as_fault_tolerant_mut()
+            .expect("as_fault_tolerant gated on the inner engine");
+        for &v in vbs.iter().rev() {
+            ft.restore(v);
+        }
+    }
+
+    fn is_working(&self, b: u32) -> bool {
+        (b as usize) < self.weights.len() && self.failed.iter().all(|(s, _)| *s != b)
+    }
+
+    fn restore_blocked(&self, b: u32) -> Option<String> {
+        let idx = self.failed.iter().rposition(|(s, _)| *s == b)?;
+        let ft = self.inner.as_fault_tolerant()?;
+        // The shard's virtual buckets come back in reverse removal
+        // order, starting with its most recently removed one; if the
+        // engine blocks that (anchor's global reverse-removal rule), the
+        // whole shard restore is blocked until the later failure clears.
+        let first = *self.failed[idx].1.last()?;
+        ft.restore_blocked(first).map(|_| {
+            let (s, _) = self.failed.last().expect("blocked restore implies a later failure");
+            format!("engine restores in reverse removal order; restore shard {s} first")
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::ALL_ALGORITHMS;
+    use crate::hashing::SplitMix64Rng;
+
+    fn digests(k: usize) -> Vec<u64> {
+        let mut rng = SplitMix64Rng::new(0xBEEF);
+        (0..k).map(|_| rng.next_u64()).collect()
+    }
+
+    #[test]
+    fn uniform_weight_is_placement_identical_to_bare_engine() {
+        for name in ALL_ALGORITHMS {
+            let bare = by_name(name, 9).unwrap();
+            let wrapped = Weighted::uniform(name, 9).unwrap();
+            assert_eq!(wrapped.len(), 9, "{name}");
+            for d in digests(5_000) {
+                assert_eq!(wrapped.bucket(d), bare.bucket(d), "{name}: digest {d:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn two_to_one_weights_carry_twice_the_keys() {
+        // 4 shards at 2:1:1:1 — shard 0 must take ~2/5 of the keyspace.
+        let w = Weighted::new("binomial", &[2, 1, 1, 1], 1).unwrap();
+        assert_eq!(w.len(), 4);
+        assert_eq!(w.virtual_buckets(), 5);
+        let ds = digests(100_000);
+        let mut counts = [0u64; 4];
+        for &d in &ds {
+            counts[w.bucket(d) as usize] += 1;
+        }
+        let f0 = counts[0] as f64 / ds.len() as f64;
+        assert!((f0 - 0.4).abs() < 0.02, "weight-2 shard got {f0} of the keys");
+        for (s, &c) in counts.iter().enumerate().skip(1) {
+            let f = c as f64 / ds.len() as f64;
+            assert!((f - 0.2).abs() < 0.02, "weight-1 shard {s} got {f}");
+        }
+    }
+
+    #[test]
+    fn scale_cycle_preserves_lifo_contract() {
+        let mut w = Weighted::new("memento", &[2, 1], 3).unwrap();
+        assert_eq!(w.add_bucket(), 2, "new shard id is the frontier");
+        assert_eq!(w.len(), 3);
+        assert_eq!(w.weights(), &[2, 1, 3]);
+        assert_eq!(w.virtual_buckets(), 6);
+        // The joiner's virtual buckets sit at the tail, so the shrink is
+        // minimally disruptive and retires exactly that shard.
+        assert!(w.minimal_disruption());
+        assert_eq!(w.remove_bucket(), 2);
+        assert_eq!(w.weights(), &[2, 1]);
+        assert_eq!(w.virtual_buckets(), 3);
+    }
+
+    #[test]
+    fn weight_changes_move_bounded_key_share() {
+        let mut w = Weighted::new("binomial", &[1, 1, 1, 1], 1).unwrap();
+        let ds = digests(50_000);
+        let before: Vec<u32> = ds.iter().map(|&d| w.bucket(d)).collect();
+        w.set_weight(1, 3).unwrap();
+        assert_eq!(w.weights(), &[1, 3, 1, 1]);
+        let after: Vec<u32> = ds.iter().map(|&d| w.bucket(d)).collect();
+        // Monotone growth: every moved key moved *onto* shard 1.
+        let moved = before
+            .iter()
+            .zip(&after)
+            .filter(|(b, a)| b != a)
+            .inspect(|(_, a)| assert_eq!(**a, 1, "growth moved a key off the grown shard"))
+            .count();
+        // Shard 1 went from 1/4 to 3/6 of the keyspace: ~1/3 of keys move.
+        let frac = moved as f64 / ds.len() as f64;
+        assert!(frac > 0.15 && frac < 0.45, "moved fraction {frac}");
+        // And shrinking back moves only a bounded share (~2 virtual
+        // buckets' worth per step via the tail trick).
+        let before: Vec<u32> = ds.iter().map(|&d| w.bucket(d)).collect();
+        w.set_weight(1, 1).unwrap();
+        let after: Vec<u32> = ds.iter().map(|&d| w.bucket(d)).collect();
+        let moved = before.iter().zip(&after).filter(|(b, a)| b != a).count();
+        let frac = moved as f64 / ds.len() as f64;
+        assert!(frac < 0.7, "shrink moved {frac} of the keyset");
+        assert_eq!(w.weights(), &[1, 1, 1, 1]);
+        assert_eq!(w.virtual_buckets(), 4);
+    }
+
+    #[test]
+    fn set_weight_validation() {
+        let mut w = Weighted::new("memento", &[1, 1], 1).unwrap();
+        assert!(w.set_weight(5, 2).is_err(), "out-of-range shard");
+        assert!(w.set_weight(0, 0).is_err(), "zero weight");
+        w.remove_arbitrary(1);
+        assert!(w.set_weight(0, 2).is_err(), "reweight while degraded");
+        w.restore(1);
+        assert!(w.set_weight(0, 2).is_ok());
+    }
+
+    #[test]
+    fn fork_is_independent_and_identical() {
+        let mut w = Weighted::new("memento", &[2, 1, 1], 2).unwrap();
+        let fork = w.fork();
+        let ds = digests(10_000);
+        for &d in &ds {
+            assert_eq!(w.bucket(d), fork.bucket(d));
+        }
+        // Mutating the original never affects the fork.
+        w.set_weight(0, 4).unwrap();
+        let wref: &dyn ConsistentHasher = &w;
+        assert!(ds.iter().any(|&d| wref.bucket(d) != fork.bucket(d)));
+        assert_eq!(fork.as_weighted().unwrap().weights(), &[2, 1, 1]);
+    }
+
+    #[test]
+    fn failover_removes_and_restores_whole_shards() {
+        let mut w = Weighted::new("memento", &[2, 1, 2], 1).unwrap();
+        let ds = digests(20_000);
+        let before: Vec<u32> = ds.iter().map(|&d| w.bucket(d)).collect();
+        w.remove_arbitrary(0);
+        assert_eq!(w.len(), 2);
+        assert!(!w.is_working(0) && w.is_working(1) && w.is_working(2));
+        assert!(w.grow_ready().is_err() && w.shrink_ready().is_err());
+        for (&d, &b) in ds.iter().zip(&before) {
+            let now = w.bucket(d);
+            assert_ne!(now, 0, "digest {d:#x} routed to the failed shard");
+            if b != 0 {
+                assert_eq!(now, b, "survivor key moved on an unrelated failure");
+            }
+        }
+        w.restore(0);
+        assert_eq!(w.len(), 3);
+        let after: Vec<u32> = ds.iter().map(|&d| w.bucket(d)).collect();
+        assert_eq!(before, after, "restore must return to the pre-failure placement");
+    }
+
+    #[test]
+    fn anchor_ordering_surfaces_at_shard_granularity() {
+        let mut w = Weighted::new("anchor", &[1, 2, 1, 1], 1).unwrap();
+        w.remove_arbitrary(1);
+        w.remove_arbitrary(3);
+        let msg = w.restore_blocked(1).expect("anchor blocks out-of-order restore");
+        assert!(msg.contains('3'), "{msg}");
+        assert!(w.restore_blocked(3).is_none());
+        w.restore(3);
+        assert!(w.restore_blocked(1).is_none());
+        w.restore(1);
+        assert_eq!(w.len(), 4);
+    }
+
+    #[test]
+    fn weighted_surfaces_through_type_erasure() {
+        let w = Weighted::new("binomial", &[1, 2], 1).unwrap();
+        let boxed: Box<dyn ConsistentHasher> = Box::new(w);
+        let fork = boxed.fork();
+        assert_eq!(fork.name(), "weighted");
+        assert_eq!(fork.as_weighted().unwrap().weights(), &[1, 2]);
+        // Bare engines answer None.
+        assert!(by_name("binomial", 4).unwrap().as_weighted().is_none());
+    }
+}

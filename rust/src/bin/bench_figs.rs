@@ -1,5 +1,6 @@
 //! `bench_figs` — regenerates every figure in the paper's §6 evaluation
-//! plus the §5.4 theory validations (DESIGN.md §4 experiment index).
+//! plus the §5.4 theory validations (closed forms in `stats::theory`;
+//! see PAPER.md for the source abstract).
 //!
 //! ```text
 //! bench_figs fig5        lookup time vs cluster size          (Fig. 5)

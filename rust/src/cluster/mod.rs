@@ -30,6 +30,35 @@
 //! dead shard answers a distinguishable `UNAVAILABLE` error instead of
 //! `NIL` — or worse, a hang on a dead connection.
 //!
+//! # The placement stack
+//!
+//! Placement is no longer one hard-wired `engine.bucket(digest)` call
+//! but a stack of composable layers, each consuming the
+//! [`ConsistentHasher`] surface of the one below and presenting the
+//! same surface above:
+//!
+//! ```text
+//!   engine            one of the 13 registered algorithms
+//!     └─ Weighted     optional: W virtual buckets → N shards via a
+//!        (algorithms::weighted)   per-shard weight table; weight
+//!                                 changes are vbucket add/remove =
+//!                                 incremental migration for free
+//!        └─ ReplicaMap   optional (factor > 1): derived top-R
+//!                        secondary placements
+//!           └─ PlacementSnapshot  the frozen, epoch-stamped view the
+//!                                 router's data path routes with
+//! ```
+//!
+//! Every layer forwards `fork`/`minimal_disruption`/`max_buckets`/
+//! `as_fault_tolerant`, so scaling, failover, and replication compose
+//! unchanged whichever layers are present: the router only ever sees a
+//! `Box<dyn ConsistentHasher>`, and [`ReplicaMap::build`] runs the same
+//! minus-fork (or re-hash probe) construction against a weighted engine
+//! as against a bare one.  The router-side hot-key cache sits *above*
+//! this stack, in front of shard I/O — its invalidation rule (write-
+//! invalidated, cleared on every epoch publish so it never serves
+//! across a topology change) is documented in `router::cache`.
+//!
 //! With `replication.factor` R > 1 a snapshot also carries a
 //! [`ReplicaMap`]: the derived *secondary* placements that put every key
 //! on its top-R buckets.  For fault-tolerant engines the rank-1 replica
@@ -80,6 +109,10 @@ pub enum EventKind {
     /// Bucket restored after a failure (rejoins empty; keys written to
     /// survivors while it was down migrate back to it).
     Restored(u32),
+    /// Shard's weight changed on a weighted placement stack (virtual
+    /// buckets added or shed; the affected key share migrated
+    /// incrementally like any scale op).
+    Reweighted(u32),
 }
 
 /// The previous topology's placement, kept inside a migrating

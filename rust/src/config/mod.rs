@@ -2,9 +2,9 @@
 //! the `binhashd` launcher.
 //!
 //! The parser covers the subset the config actually uses — `[section]`
-//! headers, `key = value` with string / integer / boolean / string-array
-//! values, and `#` comments — implemented in-tree because the build is
-//! fully offline (no serde/toml crates; see DESIGN.md §3).
+//! headers, `key = value` with string / integer / boolean /
+//! string-array / integer-array values, and `#` comments — implemented
+//! in-tree because the build is fully offline (no serde/toml crates).
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -20,6 +20,8 @@ pub struct Config {
     pub router: RouterConfig,
     /// Replication settings.
     pub replication: ReplicationConfig,
+    /// Placement-stack settings (weights, hot-key cache).
+    pub placement: PlacementConfig,
     /// AOT artifact settings.
     pub artifacts: ArtifactsConfig,
 }
@@ -63,6 +65,20 @@ pub struct ReplicationConfig {
     /// write lands; replica failures are counted, not surfaced) or
     /// `"all"` (any replica failure fails the write).
     pub write_mode: String,
+}
+
+/// Placement-stack settings: the `Weighted` virtual-bucket adapter and
+/// the router's hot-key cache (see the router module's "placement
+/// stack" docs).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PlacementConfig {
+    /// Per-shard weights (one entry per initial shard, each ≥ 1).
+    /// Empty = uniform placement with the bare engine (no `Weighted`
+    /// wrapper).  A weight-2 shard owns twice the keyspace of a
+    /// weight-1 shard.
+    pub weights: Vec<u32>,
+    /// Hot-key LRU capacity in front of shard I/O (0 = cache off).
+    pub hot_cache_keys: usize,
 }
 
 /// Artifact settings.
@@ -111,6 +127,7 @@ impl Default for Config {
             cluster: ClusterConfig::default(),
             router: RouterConfig::default(),
             replication: ReplicationConfig::default(),
+            placement: PlacementConfig::default(),
             artifacts: ArtifactsConfig::default(),
         }
     }
@@ -123,6 +140,7 @@ enum Value {
     Int(i64),
     Bool(bool),
     StrArray(Vec<String>),
+    IntArray(Vec<i64>),
 }
 
 fn parse_value(raw: &str) -> Result<Value> {
@@ -142,14 +160,26 @@ fn parse_value(raw: &str) -> Result<Value> {
         if inner.is_empty() {
             return Ok(Value::StrArray(Vec::new()));
         }
-        let items = inner
-            .split(',')
-            .map(|s| match parse_value(s)? {
+        // Homogeneous arrays only: the first item picks the type.
+        let items = inner.split(',').map(parse_value).collect::<Result<Vec<_>>>()?;
+        if items.iter().all(|v| matches!(v, Value::Int(_))) {
+            let ints = items
+                .into_iter()
+                .map(|v| match v {
+                    Value::Int(x) => x,
+                    _ => unreachable!("all items matched Int"),
+                })
+                .collect();
+            return Ok(Value::IntArray(ints));
+        }
+        let strs = items
+            .into_iter()
+            .map(|v| match v {
                 Value::Str(x) => Ok(x),
-                other => bail!("array items must be strings, got {other:?}"),
+                other => bail!("array items must be all strings or all integers, got {other:?}"),
             })
             .collect::<Result<Vec<_>>>()?;
-        return Ok(Value::StrArray(items));
+        return Ok(Value::StrArray(strs));
     }
     if let Ok(i) = raw.parse::<i64>() {
         return Ok(Value::Int(i));
@@ -242,6 +272,29 @@ impl Config {
             }
         }
         take!(map, "replication.write_mode", Str, cfg.replication.write_mode);
+        if let Some(v) = map.remove("placement.weights") {
+            match v {
+                Value::IntArray(xs) => {
+                    cfg.placement.weights = xs
+                        .into_iter()
+                        .map(|x| {
+                            u32::try_from(x).map_err(|_| {
+                                anyhow::anyhow!("placement.weights: {x} out of range")
+                            })
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                }
+                // `weights = []` parses as the empty string-array.
+                Value::StrArray(xs) if xs.is_empty() => cfg.placement.weights = Vec::new(),
+                other => bail!("placement.weights: wrong type {other:?}"),
+            }
+        }
+        if let Some(v) = map.remove("placement.hot_cache_keys") {
+            match v {
+                Value::Int(x) => cfg.placement.hot_cache_keys = usize::try_from(x)?,
+                other => bail!("placement.hot_cache_keys: wrong type {other:?}"),
+            }
+        }
         take!(map, "artifacts.dir", Str, cfg.artifacts.dir);
         take!(map, "artifacts.enable_bulk", Bool, cfg.artifacts.enable_bulk);
         if let Some(k) = map.keys().next() {
@@ -267,11 +320,19 @@ impl Config {
             .map(|a| format!("\"{a}\""))
             .collect::<Vec<_>>()
             .join(", ");
+        let weights = self
+            .placement
+            .weights
+            .iter()
+            .map(|w| w.to_string())
+            .collect::<Vec<_>>()
+            .join(", ");
         format!(
             "[cluster]\nalgorithm = \"{}\"\nomega = {}\ninitial_shards = {}\n\n\
              [router]\nlisten = \"{}\"\npool = {}\nshard_addrs = [{}]\n\
              serve = \"{}\"\nevent_loops = {}\nmax_conns = {}\n\n\
              [replication]\nfactor = {}\nwrite_mode = \"{}\"\n\n\
+             [placement]\nweights = [{}]\nhot_cache_keys = {}\n\n\
              [artifacts]\ndir = \"{}\"\nenable_bulk = {}\n",
             self.cluster.algorithm,
             self.cluster.omega,
@@ -284,6 +345,8 @@ impl Config {
             self.router.max_conns,
             self.replication.factor,
             self.replication.write_mode,
+            weights,
+            self.placement.hot_cache_keys,
             self.artifacts.dir,
             self.artifacts.enable_bulk,
         )
@@ -320,6 +383,23 @@ impl Config {
             ensure!(
                 self.router.shard_addrs.len() == self.cluster.initial_shards as usize,
                 "shard_addrs length must equal initial_shards"
+            );
+        }
+        if !self.placement.weights.is_empty() {
+            ensure!(
+                self.placement.weights.len() == self.cluster.initial_shards as usize,
+                "placement.weights length ({}) must equal initial_shards ({})",
+                self.placement.weights.len(),
+                self.cluster.initial_shards
+            );
+            ensure!(
+                self.placement.weights.iter().all(|&w| w >= 1),
+                "placement.weights entries must be >= 1"
+            );
+            let total: u64 = self.placement.weights.iter().map(|&w| w as u64).sum();
+            ensure!(
+                total <= 65_536,
+                "placement.weights sum to {total} virtual buckets (max 65536)"
             );
         }
         Ok(())
@@ -443,5 +523,58 @@ mod tests {
         assert!(bad.validate().is_err());
 
         assert!(Config::parse("[replication]\nfactor = \"two\"\n").is_err());
+    }
+
+    #[test]
+    fn placement_knobs_parse_and_validate() {
+        let c = Config::parse(
+            "[cluster]\ninitial_shards = 3\n\
+             [placement]\nweights = [2, 1, 1]\nhot_cache_keys = 256\n",
+        )
+        .unwrap();
+        assert_eq!(c.placement.weights, vec![2, 1, 1]);
+        assert_eq!(c.placement.hot_cache_keys, 256);
+        c.validate().unwrap();
+
+        // Defaults: no weights (bare engine), cache off.
+        let d = Config::default();
+        assert!(d.placement.weights.is_empty());
+        assert_eq!(d.placement.hot_cache_keys, 0);
+        d.validate().unwrap();
+
+        // An explicitly empty weight list is the default layout.
+        let e = Config::parse("[placement]\nweights = []\n").unwrap();
+        assert!(e.placement.weights.is_empty());
+        e.validate().unwrap();
+    }
+
+    #[test]
+    fn placement_validation_rejects_bad_weights() {
+        let mut c = Config::default();
+        c.cluster.initial_shards = 2;
+        c.placement.weights = vec![2, 1, 1];
+        assert!(c.validate().is_err(), "length mismatch");
+        c.placement.weights = vec![1, 0];
+        assert!(c.validate().is_err(), "zero weight");
+        c.placement.weights = vec![60_000, 60_000];
+        assert!(c.validate().is_err(), "virtual-bucket blowup");
+        c.placement.weights = vec![2, 1];
+        c.validate().unwrap();
+
+        assert!(
+            Config::parse("[placement]\nweights = [2, \"x\"]\n").is_err(),
+            "mixed-type array"
+        );
+        assert!(Config::parse("[placement]\nweights = [-1]\n").is_err(), "negative weight");
+    }
+
+    #[test]
+    fn placement_roundtrips_through_toml() {
+        let mut c = Config::default();
+        c.cluster.initial_shards = 4;
+        c.placement.weights = vec![2, 1, 1, 1];
+        c.placement.hot_cache_keys = 128;
+        let back = Config::parse(&c.to_toml()).unwrap();
+        assert_eq!(c, back);
     }
 }

@@ -26,7 +26,8 @@ const MIX2: u64 = 0x94D0_49BB_1331_11EB;
 /// splitmix64 finalizer (Steele et al.): a bijective avalanche mixer on u64.
 ///
 /// This is the universal mixer of the repo: the rehash stream and the
-/// level-relocation hash are both built from it (DESIGN.md §2).
+/// level-relocation hash are both built from it (see [`next_hash`] and
+/// [`hash2`]).
 #[inline(always)]
 pub const fn splitmix64(mut z: u64) -> u64 {
     z ^= z >> 30;

@@ -22,7 +22,7 @@ use anyhow::{anyhow, bail, Result};
 use binhash::algorithms;
 use binhash::config::Config;
 use binhash::net::{ServeMode, ServerOpts};
-use binhash::router::{local_cluster, Router};
+use binhash::router::Router;
 use binhash::runtime::PlacementRuntime;
 use binhash::shard::{RemotePool, Shard, ShardClient};
 
@@ -104,13 +104,28 @@ fn main() -> Result<()> {
     }
 }
 
+/// Build the configured placement engine: the bare algorithm, or a
+/// [`Weighted`](algorithms::weighted::Weighted) stack over it when
+/// `[placement] weights` is set (validated to match `initial_shards`).
+fn build_engine(cfg: &Config) -> Result<Box<dyn algorithms::ConsistentHasher>> {
+    let n = cfg.cluster.initial_shards;
+    if cfg.placement.weights.is_empty() {
+        return algorithms::by_name(&cfg.cluster.algorithm, n)
+            .ok_or_else(|| anyhow!("unknown algorithm {:?}", cfg.cluster.algorithm));
+    }
+    let weighted =
+        algorithms::weighted::Weighted::new(&cfg.cluster.algorithm, &cfg.placement.weights, 1)
+            .ok_or_else(|| anyhow!("unknown algorithm {:?}", cfg.cluster.algorithm))?;
+    Ok(Box::new(weighted))
+}
+
 fn run_router(cfg: Config) -> Result<()> {
     let n = cfg.cluster.initial_shards;
+    let placement = build_engine(&cfg)?;
     let cluster = if cfg.router.shard_addrs.is_empty() {
-        local_cluster(&cfg.cluster.algorithm, n)?
+        let shards = (0..n).map(|i| ShardClient::Local(Shard::new(i))).collect();
+        binhash::cluster::Cluster::new(placement, shards)
     } else {
-        let placement = algorithms::by_name(&cfg.cluster.algorithm, n)
-            .ok_or_else(|| anyhow!("unknown algorithm"))?;
         let shards = cfg
             .router
             .shard_addrs
@@ -128,12 +143,13 @@ fn run_router(cfg: Config) -> Result<()> {
         None
     };
 
-    let router = Router::with_replication(
+    let router = Router::with_placement(
         cluster,
         Box::new(|id| ShardClient::Local(Shard::new(id))),
         bulk,
         cfg.replication.factor,
         cfg.replication.write_mode == "all",
+        cfg.placement.hot_cache_keys,
     );
     let listener = TcpListener::bind(&cfg.router.listen)?;
     let opts = ServerOpts {
@@ -143,14 +159,17 @@ fn run_router(cfg: Config) -> Result<()> {
         ..ServerOpts::default()
     };
     eprintln!(
-        "router listening on {} (algo={}, n={}, serve={}, max_conns={}, replication={}x/{})",
+        "router listening on {} (algo={}, n={}, serve={}, max_conns={}, replication={}x/{}, \
+         weighted={}, hot_cache_keys={})",
         cfg.router.listen,
         cfg.cluster.algorithm,
         n,
         cfg.router.serve,
         cfg.router.max_conns,
         cfg.replication.factor,
-        cfg.replication.write_mode
+        cfg.replication.write_mode,
+        !cfg.placement.weights.is_empty(),
+        cfg.placement.hot_cache_keys
     );
     router.server(listener, opts)?.run()
 }

@@ -72,6 +72,71 @@ impl LatencyHistogram {
     }
 }
 
+/// Slots in [`RoutedLoad`]'s fixed counter array (shard ids alias into
+/// it modulo this; a power of two so the hot-path index is one mask).
+pub const ROUTED_SLOTS: usize = 1024;
+
+/// Per-shard routed-op counters: the *measured* side of the paper's
+/// balance claims.  One relaxed increment per routed singleton op;
+/// [`load_factor`](Self::load_factor) reduces the array to max/mean —
+/// 1.0 is perfect balance, and `1 + 2^{-ω}` is the theory ceiling for
+/// BinomialHash under uniform keys (`stats::theory`).
+#[derive(Debug)]
+pub struct RoutedLoad {
+    counts: [AtomicU64; ROUTED_SLOTS],
+}
+
+impl Default for RoutedLoad {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RoutedLoad {
+    /// New zeroed counters.
+    pub const fn new() -> Self {
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Self { counts: [ZERO; ROUTED_SLOTS] }
+    }
+
+    /// Count one op routed to `bucket`.
+    #[inline]
+    pub fn record(&self, bucket: u32) {
+        self.counts[bucket as usize & (ROUTED_SLOTS - 1)]
+            .fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
+    }
+
+    /// Ops routed to `bucket` so far.
+    pub fn count(&self, bucket: u32) -> u64 {
+        self.counts[bucket as usize & (ROUTED_SLOTS - 1)].load(Ordering::Relaxed) // ord: Relaxed — independent telemetry counter
+    }
+
+    /// Measured load factor over the first `shards` buckets: the busiest
+    /// bucket's share of traffic relative to a perfectly even spread
+    /// (max / mean).  `0.0` before any op is routed.
+    pub fn load_factor(&self, shards: u32) -> f64 {
+        let n = (shards as usize).clamp(1, ROUTED_SLOTS);
+        let (mut max, mut sum) = (0u64, 0u64);
+        for c in &self.counts[..n] {
+            let v = c.load(Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
+            max = max.max(v);
+            sum += v;
+        }
+        if sum == 0 {
+            0.0
+        } else {
+            max as f64 * n as f64 / sum as f64
+        }
+    }
+
+    /// Zero every counter (bench phase boundaries).
+    pub fn reset(&self) {
+        for c in &self.counts {
+            c.store(0, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
+        }
+    }
+}
+
 /// Router-level counters.
 #[derive(Debug, Default)]
 pub struct RouterMetrics {
@@ -132,6 +197,13 @@ pub struct RouterMetrics {
     /// `(source, stripe)` scans skipped by anti-entropy digest
     /// comparison during restores.
     pub ae_stripes_skipped: AtomicU64,
+    /// GETs served from the router's hot-key cache (no shard I/O; the
+    /// value is an `Arc` refcount bump).
+    pub hot_hits: AtomicU64,
+    /// Hot-key cache entries evicted by capacity (LRU victim on fill).
+    pub hot_evictions: AtomicU64,
+    /// Per-shard routed-op counters (`load_factor` in STATS).
+    pub routed: RoutedLoad,
     /// End-to-end request latency.
     pub latency: LatencyHistogram,
     /// Placement (hash lookup) latency.
@@ -152,6 +224,7 @@ impl RouterMetrics {
              mget_keys={} mput_keys={} batch_fanouts={} \
              replica_writes={} replica_write_failures={} replica_reads={} \
              read_repairs={} migration_round_trips={} ae_stripes_skipped={} \
+             hot_hits={} hot_evictions={} \
              p50={}ns p99={}ns mean={:.0}ns",
             self.gets.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
             self.puts.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
@@ -173,6 +246,8 @@ impl RouterMetrics {
             self.read_repairs.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
             self.migration_round_trips.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
             self.ae_stripes_skipped.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
+            self.hot_hits.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
+            self.hot_evictions.load(Ordering::Relaxed), // ord: Relaxed — independent telemetry counter
             self.latency.quantile_ns(0.5),
             self.latency.quantile_ns(0.99),
             self.latency.mean_ns(),
@@ -268,6 +343,30 @@ mod tests {
         assert!(s.contains("read_repairs=0"));
         assert!(s.contains("migration_round_trips=0"));
         assert!(s.contains("ae_stripes_skipped=0"));
+        assert!(s.contains("hot_hits=0"));
+        assert!(s.contains("hot_evictions=0"));
+    }
+
+    #[test]
+    fn routed_load_factor_is_max_over_mean() {
+        let r = RoutedLoad::new();
+        assert_eq!(r.load_factor(4), 0.0, "no traffic yet");
+        for _ in 0..30 {
+            r.record(0);
+        }
+        for b in 1..4 {
+            for _ in 0..10 {
+                r.record(b);
+            }
+        }
+        // max=30, mean=15 over 4 buckets.
+        assert!((r.load_factor(4) - 2.0).abs() < 1e-9);
+        assert_eq!(r.count(0), 30);
+        r.reset();
+        assert_eq!(r.load_factor(4), 0.0);
+        // Bucket ids alias modulo the slot count without panicking.
+        r.record(ROUTED_SLOTS as u32 + 3);
+        assert_eq!(r.count(3), 1);
     }
 
     #[test]

@@ -107,7 +107,7 @@
 //! ## Two server personalities over one parser
 //!
 //! Everything above is I/O-model agnostic; the servers bind it two ways
-//! (both std-only — the build is fully offline, see DESIGN.md):
+//! (both std-only — the build is fully offline, no external crates):
 //!
 //! * **Blocking thread-per-connection** — [`serve_framed`] drives the
 //!   parser straight off a socket `BufReader`.  Simple, and the fallback

@@ -1,0 +1,293 @@
+//! Router-side hot-key cache: a fixed-capacity, striped LRU in front
+//! of shard I/O.
+//!
+//! Zipfian traffic concentrates a large share of GETs on a handful of
+//! keys; under 2:1 weights those keys also concentrate on the heavy
+//! shards.  Values are already `Arc<[u8]>` end to end, so a cache hit
+//! is a linear probe plus a refcount bump — no copy, no allocation —
+//! which is what lets `zero_alloc.rs` keep passing with the cache on
+//! the hit path.
+//!
+//! # Invalidation rule
+//!
+//! The cache is *write-invalidated* and *epoch-cleared*:
+//!
+//! - `PUT`/`DEL` invalidate the exact key **after** the shard write
+//!   completes (see [`HotCache::invalidate`]).
+//! - Every `Router::publish` — scale up/down, migration settle, FAIL,
+//!   RESTORE, weight change — clears the whole cache before the new
+//!   snapshot is visible, so a cached value never serves across an
+//!   epoch publish.
+//!
+//! # Stale-fill race
+//!
+//! A GET that misses reads the shard and then fills the cache.  If a
+//! concurrent write or epoch publish lands between the shard read and
+//! the fill, the fill would resurrect the stale value.  Each stripe
+//! therefore carries a generation counter, bumped by `invalidate` and
+//! `clear`: the GET records the generation *before* shard I/O
+//! ([`HotCache::generation`]) and [`HotCache::fill`] drops the fill if
+//! the generation moved.  The check runs under the stripe lock, so a
+//! fill either predates the invalidation entirely or observes its
+//! bump.
+
+use crate::sync::{Arc, Mutex};
+
+/// Lock stripes; power of two so stripe selection is one mask.
+const STRIPES: usize = 8;
+
+struct Entry {
+    digest: u64,
+    key: String,
+    value: Arc<[u8]>,
+    /// Last-touched stamp from the stripe's tick counter; the eviction
+    /// victim is the entry with the smallest stamp (LRU).
+    touched: u64,
+}
+
+struct Stripe {
+    entries: Vec<Entry>,
+    /// Monotone access clock for LRU stamps.
+    tick: u64,
+    /// Bumped by `invalidate`/`clear`; guards against stale fills.
+    generation: u64,
+}
+
+/// Fixed-capacity hot-key LRU, striped by digest.
+///
+/// Capacity is split evenly across stripes, so the effective total is
+/// `per_stripe * STRIPES` (rounded up from the configured
+/// `hot_cache_keys`).  Lookups, fills, and invalidations take one
+/// stripe lock; `clear` walks all stripes.
+pub struct HotCache {
+    stripes: Vec<Mutex<Stripe>>,
+    per_stripe: usize,
+}
+
+impl HotCache {
+    /// Build a cache holding at least `capacity` keys, or `None` when
+    /// `capacity` is zero (cache disabled).
+    pub fn new(capacity: usize) -> Option<HotCache> {
+        if capacity == 0 {
+            return None;
+        }
+        let per_stripe = capacity.div_ceil(STRIPES);
+        let stripes = (0..STRIPES)
+            .map(|_| {
+                Mutex::new(Stripe {
+                    entries: Vec::with_capacity(per_stripe),
+                    tick: 0,
+                    generation: 0,
+                })
+            })
+            .collect();
+        Some(HotCache { stripes, per_stripe })
+    }
+
+    /// Total keys the cache can hold.
+    pub fn capacity(&self) -> usize {
+        self.per_stripe * STRIPES
+    }
+
+    fn stripe(&self, digest: u64) -> &Mutex<Stripe> {
+        &self.stripes[digest as usize & (STRIPES - 1)]
+    }
+
+    /// Look up `key`; a hit bumps the LRU stamp and clones the `Arc`.
+    pub fn get(&self, digest: u64, key: &str) -> Option<Arc<[u8]>> {
+        let mut s = self.stripe(digest).lock().unwrap();
+        s.tick += 1;
+        let tick = s.tick;
+        let e = s
+            .entries
+            .iter_mut()
+            .find(|e| e.digest == digest && e.key == key)?;
+        e.touched = tick;
+        Some(Arc::clone(&e.value))
+    }
+
+    /// Stripe generation for `digest`, read *before* shard I/O; pass
+    /// it back to [`fill`](Self::fill) to detect concurrent writes.
+    pub fn generation(&self, digest: u64) -> u64 {
+        self.stripe(digest).lock().unwrap().generation
+    }
+
+    /// Insert `key` after a cache miss.  `gen` must be the value
+    /// [`generation`](Self::generation) returned before the shard
+    /// read; if the stripe moved on since, the fill is dropped.
+    /// Returns `true` when a victim was evicted to make room.
+    pub fn fill(&self, digest: u64, key: &str, value: &Arc<[u8]>, gen: u64) -> bool {
+        let mut s = self.stripe(digest).lock().unwrap();
+        if s.generation != gen {
+            return false; // a write or epoch publish raced the shard read
+        }
+        s.tick += 1;
+        let tick = s.tick;
+        if let Some(e) = s
+            .entries
+            .iter_mut()
+            .find(|e| e.digest == digest && e.key == key)
+        {
+            e.value = Arc::clone(value);
+            e.touched = tick;
+            return false;
+        }
+        let mut evicted = false;
+        if s.entries.len() >= self.per_stripe {
+            let victim = s
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.touched)
+                .map(|(i, _)| i)
+                .expect("per_stripe >= 1, so a full stripe has a victim");
+            s.entries.swap_remove(victim);
+            evicted = true;
+        }
+        s.entries.push(Entry {
+            digest,
+            key: key.to_owned(),
+            value: Arc::clone(value),
+            touched: tick,
+        });
+        evicted
+    }
+
+    /// Drop `key` and bump the stripe generation (called after every
+    /// PUT/DEL shard write).
+    pub fn invalidate(&self, digest: u64, key: &str) {
+        let mut s = self.stripe(digest).lock().unwrap();
+        s.generation += 1;
+        if let Some(i) = s
+            .entries
+            .iter()
+            .position(|e| e.digest == digest && e.key == key)
+        {
+            s.entries.swap_remove(i);
+        }
+    }
+
+    /// Drop everything and bump every stripe generation (called by
+    /// `Router::publish` so nothing serves across an epoch).
+    pub fn clear(&self) {
+        for stripe in &self.stripes {
+            let mut s = stripe.lock().unwrap();
+            s.generation += 1;
+            s.entries.clear();
+        }
+    }
+
+    /// Cached entries across all stripes (tests/diagnostics).
+    pub fn len(&self) -> usize {
+        self.stripes.iter().map(|s| s.lock().unwrap().entries.len()).sum()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn val(s: &str) -> Arc<[u8]> {
+        Arc::from(s.as_bytes())
+    }
+
+    /// Digests that all land in stripe 0 so LRU order is observable.
+    fn d(i: u64) -> u64 {
+        i * STRIPES as u64
+    }
+
+    #[test]
+    fn miss_fill_hit_roundtrip() {
+        let c = HotCache::new(64).unwrap();
+        assert!(c.get(d(1), "a").is_none());
+        let g = c.generation(d(1));
+        assert!(!c.fill(d(1), "a", &val("alpha"), g));
+        assert_eq!(c.get(d(1), "a").as_deref(), Some(b"alpha".as_ref()));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn zero_capacity_disables_the_cache() {
+        assert!(HotCache::new(0).is_none());
+        // Tiny capacities round up to one key per stripe.
+        assert_eq!(HotCache::new(1).unwrap().capacity(), STRIPES);
+    }
+
+    #[test]
+    fn digest_match_still_compares_the_full_key() {
+        let c = HotCache::new(64).unwrap();
+        let g = c.generation(7);
+        c.fill(7, "a", &val("alpha"), g);
+        // Same digest, different key: a digest collision must miss.
+        assert!(c.get(7, "b").is_none());
+        assert_eq!(c.get(7, "a").as_deref(), Some(b"alpha".as_ref()));
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest_entry() {
+        let c = HotCache::new(STRIPES * 2).unwrap(); // 2 per stripe
+        let g = c.generation(0);
+        c.fill(d(1), "k1", &val("v1"), g);
+        c.fill(d(2), "k2", &val("v2"), g);
+        // Touch k1 so k2 becomes the LRU victim.
+        assert!(c.get(d(1), "k1").is_some());
+        assert!(c.fill(d(3), "k3", &val("v3"), g), "full stripe evicts");
+        assert!(c.get(d(2), "k2").is_none(), "cold entry evicted");
+        assert!(c.get(d(1), "k1").is_some());
+        assert!(c.get(d(3), "k3").is_some());
+    }
+
+    #[test]
+    fn fill_overwrites_in_place_without_eviction() {
+        let c = HotCache::new(STRIPES).unwrap(); // 1 per stripe
+        let g = c.generation(d(1));
+        c.fill(d(1), "a", &val("old"), g);
+        assert!(!c.fill(d(1), "a", &val("new"), c.generation(d(1))));
+        assert_eq!(c.get(d(1), "a").as_deref(), Some(b"new".as_ref()));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn invalidate_drops_the_key_and_blocks_stale_fills() {
+        let c = HotCache::new(64).unwrap();
+        let g = c.generation(d(1));
+        c.fill(d(1), "a", &val("alpha"), g);
+        // A GET records the generation, reads the shard...
+        let stale_gen = c.generation(d(1));
+        // ...then a PUT lands and invalidates.
+        c.invalidate(d(1), "a");
+        assert!(c.get(d(1), "a").is_none());
+        // The in-flight GET's fill must be dropped, not resurrect "alpha".
+        assert!(!c.fill(d(1), "a", &val("alpha"), stale_gen));
+        assert!(c.get(d(1), "a").is_none());
+    }
+
+    #[test]
+    fn clear_empties_everything_and_blocks_stale_fills() {
+        let c = HotCache::new(64).unwrap();
+        for i in 0..10u64 {
+            let g = c.generation(i);
+            c.fill(i, "k", &val("v"), g);
+        }
+        let stale_gen = c.generation(3);
+        c.clear();
+        assert!(c.is_empty());
+        assert!(!c.fill(3, "k", &val("v"), stale_gen));
+        assert!(c.is_empty(), "post-clear fill with a stale epoch dropped");
+    }
+
+    #[test]
+    fn hit_is_a_refcount_bump_on_the_same_allocation() {
+        let c = HotCache::new(64).unwrap();
+        let v = val("shared");
+        let g = c.generation(d(1));
+        c.fill(d(1), "a", &v, g);
+        let hit = c.get(d(1), "a").unwrap();
+        assert!(Arc::ptr_eq(&v, &hit));
+    }
+}

@@ -114,6 +114,35 @@
 //! (source, destination) pair), cutting migration round-trips by the
 //! batch factor.
 //!
+//! ## Placement stack: weighted virtual buckets + hot-key cache
+//!
+//! Placement is a stack of composable layers (diagrammed in
+//! [`crate::cluster`]): engine → optional
+//! [`Weighted`](crate::algorithms::weighted::Weighted) adapter →
+//! optional [`ReplicaMap`] → [`PlacementSnapshot`].  The router is
+//! layer-agnostic — it holds a `Box<dyn ConsistentHasher>` and every
+//! admin op forks it — with one weighted-only addition:
+//! [`Router::set_weight`] changes a shard's weight through the
+//! [`as_weighted_mut`](crate::algorithms::ConsistentHasher::as_weighted_mut)
+//! hook (the weighted twin of the failover path's
+//! `as_fault_tolerant_mut`) and migrates the affected key share through
+//! the same publish → quiesce → sweep → settle machinery as a scale op.
+//!
+//! In front of the whole stack sits an optional fixed-capacity hot-key
+//! LRU ([`cache::HotCache`], `[placement] hot_cache_keys`): singleton
+//! GETs probe it before any shard I/O — values are `Arc<[u8]>`, so a
+//! hit is a refcount bump, keeping the hit path allocation-free
+//! (pinned by `rust/tests/zero_alloc.rs`).  Consistency rule: the
+//! cache is **write-invalidated** (every PUT/DEL — singleton or
+//! batched — invalidates its exact key after the shard write) and
+//! **epoch-cleared** (every [`Router::publish`] clears it before the
+//! new snapshot is visible, so a cached value never serves across a
+//! migration settle, FAIL, RESTORE, weight change, or any other epoch
+//! publish).  The stale-fill race between a GET's shard read and its
+//! cache fill is closed by per-stripe generation counters — see
+//! [`cache`]'s module docs.  `hot_hits`/`hot_evictions` and the
+//! measured per-shard `load_factor` surface in `STATS`.
+//!
 //! ## Concurrency model: epoch snapshots + incremental migration
 //!
 //! Topology changes are serialized by an admin mutex and proceed in three
@@ -256,6 +285,8 @@
 //!   copy-holders from engines, never from scans) but count in
 //!   `COUNT`, which reports reachable *copies*, not unique keys, when
 //!   R > 1.
+
+pub mod cache;
 
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
@@ -409,6 +440,10 @@ pub struct Router {
     /// `write_mode = "all"`: a replica write error fails the request
     /// instead of being absorbed into `replica_write_failures`.
     write_all: bool,
+    /// Hot-key LRU in front of shard I/O (`[placement] hot_cache_keys`;
+    /// `None` = off).  Write-invalidated, cleared on every publish —
+    /// see the placement-stack section of the module docs.
+    hot: Option<cache::HotCache>,
 }
 
 impl Router {
@@ -440,6 +475,22 @@ impl Router {
         factor: u32,
         write_all: bool,
     ) -> Arc<Self> {
+        Self::with_placement(cluster, spawn_shard, bulk, factor, write_all, 0)
+    }
+
+    /// Router with the full placement-stack knobs: replication plus the
+    /// hot-key cache (`hot_cache_keys` keys; 0 = off).  The cluster's
+    /// engine may itself be a
+    /// [`Weighted`](crate::algorithms::weighted::Weighted) stack — the
+    /// router is layer-agnostic except for [`set_weight`](Self::set_weight).
+    pub fn with_placement(
+        cluster: Cluster,
+        spawn_shard: ShardSpawner,
+        bulk: Option<PlacementRuntime>,
+        factor: u32,
+        write_all: bool,
+        hot_cache_keys: usize,
+    ) -> Arc<Self> {
         let factor = factor.max(1);
         let (mut snapshot, events) = cluster.into_snapshot();
         snapshot.replicas =
@@ -453,6 +504,7 @@ impl Router {
             spawn_shard,
             factor,
             write_all,
+            hot: cache::HotCache::new(hot_cache_keys),
         })
     }
 
@@ -485,6 +537,14 @@ impl Router {
         // sites leave `replicas: None`.
         snapshot.replicas =
             ReplicaMap::build(snapshot.engine.as_ref(), snapshot.shards.len(), self.factor);
+        // The hot-key cache never serves across an epoch publish: clear
+        // it (bumping every stripe generation, so in-flight fills that
+        // read their shard under the old epoch drop themselves) before
+        // the new snapshot becomes visible.  This one choke point
+        // covers scale settle, FAIL, RESTORE, and weight changes.
+        if let Some(hot) = &self.hot {
+            hot.clear();
+        }
         drop(self.current.store(snapshot));
     }
 
@@ -609,7 +669,7 @@ impl Router {
                     })
                     .sum();
                 Response::Info(format!(
-                    "epoch={} n={} shards={} algo={} state={} failed={} {} {} remote_timeouts={}",
+                    "epoch={} n={} shards={} algo={} state={} failed={} load_factor={:.3} {} {} remote_timeouts={}",
                     snap.epoch,
                     snap.engine.len(),
                     snap.shards.len(),
@@ -619,6 +679,10 @@ impl Router {
                         Some(d) => d.failed_csv(),
                         None => "-".to_string(),
                     },
+                    // Measured max/mean routed-op share over the shard
+                    // slots (1.0 = perfectly even; see stats::theory for
+                    // the algorithmic ceiling).
+                    self.metrics.routed.load_factor(snap.shards.len() as u32),
                     self.metrics.summary(),
                     self.conns.summary(),
                     remote_timeouts
@@ -789,11 +853,34 @@ impl Router {
             Ok(d) => d,
             Err(resp) => return resp,
         };
+        // Hot-key cache probe before any placement or shard I/O: a hit
+        // is an `Arc` refcount bump (allocation-free — pinned by
+        // zero_alloc.rs).  Safe to answer without consulting the
+        // snapshot because the cache is write-invalidated and cleared
+        // on every epoch publish, so an entry can only exist for the
+        // current topology and the current value.
+        if let Some(hot) = &self.hot {
+            if let Some(v) = hot.get(digest, key) {
+                self.metrics.hot_hits.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
+                return Response::Val(v);
+            }
+        }
         let t0 = Instant::now();
         let snap = self.snapshot();
         let (bucket, shard) = snap.route(digest);
         self.metrics.placement_latency.record(t0.elapsed());
-        self.get_routed(&snap, key, digest, bucket, shard)
+        self.metrics.routed.record(bucket);
+        // Record the stripe generation *before* the shard read; a fill
+        // whose generation was superseded by a concurrent write or
+        // publish is dropped inside `fill` (see cache's module docs).
+        let gen = self.hot.as_ref().map(|h| h.generation(digest));
+        let resp = self.get_routed(&snap, key, digest, bucket, shard);
+        if let (Some(hot), Some(gen), Response::Val(v)) = (&self.hot, gen, &resp) {
+            if hot.fill(digest, key, v, gen) {
+                self.metrics.hot_evictions.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
+            }
+        }
+        resp
     }
 
     /// The GET core after admission and routing — shared by the singleton
@@ -861,6 +948,7 @@ impl Router {
         let snap = self.snapshot();
         let (bucket, shard) = snap.route(digest);
         self.metrics.placement_latency.record(t0.elapsed());
+        self.metrics.routed.record(bucket);
         self.put_routed(&snap, key, value, digest, bucket, shard)
     }
 
@@ -904,6 +992,12 @@ impl Router {
                 Err(e) => return Response::Err(e.to_string()),
             },
         };
+        // The shard write is done — drop the cached copy *now* (after
+        // the write, so a concurrent miss-fill either predates this
+        // invalidation's generation bump or observes the new value).
+        if let Some(hot) = &self.hot {
+            hot.invalidate(digest, key);
+        }
         // The primary copy landed; fan out to the replicas (no-op at
         // factor 1 — the `Value` clone above is an `Arc` refcount bump,
         // not an allocation).
@@ -922,6 +1016,7 @@ impl Router {
         let snap = self.snapshot();
         let (bucket, shard) = snap.route(digest);
         self.metrics.placement_latency.record(t0.elapsed());
+        self.metrics.routed.record(bucket);
         self.del_routed(&snap, key, digest, bucket, shard)
     }
 
@@ -962,6 +1057,11 @@ impl Router {
                 Err(e) => Response::Err(e.to_string()),
             },
         };
+        // Shard deletes are done — drop the cached copy (same ordering
+        // argument as the PUT path).
+        if let Some(hot) = &self.hot {
+            hot.invalidate(digest, key);
+        }
         // Deletes always fan out, whatever the primary answered — a
         // replica may hold a copy the primary never saw (e.g. written
         // before a failover moved the primary), and a surviving stale
@@ -1042,6 +1142,7 @@ impl Router {
             let digest = crate::hashing::xxhash64(key.as_bytes(), 0);
             scratch.digests.push(digest);
             let bucket = snap.engine.bucket(digest);
+            self.metrics.routed.record(bucket);
             if snap.fallback_route(digest, bucket).is_some() {
                 scratch.defer.push(i as u32);
                 continue;
@@ -1100,6 +1201,20 @@ impl Router {
                 let msg = e.to_string();
                 for &i in scratch.sel.iter() {
                     out[i as usize] = Response::Err(msg.clone());
+                }
+            }
+        }
+
+        // Batched writes invalidate the hot-key cache exactly like
+        // singletons, after their shard fan-out.  Conservative: every
+        // admitted write key is invalidated, whatever its shard
+        // answered (an over-invalidation is always safe; the deferred
+        // keys were already invalidated inside put_routed/del_routed).
+        if matches!(op, BatchOp::Put | BatchOp::Del) {
+            if let Some(hot) = &self.hot {
+                for &w in scratch.order.iter() {
+                    let i = w as u32 as usize;
+                    hot.invalidate(scratch.digests[i], src.key(i));
                 }
             }
         }
@@ -1659,6 +1774,94 @@ impl Router {
         self.metrics.restores.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
         self.metrics.epochs.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
         Ok(working)
+    }
+
+    /// Change shard `id`'s weight on a weighted placement stack and
+    /// incrementally migrate exactly the key share the reassignment
+    /// moved, serving reads and writes throughout — the same publish →
+    /// quiesce → sweep → settle machinery as a scale op (a weight
+    /// change *is* a virtual-bucket add/remove on the inner engine).
+    /// Returns the shard's new weight.
+    ///
+    /// Requires the cluster to have been built over
+    /// [`Weighted`](crate::algorithms::weighted::Weighted) (reached via
+    /// [`as_weighted_mut`](crate::algorithms::ConsistentHasher::as_weighted_mut),
+    /// the hook that survives the type-erasing `fork`) and a healthy
+    /// topology — the adapter rejects reweighting while shards are
+    /// failed, with the failed buckets named in the error.
+    pub fn set_weight(&self, id: u32, weight: u32) -> Result<u32> {
+        let mut events = self
+            .admin
+            .try_lock()
+            .map_err(|_| anyhow!("MIGRATING: a topology change is already in flight"))?;
+        let base = self.resume_interrupted(self.snapshot())?;
+        Self::purge_tombstones(&base)?;
+        ensure!(
+            base.engine.as_weighted().is_some(),
+            "engine {:?} has no weight table; build the cluster with [placement] weights",
+            base.engine.name()
+        );
+        let n_slots = base.shards.len() as u32;
+        ensure!(id < n_slots, "shard {id} out of range (cluster has {n_slots} slots)");
+        let old_engine = base.engine.fork();
+        let mut new_engine = base.engine.fork();
+        new_engine
+            .as_weighted_mut()
+            .expect("fork keeps the weighted surface")
+            .set_weight(id, weight)
+            .map_err(|reason| {
+                let failed = failed_buckets(&*base.engine, n_slots as usize);
+                if failed.is_empty() {
+                    anyhow!("cannot reweight shard {id}: {reason}")
+                } else {
+                    anyhow!(
+                        "cannot reweight shard {id}: {reason} \
+                         (failed buckets: {}; RESTORE them first)",
+                        csv(&failed)
+                    )
+                }
+            })?;
+        // Unlike a LIFO scale, a weight change can hand virtual buckets
+        // between *arbitrary* shards (the tail-reassignment trick), so
+        // every reachable shard is a migration source.
+        let sources: Vec<u32> = (0..n_slots).filter(|&b| !base.is_failed(b)).collect();
+        let epoch = base.epoch + 1;
+        self.publish(PlacementSnapshot {
+            epoch,
+            engine: new_engine,
+            shards: base.shards.clone(),
+            origin: Some(MigrationOrigin {
+                engine: old_engine,
+                sources,
+                settle_len: base.shards.len(),
+                ae_dest: None,
+            }),
+            degraded: base.degraded.as_ref().map(|d| d.fork()),
+            replicas: None,
+        });
+        events.push(TopologyEvent {
+            epoch,
+            kind: EventKind::Reweighted(id),
+            at: std::time::SystemTime::now(),
+        });
+        // Same hazard as the scale ops: no reader may still route with
+        // the pre-change snapshot once batches delete source copies.
+        Self::quiesce(&base);
+        drop(base);
+        let migrating = self.snapshot();
+        self.run_migration(&migrating)?;
+        self.publish(PlacementSnapshot {
+            epoch,
+            engine: migrating.engine.fork(),
+            shards: migrating.shards.clone(),
+            origin: None,
+            degraded: migrating.degraded.as_ref().map(|d| d.fork()),
+            replicas: None,
+        });
+        Self::quiesce(&migrating);
+        let _ = Self::purge_tombstones(&migrating);
+        self.metrics.epochs.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
+        Ok(weight)
     }
 
     /// Complete an interrupted migration: if a previous scale/restore op
@@ -2646,5 +2849,138 @@ mod tests {
         assert_eq!(proto::read_response(&mut rd).unwrap(), Response::Ok);
         proto::write_request(&mut wr, &Request::Get { key: "y".into() }).unwrap();
         assert_eq!(proto::read_response(&mut rd).unwrap(), Response::Val(val(b"1")));
+    }
+
+    fn cached_router(algorithm: &str, n: u32, hot_keys: usize) -> Arc<Router> {
+        Router::with_placement(
+            local_cluster(algorithm, n).unwrap(),
+            Box::new(|id| ShardClient::Local(Shard::new(id))),
+            None,
+            1,
+            false,
+            hot_keys,
+        )
+    }
+
+    #[test]
+    fn hot_cache_serves_repeat_gets_and_writes_invalidate() {
+        let router = cached_router("binomial", 4, 128);
+        assert_eq!(
+            router.handle(Request::Put { key: "hc".into(), value: val(b"v1") }),
+            Response::Ok
+        );
+        // First GET misses (fills), second hits from the cache.
+        assert_eq!(router.handle(Request::Get { key: "hc".into() }), Response::Val(val(b"v1")));
+        assert_eq!(router.metrics.hot_hits.load(Ordering::Relaxed), 0); // ord: test-only
+        assert_eq!(router.handle(Request::Get { key: "hc".into() }), Response::Val(val(b"v1")));
+        assert_eq!(router.metrics.hot_hits.load(Ordering::Relaxed), 1); // ord: test-only
+        // PUT invalidates: the next GET must see the new value, not the
+        // cached one.
+        assert_eq!(
+            router.handle(Request::Put { key: "hc".into(), value: val(b"v2") }),
+            Response::Ok
+        );
+        assert_eq!(router.handle(Request::Get { key: "hc".into() }), Response::Val(val(b"v2")));
+        assert_eq!(router.metrics.hot_hits.load(Ordering::Relaxed), 1); // ord: test-only
+        // DEL invalidates: no stale value can resurface.
+        assert_eq!(router.handle(Request::Del { key: "hc".into() }), Response::Ok);
+        assert_eq!(router.handle(Request::Get { key: "hc".into() }), Response::Nil);
+        assert_eq!(router.metrics.hot_hits.load(Ordering::Relaxed), 1); // ord: test-only
+        // Batched writes invalidate too.
+        router.handle(Request::Put { key: "hc".into(), value: val(b"v3") });
+        router.handle(Request::Get { key: "hc".into() });
+        router.handle(Request::Get { key: "hc".into() }); // cached
+        match router.handle(Request::MPut { keys: vec!["hc".into()], values: vec![val(b"v4")] })
+        {
+            Response::Multi(subs) => assert_eq!(subs, vec![Response::Ok]),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(router.handle(Request::Get { key: "hc".into() }), Response::Val(val(b"v4")));
+        // STATS surfaces the cache and load-factor telemetry.
+        match router.handle(Request::Stats) {
+            Response::Info(s) => {
+                assert!(s.contains("hot_hits="), "{s}");
+                assert!(s.contains("load_factor="), "{s}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn hot_cache_never_serves_across_an_epoch_publish() {
+        let router = cached_router("binomial", 2, 64);
+        router.handle(Request::Put { key: "ep".into(), value: val(b"e") });
+        router.handle(Request::Get { key: "ep".into() }); // fill
+        router.handle(Request::Get { key: "ep".into() }); // hit
+        assert_eq!(router.metrics.hot_hits.load(Ordering::Relaxed), 1); // ord: test-only
+        router.scale_up().unwrap();
+        // The publish cleared the cache: the first post-epoch GET reads
+        // the shard (no hit), the second hits the refilled entry.
+        assert_eq!(router.handle(Request::Get { key: "ep".into() }), Response::Val(val(b"e")));
+        assert_eq!(router.metrics.hot_hits.load(Ordering::Relaxed), 1); // ord: test-only
+        assert_eq!(router.handle(Request::Get { key: "ep".into() }), Response::Val(val(b"e")));
+        assert_eq!(router.metrics.hot_hits.load(Ordering::Relaxed), 2); // ord: test-only
+    }
+
+    #[test]
+    fn set_weight_migrates_incrementally_and_preserves_keys() {
+        use crate::algorithms::weighted::Weighted;
+        let engine = Weighted::new("memento", &[1, 1, 1, 1], 1).unwrap();
+        let shards = (0..4).map(|i| ShardClient::Local(Shard::new(i))).collect();
+        let router = Router::new(Cluster::new(Box::new(engine), shards));
+        for i in 0..400 {
+            assert_eq!(
+                router.handle(Request::Put { key: format!("w{i}"), value: val(&[i as u8]) }),
+                Response::Ok
+            );
+        }
+        let epoch_before = router.topology().0;
+        assert_eq!(router.set_weight(0, 3).unwrap(), 3);
+        let snap = router.snapshot();
+        assert!(!snap.is_migrating(), "set_weight must settle before returning");
+        assert_eq!(snap.epoch, epoch_before + 1);
+        assert_eq!(
+            snap.engine.as_weighted().expect("weighted engine").weights(),
+            &[3, 1, 1, 1]
+        );
+        drop(snap);
+        assert!(matches!(
+            router.events().last().map(|e| e.kind.clone()),
+            Some(EventKind::Reweighted(0))
+        ));
+        for i in 0..400 {
+            assert_eq!(
+                router.handle(Request::Get { key: format!("w{i}") }),
+                Response::Val(val(&[i as u8])),
+                "key w{i} lost across the weight change"
+            );
+        }
+        assert_eq!(router.handle(Request::Count), Response::Num(400));
+        // The heavier shard now carries the larger key share.
+        let n0 = match router.shard_count(0) {
+            Ok(n) => n,
+            Err(e) => panic!("{e}"),
+        };
+        assert!(n0 > 400 / 4, "shard 0 at weight 3 holds {n0} of 400 keys");
+        // Scaling still composes: the stack grows at its frontier.
+        assert_eq!(router.handle(Request::ScaleUp), Response::Num(5));
+        assert_eq!(router.handle(Request::ScaleDown), Response::Num(4));
+        assert_eq!(router.handle(Request::Count), Response::Num(400));
+    }
+
+    #[test]
+    fn set_weight_without_a_weight_table_is_a_clean_err() {
+        let router = Router::new(local_cluster("binomial", 2).unwrap());
+        let before = router.topology();
+        match router.set_weight(0, 2) {
+            Err(e) => {
+                let msg = e.to_string();
+                assert!(msg.contains("weight table"), "{msg}");
+                assert!(msg.contains("binomial"), "{msg}");
+            }
+            Ok(w) => panic!("set_weight on a bare engine succeeded: {w}"),
+        }
+        assert_eq!(router.topology(), before);
+        assert!(router.events().is_empty());
     }
 }

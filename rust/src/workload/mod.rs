@@ -1,7 +1,8 @@
 //! Workload generators for benchmarks, tests, and the end-to-end examples.
 //!
 //! All generators are deterministic (seeded [`SplitMix64Rng`]) so every
-//! figure in EXPERIMENTS.md regenerates bit-identically.
+//! `bench_figs` CSV series and `BENCH_router.json` phase regenerates
+//! bit-identically.
 
 use crate::hashing::{xxhash64, SplitMix64Rng};
 

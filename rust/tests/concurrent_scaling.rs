@@ -251,6 +251,107 @@ fn overwrites_and_deletes_land_correctly_during_migration_window() {
     assert_eq!(router.handle(Request::Count), Response::Num((N - 100) as u64));
 }
 
+#[test]
+fn weighted_replicated_cluster_converges_through_scale_and_weight_churn() {
+    // Weighted<memento> at replication factor 2: a scale cycle and a
+    // weight change out-and-back are both incremental migrations through
+    // the same epoch machinery, so readers must hold the no-wrong-value
+    // contract throughout and the keyset must converge exactly — nothing
+    // lost, nothing resurrected.
+    use binhash::algorithms::{weighted::Weighted, ConsistentHasher};
+    use binhash::cluster::Cluster;
+    use binhash::shard::{Shard, ShardClient};
+
+    const DEL_START: usize = KEYS - 200;
+
+    let engine = Weighted::new("memento", &[1, 1, 1, 1], 1).unwrap();
+    let shards = (0..4).map(|i| ShardClient::Local(Shard::new(i))).collect();
+    let router = Router::with_replication(
+        Cluster::new(Box::new(engine), shards),
+        Box::new(|id| ShardClient::Local(Shard::new(id))),
+        None,
+        2,
+        false,
+    );
+    for i in 0..KEYS {
+        assert_eq!(
+            router.handle(Request::Put { key: format!("wk{i}"), value: value_for(i) }),
+            Response::Ok
+        );
+    }
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut readers = Vec::new();
+    for t in 0..READERS {
+        let router = router.clone();
+        let stop = stop.clone();
+        readers.push(std::thread::spawn(move || -> u64 {
+            let mut i = t;
+            let mut reads = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let idx = i % DEL_START; // stay clear of the deleted slice
+                match router.handle(Request::Get { key: format!("wk{idx}") }) {
+                    Response::Val(v) => assert_eq!(v, value_for(idx), "wk{idx} corrupted"),
+                    other => panic!("wk{idx} unreadable during weighted churn: {other:?}"),
+                }
+                i += 7; // co-prime stride: every reader covers the keyset
+                reads += 1;
+            }
+            reads
+        }));
+    }
+    // Deleter: the tail slice must stay dead through every migration.
+    let deleter = {
+        let router = router.clone();
+        std::thread::spawn(move || {
+            for i in DEL_START..KEYS {
+                match router.handle(Request::Del { key: format!("wk{i}") }) {
+                    Response::Ok | Response::Nil => {}
+                    other => panic!("delete of wk{i} failed during weighted churn: {other:?}"),
+                }
+            }
+        })
+    };
+
+    let epoch0 = router.topology().0;
+    // A scale cycle: the joiner arrives at weight 1 and retires cleanly.
+    assert_eq!(router.handle(Request::ScaleUp), Response::Num(5));
+    assert_eq!(router.handle(Request::ScaleDown), Response::Num(4));
+    // A weight change out and back: interior shard 1 triples, then
+    // returns to weight 1 — each step its own incremental migration.
+    assert_eq!(router.set_weight(1, 3).unwrap(), 3);
+    assert_eq!(router.set_weight(1, 1).unwrap(), 1);
+    assert_eq!(router.topology().0, epoch0 + 4, "one epoch per topology change");
+
+    deleter.join().expect("deleter thread panicked");
+    stop.store(true, Ordering::Relaxed);
+    let mut total = 0u64;
+    for h in readers {
+        total += h.join().expect("a reader thread panicked");
+    }
+    assert!(total > 0, "readers made no progress");
+
+    // Converged: steady state, weight table restored, surviving keys
+    // intact, deleted slice still dead.
+    let snap = router.snapshot();
+    assert!(!snap.is_migrating() && !snap.is_degraded());
+    assert_eq!(snap.engine.as_weighted().unwrap().weights(), &[1, 1, 1, 1]);
+    for i in 0..DEL_START {
+        assert_eq!(
+            router.handle(Request::Get { key: format!("wk{i}") }),
+            Response::Val(value_for(i)),
+            "wk{i} lost in weighted churn"
+        );
+    }
+    for i in DEL_START..KEYS {
+        assert_eq!(
+            router.handle(Request::Get { key: format!("wk{i}") }),
+            Response::Nil,
+            "deleted key wk{i} resurrected by weighted churn"
+        );
+    }
+}
+
 /// `Shard::stats()` exposes the op counter as `ops=N`; parse it so the
 /// test can prove the failed shard's counter *freezes* while degraded.
 fn ops_of(shard: &std::sync::Arc<binhash::shard::Shard>) -> u64 {

@@ -9,7 +9,8 @@
 //! * *stateful* algorithms (anchor, dx) carry construction state, so the
 //!   properties are checked by mutating a single instance.
 
-use binhash::algorithms::{self, ConsistentHasher, ALL_ALGORITHMS};
+use binhash::algorithms::weighted::Weighted;
+use binhash::algorithms::{self, ConsistentHasher, ALL_ALGORITHMS, ANTI_BASELINE};
 use binhash::hashing::SplitMix64Rng;
 use binhash::stats::BalanceStats;
 
@@ -233,6 +234,100 @@ fn movement_fraction_near_ideal() {
                 "{name}: n={n} moved {frac:.4} vs ideal {ideal:.4}"
             );
         }
+    }
+}
+
+/// Every engine name the `Weighted` adapter must wrap (the 12 registered
+/// algorithms plus the modulo anti-baseline).
+fn all_engines() -> impl Iterator<Item = &'static str> {
+    ALL_ALGORITHMS.iter().copied().chain(std::iter::once(ANTI_BASELINE))
+}
+
+/// Engines whose scale-up moves keys only onto the new bucket — the set
+/// the monotone `Weighted` properties can be asserted for (maglev is
+/// approximate, modulo reshuffles by design).
+fn monotone_engines() -> impl Iterator<Item = &'static str> {
+    STATELESS.iter().copied().chain(STATEFUL.iter().copied())
+}
+
+#[test]
+fn weighted_wrapper_keeps_lookups_in_shard_range() {
+    let mut rng = SplitMix64Rng::new(0x7e60);
+    for name in all_engines() {
+        let w = Weighted::new(name, &[2, 1, 3, 1], 1).unwrap();
+        assert_eq!(w.len(), 4, "{name}");
+        for _ in 0..500 {
+            let b = w.bucket(rng.next_u64());
+            assert!(b < 4, "{name}: shard {b} out of range");
+        }
+    }
+}
+
+#[test]
+fn weighted_scale_up_is_monotone_and_roundtrips() {
+    let mut rng = SplitMix64Rng::new(0x7e61);
+    let digests: Vec<u64> = (0..3_000).map(|_| rng.next_u64()).collect();
+    for name in monotone_engines() {
+        let mut w = Weighted::new(name, &[2, 1, 3, 1], 2).unwrap();
+        let before: Vec<u32> = digests.iter().map(|&d| w.bucket(d)).collect();
+        let added = w.add_bucket();
+        assert_eq!(added, 4, "{name}: joiner id is the shard frontier");
+        for (i, &d) in digests.iter().enumerate() {
+            let cur = w.bucket(d);
+            assert!(
+                cur == before[i] || cur == added,
+                "{name}: key {i} jumped {} -> {cur} (not the joiner)",
+                before[i]
+            );
+        }
+        w.remove_bucket();
+        let after: Vec<u32> = digests.iter().map(|&d| w.bucket(d)).collect();
+        assert_eq!(before, after, "{name}: weighted add+remove is not identity");
+    }
+}
+
+#[test]
+fn weighted_set_weight_growth_moves_keys_only_onto_the_grown_shard() {
+    let mut rng = SplitMix64Rng::new(0x7e62);
+    let digests: Vec<u64> = (0..3_000).map(|_| rng.next_u64()).collect();
+    for name in monotone_engines() {
+        let mut w = Weighted::new(name, &[1, 1, 1, 1], 1).unwrap();
+        let before: Vec<u32> = digests.iter().map(|&d| w.bucket(d)).collect();
+        w.set_weight(2, 3).unwrap();
+        for (i, &d) in digests.iter().enumerate() {
+            let cur = w.bucket(d);
+            assert!(
+                cur == before[i] || cur == 2,
+                "{name}: key {i} moved {} -> {cur}, not onto the grown shard",
+                before[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn weighted_minimal_disruption_tracks_the_engine_and_tail_alignment() {
+    for name in all_engines() {
+        let bare = algorithms::by_name(name, 6).unwrap();
+        let mut w = Weighted::uniform(name, 6).unwrap();
+        assert_eq!(
+            w.minimal_disruption(),
+            bare.minimal_disruption(),
+            "{name}: uniform wrapper must mirror the engine's claim"
+        );
+        if !bare.minimal_disruption() {
+            continue;
+        }
+        // Growing the tail shard keeps its virtual buckets tail-dense...
+        w.set_weight(5, 2).unwrap();
+        assert!(w.minimal_disruption(), "{name}: tail-shard growth broke tail alignment");
+        // ...but growing an interior shard parks its new virtual bucket
+        // at the engine tail, so a shrink would need reassignment.
+        w.set_weight(1, 2).unwrap();
+        assert!(
+            !w.minimal_disruption(),
+            "{name}: interior growth must disable the fast-shrink claim"
+        );
     }
 }
 

@@ -13,6 +13,7 @@
 //! * a full router scale-up/scale-down cycle preserves every key, for
 //!   engines with and without the minimal-disruption guarantee.
 
+use binhash::algorithms::weighted::Weighted;
 use binhash::algorithms::{self, ConsistentHasher, FaultTolerant, ALL_ALGORITHMS, ANTI_BASELINE};
 use binhash::hashing::SplitMix64Rng;
 use binhash::proto::{Request, Response};
@@ -108,6 +109,58 @@ fn fork_carries_stateful_engine_state() {
         let b = fork.bucket(dg);
         assert_ne!(b, 2, "memento fork routed onto a failed bucket");
         assert_ne!(b, 9, "memento fork routed onto a failed bucket");
+    }
+}
+
+#[test]
+fn weighted_uniform_is_placement_identical_to_the_bare_engine() {
+    // The placement stack's base case: wrapping any engine in `Weighted`
+    // at weight 1 everywhere is a no-op for placement, so configs without
+    // a `[placement] weights` table lose nothing by gaining the adapter.
+    let ds = digests(0xF0_03, 5_000);
+    for name in all_engines() {
+        for n in [1u32, 2, 5, 9, 16, 33] {
+            let bare = algorithms::by_name(name, n).unwrap();
+            let wrapped = Weighted::uniform(name, n).unwrap();
+            assert_eq!(wrapped.len(), n, "{name}");
+            for &d in &ds {
+                assert_eq!(
+                    wrapped.bucket(d),
+                    bare.bucket(d),
+                    "{name}: n={n} digest={d:#x} diverges under the uniform wrapper"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn weighted_fork_is_identical_then_independent_for_every_engine() {
+    // Same contract the scaling path relies on for bare engines, through
+    // the adapter: the fork must deep-copy the owner map, the weight
+    // table, and the inner engine's state.
+    let ds = digests(0xF0_04, 2_000);
+    for name in all_engines() {
+        let mut parent: Box<dyn ConsistentHasher> =
+            Box::new(Weighted::new(name, &[2, 1, 3, 1, 1, 1], 1).unwrap());
+        let before = mapping(&*parent, &ds);
+
+        let mut fork = parent.fork();
+        assert_eq!(fork.name(), "weighted", "{name}");
+        assert_eq!(mapping(&*fork, &ds), before, "{name}: fork diverges from parent");
+
+        // Fork mutations (scale and reweight) never leak into the parent...
+        fork.add_bucket();
+        fork.as_weighted_mut().unwrap().set_weight(0, 4).unwrap();
+        assert_eq!(fork.len(), 7, "{name}");
+        assert_eq!(mapping(&*parent, &ds), before, "{name}: fork mutation moved parent keys");
+        assert_eq!(parent.as_weighted().unwrap().weights(), &[2, 1, 3, 1, 1, 1], "{name}");
+
+        // ...and parent mutations never leak into the fork.
+        let fork_view = mapping(&*fork, &ds);
+        parent.remove_bucket();
+        assert_eq!(mapping(&*fork, &ds), fork_view, "{name}: parent mutation moved fork keys");
+        assert_eq!(fork.as_weighted().unwrap().weights(), &[4, 1, 3, 1, 1, 1, 1], "{name}");
     }
 }
 

@@ -687,6 +687,85 @@ fn replication_factor_two_serves_every_key_through_a_failure() {
 }
 
 #[test]
+fn weighted_factor_two_cluster_survives_a_fail_restore_cycle() {
+    // The same factor-2 guarantee through the placement stack's weighted
+    // layer: a `Weighted<memento>` cluster at 2:1 heterogeneous weights
+    // fails its heaviest shard, serves every key from replicas (zero
+    // UNAVAILABLE, zero misses), honors deletes while degraded, and the
+    // restore converges without resurrecting them.
+    use binhash::algorithms::weighted::Weighted;
+    const KEYS: usize = 500;
+    const FAILED: u32 = 0; // the heavy shard — worst case for replica spread
+    const DEL_START: usize = KEYS - 50;
+    let weights = [2u32, 1, 1, 2];
+
+    let engine = Weighted::new("memento", &weights, 1).unwrap();
+    let shards = (0..weights.len() as u32).map(|i| ShardClient::Local(Shard::new(i))).collect();
+    let router = Router::with_replication(
+        Cluster::new(Box::new(engine), shards),
+        Box::new(|id| ShardClient::Local(Shard::new(id))),
+        None,
+        2,
+        false,
+    );
+    for i in 0..KEYS {
+        assert_eq!(
+            router.handle(Request::Put { key: format!("wf{i}"), value: val(i) }),
+            Response::Ok
+        );
+    }
+    // Sanity: the keyset exercises the heavy shard we are about to fail.
+    let healthy = Weighted::new("memento", &weights, 1).unwrap();
+    let marooned: Vec<usize> = (0..KEYS)
+        .filter(|i| healthy.bucket(key_digest(&format!("wf{i}"))) == FAILED)
+        .collect();
+    assert!(!marooned.is_empty(), "keyset never hit the heavy shard");
+
+    assert_eq!(router.handle(Request::Fail { shard: FAILED }), Response::Num(3));
+    for i in 0..KEYS {
+        match classify(&router, &format!("wf{i}")) {
+            Read::Hit(v) => assert_eq!(v, val(i), "wf{i} corrupted"),
+            Read::Miss => panic!("wf{i} lost despite replication"),
+            Read::Unavailable => panic!("wf{i} UNAVAILABLE despite replication"),
+        }
+    }
+    assert_eq!(
+        router.metrics.unavailable.load(Ordering::Relaxed), // ord: Relaxed — test-side telemetry read
+        0,
+        "one failure at factor 2 can never maroon a key, weighted or not"
+    );
+    // Deletes while degraded fan out to every surviving copy...
+    for i in DEL_START..KEYS {
+        assert_eq!(router.handle(Request::Del { key: format!("wf{i}") }), Response::Ok, "wf{i}");
+    }
+
+    assert_eq!(router.handle(Request::Restore { shard: FAILED }), Response::Num(4));
+    let snap = router.snapshot();
+    assert!(!snap.is_migrating() && !snap.is_degraded(), "restore did not settle");
+    assert_eq!(
+        snap.engine.as_weighted().unwrap().weights(),
+        &weights,
+        "restore perturbed the weight table"
+    );
+    assert!(router.shard_count(FAILED).unwrap() > 0, "restored heavy shard left empty");
+    // ...surviving keys answer through the restore, deleted keys stay dead.
+    for i in 0..DEL_START {
+        match classify(&router, &format!("wf{i}")) {
+            Read::Hit(v) => assert_eq!(v, val(i), "wf{i} after restore"),
+            Read::Miss => panic!("wf{i} lost by the restore"),
+            Read::Unavailable => panic!("wf{i} unavailable after restore"),
+        }
+    }
+    for i in DEL_START..KEYS {
+        assert_eq!(
+            router.handle(Request::Get { key: format!("wf{i}") }),
+            Response::Nil,
+            "deleted key wf{i} resurrected by the restore"
+        );
+    }
+}
+
+#[test]
 fn put_then_del_while_degraded_answers_nil_not_unavailable() {
     // Regression for the factor-1 degraded-read hole: PUT a key, fail
     // its primary, DEL it while degraded, GET it back.  A factor-1

@@ -241,3 +241,63 @@ fn steady_state_data_path_allocates_nothing() {
         assert_eq!(router.handle(Request::Get { key: key.clone() }), want, "key {key}");
     }
 }
+
+#[test]
+fn hot_cache_hit_path_allocates_nothing() {
+    // The cache's design constraint: a hit is a stripe lock, a linear
+    // probe, and an `Arc` refcount bump — turning the hot-key cache on
+    // must not cost the steady-state GET path its zero-allocation
+    // budget.  (The *miss* path's fill owns a copy of the key `String`;
+    // that allocation is priced outside the measured window.)
+    use binhash::shard::{Shard, ShardClient};
+    const KEYS: usize = 256;
+    // Roomy capacity: 4096/8 = 512 per stripe, so no stripe can evict
+    // under 256 keys and the measured window is hits only.
+    const CACHE_KEYS: usize = 4096;
+    let router = Router::with_placement(
+        local_cluster("binomial", 4).unwrap(),
+        Box::new(|id| ShardClient::Local(Shard::new(id))),
+        None,
+        1,
+        false,
+        CACHE_KEYS,
+    );
+    for i in 0..KEYS {
+        assert_eq!(
+            router.handle(Request::Put { key: format!("hc{i}"), value: value_of(i, 0) }),
+            Response::Ok
+        );
+    }
+    // Priming pass: every GET misses, reads the shard, and fills.
+    for i in 0..KEYS {
+        assert!(matches!(
+            router.handle(Request::Get { key: format!("hc{i}") }),
+            Response::Val(_)
+        ));
+    }
+    let gets: Vec<Request> =
+        (0..KEYS).map(|i| Request::Get { key: format!("hc{i}") }).collect();
+    let hits_before = router.metrics.hot_hits.load(Ordering::Relaxed); // ord: Relaxed — test-side telemetry read
+
+    ALLOCS.store(0, Ordering::Relaxed);
+    arm(true);
+    let mut unexpected = 0u32;
+    for req in gets {
+        if !matches!(black_box(router.handle(req)), Response::Val(_)) {
+            unexpected += 1;
+        }
+    }
+    arm(false);
+    let allocs = ALLOCS.load(Ordering::Relaxed);
+
+    assert_eq!(unexpected, 0, "a warm cached GET answered unexpectedly");
+    assert_eq!(
+        router.metrics.hot_hits.load(Ordering::Relaxed) - hits_before, // ord: Relaxed — test-side telemetry read
+        KEYS as u64,
+        "the measured window must be all cache hits"
+    );
+    assert_eq!(
+        allocs, 0,
+        "the hot-cache hit path must be allocation-free, saw {allocs} allocations"
+    );
+}

@@ -47,6 +47,22 @@ def rows(doc):
         yield (f"{tag} degraded get", dig(rep, "degraded_get", "ns_op"))
         yield (f"{tag} degraded get p99", rep.get("degraded_p99"))
         yield (f"{tag} restore round-trips", rep.get("restore_round_trips"))
+    zipf = doc.get("zipf")
+    if isinstance(zipf, dict):  # absent in pre-hot-cache artifacts
+        n = zipf.get("n")
+        tag = f"zipf n={n} t={zipf.get('theta')}"
+        yield (f"{tag} get cache-off", dig(zipf, "get_cache_off", "ns_op"))
+        yield (f"{tag} get cache-on", dig(zipf, "get_cache_on", "ns_op"))
+        speedup = zipf.get("cache_speedup")
+        if speedup is not None:
+            yield (f"{tag} cache-speedup ratio", -speedup)
+        w = zipf.get("weighted")
+        if isinstance(w, dict):
+            wtag = f"weighted {w.get('weights')}"
+            yield (f"{wtag} get", dig(w, "get", "ns_op"))
+            lf = w.get("weighted_load_factor")
+            if lf is not None:
+                yield (f"{wtag} load-factor ratio", -lf)
     fan = doc.get("fanin")
     if isinstance(fan, dict):  # null on platforms without the event server
         conns = fan.get("connections")

@@ -1,0 +1,159 @@
+#!/usr/bin/env python3
+"""Unit tests for bench_compare.py (stdlib only; run by the CI lint job).
+
+Covers the three behaviors CI leans on: a missing/unreadable baseline
+degrades to a note (never a failure), a phase present only in the
+current artifact is reported as "new", and paired phases get a signed
+percentage delta.
+"""
+
+import contextlib
+import io
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import bench_compare  # noqa: E402
+
+
+def doc(get_ns=100.0, zipf=None):
+    """A minimal BENCH_router.json document with one cluster."""
+    d = {
+        "bench": "router_hotpath",
+        "clusters": [
+            {
+                "n": 4,
+                "steady": {
+                    "put": {"ns_op": 200.0},
+                    "get": {"ns_op": get_ns},
+                },
+                "churn": {"get": {"ns_op": 300.0}},
+                "failover": {"get": {"ns_op": 400.0}},
+                "batch": {
+                    "sizes": [
+                        {
+                            "batch": 8,
+                            "mget": {"ns_key": 50.0},
+                            "mput": {"ns_key": 60.0},
+                        }
+                    ],
+                    "mget64_vs_get": 2.5,
+                },
+            }
+        ],
+    }
+    if zipf is not None:
+        d["zipf"] = zipf
+    return d
+
+
+ZIPF = {
+    "n": 16,
+    "theta": 0.99,
+    "get_cache_off": {"ns_op": 500.0},
+    "get_cache_on": {"ns_op": 120.0},
+    "cache_speedup": 4.17,
+    "weighted": {
+        "weights": "4x2+4x1",
+        "get": {"ns_op": 550.0},
+        "weighted_load_factor": 1.012,
+    },
+}
+
+
+def run_compare(baseline_path, current_path):
+    """Run bench_compare.main() against two paths, capturing stdout."""
+    argv, sys.argv = sys.argv, ["bench_compare.py", baseline_path, current_path]
+    out = io.StringIO()
+    try:
+        with contextlib.redirect_stdout(out):
+            bench_compare.main()
+    finally:
+        sys.argv = argv
+    return out.getvalue()
+
+
+def write_json(tmpdir, name, document):
+    path = os.path.join(tmpdir, name)
+    with open(path, "w") as f:
+        json.dump(document, f)
+    return path
+
+
+class RowsTest(unittest.TestCase):
+    def test_zipf_phase_yields_labeled_rows(self):
+        labels = dict(bench_compare.rows(doc(zipf=ZIPF)))
+        self.assertEqual(labels["zipf n=16 t=0.99 get cache-off"], 500.0)
+        self.assertEqual(labels["zipf n=16 t=0.99 get cache-on"], 120.0)
+        # Ratio rows are stored negated so the generic pairing works.
+        self.assertEqual(labels["zipf n=16 t=0.99 cache-speedup ratio"], -4.17)
+        self.assertEqual(labels["weighted 4x2+4x1 get"], 550.0)
+        self.assertEqual(labels["weighted 4x2+4x1 load-factor ratio"], -1.012)
+
+    def test_documents_without_zipf_yield_no_zipf_rows(self):
+        labels = dict(bench_compare.rows(doc()))
+        self.assertFalse(any(label.startswith("zipf") for label in labels))
+
+
+class CompareTest(unittest.TestCase):
+    def test_missing_baseline_degrades_to_a_note(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            cur = write_json(tmp, "current.json", doc())
+            out = run_compare(os.path.join(tmp, "absent.json"), cur)
+        self.assertIn("no usable baseline", out)
+        # Every phase still prints, flagged as new.
+        self.assertIn("| n=4 steady get | — | 100 ns | new |", out)
+
+    def test_unreadable_baseline_degrades_to_a_note(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            cur = write_json(tmp, "current.json", doc())
+            bad = os.path.join(tmp, "bad.json")
+            with open(bad, "w") as f:
+                f.write("not json {")
+            out = run_compare(bad, cur)
+        self.assertIn("no usable baseline", out)
+        self.assertIn("new", out)
+
+    def test_phase_added_since_baseline_is_reported_as_new(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            base = write_json(tmp, "base.json", doc())
+            cur = write_json(tmp, "current.json", doc(zipf=ZIPF))
+            out = run_compare(base, cur)
+        # The paired phase gets a delta, the new phase gets "new".
+        self.assertIn("| n=4 steady get | 100 ns | 100 ns | +0.0% |", out)
+        self.assertIn("| zipf n=16 t=0.99 get cache-on | — | 120 ns | new |", out)
+
+    def test_regression_delta_formatting(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            base = write_json(tmp, "base.json", doc(get_ns=100.0))
+            cur = write_json(tmp, "current.json", doc(get_ns=150.0))
+            out = run_compare(base, cur)
+        self.assertIn("| n=4 steady get | 100 ns | 150 ns | +50.0% |", out)
+
+    def test_improvement_delta_is_negative(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            base = write_json(tmp, "base.json", doc(get_ns=100.0))
+            cur = write_json(tmp, "current.json", doc(get_ns=80.0))
+            out = run_compare(base, cur)
+        self.assertIn("| n=4 steady get | 100 ns | 80 ns | -20.0% |", out)
+
+    def test_ratio_rows_render_as_multipliers_without_delta(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            base = write_json(tmp, "base.json", doc(zipf=ZIPF))
+            cur = write_json(tmp, "current.json", doc(zipf=ZIPF))
+            out = run_compare(base, cur)
+        self.assertIn("| n=4 mget64-vs-get ratio | 2.50x | 2.50x | |", out)
+        self.assertIn(
+            "| zipf n=16 t=0.99 cache-speedup ratio | 4.17x | 4.17x | |", out
+        )
+        self.assertIn(
+            "| weighted 4x2+4x1 load-factor ratio | 1.01x | 1.01x | |", out
+        )
+
+
+if __name__ == "__main__":
+    unittest.main()
