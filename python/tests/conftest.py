@@ -1,4 +1,11 @@
-"""Shared fixtures: enable x64 before any jax.numpy import."""
+"""Shared fixtures: enable x64 before any jax.numpy import.
+
+Also provides an offline stand-in for `hypothesis` when the real package
+is absent (the CI lint job and the offline dev container run this suite
+with stdlib + jax only): `@given`/`@settings` over `st.integers` degrade
+to seeded random sweeps with the declared `max_examples` budget — the
+same sweep style, reproducible, no dependency.
+"""
 
 import os
 import sys
@@ -6,6 +13,57 @@ import sys
 import jax
 
 jax.config.update("jax_enable_x64", True)
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import random
+    import types
+    import zlib
+
+    class _Integers:
+        def __init__(self, min_value, max_value):
+            self.min_value = min_value
+            self.max_value = max_value
+
+        def sample(self, rnd):
+            return rnd.randint(self.min_value, self.max_value)
+
+    def _settings(max_examples=100, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def _given(**strategies):
+        def deco(fn):
+            examples = getattr(fn, "_max_examples", 100)
+            # Stable per-test seed (hash() is salted per process).
+            seed = zlib.crc32(fn.__name__.encode())
+
+            def run():
+                rnd = random.Random(seed)
+                for _ in range(examples):
+                    drawn = {k: s.sample(rnd) for k, s in strategies.items()}
+                    fn(**drawn)
+
+            # Keep the collected name/doc, but NOT the wrapped signature
+            # (pytest would read the strategy params as fixtures).
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            return run
+
+        return deco
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _Integers
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
 
 # Make `compile.*` importable when pytest is run from python/ or repo root.
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

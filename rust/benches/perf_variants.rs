@@ -6,18 +6,22 @@
 //! Variants measured:
 //!  * `free fn`        — `binomial::lookup` direct call (the router's path)
 //!  * `dyn dispatch`   — through `Box<dyn ConsistentHasher>` (registry path)
-//!  * `batch x4`       — 4-way interleaved bulk loop (rebalancer path)
+//!  * `batch8`         — the lane-parallel `bucket_batch` kernel (the
+//!                       batch data plane and rebalancer path)
 //!  * `xxh+lookup`     — string key end-to-end placement (hash + lookup)
 //!
-//! Plus a placement-vs-routing breakdown: engine lookup ns vs full
-//! `Router::handle_ref` GET ns on a warm local cluster, so the routing
-//! overhead ratio (everything around the paper's constant-time lookup)
-//! is tracked release over release.
+//! Plus the batched-placement table the ISSUE tracks (scalar vs
+//! `bucket_batch` ns/key at batch 64 / 1k / 64k — `router_hotpath.rs`
+//! carries the same comparison into `BENCH_router.json` as the
+//! `placement_batch` phase) and a placement-vs-routing breakdown: engine
+//! lookup ns vs full `Router::handle_ref` GET ns on a warm local
+//! cluster, so the routing overhead ratio (everything around the paper's
+//! constant-time lookup) is tracked release over release.
 
 use std::hint::black_box;
 use std::time::Instant;
 
-use binhash::algorithms::{self, binomial};
+use binhash::algorithms::{self, binomial, ConsistentHasher};
 use binhash::hashing::xxhash64;
 use binhash::proto::{RequestRef, Response};
 use binhash::router::{local_cluster, Router};
@@ -41,25 +45,6 @@ fn time_ns<F: FnMut() -> u64>(mut f: F, per: usize) -> f64 {
     }
     black_box(sink);
     median(samples)
-}
-
-/// 4-way interleaved bulk lookup: breaks the serial dependence between
-/// consecutive keys so the core's multiple ALU ports stay busy.
-fn lookup_batch4(digests: &[u64], n: u32, omega: u32, out: &mut Vec<u32>) {
-    out.clear();
-    let mut chunks = digests.chunks_exact(4);
-    for c in &mut chunks {
-        let (a, b, cc, d) = (
-            binomial::lookup(c[0], n, omega),
-            binomial::lookup(c[1], n, omega),
-            binomial::lookup(c[2], n, omega),
-            binomial::lookup(c[3], n, omega),
-        );
-        out.extend_from_slice(&[a, b, cc, d]);
-    }
-    for &x in chunks.remainder() {
-        out.push(binomial::lookup(x, n, omega));
-    }
 }
 
 /// Candidate: lookup with E/M hoisted out (placement-engine form).
@@ -150,10 +135,10 @@ fn main() {
             },
             BATCH,
         );
-        let mut out = Vec::with_capacity(BATCH);
-        let batch4 = time_ns(
+        let mut out = vec![0u32; BATCH];
+        let batch8 = time_ns(
             || {
-                lookup_batch4(&digests, n, 6, &mut out);
+                engine.bucket_batch(&digests, &mut out);
                 out.iter().map(|&x| x as u64).sum()
             },
             BATCH,
@@ -192,9 +177,51 @@ fn main() {
             BATCH,
         );
         println!(
-            "n={n:<7} free={free:>6.2}ns  dyn={dynd:>6.2}ns  batch4={batch4:>6.2}ns  \
+            "n={n:<7} free={free:>6.2}ns  dyn={dynd:>6.2}ns  batch8={batch8:>6.2}ns  \
              pre-EM={pre:>6.2}ns  branchless={branchless:>6.2}ns  key+hash={keyed:>6.2}ns"
         );
+    }
+
+    // --- Batched placement: scalar `bucket` loop vs the lane-parallel
+    // `bucket_batch` kernel, per batch size.  The acceptance bar is
+    // batched strictly below scalar at batch 1k and 64k; batch 64 shows
+    // where the kernel's chunk setup amortizes.
+    println!("\nbatched placement: scalar vs bucket_batch (ns/key):");
+    for n in [11u32, 1_000, 100_000] {
+        let engine = binomial::BinomialHash::new(n);
+        for batch in [64usize, 1_024, 65_536] {
+            let keys = (BATCH / batch) * batch;
+            let mut out = vec![0u32; batch];
+            let scalar = time_ns(
+                || {
+                    let mut acc = 0u64;
+                    for chunk in digests[..keys].chunks_exact(batch) {
+                        for (o, &d) in out.iter_mut().zip(chunk) {
+                            *o = engine.bucket(d);
+                        }
+                        acc = acc.wrapping_add(out[batch - 1] as u64);
+                    }
+                    acc
+                },
+                keys,
+            );
+            let batched = time_ns(
+                || {
+                    let mut acc = 0u64;
+                    for chunk in digests[..keys].chunks_exact(batch) {
+                        engine.bucket_batch(chunk, &mut out);
+                        acc = acc.wrapping_add(out[batch - 1] as u64);
+                    }
+                    acc
+                },
+                keys,
+            );
+            println!(
+                "n={n:<7} batch={batch:<6} scalar={scalar:>6.2}ns/key  \
+                 batched={batched:>6.2}ns/key  speedup={:.2}x",
+                scalar / batched
+            );
+        }
     }
 
     // --- Placement vs routing: what a full local GET costs around the

@@ -18,6 +18,11 @@
 //! `Router::handle_ref` with borrowed keys and `Arc` values — the same
 //! allocation-free path the servers use.
 //!
+//! A standalone `placement_batch` phase prices the batched placement
+//! kernel itself: scalar `bucket` vs lane-parallel `bucket_batch`
+//! ns/key over the same digests at batch 64 / 1k / 64k (binomial,
+//! n = 16), so the kernel's speedup is tracked release over release.
+//!
 //! A standalone replication phase (memento, n = 16, `factor = 2`)
 //! prices what a second copy costs each op: PUT with its replica
 //! fan-out, steady GET (unchanged path — replicas cost writes, not
@@ -265,18 +270,80 @@ fn main() {
         clusters_json.push(c);
     }
 
+    let placement_batch = placement_batch_json();
     let replication = replication_json();
     let zipf = zipf_json();
     let fanin = fanin_json();
     let json = format!(
         "{{\n  \"bench\": \"router_hotpath\",\n  \"ops_per_phase\": {OPS},\n  \
-         \"clusters\": [\n{}\n  ],\n  \"replication\": {replication},\n  \
+         \"clusters\": [\n{}\n  ],\n  \"placement_batch\": {placement_batch},\n  \
+         \"replication\": {replication},\n  \
          \"zipf\": {zipf},\n  \"fanin\": {fanin}\n}}\n",
         clusters_json.join(",\n")
     );
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_router.json".to_string());
     std::fs::write(&out, &json).expect("write bench JSON");
     println!("wrote {out}");
+}
+
+/// Batched-placement phase: the binomial engine's scalar `bucket` loop
+/// vs the lane-parallel `bucket_batch` kernel over the same digests, at
+/// batch 64 / 1k / 64k — the in-process twin of the `perf_variants`
+/// table, carried in the JSON so the kernel's per-release speedup is
+/// diffed by `tools/bench_compare.py`.  Returns the phase's JSON object.
+fn placement_batch_json() -> String {
+    use binhash::algorithms::binomial::BinomialHash;
+    use binhash::algorithms::ConsistentHasher;
+    use binhash::workload::UniformDigests;
+
+    const N: u32 = 16;
+    const TOTAL: usize = 1 << 18;
+    const REPS: usize = 5;
+    let digests = UniformDigests::new(0xBA7C).take_vec(TOTAL);
+    let engine = BinomialHash::new(N);
+    let median = |mut xs: Vec<f64>| -> f64 {
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs[xs.len() / 2]
+    };
+    let mut sizes_json = Vec::new();
+    for batch in [64usize, 1_024, 65_536] {
+        let keys = (TOTAL / batch) * batch;
+        let mut out = vec![0u32; batch];
+        let mut scalar_reps = Vec::with_capacity(REPS);
+        let mut batched_reps = Vec::with_capacity(REPS);
+        for _ in 0..REPS {
+            let t0 = Instant::now();
+            for chunk in digests[..keys].chunks_exact(batch) {
+                for (slot, &d) in out.iter_mut().zip(chunk) {
+                    *slot = engine.bucket(d);
+                }
+                black_box(&out);
+            }
+            scalar_reps.push(ns_op(t0.elapsed(), keys));
+            let t0 = Instant::now();
+            for chunk in digests[..keys].chunks_exact(batch) {
+                engine.bucket_batch(chunk, &mut out);
+                black_box(&out);
+            }
+            batched_reps.push(ns_op(t0.elapsed(), keys));
+        }
+        let scalar = median(scalar_reps);
+        let batched = median(batched_reps);
+        let speedup = scalar / batched;
+        println!(
+            "placement_batch (binomial n={N}) batch={batch:<6} \
+             scalar: {scalar:>6.2} ns/key   batched: {batched:>6.2} ns/key   \
+             speedup {speedup:.2}x"
+        );
+        sizes_json.push(format!(
+            "{{\"batch\": {batch}, \"scalar_ns_key\": {scalar:.2}, \
+             \"batched_ns_key\": {batched:.2}, \"speedup\": {speedup:.2}}}"
+        ));
+    }
+    format!(
+        "{{\"engine\": \"binomial\", \"n\": {N}, \"sizes\": [{}]}}",
+        sizes_json.join(", ")
+    )
 }
 
 /// Replication phase: memento n = 16 with `factor = 2` (primary-ack

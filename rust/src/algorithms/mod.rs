@@ -90,6 +90,28 @@ pub trait ConsistentHasher: Send + Sync {
     /// Map a key digest to a bucket in `[0, n)`.
     fn bucket(&self, digest: u64) -> u32;
 
+    /// Map a batch of key digests to buckets, writing `out[i] =
+    /// bucket(digests[i])` for every `i`.
+    ///
+    /// The default is the scalar loop, so every engine supports batched
+    /// placement with identical results.  Engines whose lookup is pure
+    /// branch-light integer work override it with a lane-parallel kernel
+    /// ([`binomial::lookup_batch`] runs 8 independent dependency chains
+    /// per chunk); wrappers forward to the inner kernel and post-process
+    /// per lane ([`weighted::Weighted`] applies the owner map in place).
+    /// Batch callers (the router's MGET/MPUT placement column, the
+    /// migration stripe planner) hold the full digest list up front, so
+    /// they call this once instead of `bucket` per key.
+    ///
+    /// # Panics
+    /// Panics if `digests.len() != out.len()`.
+    fn bucket_batch(&self, digests: &[u64], out: &mut [u32]) {
+        assert_eq!(digests.len(), out.len(), "bucket_batch slice length mismatch");
+        for (slot, digest) in out.iter_mut().zip(digests) {
+            *slot = self.bucket(*digest);
+        }
+    }
+
     /// Add the next bucket (id `n`), returning its id. LIFO order.
     fn add_bucket(&mut self) -> u32;
 
@@ -364,5 +386,28 @@ mod tests {
         let h = by_name("binomial", 12).unwrap();
         let key = b"object/alpha";
         assert_eq!(h.bucket_for_key(key), h.bucket(xxhash64(key, 0)));
+    }
+
+    #[test]
+    fn bucket_batch_matches_scalar_for_every_engine() {
+        use crate::hashing::SplitMix64Rng;
+        let mut rng = SplitMix64Rng::new(0xbbb0);
+        let digests: Vec<u64> = (0..257).map(|_| rng.next_u64()).collect();
+        let mut out = vec![0u32; digests.len()];
+        for name in ALL_ALGORITHMS.iter().chain(std::iter::once(&ANTI_BASELINE)) {
+            let h = by_name(name, 11).unwrap();
+            h.bucket_batch(&digests, &mut out);
+            for (digest, got) in digests.iter().zip(&out) {
+                assert_eq!(*got, h.bucket(*digest), "{name} digest {digest:#x}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn bucket_batch_rejects_mismatched_slices() {
+        let h = by_name("jump", 4).unwrap();
+        let mut out = vec![0u32; 3];
+        h.bucket_batch(&[1, 2, 3, 4], &mut out);
     }
 }

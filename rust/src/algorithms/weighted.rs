@@ -176,6 +176,17 @@ impl ConsistentHasher for Weighted {
         self.owner[self.inner.bucket(digest) as usize]
     }
 
+    fn bucket_batch(&self, digests: &[u64], out: &mut [u32]) {
+        // One batched pass through the inner kernel with `out` doubling
+        // as the virtual-bucket buffer, then the owner map applied per
+        // lane in place — no intermediate allocation, so the router's
+        // warm scratch column stays zero-alloc through the adapter.
+        self.inner.bucket_batch(digests, out);
+        for v in out.iter_mut() {
+            *v = self.owner[*v as usize];
+        }
+    }
+
     fn add_bucket(&mut self) -> u32 {
         let s = self.weights.len() as u32;
         for _ in 0..self.default_weight {
@@ -351,6 +362,19 @@ mod tests {
         for (s, &c) in counts.iter().enumerate().skip(1) {
             let f = c as f64 / ds.len() as f64;
             assert!((f - 0.2).abs() < 0.02, "weight-1 shard {s} got {f}");
+        }
+    }
+
+    #[test]
+    fn bucket_batch_applies_owner_map_per_lane() {
+        // The wrapper must compose with the inner batched kernel: one
+        // inner `bucket_batch` call, then the owner map in place.
+        let w = Weighted::new("binomial", &[2, 1, 3, 1], 1).unwrap();
+        let ds = digests(1_003); // full LANES chunks plus a scalar tail
+        let mut out = vec![u32::MAX; ds.len()];
+        w.bucket_batch(&ds, &mut out);
+        for (d, got) in ds.iter().zip(&out) {
+            assert_eq!(*got, w.bucket(*d), "digest {d:#x}");
         }
     }
 

@@ -203,6 +203,16 @@ impl ReplicaMap {
         self.factor
     }
 
+    /// The precomputed rank-1 minus fork for `primary`, when the engine
+    /// is fault-tolerant and the bucket is working.  The batched replica
+    /// fan-out uses it to place a whole primary-bucket group through the
+    /// fork's `bucket_batch` in one call; `None` (probe engines, failed
+    /// buckets) falls back to per-key [`replicas_into`](Self::replicas_into).
+    #[inline]
+    pub fn rank1_fork(&self, primary: u32) -> Option<&dyn ConsistentHasher> {
+        self.minus.get(primary as usize)?.as_deref()
+    }
+
     /// The rank-1 replica of a key: one engine lookup, no allocation.
     /// `None` when the primary has no live replica (e.g. the minus fork
     /// could not be built).
@@ -437,6 +447,21 @@ impl PlacementSnapshot {
         if let Some(map) = &self.replicas {
             map.replicas_into(self.engine.as_ref(), digest, primary, out);
         }
+    }
+
+    /// The batched rank-1 engine for `primary`, when the whole replica
+    /// set of this snapshot is exactly rank 1 (`factor == 2`) and the
+    /// minus fork exists — the router's batched replica fan-out then
+    /// derives a primary-bucket group's replicas in one `bucket_batch`
+    /// call instead of one [`replicas_into`](Self::replicas_into) per
+    /// key.
+    #[inline]
+    pub fn rank1_batch_engine(&self, primary: u32) -> Option<&dyn ConsistentHasher> {
+        let map = self.replicas.as_ref()?;
+        if map.factor() != 2 {
+            return None;
+        }
+        map.rank1_fork(primary)
     }
 
     /// The *previous* topology's owner of `digest`, when a migration is in

@@ -215,15 +215,23 @@ pub fn plan(keys: &[(String, u64)], path: PlanPath<'_>) -> Result<MigrationPlan>
     let mut plan = MigrationPlan { moves: Vec::new(), scanned: keys.len() };
     match path {
         PlanPath::Engines { old, new } => {
-            for (key, digest) in keys {
-                let from = old.bucket(*digest);
-                let to = new.bucket(*digest);
-                if from != to {
+            // One batched placement call per engine over the whole
+            // scanned stripe chunk instead of two scalar lookups per
+            // key — the migration sweep and the anti-entropy restore
+            // both flow through here, so they ride the lane-parallel
+            // kernel for free.
+            let digests: Vec<u64> = keys.iter().map(|(_, d)| *d).collect();
+            let mut from = vec![0u32; keys.len()];
+            let mut to = vec![0u32; keys.len()];
+            old.bucket_batch(&digests, &mut from);
+            new.bucket_batch(&digests, &mut to);
+            for (i, (key, digest)) in keys.iter().enumerate() {
+                if from[i] != to[i] {
                     plan.moves.push(Move {
                         key: key.clone(),
                         digest: *digest,
-                        from,
-                        to,
+                        from: from[i],
+                        to: to[i],
                         keep_source: false,
                     });
                 }

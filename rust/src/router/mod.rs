@@ -82,12 +82,33 @@
 //!
 //! Placement costs nanoseconds; a shard round-trip costs micro- to
 //! milliseconds.  [`Router::handle_batch`] exploits that asymmetry for
-//! `MGET`/`MPUT`/`MDEL` frames: it computes **all placements up front**
-//! (cheap, O(1) each), groups the keys by owner bucket with one in-place
-//! sort of packed `(bucket, index)` words, and issues **one fan-out per
-//! owner shard** — a stripe-grouped in-process run for local shards, a
-//! single `MULTI` round-trip for remote ones.  A batch of `k` keys over
-//! `s` owners costs `s` round-trips instead of `k`.
+//! `MGET`/`MPUT`/`MDEL` frames: it computes **all placements up front**,
+//! groups the keys by owner bucket with one in-place sort of packed
+//! `(bucket, index)` words, and issues **one fan-out per owner shard** —
+//! a stripe-grouped in-process run for local shards, a single `MULTI`
+//! round-trip for remote ones.  A batch of `k` keys over `s` owners
+//! costs `s` round-trips instead of `k`.
+//!
+//! The up-front placement is itself batched: the digest column in
+//! [`BatchScratch`] is placed by **one
+//! [`bucket_batch`](crate::algorithms::ConsistentHasher::bucket_batch)
+//! call** into a parallel `buckets` column instead of one scalar
+//! `bucket` per key.  For the binomial engine that call is the
+//! lane-parallel kernel
+//! ([`algorithms::binomial::lookup_batch`](crate::algorithms::binomial::lookup_batch)
+//! — eight independent rehash chains per chunk, §Perf there); the
+//! `Weighted` adapter forwards to it and applies the owner map in
+//! place; every other engine runs the scalar default, placement-
+//! identical either way.  When a PJRT bulk runtime is loaded and the
+//! bare binomial engine is active, batches of ≥ `PJRT_BATCH_MIN` keys
+//! route through the compiled XLA artifact instead (the migration
+//! planner's bulk path, turned data-plane).  The replica fan-out phase
+//! batches the same way: at factor 2 on a fault-tolerant engine each
+//! primary group's replica set is one `bucket_batch` call through that
+//! primary's precomputed minus fork.  Both columns live in the
+//! caller-owned scratch — `clear()` + `resize()` on warm `Vec`s — so
+//! batched placement stays allocation-free once warm (the armed MGET
+//! window in `rust/tests/zero_alloc.rs` covers the `buckets` column).
 //!
 //! Ordering guarantees, in decreasing strength:
 //!
@@ -320,6 +341,10 @@ pub struct BatchScratch {
     /// `digests[i]` = xxhash64 of key `i` (0 for invalid keys, which
     /// never route).
     digests: Vec<u64>,
+    /// `buckets[i]` = owner bucket of key `i` under the snapshot engine,
+    /// filled by one `bucket_batch` call over the whole digest column
+    /// (invalid keys carry the digest-0 placement, which is never read).
+    buckets: Vec<u32>,
     /// Steady keys packed as `bucket << 32 | index`; sorted to group.
     order: Vec<u64>,
     /// The current fan-out's key indices (one owner shard's share).
@@ -331,6 +356,11 @@ pub struct BatchScratch {
     /// Replica-write grouping for factor > 1 batches, packed like
     /// `order` (`bucket << 32 | index`, one word per replica copy).
     rep_order: Vec<u64>,
+    /// The current primary group's accepted-write digests, batched
+    /// through the rank-1 minus fork (factor-2 replica derivation).
+    rep_digests: Vec<u64>,
+    /// The rank-1 buckets `bucket_batch` computed for `rep_digests`.
+    rep_buckets: Vec<u32>,
     /// Replica fan-out responses — positional like `out`, but kept
     /// separate so replica answers are only error-accounted and never
     /// clobber the client's sub-responses.
@@ -347,6 +377,11 @@ impl BatchScratch {
 /// Keys per migration batch: small enough that a batch is visible to
 /// readers almost immediately, large enough to amortize planning.
 const MIGRATION_BATCH: usize = 512;
+
+/// Smallest batch worth routing through the PJRT bulk runtime: below
+/// this the mutex + host/device transfer costs more than the in-process
+/// lane-parallel kernel saves.
+const PJRT_BATCH_MIN: usize = 64;
 
 /// Buckets in `0..slots` the engine reports as not working.  Derived from
 /// the engine itself (not the snapshot's degraded record) so it is
@@ -1119,8 +1154,11 @@ impl Router {
             self.metrics.latency.record(start.elapsed());
             return;
         }
-        // Phase 1 — place every key up front.  Each steady key packs as
-        // (bucket << 32 | index): one in-place sort then groups the batch
+        // Phase 1 — place every key up front: digest the column, then
+        // one [`ConsistentHasher::bucket_batch`] call over the whole
+        // batch (the binomial engine's lane-parallel kernel; the PJRT
+        // runtime when one is loaded), then pack each steady key as
+        // (bucket << 32 | index) — one in-place sort groups the batch
         // by owner while keeping request order inside each group.
         // Mid-migration keys are only *marked* here; their per-key shard
         // round-trips run after the placement timer stops, so the
@@ -1134,14 +1172,22 @@ impl Router {
         for i in 0..n {
             let key = src.key(i);
             if !proto::valid_key(key) {
+                // The only Err sub-responses that exist this early, so
+                // the routing loop below skips exactly these keys.
                 out[i] = Response::Err(format!("invalid key {key:?}"));
                 scratch.digests.push(0);
                 continue;
             }
             valid += 1;
-            let digest = crate::hashing::xxhash64(key.as_bytes(), 0);
-            scratch.digests.push(digest);
-            let bucket = snap.engine.bucket(digest);
+            scratch.digests.push(crate::hashing::xxhash64(key.as_bytes(), 0));
+        }
+        self.place_batch(&snap, &scratch.digests, &mut scratch.buckets);
+        for i in 0..n {
+            if matches!(out[i], Response::Err(_)) {
+                continue; // invalid key — its placeholder placement is dead
+            }
+            let digest = scratch.digests[i];
+            let bucket = scratch.buckets[i];
             self.metrics.routed.record(bucket);
             if snap.fallback_route(digest, bucket).is_some() {
                 scratch.defer.push(i as u32);
@@ -1229,15 +1275,41 @@ impl Router {
         if matches!(op, BatchOp::Put | BatchOp::Del) && snap.replicas.is_some() {
             scratch.rep_order.clear();
             let mut reps: Vec<u32> = Vec::new();
-            for &w in scratch.order.iter() {
-                let (bucket, i) = ((w >> 32) as u32, w as u32);
-                if matches!(out[i as usize], Response::Err(_)) {
-                    continue; // the primary write failed — nothing to replicate
+            // `order` is already sorted by primary bucket, so the keys
+            // arrive in primary groups — and at factor 2 on a
+            // fault-tolerant engine each group's whole replica set is
+            // one `bucket_batch` call through that primary's
+            // precomputed minus fork.  Deeper ranks (factor > 2) and
+            // probe engines keep the per-key derivation.
+            let mut g = 0usize;
+            while g < scratch.order.len() {
+                let bucket = (scratch.order[g] >> 32) as u32;
+                scratch.sel.clear();
+                scratch.rep_digests.clear();
+                while g < scratch.order.len() && (scratch.order[g] >> 32) as u32 == bucket {
+                    let i = scratch.order[g] as u32;
+                    g += 1;
+                    if matches!(out[i as usize], Response::Err(_)) {
+                        continue; // the primary write failed — nothing to replicate
+                    }
+                    scratch.sel.push(i);
+                    scratch.rep_digests.push(scratch.digests[i as usize]);
                 }
-                reps.clear();
-                snap.replicas_into(scratch.digests[i as usize], bucket, &mut reps);
-                for &rb in &reps {
-                    scratch.rep_order.push(((rb as u64) << 32) | i as u64);
+                if let Some(m1) = snap.rank1_batch_engine(bucket) {
+                    scratch.rep_buckets.clear();
+                    scratch.rep_buckets.resize(scratch.rep_digests.len(), 0);
+                    m1.bucket_batch(&scratch.rep_digests, &mut scratch.rep_buckets);
+                    for (&i, &rb) in scratch.sel.iter().zip(scratch.rep_buckets.iter()) {
+                        scratch.rep_order.push(((rb as u64) << 32) | i as u64);
+                    }
+                } else {
+                    for &i in scratch.sel.iter() {
+                        reps.clear();
+                        snap.replicas_into(scratch.digests[i as usize], bucket, &mut reps);
+                        for &rb in &reps {
+                            scratch.rep_order.push(((rb as u64) << 32) | i as u64);
+                        }
+                    }
                 }
             }
             scratch.rep_order.sort_unstable();
@@ -1917,6 +1989,37 @@ impl Router {
         self.metrics.migration_round_trips.fetch_add(stats.round_trips, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
         self.metrics.ae_stripes_skipped.fetch_add(stats.stripes_skipped, Ordering::Relaxed); // ord: Relaxed — independent telemetry counter
         Ok(stats)
+    }
+
+    /// Place a whole digest column in one call, filling `out[i] =
+    /// bucket(digests[i])`.
+    ///
+    /// Backend order: the PJRT bulk runtime when one is loaded, the
+    /// batch is big enough to amortize the transfer ([`PJRT_BATCH_MIN`])
+    /// and the active engine is the bare binomial (the compiled artifact
+    /// computes BinomialHash placement — same gate as the migration
+    /// planner's XLA path); otherwise the engine's own
+    /// [`ConsistentHasher::bucket_batch`] (the lane-parallel kernel for
+    /// binomial, the scalar loop elsewhere).  The PJRT call allocates
+    /// its device output and is serialized behind the runtime mutex —
+    /// fine for a bulk backend, which is why the offline default (no
+    /// `bulk`) keeps the allocation-free in-process path.
+    fn place_batch(&self, snap: &PlacementSnapshot, digests: &[u64], out: &mut Vec<u32>) {
+        out.clear();
+        out.resize(digests.len(), 0);
+        if let (Some(bulk), "binomial") = (&self.bulk, snap.engine.name()) {
+            if digests.len() >= PJRT_BATCH_MIN {
+                let placed = bulk.lock().unwrap().lookup_batch(digests, snap.engine.len());
+                if let Ok(buckets) = placed {
+                    if buckets.len() == digests.len() {
+                        out.copy_from_slice(&buckets);
+                        return;
+                    }
+                }
+                // Runtime hiccup: fall through to the in-process kernel.
+            }
+        }
+        snap.engine.bucket_batch(digests, out);
     }
 
     fn migrate_batches(

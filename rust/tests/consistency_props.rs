@@ -332,6 +332,56 @@ fn weighted_minimal_disruption_tracks_the_engine_and_tail_alignment() {
 }
 
 #[test]
+fn bucket_batch_is_scalar_bucket_for_every_engine() {
+    // The batched-placement contract: `bucket_batch` writes exactly what
+    // the scalar `bucket` loop would, for all 13 engines and the
+    // `Weighted` wrapper, across random n (including n = 1 and
+    // power-of-two boundaries where the binomial kernel's tree capacity
+    // jumps), random batch lengths straddling its 8-lane chunking, and
+    // random digests.
+    let mut rng = SplitMix64Rng::new(0x7e63);
+    let ns = [1u32, 2, 3, 7, 8, 9, 16, 17, 63, 64, 65, 100];
+    for name in all_engines() {
+        for _ in 0..6 {
+            let n = ns[(rng.next_u64() % ns.len() as u64) as usize];
+            let len = (rng.next_u64() % 40) as usize;
+            let digests: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+            let mut out = vec![u32::MAX; len];
+            let h = algorithms::by_name(name, n).unwrap();
+            h.bucket_batch(&digests, &mut out);
+            for (d, got) in digests.iter().zip(&out) {
+                assert_eq!(*got, h.bucket(*d), "{name}: n={n} digest={d:#x}");
+            }
+        }
+    }
+    // Random ω through the binomial engine directly (the only engine
+    // the parameter exists on) — block C must batch identically too.
+    for _ in 0..8 {
+        use binhash::algorithms::binomial::BinomialHash;
+        let n = ns[(rng.next_u64() % ns.len() as u64) as usize];
+        let omega = 1 + (rng.next_u64() % 8) as u32;
+        let h = BinomialHash::with_omega(n, omega);
+        let digests: Vec<u64> = (0..37).map(|_| rng.next_u64()).collect();
+        let mut out = vec![u32::MAX; digests.len()];
+        h.bucket_batch(&digests, &mut out);
+        for (d, got) in digests.iter().zip(&out) {
+            assert_eq!(*got, h.bucket(*d), "binomial: n={n} omega={omega} digest={d:#x}");
+        }
+    }
+    // The Weighted wrapper over every engine: the owner map must apply
+    // per lane on top of the inner batched kernel.
+    for name in all_engines() {
+        let w = Weighted::new(name, &[2, 1, 3, 1], 1).unwrap();
+        let digests: Vec<u64> = (0..67).map(|_| rng.next_u64()).collect();
+        let mut out = vec![u32::MAX; digests.len()];
+        w.bucket_batch(&digests, &mut out);
+        for (d, got) in digests.iter().zip(&out) {
+            assert_eq!(*got, w.bucket(*d), "weighted({name}): digest={d:#x}");
+        }
+    }
+}
+
+#[test]
 fn string_key_api_consistent_with_digest_api() {
     for name in ALL_ALGORITHMS {
         let h = algorithms::by_name(name, 17).unwrap();

@@ -171,6 +171,11 @@ fn steady_state_data_path_allocates_nothing() {
     // allocation-free too (the per-connection contract: scratch batch
     // buffers are reused, a batched GET bumps refcounts, a batched PUT
     // moves pre-allocated Arcs, placement grouping sorts in place).
+    // This armed window also covers the batched placement column: each
+    // `handle_batch` call places the whole batch up front via
+    // `bucket_batch` into `BatchScratch::buckets` (clear + resize on
+    // the warm Vec — capacity is retained, so no heap traffic), which
+    // pins the lane-parallel binomial kernel itself as alloc-free.
     let live: Vec<String> = (KEYS / 4..KEYS).map(|i| format!("za{i}")).collect();
     let batch_values: Vec<Value> =
         (0..live.len()).map(|i| value_of(i, 3)).collect();

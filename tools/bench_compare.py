@@ -37,6 +37,16 @@ def rows(doc):
         ratio = dig(c, "batch", "mget64_vs_get")
         if ratio is not None:
             yield (f"n={n} mget64-vs-get ratio", -ratio)  # sentinel: ratio row
+    pb = doc.get("placement_batch")
+    if isinstance(pb, dict):  # absent in pre-bucket_batch artifacts
+        tag = f"placement n={pb.get('n')}"
+        for b in pb.get("sizes") or []:
+            bs = b.get("batch")
+            yield (f"{tag} scalar@{bs}", b.get("scalar_ns_key"))
+            yield (f"{tag} batched@{bs}", b.get("batched_ns_key"))
+            speedup = b.get("speedup")
+            if speedup is not None:
+                yield (f"{tag} batch@{bs} speedup ratio", -speedup)
     rep = doc.get("replication")
     if isinstance(rep, dict):  # absent in pre-replication artifacts
         n = rep.get("n")

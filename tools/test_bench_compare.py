@@ -20,7 +20,7 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 import bench_compare  # noqa: E402
 
 
-def doc(get_ns=100.0, zipf=None):
+def doc(get_ns=100.0, zipf=None, placement_batch=None):
     """A minimal BENCH_router.json document with one cluster."""
     d = {
         "bench": "router_hotpath",
@@ -48,7 +48,19 @@ def doc(get_ns=100.0, zipf=None):
     }
     if zipf is not None:
         d["zipf"] = zipf
+    if placement_batch is not None:
+        d["placement_batch"] = placement_batch
     return d
+
+
+PLACEMENT_BATCH = {
+    "engine": "binomial",
+    "n": 16,
+    "sizes": [
+        {"batch": 64, "scalar_ns_key": 8.0, "batched_ns_key": 5.0, "speedup": 1.6},
+        {"batch": 1024, "scalar_ns_key": 8.0, "batched_ns_key": 4.0, "speedup": 2.0},
+    ],
+}
 
 
 ZIPF = {
@@ -98,6 +110,20 @@ class RowsTest(unittest.TestCase):
         labels = dict(bench_compare.rows(doc()))
         self.assertFalse(any(label.startswith("zipf") for label in labels))
 
+    def test_placement_batch_phase_yields_labeled_rows(self):
+        labels = dict(bench_compare.rows(doc(placement_batch=PLACEMENT_BATCH)))
+        self.assertEqual(labels["placement n=16 scalar@64"], 8.0)
+        self.assertEqual(labels["placement n=16 batched@64"], 5.0)
+        self.assertEqual(labels["placement n=16 scalar@1024"], 8.0)
+        self.assertEqual(labels["placement n=16 batched@1024"], 4.0)
+        # Speedup ratios ride the negated-sentinel convention.
+        self.assertEqual(labels["placement n=16 batch@64 speedup ratio"], -1.6)
+        self.assertEqual(labels["placement n=16 batch@1024 speedup ratio"], -2.0)
+
+    def test_documents_without_placement_batch_yield_no_placement_rows(self):
+        labels = dict(bench_compare.rows(doc()))
+        self.assertFalse(any(label.startswith("placement") for label in labels))
+
 
 class CompareTest(unittest.TestCase):
     def test_missing_baseline_degrades_to_a_note(self):
@@ -140,6 +166,14 @@ class CompareTest(unittest.TestCase):
             cur = write_json(tmp, "current.json", doc(get_ns=80.0))
             out = run_compare(base, cur)
         self.assertIn("| n=4 steady get | 100 ns | 80 ns | -20.0% |", out)
+
+    def test_placement_batch_rows_pair_and_render(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            base = write_json(tmp, "base.json", doc(placement_batch=PLACEMENT_BATCH))
+            cur = write_json(tmp, "current.json", doc(placement_batch=PLACEMENT_BATCH))
+            out = run_compare(base, cur)
+        self.assertIn("| placement n=16 batched@1024 | 4 ns | 4 ns | +0.0% |", out)
+        self.assertIn("| placement n=16 batch@1024 speedup ratio | 2.00x | 2.00x | |", out)
 
     def test_ratio_rows_render_as_multipliers_without_delta(self):
         with tempfile.TemporaryDirectory() as tmp:
